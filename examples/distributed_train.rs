@@ -1,0 +1,92 @@
+//! End-to-end driver: train the paper-true MNIST configuration with the
+//! real threaded parameter server over the AOT-compiled XLA artifacts.
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end: the full
+//! three-layer stack composes — Pallas kernels → JAX model → HLO text →
+//! PJRT runtime → async parameter server — on a 0.47M-parameter model
+//! (the paper's own MNIST model size, Table 1) with minibatch 1000.
+//!
+//! ```bash
+//! cargo run --release --example distributed_train [steps] [workers]
+//! ```
+
+use dmlps::cli::driver::{ap_euclidean, ap_of_l, train_distributed};
+use dmlps::config::Preset;
+use dmlps::data::ExperimentData;
+use dmlps::metrics::curves_to_markdown;
+use dmlps::ps::RunOptions;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+
+    let mut cfg = Preset::Mnist.config();
+    cfg.optim.steps = steps;
+    cfg.cluster.workers = workers;
+
+    println!(
+        "distributed_train (end-to-end): MNIST paper-true shape\n\
+         d={} k={} ({} params), minibatch {}+{}, {} workers × {} steps,\n\
+         consistency={}, engine=auto (XLA artifacts if built)",
+        cfg.dataset.dim,
+        cfg.model.k,
+        cfg.model.k * cfg.dataset.dim,
+        cfg.optim.batch_sim,
+        cfg.optim.batch_dis,
+        workers,
+        steps,
+        cfg.cluster.consistency.name(),
+    );
+
+    println!("generating synthetic MNIST-like data \
+              (100K similar + 100K dissimilar pairs)...");
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+
+    let result = train_distributed(&cfg, &data, "auto", &RunOptions {
+        probe_every: ((steps * workers) as u64 / 15).max(1),
+        ..Default::default()
+    })?;
+
+    println!("{}", curves_to_markdown(
+        std::slice::from_ref(&result.curve), 20));
+    println!(
+        "\nwall time {:.1}s | {} updates applied | {} broadcasts | \
+         {:.2} updates/s",
+        result.wall_s,
+        result.applied_updates,
+        result.broadcasts,
+        result.applied_updates as f64 / result.wall_s
+    );
+    for ws in &result.worker_stats {
+        println!(
+            "worker {}: {} steps, {} grads sent, {} params received, \
+             last minibatch loss {:.4}",
+            ws.id, ws.steps_done, ws.grads_sent, ws.params_received,
+            ws.last_loss
+        );
+    }
+
+    let mut eng = dmlps::dml::NativeEngine::new();
+    let ap = ap_of_l(&mut eng, &result.l, &data)?;
+    let ap_eu = ap_euclidean(&data);
+    println!("\nheld-out pair verification:");
+    println!("  ours      AP = {ap:.4}");
+    println!("  euclidean AP = {ap_eu:.4}");
+    if steps >= 100 {
+        anyhow::ensure!(ap > ap_eu, "learned metric must beat Euclidean");
+    } else {
+        println!("(short run: pass ≥100 steps for the full AP check)");
+    }
+
+    let out = std::path::Path::new("mnist_L.bin");
+    result.l.save(out)?;
+    println!("\nmodel saved to {} ({}x{})", out.display(), result.l.rows,
+             result.l.cols);
+    Ok(())
+}

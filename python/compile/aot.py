@@ -1,0 +1,104 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the rust runtime.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The HLO *text* parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Each (variant, function) pair becomes ``artifacts/<variant>.<fn>.hlo.txt``
+plus one ``artifacts/manifest.json`` describing entry shapes so the rust
+side can validate its marshalling without parsing HLO.
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+(wired as ``make artifacts``; a no-op when inputs are unchanged thanks to
+the Makefile dependency list).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single-output fns)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, args, donate):
+    kwargs = {}
+    if donate:
+        kwargs["donate_argnums"] = donate
+    return jax.jit(fn, **kwargs).lower(*args)
+
+
+def export_variant(name, out_dir, manifest):
+    for fn_name, (fn, args, donate) in model.specs_for(name).items():
+        lowered = lower_one(fn, args, donate)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        manifest["entries"].append(
+            {
+                "variant": name,
+                "function": fn_name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": str(a.dtype)}
+                    for a in args
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)}
+                    for o in jax.tree.leaves(out_avals)
+                ],
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(model.VARIANTS),
+        help="comma-separated subset of variants to export",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text/1",
+        "variants": {
+            name: {
+                "k": v[0], "d": v[1], "bs": v[2], "bd": v[3],
+                "eval_batch": v[4],
+            }
+            for name, v in model.VARIANTS.items()
+        },
+        "entries": [],
+    }
+    for name in ns.variants.split(","):
+        print(f"variant {name}: "
+              f"k={model.VARIANTS[name][0]} d={model.VARIANTS[name][1]}")
+        export_variant(name, ns.out_dir, manifest)
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

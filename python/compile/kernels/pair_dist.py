@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: batched squared Mahalanobis pair distances.
+
+dist_i = ||L (x_i - y_i)||^2 for a batch of pair differences. Used by the
+evaluation path (precision-recall sweeps, retrieval) and by the serving-
+style `eval` subcommand of the rust CLI.
+
+Fuses the projection (d-tiled, MXU) with the row-norm reduction (VPU) in a
+single pallas_call: the projection accumulator Z stays VMEM-resident over
+the d-grid and the squared row-sum is emitted on the last grid step, so Z
+never visits HBM at all.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import dml_grad
+
+
+def _pair_dist_kernel(d_ref, l_ref, dist_ref, z_scratch):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        z_scratch[...] = jnp.zeros_like(z_scratch)
+
+    z_scratch[...] += jax.lax.dot_general(
+        d_ref[...], l_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i == n - 1)
+    def _reduce():
+        z = z_scratch[...]
+        dist_ref[...] = jnp.sum(z * z, axis=1, keepdims=True)
+
+
+def pair_dist(diffs, L, blk_d=None):
+    """(b, 1) squared distances ||L delta||^2, fused projection+reduction."""
+    b, d = diffs.shape
+    k, d2 = L.shape
+    assert d == d2
+    blk = blk_d or dml_grad.choose_block_d(d, k, b)
+    assert d % blk == 0
+    grid = (d // blk,)
+    return pl.pallas_call(
+        _pair_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, blk), lambda i: (0, i)),
+            pl.BlockSpec((k, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((b, k), jnp.float32)],
+        interpret=True,
+    )(diffs, L)

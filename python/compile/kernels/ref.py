@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracles for the DML kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the HLO
+artifacts the rust runtime executes) are validated against in
+``python/tests/``.
+
+Notation (paper Eq. 4):
+
+    f(L) = mean_{(x,y) in S} ||L(x-y)||^2
+         + lam * mean_{(x,y) in D} max(0, 1 - ||L(x-y)||^2)
+
+We use *mean* (not sum) normalization per pair set so that the learning
+rate is invariant to minibatch size; this is a positive rescaling of the
+paper's objective and does not change the optimization problem.
+
+Shapes:
+    L  : (k, d)   the factor of the Mahalanobis matrix M = L^T L
+    Ds : (bs, d)  rows are differences x - y of *similar* pairs
+    Dd : (bd, d)  rows are differences x - y of *dissimilar* pairs
+"""
+
+import jax.numpy as jnp
+
+
+def project(diffs, L):
+    """Z = diffs @ L.T — the projection of pair differences. (b, k)."""
+    return diffs @ L.T
+
+
+def pair_dist(diffs, L):
+    """Squared Mahalanobis distances ||L (x-y)||^2 per pair. (b,)."""
+    z = project(diffs, L)
+    return jnp.sum(z * z, axis=-1)
+
+
+def loss(L, ds, dd, lam):
+    """Scalar DML objective (mean-normalized Eq. 4)."""
+    sim = jnp.mean(pair_dist(ds, L))
+    dis = jnp.mean(jnp.maximum(0.0, 1.0 - pair_dist(dd, L)))
+    return sim + lam * dis
+
+
+def loss_grad(L, ds, dd, lam):
+    """(loss, dL) computed in closed form (no autodiff).
+
+    d/dL ||L delta||^2 = 2 (L delta) delta^T, so with Z = D L^T:
+
+        G =  (2 / bs) * Zs^T Ds                          (similar term)
+          -  (2 lam / bd) * (w * Zd)^T Dd                (hinge term)
+
+    where w_i = 1 if ||L delta_i||^2 < 1 else 0 (hinge active set).
+    """
+    bs = ds.shape[0]
+    bd = dd.shape[0]
+    zs = project(ds, L)                      # (bs, k)
+    zd = project(dd, L)                      # (bd, k)
+    dist_s = jnp.sum(zs * zs, axis=-1)       # (bs,)
+    dist_d = jnp.sum(zd * zd, axis=-1)       # (bd,)
+    hinge = jnp.maximum(0.0, 1.0 - dist_d)
+    obj = jnp.mean(dist_s) + lam * jnp.mean(hinge)
+    w = (dist_d < 1.0).astype(L.dtype)       # (bd,)
+    g = (2.0 / bs) * zs.T @ ds - (2.0 * lam / bd) * (w[:, None] * zd).T @ dd
+    return obj, g
+
+
+def sgd_step(L, ds, dd, lam, lr):
+    """(loss, L') — one fused SGD step on the minibatch."""
+    obj, g = loss_grad(L, ds, dd, lam)
+    return obj, L - lr * g

@@ -1,0 +1,89 @@
+"""L2: the DML compute graph, built on the L1 Pallas kernels.
+
+Three exported entry points (each AOT-lowered per shape variant by
+``aot.py``; the rust runtime executes them via PJRT):
+
+* ``loss_grad(L, Ds, Dd, lam)    -> (loss(1,1), G(k,d))``
+    The async-SGD worker step: the worker computes a gradient on its local
+    parameter copy and ships it to the parameter server (paper §4.1).
+
+* ``step(L, Ds, Dd, lam, lr)     -> (loss(1,1), L'(k,d))``
+    Fused gradient + SGD update, for single-process training and for the
+    server-side "apply aggregated update" fast path. ``L`` is donated so
+    XLA updates it in place.
+
+* ``pair_dist(L, D)              -> dist(b,1)``
+    Evaluation path: squared Mahalanobis distances for PR/AP sweeps.
+
+Scalars (lam, lr) are (1,1) f32 *runtime inputs*, not baked constants, so
+one artifact per shape serves every hyperparameter setting.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dml_grad
+from .kernels import pair_dist as pair_dist_kernel
+
+
+def loss_grad(L, ds, dd, lam):
+    """Minibatch objective + gradient. Returns (loss(1,1), G(k,d))."""
+    return dml_grad.loss_grad(L, ds, dd, lam)
+
+
+def step(L, ds, dd, lam, lr):
+    """Fused minibatch SGD step. Returns (loss(1,1), L'(k,d))."""
+    loss, g = dml_grad.loss_grad(L, ds, dd, lam)
+    return loss, L - lr[0, 0] * g
+
+
+def pair_dist(L, diffs):
+    """Squared Mahalanobis distances. Returns (b,1)."""
+    return pair_dist_kernel.pair_dist(diffs, L)
+
+
+def apply_update(L, g, lr):
+    """Server-side parameter update L' = L - lr * G (pure VPU, no MXU)."""
+    return (L - lr[0, 0] * g,)
+
+
+# ---------------------------------------------------------------------------
+# Shape variants exported by aot.py.
+#
+# Paper configs (Table 1):
+#   MNIST      d=780    k=600    minibatch 1000 (500 sim + 500 dis)
+#   ImNet-60K  d=21504  k=10000  minibatch 100  (50 + 50)
+#   ImNet-1M   d=21504  k=1000   minibatch 1000 (500 + 500)
+#
+# MNIST is exported at paper-true shape. The ImageNet configs are exported
+# dimension-scaled for the 1-core CPU testbed (ratios documented in
+# DESIGN.md); the paper-true shapes appear in the simulator's cost model
+# instead. ``test_small`` backs the rust unit/integration tests.
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # name:               (k,    d,    bs,  bd,  eval_batch)
+    "test_small":         (8,    16,   4,   4,   16),
+    "mnist":              (600,  780,  500, 500, 1000),
+    "imnet60k_scaled":    (512,  2048, 50,  50,  1000),
+    "imnet1m_scaled":     (256,  2048, 500, 500, 1000),
+}
+
+
+def specs_for(name):
+    """jax.ShapeDtypeStructs for each exported function of a variant."""
+    k, d, bs, bd, be = VARIANTS[name]
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    L = s((k, d), f32)
+    ds = s((bs, d), f32)
+    dd = s((bd, d), f32)
+    scalar = s((1, 1), f32)
+    g = s((k, d), f32)
+    ev = s((be, d), f32)
+    return {
+        "loss_grad": (loss_grad, (L, ds, dd, scalar), None),
+        "step": (step, (L, ds, dd, scalar, scalar), (0,)),  # donate L
+        "pair_dist": (pair_dist, (L, ev), None),
+        "apply_update": (apply_update, (L, g, scalar), (0,)),
+    }

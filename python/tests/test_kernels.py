@@ -1,0 +1,247 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the repo.
+
+Everything the rust runtime executes is lowered from these kernels, so
+allclose here + HLO round-trip tests on the rust side == end-to-end
+numeric correctness.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dml_grad, pair_dist, ref
+
+
+def rand_problem(seed, k, d, bs, bd, scale=0.3):
+    rng = np.random.RandomState(seed)
+    L = (rng.randn(k, d) * scale / np.sqrt(d)).astype(np.float32)
+    ds = rng.randn(bs, d).astype(np.float32)
+    dd = rng.randn(bd, d).astype(np.float32)
+    return L, ds, dd
+
+
+LAM = np.array([[1.0]], dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# project
+# ---------------------------------------------------------------------------
+
+class TestProject:
+    @pytest.mark.parametrize("k,d,b,blk", [
+        (8, 16, 4, 8),
+        (8, 16, 4, 16),
+        (3, 30, 5, 10),
+        (600, 780, 16, 260),
+        (7, 64, 1, 8),
+    ])
+    def test_matches_ref(self, k, d, b, blk):
+        L, ds, _ = rand_problem(0, k, d, b, b)
+        got = dml_grad.project(jnp.array(ds), jnp.array(L), blk_d=blk)
+        want = ref.project(ds, L)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_single_block(self):
+        """blk == d degenerates to one plain matmul."""
+        L, ds, _ = rand_problem(1, 5, 12, 3, 3)
+        got = dml_grad.project(jnp.array(ds), jnp.array(L), blk_d=12)
+        np.testing.assert_allclose(got, ref.project(ds, L),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_accumulation_order_invariance(self):
+        """Different d-tilings must agree (up to fp assoc noise)."""
+        L, ds, _ = rand_problem(2, 6, 48, 4, 4)
+        outs = [
+            np.asarray(dml_grad.project(jnp.array(ds), jnp.array(L), blk_d=b))
+            for b in (4, 8, 16, 48)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# loss_grad
+# ---------------------------------------------------------------------------
+
+class TestLossGrad:
+    @pytest.mark.parametrize("k,d,bs,bd,blk", [
+        (8, 16, 4, 4, 8),
+        (8, 16, 4, 6, 8),        # asymmetric batch halves
+        (16, 64, 10, 10, 16),
+        (600, 780, 8, 8, 195),   # mnist-shaped L, tiny batch
+    ])
+    def test_matches_ref(self, k, d, bs, bd, blk):
+        L, ds, dd = rand_problem(3, k, d, bs, bd)
+        loss, g = dml_grad.loss_grad(
+            jnp.array(L), jnp.array(ds), jnp.array(dd), jnp.array(LAM),
+            blk_d=blk)
+        rl, rg = ref.loss_grad(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                               1.0)
+        np.testing.assert_allclose(float(loss[0, 0]), float(rl), rtol=1e-5)
+        np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("lam", [0.0, 0.5, 1.0, 4.0])
+    def test_lambda_is_runtime_input(self, lam):
+        L, ds, dd = rand_problem(4, 8, 16, 4, 4)
+        lam_arr = np.array([[lam]], dtype=np.float32)
+        loss, g = dml_grad.loss_grad(
+            jnp.array(L), jnp.array(ds), jnp.array(dd), jnp.array(lam_arr),
+            blk_d=8)
+        rl, rg = ref.loss_grad(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                               lam)
+        np.testing.assert_allclose(float(loss[0, 0]), float(rl), rtol=1e-5)
+        np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-5)
+
+    def test_gradient_finite_difference(self):
+        """Closed-form gradient vs central differences on the objective."""
+        k, d, bs, bd = 4, 6, 3, 3
+        L, ds, dd = rand_problem(5, k, d, bs, bd, scale=0.5)
+        _, g = dml_grad.loss_grad(
+            jnp.array(L), jnp.array(ds), jnp.array(dd), jnp.array(LAM),
+            blk_d=6)
+        g = np.asarray(g)
+        eps = 1e-3
+        rng = np.random.RandomState(6)
+        for _ in range(10):
+            i, j = rng.randint(k), rng.randint(d)
+            Lp, Lm = L.copy(), L.copy()
+            Lp[i, j] += eps
+            Lm[i, j] -= eps
+            fp = float(ref.loss(jnp.array(Lp), jnp.array(ds),
+                                jnp.array(dd), 1.0))
+            fm = float(ref.loss(jnp.array(Lm), jnp.array(ds),
+                                jnp.array(dd), 1.0))
+            fd = (fp - fm) / (2 * eps)
+            np.testing.assert_allclose(g[i, j], fd, rtol=2e-2, atol=1e-3)
+
+    def test_hinge_inactive_when_far(self):
+        """Dissimilar pairs already past the margin contribute no grad."""
+        k, d = 4, 8
+        L = (np.eye(k, d) * 10).astype(np.float32)   # huge distances
+        ds = np.zeros((2, d), dtype=np.float32)      # sim term = 0
+        dd = np.ones((2, d), dtype=np.float32)
+        loss, g = dml_grad.loss_grad(
+            jnp.array(L), jnp.array(ds), jnp.array(dd), jnp.array(LAM),
+            blk_d=8)
+        assert float(loss[0, 0]) == 0.0
+        np.testing.assert_allclose(g, np.zeros((k, d)), atol=1e-7)
+
+    def test_hinge_active_when_close(self):
+        """Dissimilar pairs inside the margin push L to expand."""
+        k, d = 4, 8
+        L = (np.eye(k, d) * 1e-3).astype(np.float32)
+        ds = np.zeros((2, d), dtype=np.float32)
+        dd = np.ones((2, d), dtype=np.float32)
+        loss, g = dml_grad.loss_grad(
+            jnp.array(L), jnp.array(ds), jnp.array(dd), jnp.array(LAM),
+            blk_d=8)
+        assert 0.9 < float(loss[0, 0]) <= 1.0    # hinge ~ 1 - eps
+        assert np.abs(np.asarray(g)).max() > 0   # gradient nonzero
+
+    def test_zero_L_gives_margin_loss(self):
+        """L = 0: sim term 0, every hinge fully active -> loss == lam."""
+        k, d = 3, 12
+        L = np.zeros((k, d), dtype=np.float32)
+        _, ds, dd = rand_problem(7, k, d, 5, 5)
+        for lam in (0.5, 1.0, 2.0):
+            lam_arr = np.array([[lam]], dtype=np.float32)
+            loss, _ = dml_grad.loss_grad(
+                jnp.array(L), jnp.array(ds), jnp.array(dd),
+                jnp.array(lam_arr), blk_d=12)
+            np.testing.assert_allclose(float(loss[0, 0]), lam, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pair_dist
+# ---------------------------------------------------------------------------
+
+class TestPairDist:
+    @pytest.mark.parametrize("k,d,b,blk", [
+        (8, 16, 4, 8),
+        (600, 780, 32, 260),
+        (5, 40, 7, 8),
+    ])
+    def test_matches_ref(self, k, d, b, blk):
+        L, ds, _ = rand_problem(8, k, d, b, b)
+        got = pair_dist.pair_dist(jnp.array(ds), jnp.array(L), blk_d=blk)
+        want = ref.pair_dist(jnp.array(ds), jnp.array(L))
+        np.testing.assert_allclose(got[:, 0], want, rtol=1e-4, atol=1e-5)
+
+    def test_nonnegative(self):
+        L, ds, _ = rand_problem(9, 8, 16, 20, 20)
+        got = pair_dist.pair_dist(jnp.array(ds), jnp.array(L), blk_d=16)
+        assert (np.asarray(got) >= 0).all()
+
+    def test_zero_diff_zero_dist(self):
+        L = np.random.RandomState(10).randn(4, 8).astype(np.float32)
+        z = np.zeros((3, 8), dtype=np.float32)
+        got = pair_dist.pair_dist(jnp.array(z), jnp.array(L), blk_d=8)
+        np.testing.assert_allclose(got, np.zeros((3, 1)), atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# block-size chooser
+# ---------------------------------------------------------------------------
+
+class TestChooseBlockD:
+    @pytest.mark.parametrize("d", [16, 780, 2048, 21504, 97])
+    def test_divides(self, d):
+        blk = dml_grad.choose_block_d(d, 600, 500)
+        assert d % blk == 0
+
+    def test_fits_budget(self):
+        # Paper's largest config: k=10000, b=50, d=21504.
+        k, b, d = 10000, 50, 21504
+        blk = dml_grad.choose_block_d(d, k, b)
+        resident = 2 * b * k * 4
+        streamed = (2 * b + k) * blk * 4 * 2
+        assert resident + streamed <= dml_grad.VMEM_BUDGET
+        assert blk >= 64   # still a useful tile
+
+    def test_prime_d_degrades_to_1(self):
+        # a pathological prime d still yields a legal (if slow) tiling
+        assert dml_grad.choose_block_d(9973, 64, 8) == 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes & scales
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 24),
+    nblk=st.integers(1, 4),
+    blk=st.sampled_from([4, 8, 16]),
+    bs=st.integers(1, 12),
+    bd=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 0.1, 1.0, 10.0]),
+)
+def test_loss_grad_hypothesis(k, nblk, blk, bs, bd, seed, scale):
+    d = nblk * blk
+    L, ds, dd = rand_problem(seed % 10000, k, d, bs, bd, scale=scale)
+    loss, g = dml_grad.loss_grad(
+        jnp.array(L), jnp.array(ds), jnp.array(dd), jnp.array(LAM),
+        blk_d=blk)
+    rl, rg = ref.loss_grad(jnp.array(L), jnp.array(ds), jnp.array(dd), 1.0)
+    np.testing.assert_allclose(float(loss[0, 0]), float(rl),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(g, rg, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 32),
+    nblk=st.integers(1, 5),
+    blk=st.sampled_from([4, 8]),
+    b=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pair_dist_hypothesis(k, nblk, blk, b, seed):
+    d = nblk * blk
+    L, ds, _ = rand_problem(seed % 10000, k, d, b, b)
+    got = pair_dist.pair_dist(jnp.array(ds), jnp.array(L), blk_d=blk)
+    want = ref.pair_dist(jnp.array(ds), jnp.array(L))
+    np.testing.assert_allclose(got[:, 0], want, rtol=1e-4, atol=1e-6)

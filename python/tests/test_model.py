@@ -1,0 +1,144 @@
+"""L2 model semantics + AOT manifest consistency."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def small_problem(seed=0):
+    k, d, bs, bd, _ = model.VARIANTS["test_small"]
+    rng = np.random.RandomState(seed)
+    L = (rng.randn(k, d) * 0.2).astype(np.float32)
+    ds = rng.randn(bs, d).astype(np.float32)
+    dd = rng.randn(bd, d).astype(np.float32)
+    return L, ds, dd
+
+
+LAM = np.array([[1.0]], dtype=np.float32)
+LR = np.array([[0.05]], dtype=np.float32)
+
+
+class TestStep:
+    def test_step_equals_grad_then_update(self):
+        L, ds, dd = small_problem()
+        loss1, g = model.loss_grad(jnp.array(L), jnp.array(ds),
+                                   jnp.array(dd), jnp.array(LAM))
+        loss2, L2 = model.step(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                               jnp.array(LAM), jnp.array(LR))
+        np.testing.assert_allclose(float(loss1[0, 0]), float(loss2[0, 0]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(L2, L - 0.05 * np.asarray(g),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_apply_update(self):
+        L, ds, dd = small_problem(1)
+        _, g = model.loss_grad(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                               jnp.array(LAM))
+        (L2,) = model.apply_update(jnp.array(L), g, jnp.array(LR))
+        np.testing.assert_allclose(L2, L - 0.05 * np.asarray(g), rtol=1e-6)
+
+    def test_training_decreases_objective(self):
+        """A few SGD steps on a fixed batch must reduce the loss."""
+        L, ds, dd = small_problem(2)
+        Lj = jnp.array(L)
+        losses = []
+        for _ in range(20):
+            loss, Lj = model.step(Lj, jnp.array(ds), jnp.array(dd),
+                                  jnp.array(LAM), jnp.array(LR))
+            losses.append(float(loss[0, 0]))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_step_matches_ref_sgd(self):
+        L, ds, dd = small_problem(3)
+        _, L2 = model.step(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                           jnp.array(LAM), jnp.array(LR))
+        _, rL2 = ref.sgd_step(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                              1.0, 0.05)
+        np.testing.assert_allclose(L2, rL2, rtol=1e-4, atol=1e-6)
+
+
+class TestVariants:
+    def test_all_variants_have_consistent_shapes(self):
+        for name, (k, d, bs, bd, be) in model.VARIANTS.items():
+            specs = model.specs_for(name)
+            fn, args, donate = specs["step"]
+            assert args[0].shape == (k, d)
+            assert args[1].shape == (bs, d)
+            assert args[2].shape == (bd, d)
+            assert donate == (0,)
+            _, pd_args, _ = specs["pair_dist"]
+            assert pd_args[1].shape == (be, d)
+
+    def test_mnist_variant_is_paper_true(self):
+        """Table 1: MNIST d=780, k=600, minibatch 1000 (500+500)."""
+        k, d, bs, bd, _ = model.VARIANTS["mnist"]
+        assert (k, d, bs, bd) == (600, 780, 500, 500)
+
+
+class TestAotExport:
+    @pytest.fixture(scope="class")
+    def exported(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        manifest = {"format": "hlo-text/1", "variants": {}, "entries": []}
+        aot.export_variant("test_small", str(out), manifest)
+        return out, manifest
+
+    def test_files_exist_and_parse(self, exported):
+        out, manifest = exported
+        for e in manifest["entries"]:
+            text = (out / e["file"]).read_text()
+            assert "ENTRY" in text and "HloModule" in text
+            # donated step must carry the aliasing annotation
+            if e["function"] == "step":
+                assert "input_output_alias" in text
+
+    def test_manifest_matches_specs(self, exported):
+        _, manifest = exported
+        by_fn = {e["function"]: e for e in manifest["entries"]}
+        assert set(by_fn) == {"loss_grad", "step", "pair_dist",
+                              "apply_update"}
+        k, d, bs, bd, be = model.VARIANTS["test_small"]
+        assert by_fn["step"]["inputs"][0]["shape"] == [k, d]
+        assert by_fn["step"]["outputs"][0]["shape"] == [1, 1]
+        assert by_fn["step"]["outputs"][1]["shape"] == [k, d]
+        assert by_fn["pair_dist"]["outputs"][0]["shape"] == [be, 1]
+
+    def test_checked_in_manifest_is_current(self):
+        """artifacts/manifest.json (if built) matches model.VARIANTS."""
+        path = os.path.join(os.path.dirname(__file__),
+                            "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            m = json.load(f)
+        assert set(m["variants"]) == set(model.VARIANTS)
+        for name, v in model.VARIANTS.items():
+            assert m["variants"][name]["k"] == v[0]
+            assert m["variants"][name]["d"] == v[1]
+
+
+class TestNumericsEdgeCases:
+    def test_large_scale_inputs_finite(self):
+        k, d = 8, 16
+        rng = np.random.RandomState(4)
+        L = (rng.randn(k, d) * 100).astype(np.float32)
+        ds = (rng.randn(4, d) * 100).astype(np.float32)
+        dd = (rng.randn(4, d) * 100).astype(np.float32)
+        loss, g = model.loss_grad(jnp.array(L), jnp.array(ds),
+                                  jnp.array(dd), jnp.array(LAM))
+        assert np.isfinite(float(loss[0, 0]))
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_lr_zero_is_identity(self):
+        L, ds, dd = small_problem(5)
+        zero = np.array([[0.0]], dtype=np.float32)
+        _, L2 = model.step(jnp.array(L), jnp.array(ds), jnp.array(dd),
+                           jnp.array(LAM), jnp.array(zero))
+        np.testing.assert_allclose(L2, L, atol=0)

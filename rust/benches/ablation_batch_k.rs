@@ -1,0 +1,95 @@
+//! Ablation — minibatch size and factor rank k.
+//!
+//! (a) step latency & achieved FLOP rate vs (batch, k) at the MNIST
+//!     input dimension (native engine);
+//! (b) convergence per update vs batch size at fixed compute budget
+//!     (why the paper uses 1000-pair minibatches instead of ITML-style
+//!     single-pair updates).
+
+use dmlps::config::{FeatureKind, Preset};
+use dmlps::data::ExperimentData;
+use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
+use dmlps::linalg::Mat;
+use dmlps::util::bench::{format_throughput, Bench};
+use dmlps::util::rng::Pcg32;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+
+    // ---------------- (a) step latency sweep ----------------
+    println!("# Ablation (a): step latency vs batch and k (d=780)\n");
+    let d = 780;
+    let mut b = Bench::new("native loss_grad @ d=780")
+        .with_target_time(Duration::from_millis(if quick { 300 } else {
+            1500
+        }));
+    for &k in &[100usize, 300, 600] {
+        for &batch in &[64usize, 256, 1000] {
+            let bs = batch / 2;
+            let problem = DmlProblem::new(d, k, 1.0);
+            let l = problem.init_l(0.1, 0);
+            let mut rng = Pcg32::new(1);
+            let mut dsb = vec![0.0f32; bs * d];
+            let mut ddb = vec![0.0f32; bs * d];
+            rng.fill_gaussian(&mut dsb, 0.0, 1.0);
+            rng.fill_gaussian(&mut ddb, 0.0, 1.0);
+            let mut g = Mat::zeros(k, d);
+            let mut eng = NativeEngine::new();
+            let flops = problem.step_flops(bs, bs);
+            b.bench_with_work(
+                &format!("k={k} batch={batch}"),
+                Some(flops),
+                || {
+                    let batch = MinibatchRef::new(&dsb, &ddb, bs, bs, d);
+                    eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+                },
+            );
+        }
+    }
+    b.report();
+    if let Some(best) = b
+        .rows()
+        .iter()
+        .filter_map(|m| m.throughput())
+        .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.max(t))))
+    {
+        println!("\npeak native rate: {}", format_throughput(best));
+    }
+
+    // ---------------- (b) convergence per update ----------------
+    println!("\n# Ablation (b): quality at equal pair budget vs batch\n");
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.kind = FeatureKind::Gaussian;
+    cfg.dataset.dim = 64;
+    cfg.dataset.n_classes = 10;
+    cfg.dataset.separation = 2.5;
+    cfg.dataset.n_train = 2_000;
+    cfg.dataset.n_similar = 5_000;
+    cfg.dataset.n_dissimilar = 5_000;
+    cfg.model.k = 32;
+    cfg.artifact_variant = None;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let pair_budget = if quick { 20_000 } else { 100_000 };
+    println!("| batch | steps | final objective | test AP |");
+    println!("|---|---|---|---|");
+    for &batch in &[2usize, 8, 32, 128] {
+        let mut c = cfg.clone();
+        c.optim.batch_sim = batch;
+        c.optim.batch_dis = batch;
+        c.optim.steps = pair_budget / (2 * batch);
+        let mut eng = NativeEngine::new();
+        let run = dmlps::cli::driver::train_single_thread(
+            &c, &data, &mut eng, c.optim.steps.max(1),
+        )?;
+        let ap = dmlps::cli::driver::ap_of_l(&mut eng, &run.l, &data)?;
+        println!(
+            "| {} | {} | {:.4} | {:.4} |",
+            2 * batch,
+            c.optim.steps,
+            run.curve.final_objective().unwrap_or(f64::NAN),
+            ap
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Ablation — consistency models on the real threaded parameter server:
+//! ASP (the paper's choice) vs BSP (Hadoop/Spark-style barriers) vs
+//! SSP(4) (bounded staleness).
+//!
+//! Measures wall time, time the computing threads spent blocked on the
+//! consistency gate, and final objective / test AP at equal step budget.
+//! Expected shape (paper §1/§2): ASP never waits, BSP pays barrier time;
+//! all three reach comparable quality at this scale.
+
+use dmlps::cli::driver::{ap_euclidean, ap_of_l, train_distributed};
+use dmlps::config::{Consistency, FeatureKind, Preset};
+use dmlps::data::ExperimentData;
+use dmlps::ps::RunOptions;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.name = "ablation_mid".into();
+    cfg.dataset.kind = FeatureKind::Gaussian;
+    // dimension/batch chosen so one gradient costs ~5 ms: the paper's
+    // regime (compute >> refresh latency). With near-zero compute ASP's
+    // staleness explodes and it diverges at any shared lr — a real
+    // effect, but not the operating point the paper reports.
+    cfg.dataset.dim = 256;
+    cfg.dataset.n_classes = 10;
+    cfg.dataset.separation = 4.0;
+    cfg.dataset.n_train = 2_000;
+    cfg.dataset.n_test = 500;
+    cfg.dataset.n_similar = 5_000;
+    cfg.dataset.n_dissimilar = 5_000;
+    cfg.dataset.n_test_pairs = 1_000;
+    cfg.model.k = 64;
+    cfg.optim.steps = if quick { 300 } else { 1_200 };
+    cfg.optim.batch_sim = 32;
+    cfg.optim.batch_dis = 32;
+    cfg.optim.lr = 0.1;
+    cfg.cluster.workers = 4;
+    cfg.artifact_variant = None;
+
+    println!(
+        "# Ablation: consistency models (threaded PS, {} workers, \
+         {} steps/worker)\n",
+        cfg.cluster.workers, cfg.optim.steps
+    );
+    println!(
+        "| consistency | wall (s) | applied | worker wait (s) | \
+         final f | test AP |"
+    );
+    println!("|---|---|---|---|---|---|");
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let ap_eu = ap_euclidean(&data);
+    for consistency in [
+        Consistency::Asp,
+        Consistency::Ssp { staleness: 4 },
+        Consistency::Bsp,
+    ] {
+        let mut c = cfg.clone();
+        c.cluster.consistency = consistency;
+        let r = train_distributed(&c, &data, "native",
+                                  &RunOptions::default())?;
+        let wait: f64 = r.worker_stats.iter().map(|w| w.wait_s).sum();
+
+        let mut eng = dmlps::dml::NativeEngine::new();
+        let ap = ap_of_l(&mut eng, &r.l, &data)?;
+        println!(
+            "| {} | {:.2} | {} | {:.2} | {:.4} | {:.4} |",
+            consistency.name(),
+            r.wall_s,
+            r.applied_updates,
+            wait,
+            r.curve.final_objective().unwrap_or(f64::NAN),
+            ap
+        );
+    }
+    println!("\nEuclidean baseline AP: {ap_eu:.4}");
+    Ok(())
+}

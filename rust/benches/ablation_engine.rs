@@ -1,0 +1,85 @@
+//! Ablation — native Rust engine vs the AOT-compiled XLA/PJRT engine on
+//! the minibatch hot path, across artifact variants.
+//!
+//! This is the L1/L2-vs-L3 comparison: the XLA path runs the Pallas
+//! kernels lowered through HLO (with XLA's fused Eigen matmuls); the
+//! native path is our hand-blocked Rust. Skips the XLA rows when
+//! artifacts are absent.
+
+use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
+use dmlps::linalg::Mat;
+use dmlps::runtime::{artifacts_available, artifacts_dir, XlaEngine};
+use dmlps::util::bench::Bench;
+use dmlps::util::rng::Pcg32;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("engine comparison: minibatch step")
+        .with_target_time(Duration::from_millis(if quick { 400 } else {
+            2000
+        }));
+
+    let variants = ["test_small", "mnist", "imnet60k_scaled",
+                    "imnet1m_scaled"];
+    for variant in variants {
+        let Ok(manifest) = dmlps::runtime::Manifest::load(&artifacts_dir())
+        else {
+            continue;
+        };
+        let Ok(shape) = manifest.variant(variant) else { continue };
+        let (k, d, bs, bd) = (shape.k, shape.d, shape.bs, shape.bd);
+        let problem = DmlProblem::new(d, k, 1.0);
+        let l0 = problem.init_l(0.1, 0);
+        let mut rng = Pcg32::new(2);
+        let mut dsb = vec![0.0f32; bs * d];
+        let mut ddb = vec![0.0f32; bd * d];
+        rng.fill_gaussian(&mut dsb, 0.0, 1.0);
+        rng.fill_gaussian(&mut ddb, 0.0, 1.0);
+        let flops = problem.step_flops(bs, bd);
+
+        // native
+        let mut eng = NativeEngine::new();
+        let mut l = l0.clone();
+        b.bench_with_work(
+            &format!("{variant} native step"),
+            Some(flops),
+            || {
+                let batch = MinibatchRef::new(&dsb, &ddb, bs, bd, d);
+                eng.step(&mut l, &batch, 1.0, 1e-6).unwrap();
+            },
+        );
+
+        // xla
+        if artifacts_available() {
+            let mut xe = XlaEngine::load(&artifacts_dir(), variant)?;
+            let mut l = l0.clone();
+            b.bench_with_work(
+                &format!("{variant} xla step (fused, donated)"),
+                Some(flops),
+                || {
+                    let batch = MinibatchRef::new(&dsb, &ddb, bs, bd, d);
+                    xe.step(&mut l, &batch, 1.0, 1e-6).unwrap();
+                },
+            );
+            // loss_grad path (what PS workers call)
+            let mut g = Mat::zeros(k, d);
+            let mut xe2 = XlaEngine::load(&artifacts_dir(), variant)?;
+            b.bench_with_work(
+                &format!("{variant} xla loss_grad"),
+                Some(flops),
+                || {
+                    let batch = MinibatchRef::new(&dsb, &ddb, bs, bd, d);
+                    xe2.loss_grad(&l0, &batch, 1.0, &mut g).unwrap();
+                },
+            );
+        }
+    }
+    b.report();
+    println!(
+        "\n(throughput = FLOP rate; the xla rows include literal \
+         marshalling host↔device, which is the price of the AOT runtime \
+         boundary — see EXPERIMENTS.md §Perf)"
+    );
+    Ok(())
+}

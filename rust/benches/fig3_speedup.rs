@@ -1,0 +1,131 @@
+//! Fig 3 — speedup factors vs number of CPU cores.
+//!
+//! Protocol exactly as §5.3: "for each machine setting we record the
+//! running time that the objective value is decreased to p, where p is
+//! the objective value achieved by one single machine at the end of
+//! training. The speedup factor of n machines is t_1/t_n."
+//!
+//! Two sections:
+//! * numeric mode — real async-SGD numerics at scaled shapes, paper-true
+//!   clock (same machinery as fig2);
+//! * cost-only mode at exact paper-true shapes (220M-parameter
+//!   ImageNet-63K messages included) via the NullWorkload, reproducing
+//!   the paper's headline "3.6×/3.8× at 4 machines (256 cores)" shape.
+
+use dmlps::cli::driver::{calibrate_for, sim_scaled, simulate_convergence,
+                         SimKnobs};
+
+/// Era calibration: the paper's 2014 testbed retires the minibatch
+/// gradient ~10x slower than this box's single core (anchor: the paper
+/// reports ~0.5 h single-thread MNIST training in section 5.4; ours measures
+/// ~2-3 min at the identical shape). The simulated clock charges
+/// paper-era cost so compute/communication ratios match the paper's.
+const ERA_SLOWDOWN: f64 = 10.0;
+use dmlps::config::{Preset, PAPER_SHAPES};
+use dmlps::data::ExperimentData;
+use dmlps::dml::LrSchedule;
+use dmlps::metrics::speedup_table;
+use dmlps::simcluster::{NetworkModel, NullWorkload, SimConfig, Simulator};
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let updates: u64 = if quick { 200 } else { 600 };
+
+    println!("# Fig 3: speedup vs cores (numeric mode)\n");
+    let sweeps: [(&str, Preset, usize, &[usize]); 3] = [
+        ("Fig 3(a) MNIST", Preset::Mnist, 16, &[16, 32, 64, 128, 256]),
+        ("Fig 3(b) ImageNet-63K", Preset::Imnet60kScaled, 64,
+         &[64, 128, 256]),
+        ("Fig 3(c) ImageNet-1M", Preset::Imnet1mScaled, 64,
+         &[64, 128, 256]),
+    ];
+    for (title, preset, cpm, cores_list) in sweeps {
+        let scaled = sim_scaled(preset);
+        let cfg = &scaled.cfg;
+        let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+        let grad_paper = calibrate_for(cfg) * scaled.flop_ratio * ERA_SLOWDOWN;
+        // baseline run fixes the target objective p (§5.3 protocol)
+        let mut curves = Vec::new();
+        for &cores in cores_list {
+            let machines = (cores / cpm).max(1);
+            let r = simulate_convergence(
+                cfg, &data, machines, cpm.min(cores),
+                SimKnobs {
+                    grad_seconds: grad_paper,
+                    bytes_per_msg: Some(scaled.paper_bytes),
+                    total_updates: updates,
+                },
+            );
+            curves.push((cores, r.curve));
+        }
+        let target = curves[0].1.final_objective().unwrap();
+        let meas: Vec<(usize, f64)> = curves
+            .iter()
+            .filter_map(|(cores, c)| {
+                c.time_to_reach(target).map(|t| (*cores, t))
+            })
+            .collect();
+        println!("\n## {title} (target f ≤ {target:.4})\n");
+        println!("| cores | time-to-target (sim-s) | speedup | linear |");
+        println!("|---|---|---|---|");
+        for row in speedup_table(meas) {
+            println!(
+                "| {} | {:.1} | {:.2}x | {:.2}x |",
+                row.cores, row.time_to_target_s, row.speedup, row.linear
+            );
+        }
+    }
+
+    println!("\n# cost-only mode at exact paper-true shapes\n");
+    println!(
+        "(throughput speedup to {updates} applied updates; gradients are \
+         inert, message sizes and compute times are paper-true)\n"
+    );
+    // calibrate once on the real mnist shape, extrapolate by FLOPs
+    let mnist_cfg = Preset::Mnist.config();
+    let mnist_grad = calibrate_for(&mnist_cfg);
+    let mnist_flops = PAPER_SHAPES[0].step_flops();
+    for shape in &PAPER_SHAPES {
+        let grad = mnist_grad * shape.step_flops() / mnist_flops * ERA_SLOWDOWN;
+        let cpm = if shape.name == "MNIST" { 16 } else { 64 };
+        println!(
+            "## {} (d={}, k={}, {:.0} MB msgs, {:.2}s/grad/core)\n",
+            shape.name, shape.d, shape.k,
+            shape.n_params() as f64 * 4.0 / 1e6, grad
+        );
+        let mut meas = Vec::new();
+        for machines in [1usize, 2, 4] {
+            let cfg = SimConfig {
+                machines,
+                cores_per_machine: cpm,
+                grad_seconds: grad,
+                apply_seconds: shape.n_params() as f64 * 8.0 / 4.0e9,
+                bytes_per_msg: shape.n_params() as f64 * 4.0,
+                network: NetworkModel::ten_gbe(),
+                jitter: 0.05,
+                total_updates: updates,
+                probe_every: updates,
+                broadcast_every: 1,
+                lr: LrSchedule::constant(0.01),
+                seed: 7,
+            };
+            let mut w = NullWorkload;
+            let r = Simulator::new(cfg, &mut w).run();
+            meas.push((machines * cpm, r.sim_seconds));
+        }
+        println!("| cores | machines | sim time (s) | speedup | linear |");
+        println!("|---|---|---|---|---|");
+        for row in speedup_table(meas) {
+            println!(
+                "| {} | {} | {:.1} | {:.2}x | {:.2}x |",
+                row.cores, row.cores / cpm, row.time_to_target_s,
+                row.speedup, row.linear
+            );
+        }
+        println!();
+    }
+    println!(
+        "paper reference: 3.6x (ImNet-60K) / 3.8x (ImNet-1M) at 4 \
+         machines — compare the 4-machine rows above."
+    );
+}

@@ -1,0 +1,126 @@
+//! Fig 4(b) — best precision-recall curves on MNIST, all methods.
+//!
+//! Fits each method on the MNIST analog (same config as fig4a), scores
+//! the same held-out pairs, and prints each method's PR curve sampled at
+//! fixed recall grid points, plus AP. Expected ordering (paper §5.4):
+//! ours > Xing2002 ≈ ITML > KISS, all > Euclidean.
+
+use dmlps::baselines::{Itml, ItmlConfig, Kiss, KissConfig, LearnedMetric,
+                       Xing2002, Xing2002Config};
+use dmlps::cli::driver::train_single_thread;
+use dmlps::config::{ExperimentConfig, FeatureKind, Preset};
+use dmlps::data::ExperimentData;
+use dmlps::dml::NativeEngine;
+use dmlps::eval::{average_precision, pr_curve};
+
+fn mnist_small_config() -> ExperimentConfig {
+    // keep in sync with fig4a
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.name = "mnist_small".into();
+    cfg.dataset.kind = FeatureKind::Gaussian;
+    cfg.dataset.dim = 64;
+    cfg.dataset.n_classes = 10;
+    cfg.dataset.separation = 4.0;
+    cfg.dataset.n_train = 2_000;
+    cfg.dataset.n_test = 1_000;
+    cfg.dataset.n_similar = 5_000;
+    cfg.dataset.n_dissimilar = 5_000;
+    cfg.dataset.n_test_pairs = 2_000;
+    cfg.model.k = 48;
+    cfg.model.init_scale = 0.2;
+    cfg.optim.steps = 3_000;
+    cfg.optim.batch_sim = 16;
+    cfg.optim.batch_dis = 16;
+    cfg.optim.lr = 0.3;
+    cfg.artifact_variant = None;
+    cfg
+}
+
+/// Sample a PR curve at a fixed recall grid for table display.
+fn sample_pr(sim: &[f32], dis: &[f32]) -> Vec<(f64, f64)> {
+    let curve = pr_curve(sim, dis);
+    let grid: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    grid.iter()
+        .map(|&r| {
+            let p = curve
+                .iter()
+                .find(|pt| pt.recall >= r)
+                .map(|pt| pt.precision)
+                .unwrap_or(f64::NAN);
+            (r, p)
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let mut cfg = mnist_small_config();
+    if quick {
+        cfg.optim.steps = 500;
+    }
+    println!("# Fig 4(b): precision-recall curves on MNIST analog\n");
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+
+    let mut results: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::new();
+
+    // ours
+    let mut engine = NativeEngine::new();
+    let run = train_single_thread(&cfg, &data, &mut engine, 10_000)?;
+    let (sim, dis) = dmlps::eval::score_pairs(
+        &mut engine, &run.l, &data.test, &data.test_pairs,
+    )?;
+    results.push(("ours".into(), sim, dis));
+
+    // Xing2002
+    let x = Xing2002::new(Xing2002Config {
+        iters: if quick { 10 } else { 40 },
+        ..Default::default()
+    });
+    let (m, _) = x.fit_traced(&data.train, &data.pairs, &data.test,
+                              &data.test_pairs);
+    let (sim, dis) = m.score(&data.test, &data.test_pairs);
+    results.push(("Xing2002".into(), sim, dis));
+
+    // ITML
+    let itml = Itml::new(ItmlConfig { sweeps: 2, ..Default::default() });
+    let (m, _) = itml.fit_traced(&data.train, &data.pairs, &data.test,
+                                 &data.test_pairs);
+    let (sim, dis) = m.score(&data.test, &data.test_pairs);
+    results.push(("ITML".into(), sim, dis));
+
+    // KISS
+    let kiss = Kiss::new(KissConfig {
+        pca_dim: 64,
+        ..Default::default()
+    });
+    let m = kiss.fit(&data.train, &data.pairs);
+    let (sim, dis) = m.score(&data.test, &data.test_pairs);
+    results.push(("KISS".into(), sim, dis));
+
+    // Euclidean
+    let (sim, dis) = LearnedMetric::Euclidean
+        .score(&data.test, &data.test_pairs);
+    results.push(("Euclidean".into(), sim, dis));
+
+    println!("| recall | {} |",
+             results.iter().map(|(n, _, _)| n.clone())
+                 .collect::<Vec<_>>().join(" | "));
+    println!("|{}|", "---|".repeat(results.len() + 1));
+    let curves: Vec<Vec<(f64, f64)>> = results
+        .iter()
+        .map(|(_, s, d)| sample_pr(s, d))
+        .collect();
+    for i in 0..10 {
+        print!("| {:.1} ", curves[0][i].0);
+        for c in &curves {
+            print!("| {:.4} ", c[i].1);
+        }
+        println!("|");
+    }
+    println!("\n| method | AP |");
+    println!("|---|---|");
+    for (name, sim, dis) in &results {
+        println!("| {name} | {:.4} |", average_precision(sim, dis));
+    }
+    Ok(())
+}

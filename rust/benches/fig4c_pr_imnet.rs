@@ -1,0 +1,70 @@
+//! Fig 4(c) — precision-recall on ImageNet-1M: Euclidean distance on raw
+//! features vs the learned Mahalanobis metric.
+//!
+//! Uses the imnet1m preset (LLC-like sparse features, dimension-scaled
+//! per DESIGN.md), trains with the distributed path's configuration
+//! single-threaded, and prints both PR curves on held-out pairs.
+//! Expected shape: "with distance metric learning, the performance is
+//! greatly improved" — the learned curve dominates Euclidean everywhere.
+
+use dmlps::cli::driver::train_single_thread;
+use dmlps::config::Preset;
+use dmlps::data::ExperimentData;
+use dmlps::dml::NativeEngine;
+use dmlps::eval::{average_precision, pr_curve, score_pairs,
+                  score_pairs_euclidean};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let mut cfg = Preset::Imnet1mScaled.config();
+    cfg.optim.steps = if quick { 30 } else { 150 };
+    println!(
+        "# Fig 4(c): PR curves on ImageNet-1M analog (d={} k={}, \
+         LLC-like features)\n",
+        cfg.dataset.dim, cfg.model.k
+    );
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+
+    let mut engine = NativeEngine::new();
+    let run = train_single_thread(&cfg, &data, &mut engine, 50)?;
+    println!(
+        "trained {} steps in {:.1}s (objective {:.4} → {:.4})\n",
+        cfg.optim.steps, run.wall_s,
+        run.curve.points.first().unwrap().objective,
+        run.curve.points.last().unwrap().objective
+    );
+
+    let (sim_l, dis_l) = score_pairs(
+        &mut engine, &run.l, &data.test, &data.test_pairs,
+    )?;
+    let (sim_e, dis_e) =
+        score_pairs_euclidean(&data.test, &data.test_pairs);
+
+    let grid: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    let sample = |sim: &[f32], dis: &[f32]| -> Vec<f64> {
+        let curve = pr_curve(sim, dis);
+        grid.iter()
+            .map(|&r| {
+                curve
+                    .iter()
+                    .find(|pt| pt.recall >= r)
+                    .map(|pt| pt.precision)
+                    .unwrap_or(f64::NAN)
+            })
+            .collect()
+    };
+    let pl = sample(&sim_l, &dis_l);
+    let pe = sample(&sim_e, &dis_e);
+    println!("| recall | Euclidean | learned metric |");
+    println!("|---|---|---|");
+    for i in 0..grid.len() {
+        println!("| {:.1} | {:.4} | {:.4} |", grid[i], pe[i], pl[i]);
+    }
+    let ap_l = average_precision(&sim_l, &dis_l);
+    let ap_e = average_precision(&sim_e, &dis_e);
+    println!("\nAP: Euclidean {ap_e:.4} → learned {ap_l:.4}");
+    if !quick && ap_l <= ap_e {
+        println!("NOTE: expected learned > Euclidean (paper Fig 4c)");
+    }
+    Ok(())
+}

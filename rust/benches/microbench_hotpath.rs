@@ -1,0 +1,124 @@
+//! Microbenchmarks of the L3 hot-path components: the matmul kernels
+//! behind the native engine, the hinge pass, message-queue throughput,
+//! and parameter-copy cost — the quantities the §Perf optimization loop
+//! tracks.
+
+use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
+use dmlps::linalg::{self, Mat};
+use dmlps::util::bench::Bench;
+use dmlps::util::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let target = Duration::from_millis(if quick { 300 } else { 1500 });
+    let mut rng = Pcg32::new(3);
+
+    // ---- dot / matmul kernels at mnist shapes ----
+    let mut b = Bench::new("linalg kernels (mnist shapes)")
+        .with_target_time(target);
+    let d = 780;
+    let k = 600;
+    let bsz = 500;
+    let mut l = Mat::zeros(k, d);
+    rng.fill_gaussian(&mut l.data, 0.0, 0.1);
+    let mut diffs = Mat::zeros(bsz, d);
+    rng.fill_gaussian(&mut diffs.data, 0.0, 1.0);
+
+    let va: Vec<f32> = (0..d).map(|i| i as f32 * 0.01).collect();
+    let vb: Vec<f32> = (0..d).map(|i| 1.0 - i as f32 * 0.001).collect();
+    b.bench_with_work("dot(780)", Some(2.0 * d as f64), || {
+        std::hint::black_box(linalg::dot(&va, &vb));
+    });
+
+    let z_flops = 2.0 * bsz as f64 * k as f64 * d as f64;
+    b.bench_with_work("project Z = D·Lᵀ (500×780 · 780×600)",
+                      Some(z_flops), || {
+        std::hint::black_box(diffs.matmul_bt(&l));
+    });
+
+    let z = diffs.matmul_bt(&l);
+    let mut g = Mat::zeros(k, d);
+    b.bench_with_work("outer G = Zᵀ·D (600×500 · 500×780)",
+                      Some(z_flops), || {
+        linalg::matmul_at_into(&z, &diffs, &mut g, 0.0);
+    });
+    b.report();
+
+    // ---- full engine step decomposition ----
+    let mut b = Bench::new("native engine, mnist minibatch")
+        .with_target_time(target);
+    let problem = DmlProblem::new(d, k, 1.0);
+    let mut dsb = vec![0.0f32; bsz * d];
+    let mut ddb = vec![0.0f32; bsz * d];
+    rng.fill_gaussian(&mut dsb, 0.0, 1.0);
+    rng.fill_gaussian(&mut ddb, 0.0, 1.0);
+    let mut eng = NativeEngine::new();
+    let mut g = Mat::zeros(k, d);
+    b.bench_with_work(
+        "loss_grad (4 GEMMs + hinge)",
+        Some(problem.step_flops(bsz, bsz)),
+        || {
+            let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
+            eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+        },
+    );
+    let mut l2 = l.clone();
+    b.bench_with_work(
+        "step (loss_grad + axpy)",
+        Some(problem.step_flops(bsz, bsz)),
+        || {
+            let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
+            eng.step(&mut l2, &batch, 1.0, 1e-7).unwrap();
+        },
+    );
+    b.report();
+
+    // ---- PS plumbing: queue throughput & parameter copies ----
+    let mut b = Bench::new("parameter-server plumbing")
+        .with_target_time(target);
+    let payload: Vec<f32> = vec![0.0; k * d];
+    b.bench_with_work(
+        "mpsc send+recv of k×d gradient",
+        Some((k * d * 4) as f64),
+        || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            tx.send(payload.clone()).unwrap();
+            std::hint::black_box(rx.recv().unwrap());
+        },
+    );
+    let mut dst = vec![0.0f32; k * d];
+    b.bench_with_work(
+        "copy_from_slice k×d params (1.87 MB)",
+        Some((k * d * 4) as f64),
+        || {
+            dst.copy_from_slice(&payload);
+            std::hint::black_box(&dst);
+        },
+    );
+    let src = Mat::zeros(k, d);
+    b.bench_with_work("axpy k×d (server apply)",
+                      Some((k * d * 2) as f64), || {
+        let mut t = src.clone();
+        t.axpy_inplace(-0.01, &l);
+        std::hint::black_box(&t);
+    });
+    b.report();
+
+    // ---- minibatch materialization (diff_into path) ----
+    let mut b = Bench::new("minibatch materialization")
+        .with_target_time(target);
+    let spec = dmlps::data::SyntheticSpec::tiny();
+    let ds = spec.generate(0);
+    let mut prng = Pcg32::new(9);
+    let pairs = dmlps::data::PairSet::sample(&ds, 5_000, 5_000, &mut prng);
+    let mut it = dmlps::data::MinibatchIter::new(
+        &ds, &pairs, 128, 128, Pcg32::new(10),
+    );
+    b.bench_with_work(
+        "fill 128+128 pair diffs (d=16)",
+        Some((256 * 16 * 4) as f64),
+        || it.next_batch(),
+    );
+    b.report();
+}

@@ -1,0 +1,140 @@
+//! KISS metric learning (Köstinger et al., CVPR 2012).
+//!
+//! "Keep It Simple and Straightforward": a one-shot metric from the
+//! likelihood-ratio test between the similar-pair and dissimilar-pair
+//! difference distributions (both modeled as zero-mean Gaussians):
+//!
+//! ```text
+//! M = Σ_S⁻¹ − Σ_D⁻¹
+//! ```
+//!
+//! No iterations — "very fast" (paper: 2 minutes on MNIST) — but, as the
+//! paper observes, markedly worse AP than optimized methods. Covariances
+//! are computed after PCA so they are invertible (the paper reduces MNIST
+//! to 600 dims for exactly this reason, §5.4).
+
+use super::LearnedMetric;
+use crate::data::{Dataset, PairSet};
+use crate::linalg::chol::inverse_spd;
+use crate::linalg::pca::Pca;
+use crate::linalg::Mat;
+
+#[derive(Clone, Copy, Debug)]
+pub struct KissConfig {
+    /// PCA target dimension (paper: 600 for MNIST).
+    pub pca_dim: usize,
+    /// Covariance regularizer (added to the diagonal).
+    pub ridge: f32,
+    /// Clip M back to PSD (the raw difference of inverses is generally
+    /// indefinite; KISSME clips it to keep a valid metric).
+    pub project_psd: bool,
+}
+
+impl Default for KissConfig {
+    fn default() -> Self {
+        KissConfig { pca_dim: 64, ridge: 1e-4, project_psd: true }
+    }
+}
+
+pub struct Kiss {
+    pub cfg: KissConfig,
+}
+
+impl Kiss {
+    pub fn new(cfg: KissConfig) -> Self {
+        Kiss { cfg }
+    }
+
+    pub fn fit(&self, train: &Dataset, pairs: &PairSet) -> LearnedMetric {
+        let pca_dim = self.cfg.pca_dim.min(train.dim());
+        let pca = Pca::fit(&train.x, pca_dim);
+
+        let cov = |set: &[crate::data::Pair]| -> Mat {
+            let mut c = Mat::zeros(pca_dim, pca_dim);
+            let mut diff = vec![0.0f32; train.dim()];
+            for p in set {
+                train.diff_into(p.i as usize, p.j as usize, &mut diff);
+                let z = pca.components.matvec(&diff);
+                // c += z zᵀ
+                for i in 0..pca_dim {
+                    let zi = z[i];
+                    if zi == 0.0 {
+                        continue;
+                    }
+                    let row = &mut c.data[i * pca_dim..(i + 1) * pca_dim];
+                    for (cv, &zj) in row.iter_mut().zip(&z) {
+                        *cv += zi * zj;
+                    }
+                }
+            }
+            c.scale_inplace(1.0 / set.len().max(1) as f32);
+            for i in 0..pca_dim {
+                *c.at_mut(i, i) += self.cfg.ridge;
+            }
+            c
+        };
+
+        let cov_s = cov(&pairs.similar);
+        let cov_d = cov(&pairs.dissimilar);
+        let inv_s = inverse_spd(&cov_s).expect("Σ_S not invertible");
+        let inv_d = inverse_spd(&cov_d).expect("Σ_D not invertible");
+        let mut m = inv_s;
+        m.axpy_inplace(-1.0, &inv_d);
+        m.symmetrize_inplace();
+        if self.cfg.project_psd {
+            m = crate::linalg::eigen::project_psd(&m);
+        }
+        LearnedMetric::PcaM { pca, m }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::util::rng::Pcg32;
+
+    fn problem() -> (Dataset, PairSet, Dataset, PairSet) {
+        let spec = SyntheticSpec::tiny();
+        let mut rng = Pcg32::new(0);
+        let train = spec.generate_with(&mut rng, 400);
+        let test = spec.generate_with(&mut rng, 200);
+        let mut rng2 = Pcg32::new(1);
+        let pairs = PairSet::sample(&train, 400, 400, &mut rng2);
+        let test_pairs = PairSet::sample(&test, 200, 200, &mut rng2);
+        (train, pairs, test, test_pairs)
+    }
+
+    #[test]
+    fn one_shot_fit_produces_usable_metric() {
+        let (train, pairs, test, test_pairs) = problem();
+        let kiss = Kiss::new(KissConfig { pca_dim: 12, ..Default::default() });
+        let t0 = std::time::Instant::now();
+        let metric = kiss.fit(&train, &pairs);
+        let fit_s = t0.elapsed().as_secs_f64();
+        let ap = metric.ap(&test, &test_pairs);
+        let eu = LearnedMetric::Euclidean.ap(&test, &test_pairs);
+        // KISS is fast and at least roughly competitive with Euclidean
+        assert!(fit_s < 10.0);
+        assert!(ap > eu - 0.1, "kiss {ap} vs euclid {eu}");
+    }
+
+    #[test]
+    fn pca_dim_capped_at_input_dim() {
+        let (train, pairs, _, _) = problem();
+        let kiss =
+            Kiss::new(KissConfig { pca_dim: 10_000, ..Default::default() });
+        let metric = kiss.fit(&train, &pairs);
+        let LearnedMetric::PcaM { m, .. } = &metric else { panic!() };
+        assert_eq!(m.rows, train.dim());
+    }
+
+    #[test]
+    fn psd_projection_keeps_distances_nonnegative() {
+        let (train, pairs, test, test_pairs) = problem();
+        let kiss = Kiss::new(KissConfig { pca_dim: 12, ..Default::default() });
+        let metric = kiss.fit(&train, &pairs);
+        let (sim, dis) = metric.score(&test, &test_pairs);
+        assert!(sim.iter().chain(dis.iter()).all(|&v| v > -1e-3));
+    }
+}

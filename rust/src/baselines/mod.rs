@@ -1,0 +1,135 @@
+//! Single-machine baselines the paper compares against in §5.4:
+//!
+//! | method | reference | character |
+//! |---|---|---|
+//! | Xing2002 | Xing et al., NIPS 2002 | original SDP formulation: projected gradient with O(d³) eigen-projection per iteration — the cost the paper's reformulation removes |
+//! | ITML | Davis et al., ICML 2007 | information-theoretic: cyclic Bregman projections, O(d²) per pair |
+//! | KISS | Köstinger et al., CVPR 2012 | one-shot likelihood-ratio metric from pair-difference covariances (after PCA) |
+//! | Euclidean | — | identity metric |
+//!
+//! All are implemented from scratch on the `linalg` substrate and exposed
+//! through a common [`LearnedMetric`] so the evaluation pipeline treats
+//! every method (including ours) identically.
+
+mod itml;
+mod kiss;
+mod xing2002;
+
+pub use itml::{Itml, ItmlConfig};
+pub use kiss::{Kiss, KissConfig};
+pub use xing2002::{Xing2002, Xing2002Config};
+
+use crate::data::{Dataset, PairSet};
+use crate::linalg::pca::Pca;
+use crate::linalg::Mat;
+
+/// A learned Mahalanobis metric, possibly living in a PCA-reduced space.
+pub enum LearnedMetric {
+    /// distance(δ) = δᵀ M δ in the input space.
+    FullM(Mat),
+    /// distance computed in a PCA-projected space.
+    PcaM { pca: Pca, m: Mat },
+    /// identity metric (Euclidean).
+    Euclidean,
+}
+
+impl LearnedMetric {
+    /// Score a pair set: returns (similar_dists, dissimilar_dists).
+    pub fn score(
+        &self,
+        ds: &Dataset,
+        pairs: &PairSet,
+    ) -> (Vec<f32>, Vec<f32>) {
+        match self {
+            LearnedMetric::FullM(m) => {
+                crate::eval::score_pairs_mahalanobis(m, ds, pairs)
+            }
+            LearnedMetric::Euclidean => {
+                crate::eval::score_pairs_euclidean(ds, pairs)
+            }
+            LearnedMetric::PcaM { pca, m } => {
+                let d = pca.components.rows;
+                let mut diff = vec![0.0f32; ds.dim()];
+                let mut score = |set: &[crate::data::Pair]| -> Vec<f32> {
+                    set.iter()
+                        .map(|p| {
+                            ds.diff_into(
+                                p.i as usize,
+                                p.j as usize,
+                                &mut diff,
+                            );
+                            // PCA is linear: project the difference
+                            // directly (mean cancels in x - y).
+                            let z = pca.components.matvec(&diff);
+                            debug_assert_eq!(z.len(), d);
+                            let mz = m.matvec(&z);
+                            crate::linalg::dot(&z, &mz)
+                        })
+                        .collect()
+                };
+                let sim = score(&pairs.similar);
+                let dis = score(&pairs.dissimilar);
+                (sim, dis)
+            }
+        }
+    }
+
+    /// Average precision on a held-out pair set.
+    pub fn ap(&self, ds: &Dataset, pairs: &PairSet) -> f64 {
+        let (sim, dis) = self.score(ds, pairs);
+        crate::eval::average_precision(&sim, &dis)
+    }
+}
+
+/// (elapsed seconds, test AP) trace recorded while a method trains —
+/// the raw series behind Fig 4a.
+pub type ApTrace = Vec<(f64, f64)>;
+
+/// Materialized pair differences (rows) for baseline fitting: baselines
+/// operate on far fewer pairs than the distributed path, so dense
+/// materialization is fine here.
+pub fn pair_diffs(ds: &Dataset, pairs: &[crate::data::Pair]) -> Mat {
+    let d = ds.dim();
+    let mut out = Mat::zeros(pairs.len(), d);
+    for (r, p) in pairs.iter().enumerate() {
+        ds.diff_into(p.i as usize, p.j as usize, out.row_mut(r));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn euclidean_metric_scores_match_eval() {
+        let ds = SyntheticSpec::tiny().generate(0);
+        let mut rng = Pcg32::new(0);
+        let pairs = PairSet::sample(&ds, 40, 40, &mut rng);
+        let m = LearnedMetric::Euclidean;
+        let (s1, _) = m.score(&ds, &pairs);
+        let (s2, _) = crate::eval::score_pairs_euclidean(&ds, &pairs);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn identity_fullm_equals_euclidean_ap() {
+        let ds = SyntheticSpec::tiny().generate(1);
+        let mut rng = Pcg32::new(1);
+        let pairs = PairSet::sample(&ds, 100, 100, &mut rng);
+        let full = LearnedMetric::FullM(Mat::eye(ds.dim()));
+        let eu = LearnedMetric::Euclidean;
+        assert!((full.ap(&ds, &pairs) - eu.ap(&ds, &pairs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pair_diffs_shape() {
+        let ds = SyntheticSpec::tiny().generate(2);
+        let mut rng = Pcg32::new(2);
+        let pairs = PairSet::sample(&ds, 17, 5, &mut rng);
+        let diffs = pair_diffs(&ds, &pairs.similar);
+        assert_eq!((diffs.rows, diffs.cols), (17, ds.dim()));
+    }
+}

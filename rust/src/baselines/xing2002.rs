@@ -1,0 +1,214 @@
+//! Xing et al. (2002): the original SDP formulation of DML.
+//!
+//! We implement the standard practical form of the original algorithm
+//! (gradient + iterated projection):
+//!
+//! ```text
+//! max_M   g(M) = Σ_D sqrt(δᵀ M δ)
+//! s.t.    f(M) = Σ_S δᵀ M δ ≤ 1,      M ⪰ 0
+//! ```
+//!
+//! by projected gradient ascent — gradient step on g, then alternating
+//! projection onto {f(M) ≤ 1} (a scaling step for this linear constraint)
+//! and the PSD cone (eigendecomposition, **O(d³) per iteration** — this
+//! is precisely the cost the paper's L-factorized reformulation removes,
+//! and why this baseline's Fig-4a curve is orders of magnitude slower).
+
+use super::{ApTrace, LearnedMetric};
+use crate::data::{Dataset, PairSet};
+use crate::linalg::eigen::project_psd;
+use crate::linalg::Mat;
+use crate::metrics::Stopwatch;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Xing2002Config {
+    pub iters: usize,
+    pub lr: f32,
+    /// Evaluate the AP trace every `probe_every` iterations.
+    pub probe_every: usize,
+    /// Hard wall-clock budget (the method is slow by design).
+    pub max_seconds: f64,
+}
+
+impl Default for Xing2002Config {
+    fn default() -> Self {
+        Xing2002Config {
+            iters: 100,
+            lr: 0.1,
+            probe_every: 5,
+            max_seconds: 600.0,
+        }
+    }
+}
+
+pub struct Xing2002 {
+    pub cfg: Xing2002Config,
+}
+
+impl Xing2002 {
+    pub fn new(cfg: Xing2002Config) -> Self {
+        Xing2002 { cfg }
+    }
+
+    /// Fit on train pairs; records (time, AP-on-test) after every probe.
+    pub fn fit_traced(
+        &self,
+        train: &Dataset,
+        pairs: &PairSet,
+        test: &Dataset,
+        test_pairs: &PairSet,
+    ) -> (LearnedMetric, ApTrace) {
+        let d = train.dim();
+        let sim = super::pair_diffs(train, &pairs.similar);
+        let dis = super::pair_diffs(train, &pairs.dissimilar);
+        let watch = Stopwatch::start();
+        let mut trace = ApTrace::new();
+
+        let mut m = Mat::eye(d);
+        normalize_sim_constraint(&mut m, &sim);
+        for it in 0..self.cfg.iters {
+            // ascent direction: ∇ Σ_D sqrt(δᵀMδ) = Σ_D δδᵀ / (2 sqrt(..))
+            let mut grad = Mat::zeros(d, d);
+            for r in 0..dis.rows {
+                let delta = dis.row(r);
+                let md = m.matvec(delta);
+                let dist = crate::linalg::dot(delta, &md).max(1e-12);
+                let w = 0.5 / dist.sqrt();
+                // grad += w * δ δᵀ (rank-one accumulate)
+                for i in 0..d {
+                    let wi = w * delta[i];
+                    if wi == 0.0 {
+                        continue;
+                    }
+                    let row = &mut grad.data[i * d..(i + 1) * d];
+                    for (g, &dj) in row.iter_mut().zip(delta) {
+                        *g += wi * dj;
+                    }
+                }
+            }
+            // normalized ascent step (the reference implementation steps
+            // along ∇/‖∇‖ scaled by ‖M‖ so progress is scale-free; raw
+            // gradients here span ~5 orders of magnitude across configs)
+            let gnorm = grad.fro_norm().max(1e-20);
+            let step = self.cfg.lr * m.fro_norm().max(1e-12) / gnorm
+                / (1.0 + 0.1 * it as f32);
+            m.axpy_inplace(step, &grad);
+            // alternating projections: similar-sum ball, then PSD cone
+            normalize_sim_constraint(&mut m, &sim);
+            m = project_psd(&m); // O(d³)
+            normalize_sim_constraint(&mut m, &sim);
+
+            if it % self.cfg.probe_every == 0
+                || it + 1 == self.cfg.iters
+                || watch.elapsed_s() > self.cfg.max_seconds
+            {
+                let metric = LearnedMetric::FullM(m.clone());
+                trace.push((
+                    watch.elapsed_s(),
+                    metric.ap(test, test_pairs),
+                ));
+            }
+            if watch.elapsed_s() > self.cfg.max_seconds {
+                break;
+            }
+        }
+        (LearnedMetric::FullM(m), trace)
+    }
+
+    pub fn fit(
+        &self,
+        train: &Dataset,
+        pairs: &PairSet,
+    ) -> LearnedMetric {
+        // trace against the train pairs (cheap) when no test set given
+        let (m, _) = self.fit_traced(train, pairs, train, pairs);
+        m
+    }
+}
+
+/// Project onto {Σ_S δᵀMδ ≤ 1}: for this linear constraint the projection
+/// along M is a rescale when violated (Xing et al.'s iterative projection
+/// treats it the same way).
+fn normalize_sim_constraint(m: &mut Mat, sim: &Mat) {
+    let mut total = 0.0f64;
+    for r in 0..sim.rows {
+        let delta = sim.row(r);
+        let md = m.matvec(delta);
+        total += crate::linalg::dot(delta, &md) as f64;
+    }
+    if total > 1.0 {
+        m.scale_inplace((1.0 / total) as f32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::linalg::eigen::min_eigenvalue;
+    use crate::util::rng::Pcg32;
+
+    fn small_problem() -> (Dataset, PairSet, Dataset, PairSet) {
+        let spec = SyntheticSpec::tiny();
+        let mut rng = Pcg32::new(0);
+        let train = spec.generate_with(&mut rng, 300);
+        let test = spec.generate_with(&mut rng, 200);
+        let mut rng2 = Pcg32::new(1);
+        let pairs = PairSet::sample(&train, 150, 150, &mut rng2);
+        let test_pairs = PairSet::sample(&test, 150, 150, &mut rng2);
+        (train, pairs, test, test_pairs)
+    }
+
+    #[test]
+    fn result_is_psd_and_constraint_feasible() {
+        let (train, pairs, test, test_pairs) = small_problem();
+        let x = Xing2002::new(Xing2002Config {
+            iters: 10,
+            ..Default::default()
+        });
+        let (metric, trace) =
+            x.fit_traced(&train, &pairs, &test, &test_pairs);
+        let LearnedMetric::FullM(m) = &metric else { panic!() };
+        assert!(min_eigenvalue(m) > -1e-3, "not PSD");
+        let sim = super::super::pair_diffs(&train, &pairs.similar);
+        let mut total = 0.0f64;
+        for r in 0..sim.rows {
+            let delta = sim.row(r);
+            let md = m.matvec(delta);
+            total += crate::linalg::dot(delta, &md) as f64;
+        }
+        assert!(total <= 1.01, "constraint violated: {total}");
+        assert!(!trace.is_empty());
+    }
+
+    #[test]
+    fn not_catastrophic_on_separated_data() {
+        // Xing2002's first-order ascent is slow on anisotropic data
+        // (the paper gives it 24 h); at unit-test budget we only require
+        // it not to be catastrophically below the Euclidean baseline.
+        let (train, pairs, test, test_pairs) = small_problem();
+        let x = Xing2002::new(Xing2002Config {
+            iters: 20,
+            ..Default::default()
+        });
+        let (metric, _) = x.fit_traced(&train, &pairs, &test, &test_pairs);
+        let ap = metric.ap(&test, &test_pairs);
+        let eu = crate::baselines::LearnedMetric::Euclidean
+            .ap(&test, &test_pairs);
+        assert!(ap > eu - 0.1, "ap={ap} euclid={eu}");
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let (train, pairs, test, test_pairs) = small_problem();
+        let x = Xing2002::new(Xing2002Config {
+            iters: 100_000,
+            max_seconds: 0.3,
+            probe_every: 1,
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let _ = x.fit_traced(&train, &pairs, &test, &test_pairs);
+        assert!(t0.elapsed().as_secs_f64() < 5.0);
+    }
+}

@@ -1,0 +1,342 @@
+//! Shared run drivers used by the CLI, examples, and benches — one
+//! implementation of "train this config" / "simulate this cluster" so
+//! every entry point produces identical, comparable runs.
+
+use std::sync::Arc;
+
+use crate::baselines::{ApTrace, LearnedMetric};
+use crate::config::ExperimentConfig;
+use crate::data::{partition_pairs, ExperimentData};
+use crate::dml::{
+    native_factory, DmlProblem, Engine, EngineFactory, LrSchedule,
+    MinibatchRef, ObjectiveProbe,
+};
+use crate::linalg::Mat;
+use crate::metrics::{Curve, Stopwatch};
+use crate::ps::{run_training, RunOptions, TrainResult};
+use crate::simcluster::{
+    calibrate_grad_seconds, DmlWorkload, NetworkModel, SimConfig,
+    Simulator,
+};
+use crate::util::rng::Pcg32;
+
+/// Resolve an engine factory by name: "native", "xla", or "auto"
+/// (xla when artifacts are present, else native).
+pub fn engine_factory(
+    name: &str,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<EngineFactory> {
+    match name {
+        "native" => Ok(native_factory()),
+        "xla" => {
+            let variant = cfg.artifact_variant.clone().ok_or_else(|| {
+                anyhow::anyhow!("config has no artifact variant for xla")
+            })?;
+            anyhow::ensure!(
+                crate::runtime::artifacts_available(),
+                "artifacts not built (run `make artifacts`)"
+            );
+            Ok(crate::runtime::xla_factory(&variant))
+        }
+        "auto" => {
+            if crate::runtime::artifacts_available()
+                && cfg.artifact_variant.is_some()
+            {
+                engine_factory("xla", cfg)
+            } else {
+                Ok(native_factory())
+            }
+        }
+        other => anyhow::bail!("unknown engine '{other}' (native|xla|auto)"),
+    }
+}
+
+/// Single-threaded SGD training (the paper's §5.4 single-thread setting,
+/// used for the Fig 4a/4b method comparison). Records an objective curve
+/// and an AP-vs-time trace on held-out test pairs.
+pub struct SingleThreadRun {
+    pub l: Mat,
+    pub curve: Curve,
+    pub ap_trace: ApTrace,
+    pub wall_s: f64,
+}
+
+pub fn train_single_thread(
+    cfg: &ExperimentConfig,
+    data: &ExperimentData,
+    engine: &mut dyn Engine,
+    probe_every: usize,
+) -> anyhow::Result<SingleThreadRun> {
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    let mut l = problem.init_l(cfg.model.init_scale, cfg.seed);
+    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
+    let probe = ObjectiveProbe::new(
+        &data.train,
+        &data.pairs,
+        500.min(data.pairs.similar.len()),
+        500.min(data.pairs.dissimilar.len()),
+        cfg.seed ^ 0xB0B,
+    );
+    let (bs, bd, d) = (cfg.optim.batch_sim, cfg.optim.batch_dis,
+                       cfg.dataset.dim);
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x51);
+    let mut ds_buf = vec![0.0f32; bs * d];
+    let mut dd_buf = vec![0.0f32; bd * d];
+    let mut curve = Curve::new("ours (single thread)");
+    let mut ap_trace = ApTrace::new();
+    let watch = Stopwatch::start();
+    curve.push(0.0, 0, probe.eval(engine, &l, cfg.optim.lambda) as f64);
+    for step in 0..cfg.optim.steps {
+        fill_batch(&data.train, &data.pairs, &mut rng, &mut ds_buf,
+                   &mut dd_buf, bs, bd);
+        let batch = MinibatchRef::new(&ds_buf, &dd_buf, bs, bd, d);
+        engine.step(&mut l, &batch, cfg.optim.lambda, lr.at(step))?;
+        if (step + 1) % probe_every == 0 || step + 1 == cfg.optim.steps {
+            let t = watch.elapsed_s();
+            curve.push(t, step + 1,
+                       probe.eval(engine, &l, cfg.optim.lambda) as f64);
+            ap_trace.push((t, ap_of_l(engine, &l, data)?));
+        }
+    }
+    Ok(SingleThreadRun { l, curve, ap_trace, wall_s: watch.elapsed_s() })
+}
+
+/// AP of a learned L on the held-out test pairs (scores through the
+/// factored form; materializing M = LᵀL at d=780 would be wasteful).
+pub fn ap_of_l(
+    engine: &mut dyn Engine,
+    l: &Mat,
+    data: &ExperimentData,
+) -> anyhow::Result<f64> {
+    let (sim, dis) =
+        crate::eval::score_pairs(engine, l, &data.test, &data.test_pairs)?;
+    Ok(crate::eval::average_precision(&sim, &dis))
+}
+
+/// AP of the Euclidean baseline on the held-out test pairs.
+pub fn ap_euclidean(data: &ExperimentData) -> f64 {
+    let (sim, dis) =
+        crate::eval::score_pairs_euclidean(&data.test, &data.test_pairs);
+    crate::eval::average_precision(&sim, &dis)
+}
+
+fn fill_batch(
+    train: &crate::data::Dataset,
+    pairs: &crate::data::PairSet,
+    rng: &mut Pcg32,
+    ds_buf: &mut [f32],
+    dd_buf: &mut [f32],
+    bs: usize,
+    bd: usize,
+) {
+    let d = train.dim();
+    for r in 0..bs {
+        let p = pairs.similar[rng.index(pairs.similar.len())];
+        train.diff_into(p.i as usize, p.j as usize,
+                        &mut ds_buf[r * d..(r + 1) * d]);
+    }
+    for r in 0..bd {
+        let p = pairs.dissimilar[rng.index(pairs.dissimilar.len())];
+        train.diff_into(p.i as usize, p.j as usize,
+                        &mut dd_buf[r * d..(r + 1) * d]);
+    }
+}
+
+/// Run the real threaded parameter server on a config.
+pub fn train_distributed(
+    cfg: &ExperimentConfig,
+    data: &ExperimentData,
+    engine_name: &str,
+    opts: &RunOptions,
+) -> anyhow::Result<TrainResult> {
+    let engines = engine_factory(engine_name, cfg)?;
+    let dataset = Arc::new(clone_dataset(&data.train));
+    run_training(cfg, dataset, &data.pairs, engines, opts)
+}
+
+fn clone_dataset(ds: &crate::data::Dataset) -> crate::data::Dataset {
+    crate::data::Dataset {
+        x: ds.x.clone(),
+        labels: ds.labels.clone(),
+        n_classes: ds.n_classes,
+    }
+}
+
+/// Cost knobs for a simulated run; default derives everything from the
+/// config's own (scaled) shape. For paper-true clocking, override
+/// `grad_seconds` (FLOP-extrapolated) and `bytes_per_msg`.
+#[derive(Clone, Copy, Debug)]
+pub struct SimKnobs {
+    pub grad_seconds: f64,
+    pub bytes_per_msg: Option<f64>,
+    pub total_updates: u64,
+}
+
+/// One simulated-cluster convergence run at `machines × cores`.
+///
+/// `knobs.grad_seconds` should come from [`calibrate_for`] (possibly
+/// FLOP-extrapolated to the paper-true shape) so the simulated clock is
+/// anchored to real measured compute cost.
+pub fn simulate_convergence(
+    cfg: &ExperimentConfig,
+    data: &ExperimentData,
+    machines: usize,
+    cores_per_machine: usize,
+    knobs: SimKnobs,
+) -> crate::simcluster::SimResult {
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    let shards = partition_pairs(&data.pairs, machines, cfg.seed ^ 0xFA);
+    let dataset = Arc::new(clone_dataset(&data.train));
+    let mut workload = DmlWorkload::new(
+        problem,
+        cfg.model.init_scale,
+        dataset,
+        shards,
+        cfg.optim.batch_sim,
+        cfg.optim.batch_dis,
+        (500, 500),
+        cfg.seed,
+    );
+    let n_params = (cfg.model.k * cfg.dataset.dim) as f64;
+    let bytes = knobs.bytes_per_msg.unwrap_or(n_params * 4.0);
+    let sim_cfg = SimConfig {
+        machines,
+        cores_per_machine,
+        grad_seconds: knobs.grad_seconds,
+        // server-side apply: streaming axpy over the parameters at
+        // ~4 GB/s effective memory bandwidth (two passes of 4 bytes)
+        apply_seconds: bytes * 2.0 / 4.0e9,
+        bytes_per_msg: bytes,
+        network: NetworkModel::ten_gbe(),
+        jitter: 0.05,
+        total_updates: knobs.total_updates,
+        probe_every: (knobs.total_updates / 40).max(1),
+        broadcast_every: 1,
+        lr: LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay),
+        seed: cfg.seed,
+    };
+    Simulator::new(sim_cfg, &mut workload).run()
+}
+
+/// A dimension-scaled copy of a config for simulator numerics, plus the
+/// FLOP ratio to the paper-true shape.
+///
+/// The simulator runs *real* gradients serially on this box, so Fig 2/3
+/// sweeps use a scaled shape for the numerics while the simulated clock
+/// charges each gradient the *extrapolated paper-true* cost (FLOP-ratio
+/// scaling of the calibrated native step time). Convergence shape is
+/// preserved (same algorithm, same staleness structure); absolute
+/// objective values are those of the scaled problem — which is what we
+/// compare across core counts, never against the paper's absolute values.
+pub struct SimScaled {
+    pub cfg: ExperimentConfig,
+    /// paper-true FLOPs / scaled FLOPs per minibatch gradient.
+    pub flop_ratio: f64,
+    /// paper-true parameter bytes per message.
+    pub paper_bytes: f64,
+}
+
+pub fn sim_scaled(preset: crate::config::Preset) -> SimScaled {
+    use crate::config::{PaperShape, Preset, PAPER_SHAPES};
+    let mut cfg = preset.config();
+    let paper: &PaperShape = match preset {
+        Preset::Mnist | Preset::Tiny => &PAPER_SHAPES[0],
+        Preset::Imnet60kScaled => &PAPER_SHAPES[1],
+        Preset::Imnet1mScaled => &PAPER_SHAPES[2],
+    };
+    // Scale to ~10 ms/grad on this box: divide d, k, batch.
+    let (d, k, bs) = match preset {
+        Preset::Mnist => (260, 200, 160),
+        Preset::Imnet60kScaled => (512, 128, 25),
+        Preset::Imnet1mScaled => (512, 64, 125),
+        Preset::Tiny => (16, 8, 4),
+    };
+    cfg.dataset.dim = d;
+    cfg.model.k = k;
+    cfg.optim.batch_sim = bs;
+    cfg.optim.batch_dis = bs;
+    cfg.dataset.name = format!("{}_sim", cfg.dataset.name);
+    cfg.artifact_variant = None;
+    // keep data volume small enough for quick generation
+    cfg.dataset.n_train = cfg.dataset.n_train.min(20_000);
+    cfg.dataset.n_similar = cfg.dataset.n_similar.min(50_000);
+    cfg.dataset.n_dissimilar = cfg.dataset.n_dissimilar.min(50_000);
+    let scaled_flops = 4.0 * (2.0 * bs as f64) / 2.0 * k as f64
+        * d as f64 * 2.0;
+    let paper_flops = paper.step_flops();
+    SimScaled {
+        cfg,
+        flop_ratio: paper_flops / scaled_flops,
+        paper_bytes: paper.n_params() as f64 * 4.0,
+    }
+}
+
+/// Calibrate per-core gradient seconds for a config on this machine.
+pub fn calibrate_for(cfg: &ExperimentConfig) -> f64 {
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    calibrate_grad_seconds(
+        &problem,
+        cfg.optim.batch_sim,
+        cfg.optim.batch_dis,
+        5,
+    )
+}
+
+/// Fit our method plus the three baselines, returning labeled AP traces
+/// (the Fig 4a payload). Baselines run on the same train/test pairs.
+pub fn ap_traces_all_methods(
+    cfg: &ExperimentConfig,
+    data: &ExperimentData,
+    probe_every: usize,
+    xing_iters: usize,
+    itml_sweeps: usize,
+) -> anyhow::Result<Vec<(String, ApTrace)>> {
+    use crate::baselines::{Itml, ItmlConfig, Kiss, KissConfig, Xing2002,
+                           Xing2002Config};
+    let mut out = Vec::new();
+
+    // ours (single-thread, native engine — MATLAB-comparable setting)
+    let mut engine = crate::dml::NativeEngine::new();
+    let run = train_single_thread(cfg, data, &mut engine, probe_every)?;
+    out.push(("ours".to_string(), run.ap_trace));
+
+    // Xing2002
+    let x = Xing2002::new(Xing2002Config {
+        iters: xing_iters,
+        ..Default::default()
+    });
+    let (_, trace) =
+        x.fit_traced(&data.train, &data.pairs, &data.test,
+                     &data.test_pairs);
+    out.push(("Xing2002".to_string(), trace));
+
+    // ITML
+    let itml = Itml::new(ItmlConfig {
+        sweeps: itml_sweeps,
+        ..Default::default()
+    });
+    let (_, trace) =
+        itml.fit_traced(&data.train, &data.pairs, &data.test,
+                        &data.test_pairs);
+    out.push(("ITML".to_string(), trace));
+
+    // KISS (one-shot: trace has a single point)
+    let watch = Stopwatch::start();
+    let kiss = Kiss::new(KissConfig {
+        // PCA only for invertibility (paper §5.4); keep full dim when
+        // the pair count supports it
+        pca_dim: cfg.dataset.dim.min(data.pairs.similar.len() / 20).max(8),
+        ..Default::default()
+    });
+    let metric = kiss.fit(&data.train, &data.pairs);
+    let ap = metric.ap(&data.test, &data.test_pairs);
+    out.push(("KISS".to_string(), vec![(watch.elapsed_s(), ap)]));
+
+    // Euclidean reference line
+    let ap = LearnedMetric::Euclidean.ap(&data.test, &data.test_pairs);
+    out.push(("Euclidean".to_string(), vec![(0.0, ap)]));
+    Ok(out)
+}

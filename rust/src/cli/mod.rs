@@ -1,0 +1,270 @@
+//! `dmlps` CLI: the launcher for training, simulation, and evaluation.
+//!
+//! ```text
+//! dmlps train    --preset mnist --workers 2 --engine auto [--save-model f]
+//! dmlps simulate --preset mnist --cores 16,32,64,128,256
+//! dmlps eval     --preset mnist --model f.bin
+//! dmlps gen-data --preset mnist
+//! dmlps inspect-artifacts
+//! ```
+
+pub mod driver;
+
+use crate::config::{Consistency, ExperimentConfig, Preset};
+use crate::data::{DatasetStats, ExperimentData};
+use crate::util::cli::ArgParser;
+
+pub fn main_entry() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let sub = args.remove(0);
+    match sub.as_str() {
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "eval" => cmd_eval(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "inspect-artifacts" => cmd_inspect_artifacts(&args),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dmlps — Large Scale Distributed Distance Metric Learning\n\
+         (reproduction of Xie & Xing, 2014)\n\n\
+         subcommands:\n\
+         \x20 train              run the threaded async parameter server\n\
+         \x20 simulate           discrete-event cluster scalability study\n\
+         \x20 eval               evaluate a saved metric (PR curve, AP)\n\
+         \x20 gen-data           print dataset statistics (Table 1)\n\
+         \x20 inspect-artifacts  list AOT artifacts and shapes\n\n\
+         run `dmlps <subcommand> --help` for options"
+    );
+}
+
+/// Build a config from --preset/--config plus common overrides.
+fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = if a.get("config").is_empty() {
+        Preset::parse(a.get("preset"))?.config()
+    } else {
+        ExperimentConfig::load(std::path::Path::new(a.get("config")))?
+    };
+    if let Ok(w) = a.get_usize("workers") {
+        if w > 0 {
+            cfg.cluster.workers = w;
+        }
+    }
+    if let Ok(s) = a.get_usize("steps") {
+        if s > 0 {
+            cfg.optim.steps = s;
+        }
+    }
+    let cons = a.get("consistency");
+    if !cons.is_empty() {
+        cfg.cluster.consistency = Consistency::parse(cons)?;
+    }
+    if let Ok(seed) = a.get_u64("seed") {
+        cfg.seed = seed;
+    }
+    Ok(cfg)
+}
+
+fn common_parser(cmd: &str, about: &str) -> ArgParser {
+    ArgParser::new(cmd, about)
+        .opt("preset", "tiny", "tiny|mnist|imnet60k|imnet1m")
+        .opt("config", "", "path to a JSON experiment config")
+        .opt("workers", "0", "override worker count (0 = preset)")
+        .opt("steps", "0", "override steps per worker (0 = preset)")
+        .opt("consistency", "", "asp|bsp|ssp:N (default from preset)")
+        .opt("seed", "42", "PRNG seed")
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let p = common_parser("dmlps train", "threaded async-PS training")
+        .opt("engine", "auto", "native|xla|auto")
+        .opt("save-model", "", "write learned L to this path")
+        .opt("save-curve", "", "write convergence curve CSV to this path");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+    println!(
+        "train: dataset={} d={} k={} workers={} steps={} engine={} \
+         consistency={}",
+        cfg.dataset.name, cfg.dataset.dim, cfg.model.k,
+        cfg.cluster.workers, cfg.optim.steps, a.get("engine"),
+        cfg.cluster.consistency.name()
+    );
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let opts = crate::ps::RunOptions::default();
+    let result =
+        driver::train_distributed(&cfg, &data, a.get("engine"), &opts)?;
+    let first = result.curve.points.first().map(|p| p.objective)
+        .unwrap_or(f64::NAN);
+    let last = result.curve.points.last().map(|p| p.objective)
+        .unwrap_or(f64::NAN);
+    println!(
+        "done in {:.2}s: {} updates applied, {} broadcasts, \
+         objective {first:.4} -> {last:.4}",
+        result.wall_s, result.applied_updates, result.broadcasts
+    );
+    for ws in &result.worker_stats {
+        println!(
+            "  worker {}: {} steps, {} grads sent ({} dropped), \
+             {} params received, waited {:.2}s",
+            ws.id, ws.steps_done, ws.grads_sent, ws.grads_dropped,
+            ws.params_received, ws.wait_s
+        );
+    }
+    let mut eng = crate::dml::NativeEngine::new();
+    let ap = driver::ap_of_l(&mut eng, &result.l, &data)?;
+    println!("test AP: {ap:.4} (Euclidean baseline {:.4})",
+             driver::ap_euclidean(&data));
+    if !a.get("save-model").is_empty() {
+        result.l.save(std::path::Path::new(a.get("save-model")))?;
+        println!("model saved to {}", a.get("save-model"));
+    }
+    if !a.get("save-curve").is_empty() {
+        std::fs::write(a.get("save-curve"), result.curve.to_csv())?;
+        println!("curve saved to {}", a.get("save-curve"));
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
+    let p = common_parser(
+        "dmlps simulate",
+        "discrete-event cluster scalability study (Fig 2/3)",
+    )
+    .opt("cores", "16,32,64,128,256", "total core counts to simulate")
+    .opt("cores-per-machine", "16", "cores per simulated machine")
+    .opt("updates", "2000", "total applied updates per run");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let grad_s = driver::calibrate_for(&cfg);
+    println!(
+        "simulate: dataset={} d={} k={} calibrated grad time \
+         {:.4}s/core-minibatch",
+        cfg.dataset.name, cfg.dataset.dim, cfg.model.k, grad_s
+    );
+    let cpm = a.get_usize("cores-per-machine")?;
+    let updates = a.get_usize("updates")? as u64;
+    let mut meas = Vec::new();
+    for cores in a.get_usize_list("cores")? {
+        let machines = (cores / cpm).max(1);
+        let r = driver::simulate_convergence(
+            &cfg, &data, machines, cpm.min(cores),
+            driver::SimKnobs {
+                grad_seconds: grad_s,
+                bytes_per_msg: None,
+                total_updates: updates,
+            },
+        );
+        println!(
+            "  {:>4} cores ({} machines): {:.2} sim-s for {} updates, \
+             mean staleness {:.2}, final objective {:.4}",
+            machines * cpm.min(cores), machines, r.sim_seconds,
+            r.applied_updates, r.mean_staleness,
+            r.curve.final_objective().unwrap_or(f64::NAN)
+        );
+        meas.push((machines * cpm.min(cores), r.sim_seconds));
+    }
+    println!("\nspeedup (time to {} updates):", updates);
+    for row in crate::metrics::speedup_table(meas) {
+        println!(
+            "  {:>4} cores: {:>8.2}s  speedup {:>5.2}x (linear {:>5.2}x)",
+            row.cores, row.time_to_target_s, row.speedup, row.linear
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
+    let p = common_parser("dmlps eval", "evaluate a saved metric")
+        .req("model", "path to a saved L matrix (DMLPSMAT)");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let l = crate::linalg::Mat::load(std::path::Path::new(a.get("model")))?;
+    anyhow::ensure!(
+        l.cols == cfg.dataset.dim,
+        "model dim {} != dataset dim {}", l.cols, cfg.dataset.dim
+    );
+    let mut eng = crate::dml::NativeEngine::new();
+    let (sim, dis) = crate::eval::score_pairs(
+        &mut eng, &l, &data.test, &data.test_pairs,
+    )?;
+    let ap = crate::eval::average_precision(&sim, &dis);
+    println!("test AP: {ap:.4} (Euclidean {:.4})",
+             driver::ap_euclidean(&data));
+    println!("PR curve (sampled):");
+    let curve = crate::eval::pr_curve(&sim, &dis);
+    let stride = (curve.len() / 20).max(1);
+    println!("  recall  precision");
+    for pt in curve.iter().step_by(stride) {
+        println!("  {:.4}  {:.4}", pt.recall, pt.precision);
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &[String]) -> anyhow::Result<()> {
+    let p = common_parser("dmlps gen-data",
+                          "generate + describe synthetic datasets");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+    let stats = DatasetStats::of(&cfg);
+    println!(
+        "| dataset | feat. dim | k | # parameters | # samples | \
+         # similar | # dissimilar |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    println!(
+        "| {} | {} | {} | {} | {} | {} | {} |",
+        stats.name, stats.feat_dim, stats.k, stats.param_str(),
+        stats.n_samples, stats.n_similar, stats.n_dissimilar
+    );
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    println!(
+        "\ngenerated: train {}×{}, test {}×{}, pairs {}S/{}D \
+         (labels verified: {})",
+        data.train.n(), data.train.dim(), data.test.n(), data.test.dim(),
+        data.pairs.similar.len(), data.pairs.dissimilar.len(),
+        data.pairs.check_labels(&data.train)
+    );
+    Ok(())
+}
+
+fn cmd_inspect_artifacts(_args: &[String]) -> anyhow::Result<()> {
+    let dir = crate::runtime::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").is_file(),
+        "no artifacts at {} (run `make artifacts`)", dir.display()
+    );
+    let m = crate::runtime::Manifest::load(&dir)?;
+    println!("artifacts at {}:", dir.display());
+    for (name, v) in &m.variants {
+        println!(
+            "  {name}: k={} d={} batch={}+{} eval_batch={}",
+            v.k, v.d, v.bs, v.bd, v.eval_batch
+        );
+    }
+    for e in &m.entries {
+        let size = std::fs::metadata(m.hlo_path(e))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        println!(
+            "  {}.{} ({} inputs, {} outputs, {} bytes)",
+            e.variant, e.function, e.inputs.len(), e.outputs.len(), size
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,515 @@
+//! Experiment configuration: typed structs, JSON round-trip, presets.
+//!
+//! Every entry point (CLI, examples, benches) builds an
+//! [`ExperimentConfig`] — from a preset name, a JSON file, or both (file
+//! overrides preset, CLI overrides file) — so runs are fully described by
+//! one serializable value, which the metrics recorder embeds in its
+//! output for provenance.
+
+use crate::util::json::Json;
+
+/// How worker parameter copies are synchronized (paper §2 taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Consistency {
+    /// Asynchronous parallel — the paper's choice: no worker ever waits.
+    Asp,
+    /// Bulk synchronous — barrier every iteration (Hadoop/Spark model).
+    Bsp,
+    /// Stale synchronous — fastest worker at most `staleness` iterations
+    /// ahead of the slowest (Ho et al., 2013).
+    Ssp { staleness: usize },
+}
+
+impl Consistency {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "asp" => Ok(Consistency::Asp),
+            "bsp" => Ok(Consistency::Bsp),
+            _ => {
+                if let Some(n) = s.strip_prefix("ssp:") {
+                    Ok(Consistency::Ssp { staleness: n.parse()? })
+                } else {
+                    anyhow::bail!("unknown consistency '{s}' (asp|bsp|ssp:N)")
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Consistency::Asp => "asp".into(),
+            Consistency::Bsp => "bsp".into(),
+            Consistency::Ssp { staleness } => format!("ssp:{staleness}"),
+        }
+    }
+}
+
+/// Synthetic dataset family (see `data` module for generators).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Dense Gaussian class clusters — stands in for MNIST raw pixels.
+    Gaussian,
+    /// Sparse non-negative LLC-like codes — stands in for the paper's
+    /// ImageNet Locality-constrained Linear Coding features.
+    Llc,
+}
+
+impl FeatureKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "gaussian" => Ok(FeatureKind::Gaussian),
+            "llc" => Ok(FeatureKind::Llc),
+            _ => anyhow::bail!("unknown feature kind '{s}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeatureKind::Gaussian => "gaussian",
+            FeatureKind::Llc => "llc",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetConfig {
+    pub name: String,
+    pub kind: FeatureKind,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+    /// Class-separation / within-class-spread ratio (higher = easier).
+    pub separation: f32,
+    pub n_similar: usize,
+    pub n_dissimilar: usize,
+    pub n_test_pairs: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Rows of L (M = LᵀL is dim×dim, L is k×dim).
+    pub k: usize,
+    pub init_scale: f32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimConfig {
+    pub lr: f32,
+    pub lambda: f32,
+    /// Similar / dissimilar halves of each minibatch (paper: 500+500 for
+    /// MNIST & ImageNet-1M, 50+50 for ImageNet-63K).
+    pub batch_sim: usize,
+    pub batch_dis: usize,
+    pub steps: usize,
+    /// Learning-rate decay: lr_t = lr / (1 + decay * t).
+    pub lr_decay: f32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Worker count for the real threaded parameter server.
+    pub workers: usize,
+    pub consistency: Consistency,
+    /// Server-side gradient batch: how many worker updates the update
+    /// thread folds in per dequeue round.
+    pub server_batch: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetConfig,
+    pub model: ModelConfig,
+    pub optim: OptimConfig,
+    pub cluster: ClusterConfig,
+    pub seed: u64,
+    /// Which AOT artifact variant backs the XLA engine for this config
+    /// (None = native engine only).
+    pub artifact_variant: Option<String>,
+}
+
+/// Built-in presets, mirrored on the Python side in
+/// `python/compile/model.py::VARIANTS` (shapes must match the artifacts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// Tiny shapes for tests and the quickstart example.
+    Tiny,
+    /// Paper-true MNIST: d=780, k=600, minibatch 500+500 (Table 1 row 1).
+    Mnist,
+    /// ImageNet-63K scaled for the 1-core testbed (paper: d=21504,
+    /// k=10000, b=50+50 → here d=2048, k=512, b=50+50).
+    Imnet60kScaled,
+    /// ImageNet-1M scaled (paper: d=21504, k=1000, b=500+500 →
+    /// here d=2048, k=256, b=500+500).
+    Imnet1mScaled,
+}
+
+impl Preset {
+    pub fn parse(s: &str) -> anyhow::Result<Preset> {
+        match s {
+            "tiny" | "test_small" => Ok(Preset::Tiny),
+            "mnist" => Ok(Preset::Mnist),
+            "imnet60k" | "imnet60k_scaled" => Ok(Preset::Imnet60kScaled),
+            "imnet1m" | "imnet1m_scaled" => Ok(Preset::Imnet1mScaled),
+            _ => anyhow::bail!(
+                "unknown preset '{s}' (tiny|mnist|imnet60k|imnet1m)"
+            ),
+        }
+    }
+
+    pub fn all() -> [Preset; 4] {
+        [Preset::Tiny, Preset::Mnist, Preset::Imnet60kScaled,
+         Preset::Imnet1mScaled]
+    }
+
+    pub fn config(self) -> ExperimentConfig {
+        match self {
+            Preset::Tiny => ExperimentConfig {
+                dataset: DatasetConfig {
+                    name: "tiny".into(),
+                    kind: FeatureKind::Gaussian,
+                    n_train: 400,
+                    n_test: 200,
+                    dim: 16,
+                    n_classes: 4,
+                    separation: 3.0,
+                    n_similar: 800,
+                    n_dissimilar: 800,
+                    n_test_pairs: 400,
+                },
+                model: ModelConfig { k: 8, init_scale: 0.3 },
+                optim: OptimConfig {
+                    lr: 0.1,
+                    lambda: 1.0,
+                    batch_sim: 4,
+                    batch_dis: 4,
+                    steps: 200,
+                    lr_decay: 0.002,
+                },
+                cluster: ClusterConfig {
+                    workers: 2,
+                    consistency: Consistency::Asp,
+                    server_batch: 4,
+                },
+                seed: 42,
+                artifact_variant: Some("test_small".into()),
+            },
+            Preset::Mnist => ExperimentConfig {
+                dataset: DatasetConfig {
+                    name: "mnist".into(),
+                    kind: FeatureKind::Gaussian,
+                    n_train: 60_000,
+                    n_test: 10_000,
+                    dim: 780,
+                    n_classes: 10,
+                    separation: 24.0,
+                    n_similar: 100_000,
+                    n_dissimilar: 100_000,
+                    n_test_pairs: 10_000,
+                },
+                model: ModelConfig { k: 600, init_scale: 0.5 },
+                optim: OptimConfig {
+                    lr: 0.1,
+                    lambda: 1.0,
+                    batch_sim: 500,
+                    batch_dis: 500,
+                    steps: 300,
+                    lr_decay: 0.001,
+                },
+                cluster: ClusterConfig {
+                    workers: 2,
+                    consistency: Consistency::Asp,
+                    server_batch: 4,
+                },
+                seed: 42,
+                artifact_variant: Some("mnist".into()),
+            },
+            Preset::Imnet60kScaled => ExperimentConfig {
+                dataset: DatasetConfig {
+                    name: "imnet60k_scaled".into(),
+                    kind: FeatureKind::Llc,
+                    n_train: 6_300,
+                    n_test: 1_000,
+                    dim: 2048,
+                    n_classes: 100,
+                    separation: 1.0,
+                    n_similar: 10_000,
+                    n_dissimilar: 10_000,
+                    n_test_pairs: 2_000,
+                },
+                model: ModelConfig { k: 512, init_scale: 0.1 },
+                optim: OptimConfig {
+                    lr: 0.1,
+                    lambda: 1.0,
+                    batch_sim: 50,
+                    batch_dis: 50,
+                    steps: 200,
+                    lr_decay: 0.001,
+                },
+                cluster: ClusterConfig {
+                    workers: 2,
+                    consistency: Consistency::Asp,
+                    server_batch: 4,
+                },
+                seed: 42,
+                artifact_variant: Some("imnet60k_scaled".into()),
+            },
+            Preset::Imnet1mScaled => ExperimentConfig {
+                dataset: DatasetConfig {
+                    name: "imnet1m_scaled".into(),
+                    kind: FeatureKind::Llc,
+                    n_train: 20_000,
+                    n_test: 2_000,
+                    dim: 2048,
+                    n_classes: 100,
+                    separation: 1.0,
+                    n_similar: 40_000,
+                    n_dissimilar: 40_000,
+                    n_test_pairs: 4_000,
+                },
+                model: ModelConfig { k: 256, init_scale: 0.1 },
+                optim: OptimConfig {
+                    lr: 0.1,
+                    lambda: 1.0,
+                    batch_sim: 500,
+                    batch_dis: 500,
+                    steps: 200,
+                    lr_decay: 0.001,
+                },
+                cluster: ClusterConfig {
+                    workers: 2,
+                    consistency: Consistency::Asp,
+                    server_batch: 4,
+                },
+                seed: 42,
+                artifact_variant: Some("imnet1m_scaled".into()),
+            },
+        }
+    }
+}
+
+/// Paper-true shapes for the three Table-1 datasets — used by the cluster
+/// simulator's cost model (it never materializes the parameters, so the
+/// full 220M-parameter ImageNet-63K config is representable).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperShape {
+    pub name: &'static str,
+    pub d: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub n_similar: usize,
+    pub n_dissimilar: usize,
+    pub n_samples: usize,
+}
+
+pub const PAPER_SHAPES: [PaperShape; 3] = [
+    PaperShape { name: "MNIST", d: 780, k: 600, batch: 1000,
+                 n_similar: 100_000, n_dissimilar: 100_000,
+                 n_samples: 60_000 },
+    PaperShape { name: "ImNet-60K", d: 21504, k: 10_000, batch: 100,
+                 n_similar: 100_000, n_dissimilar: 100_000,
+                 n_samples: 63_000 },
+    PaperShape { name: "ImNet-1M", d: 21504, k: 1000, batch: 1000,
+                 n_similar: 100_000_000, n_dissimilar: 100_000_000,
+                 n_samples: 1_000_000 },
+];
+
+impl PaperShape {
+    /// Number of parameters in L (paper Table 1 "# parameters").
+    pub fn n_params(&self) -> usize {
+        self.d * self.k
+    }
+
+    /// FLOPs of one minibatch gradient: 4 matmuls of b×k×d MACs each.
+    pub fn step_flops(&self) -> f64 {
+        4.0 * 2.0 * self.batch as f64 / 2.0 * self.k as f64 * self.d as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON round-trip
+// ---------------------------------------------------------------------
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::obj(vec![
+                ("name", Json::Str(self.dataset.name.clone())),
+                ("kind", Json::Str(self.dataset.kind.name().into())),
+                ("n_train", Json::Num(self.dataset.n_train as f64)),
+                ("n_test", Json::Num(self.dataset.n_test as f64)),
+                ("dim", Json::Num(self.dataset.dim as f64)),
+                ("n_classes", Json::Num(self.dataset.n_classes as f64)),
+                ("separation", Json::Num(self.dataset.separation as f64)),
+                ("n_similar", Json::Num(self.dataset.n_similar as f64)),
+                ("n_dissimilar",
+                 Json::Num(self.dataset.n_dissimilar as f64)),
+                ("n_test_pairs",
+                 Json::Num(self.dataset.n_test_pairs as f64)),
+            ])),
+            ("model", Json::obj(vec![
+                ("k", Json::Num(self.model.k as f64)),
+                ("init_scale", Json::Num(self.model.init_scale as f64)),
+            ])),
+            ("optim", Json::obj(vec![
+                ("lr", Json::Num(self.optim.lr as f64)),
+                ("lambda", Json::Num(self.optim.lambda as f64)),
+                ("batch_sim", Json::Num(self.optim.batch_sim as f64)),
+                ("batch_dis", Json::Num(self.optim.batch_dis as f64)),
+                ("steps", Json::Num(self.optim.steps as f64)),
+                ("lr_decay", Json::Num(self.optim.lr_decay as f64)),
+            ])),
+            ("cluster", Json::obj(vec![
+                ("workers", Json::Num(self.cluster.workers as f64)),
+                ("consistency",
+                 Json::Str(self.cluster.consistency.name())),
+                ("server_batch",
+                 Json::Num(self.cluster.server_batch as f64)),
+            ])),
+            ("seed", Json::Num(self.seed as f64)),
+            ("artifact_variant", match &self.artifact_variant {
+                Some(v) => Json::Str(v.clone()),
+                None => Json::Null,
+            }),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        fn us(j: &Json, k: &str) -> anyhow::Result<usize> {
+            j.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid '{k}'"))
+        }
+        fn f(j: &Json, k: &str) -> anyhow::Result<f32> {
+            Ok(j.get(k)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid '{k}'"))?
+                as f32)
+        }
+        let d = j.get("dataset");
+        let m = j.get("model");
+        let o = j.get("optim");
+        let c = j.get("cluster");
+        Ok(ExperimentConfig {
+            dataset: DatasetConfig {
+                name: d.get("name").as_str().unwrap_or("custom").into(),
+                kind: FeatureKind::parse(
+                    d.get("kind").as_str().unwrap_or("gaussian"),
+                )?,
+                n_train: us(d, "n_train")?,
+                n_test: us(d, "n_test")?,
+                dim: us(d, "dim")?,
+                n_classes: us(d, "n_classes")?,
+                separation: f(d, "separation")?,
+                n_similar: us(d, "n_similar")?,
+                n_dissimilar: us(d, "n_dissimilar")?,
+                n_test_pairs: us(d, "n_test_pairs")?,
+            },
+            model: ModelConfig {
+                k: us(m, "k")?,
+                init_scale: f(m, "init_scale")?,
+            },
+            optim: OptimConfig {
+                lr: f(o, "lr")?,
+                lambda: f(o, "lambda")?,
+                batch_sim: us(o, "batch_sim")?,
+                batch_dis: us(o, "batch_dis")?,
+                steps: us(o, "steps")?,
+                lr_decay: f(o, "lr_decay")?,
+            },
+            cluster: ClusterConfig {
+                workers: us(c, "workers")?,
+                consistency: Consistency::parse(
+                    c.get("consistency").as_str().unwrap_or("asp"),
+                )?,
+                server_batch: us(c, "server_batch")?,
+            },
+            seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
+            artifact_variant: j
+                .get("artifact_variant")
+                .as_str()
+                .map(|s| s.to_string()),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_build() {
+        for p in Preset::all() {
+            let cfg = p.config();
+            assert!(cfg.model.k <= cfg.dataset.dim,
+                    "k must be <= d (Weinberger factorization)");
+            assert!(cfg.optim.batch_sim > 0 && cfg.optim.batch_dis > 0);
+        }
+    }
+
+    #[test]
+    fn mnist_preset_is_paper_true() {
+        let cfg = Preset::Mnist.config();
+        assert_eq!(cfg.dataset.dim, 780);
+        assert_eq!(cfg.model.k, 600);
+        assert_eq!(cfg.optim.batch_sim + cfg.optim.batch_dis, 1000);
+        assert_eq!(cfg.dataset.n_similar, 100_000);
+        // Table 1: 0.47M parameters
+        assert_eq!(cfg.model.k * cfg.dataset.dim, 468_000);
+    }
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        for p in Preset::all() {
+            let cfg = p.config();
+            let j = cfg.to_json();
+            let cfg2 = ExperimentConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, cfg2, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn consistency_parse_roundtrip() {
+        for c in [Consistency::Asp, Consistency::Bsp,
+                  Consistency::Ssp { staleness: 3 }] {
+            assert_eq!(Consistency::parse(&c.name()).unwrap(), c);
+        }
+        assert!(Consistency::parse("nope").is_err());
+    }
+
+    #[test]
+    fn preset_parse_aliases() {
+        assert_eq!(Preset::parse("mnist").unwrap(), Preset::Mnist);
+        assert_eq!(Preset::parse("imnet60k").unwrap(),
+                   Preset::Imnet60kScaled);
+        assert!(Preset::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn paper_shapes_match_table1() {
+        // Table 1 "# parameters": 0.47M, 220M, 21.5M
+        assert_eq!(PAPER_SHAPES[0].n_params(), 468_000);
+        assert_eq!(PAPER_SHAPES[1].n_params(), 215_040_000);
+        assert_eq!(PAPER_SHAPES[2].n_params(), 21_504_000);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = Preset::Tiny.config();
+        let dir = std::env::temp_dir().join("dmlps_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        cfg.save(&path).unwrap();
+        let cfg2 = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+}

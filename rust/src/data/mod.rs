@@ -1,0 +1,88 @@
+//! Data substrate: synthetic class-clustered datasets, pair sampling,
+//! worker partitioning, minibatch iteration.
+//!
+//! The paper draws similar/dissimilar pairs from class labels (same digit
+//! / same ImageNet class → similar). We have no network access, so the
+//! datasets are synthetic analogs (documented in DESIGN.md): what matters
+//! for reproducing the paper's behaviour is the *pair geometry* (class
+//! clusters in high dimension, Euclidean distance only weakly informative)
+//! and the *compute/communication volumes* (d, k, #pairs, minibatch), all
+//! of which are preserved.
+
+mod dataset;
+mod pairs;
+mod partition;
+
+pub use dataset::{Dataset, SyntheticSpec};
+pub use pairs::{MinibatchIter, Pair, PairSet};
+pub use partition::{partition_pairs, PairShard};
+
+use crate::config::DatasetConfig;
+
+/// Generate train/test datasets plus train pair sets and held-out test
+/// pairs, all from one seed — the standard entry point used by the CLI,
+/// examples, and benches.
+pub struct ExperimentData {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub pairs: PairSet,
+    pub test_pairs: PairSet,
+}
+
+impl ExperimentData {
+    pub fn generate(cfg: &DatasetConfig, seed: u64) -> ExperimentData {
+        let spec = SyntheticSpec::from_config(cfg);
+        let mut rng = crate::util::rng::Pcg32::with_stream(seed, 0xDA7A);
+        let train = spec.generate_with(&mut rng, cfg.n_train);
+        let test = spec.generate_with(&mut rng, cfg.n_test);
+        let pairs = PairSet::sample(
+            &train,
+            cfg.n_similar,
+            cfg.n_dissimilar,
+            &mut rng,
+        );
+        let test_pairs =
+            PairSet::sample(&test, cfg.n_test_pairs, cfg.n_test_pairs,
+                            &mut rng);
+        ExperimentData { train, test, pairs, test_pairs }
+    }
+}
+
+/// Table-1-style statistics for a generated experiment (the `table1`
+/// bench prints one row per preset from this).
+pub struct DatasetStats {
+    pub name: String,
+    pub feat_dim: usize,
+    pub k: usize,
+    pub n_params: usize,
+    pub n_samples: usize,
+    pub n_similar: usize,
+    pub n_dissimilar: usize,
+}
+
+impl DatasetStats {
+    pub fn of(cfg: &crate::config::ExperimentConfig) -> DatasetStats {
+        DatasetStats {
+            name: cfg.dataset.name.clone(),
+            feat_dim: cfg.dataset.dim,
+            k: cfg.model.k,
+            n_params: cfg.model.k * cfg.dataset.dim,
+            n_samples: cfg.dataset.n_train,
+            n_similar: cfg.dataset.n_similar,
+            n_dissimilar: cfg.dataset.n_dissimilar,
+        }
+    }
+
+    pub fn param_str(&self) -> String {
+        let p = self.n_params as f64;
+        if p >= 1e9 {
+            format!("{:.2}B", p / 1e9)
+        } else if p >= 1e6 {
+            format!("{:.2}M", p / 1e6)
+        } else if p >= 1e3 {
+            format!("{:.1}K", p / 1e3)
+        } else {
+            format!("{p}")
+        }
+    }
+}

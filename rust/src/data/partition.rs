@@ -1,0 +1,130 @@
+//! Pair partitioning across workers (paper §4.1: "we partition the
+//! similarity pair S and dissimilar pair D into P pieces S_1..S_P and
+//! D_1..D_P and each machine holds one piece").
+
+use super::pairs::{Pair, PairSet};
+use crate::util::rng::Pcg32;
+
+/// One worker's shard of the pair sets.
+#[derive(Clone, Debug)]
+pub struct PairShard {
+    pub worker: usize,
+    pub pairs: PairSet,
+}
+
+/// Shuffle and split both pair sets into `p` near-equal shards.
+///
+/// Shuffling before splitting matters: pair generation is class-ordered,
+/// and an unshuffled contiguous split would give workers class-biased
+/// gradient distributions (slower convergence under ASP).
+pub fn partition_pairs(pairs: &PairSet, p: usize, seed: u64) -> Vec<PairShard> {
+    assert!(p > 0, "need at least one worker");
+    assert!(
+        pairs.similar.len() >= p && pairs.dissimilar.len() >= p,
+        "fewer pairs than workers"
+    );
+    let mut rng = Pcg32::with_stream(seed, 0x5AAD);
+    let mut sim = pairs.similar.clone();
+    let mut dis = pairs.dissimilar.clone();
+    rng.shuffle(&mut sim);
+    rng.shuffle(&mut dis);
+    (0..p)
+        .map(|w| PairShard {
+            worker: w,
+            pairs: PairSet {
+                similar: slice_shard(&sim, w, p),
+                dissimilar: slice_shard(&dis, w, p),
+            },
+        })
+        .collect()
+}
+
+/// Contiguous shard `w` of `p` with remainder spread over the first
+/// shards (sizes differ by at most 1).
+fn slice_shard(xs: &[Pair], w: usize, p: usize) -> Vec<Pair> {
+    let n = xs.len();
+    let base = n / p;
+    let rem = n % p;
+    let start = w * base + w.min(rem);
+    let len = base + usize::from(w < rem);
+    xs[start..start + len].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SyntheticSpec;
+
+    fn pairs() -> PairSet {
+        let ds = SyntheticSpec::tiny().generate(1);
+        let mut rng = Pcg32::new(0);
+        PairSet::sample(&ds, 1003, 997, &mut rng)
+    }
+
+    #[test]
+    fn shards_cover_everything_exactly_once() {
+        let ps = pairs();
+        for p in [1, 2, 3, 7, 16] {
+            let shards = partition_pairs(&ps, p, 42);
+            assert_eq!(shards.len(), p);
+            let total_sim: usize =
+                shards.iter().map(|s| s.pairs.similar.len()).sum();
+            let total_dis: usize =
+                shards.iter().map(|s| s.pairs.dissimilar.len()).sum();
+            assert_eq!(total_sim, ps.similar.len());
+            assert_eq!(total_dis, ps.dissimilar.len());
+            // multiset equality via sorting
+            let mut all: Vec<(u32, u32)> = shards
+                .iter()
+                .flat_map(|s| s.pairs.similar.iter().map(|p| (p.i, p.j)))
+                .collect();
+            all.sort();
+            let mut want: Vec<(u32, u32)> =
+                ps.similar.iter().map(|p| (p.i, p.j)).collect();
+            want.sort();
+            assert_eq!(all, want);
+        }
+    }
+
+    #[test]
+    fn shards_are_balanced() {
+        let ps = pairs();
+        let shards = partition_pairs(&ps, 7, 1);
+        let sizes: Vec<usize> =
+            shards.iter().map(|s| s.pairs.similar.len()).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn partition_is_deterministic_per_seed() {
+        let ps = pairs();
+        let a = partition_pairs(&ps, 4, 9);
+        let b = partition_pairs(&ps, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pairs.similar, y.pairs.similar);
+        }
+        let c = partition_pairs(&ps, 4, 10);
+        assert_ne!(a[0].pairs.similar, c[0].pairs.similar);
+    }
+
+    #[test]
+    fn shards_are_shuffled_not_contiguous() {
+        let ps = pairs();
+        let shards = partition_pairs(&ps, 2, 3);
+        // shard 0 should not simply be the first half of the original
+        let first_half: Vec<Pair> =
+            ps.similar[..shards[0].pairs.similar.len()].to_vec();
+        assert_ne!(shards[0].pairs.similar, first_half);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer pairs")]
+    fn too_many_workers_panics() {
+        let ds = SyntheticSpec::tiny().generate(2);
+        let mut rng = Pcg32::new(1);
+        let ps = PairSet::sample(&ds, 3, 3, &mut rng);
+        partition_pairs(&ps, 10, 0);
+    }
+}

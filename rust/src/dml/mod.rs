@@ -1,0 +1,141 @@
+//! The DML problem (paper Eq. 4) and the engine abstraction.
+//!
+//! An [`Engine`] computes the minibatch objective/gradient and pair
+//! distances for a fixed problem shape. Two implementations:
+//!
+//! * [`NativeEngine`] — pure-Rust blocked matmuls (the L3-optimized CPU
+//!   hot path; also the reference the runtime tests compare against).
+//! * [`runtime::XlaEngine`](crate::runtime::XlaEngine) — executes the
+//!   AOT-compiled JAX/Pallas artifacts via PJRT; the production path.
+//!
+//! The objective (mean-normalized Eq. 4; see `python/compile/kernels/ref.py`
+//! for the identical Python oracle):
+//!
+//! ```text
+//! f(L) = mean_S ‖LΔ‖² + λ · mean_D max(0, 1 − ‖LΔ‖²)
+//! ```
+
+mod native;
+mod objective;
+mod optimizer;
+
+pub use native::NativeEngine;
+pub use objective::{full_objective, objective_on_batch, ObjectiveProbe};
+pub use optimizer::LrSchedule;
+
+use crate::linalg::Mat;
+
+/// A borrowed minibatch of pair-difference rows.
+///
+/// `ds`/`dd` are row-major (bs × d) / (bd × d) — exactly the layout the
+/// minibatch iterator fills and the layout both engines consume with zero
+/// copies.
+pub struct MinibatchRef<'a> {
+    pub ds: &'a [f32],
+    pub dd: &'a [f32],
+    pub bs: usize,
+    pub bd: usize,
+    pub d: usize,
+}
+
+impl<'a> MinibatchRef<'a> {
+    pub fn new(
+        ds: &'a [f32],
+        dd: &'a [f32],
+        bs: usize,
+        bd: usize,
+        d: usize,
+    ) -> Self {
+        assert_eq!(ds.len(), bs * d, "similar buffer shape");
+        assert_eq!(dd.len(), bd * d, "dissimilar buffer shape");
+        MinibatchRef { ds, dd, bs, bd, d }
+    }
+
+    pub fn from_iter(it: &'a crate::data::MinibatchIter<'a>) -> Self {
+        let (bs, bd, d) = it.shapes();
+        Self::new(&it.ds_buf, &it.dd_buf, bs, bd, d)
+    }
+}
+
+/// Problem description shared by engines and the parameter server.
+#[derive(Clone, Copy, Debug)]
+pub struct DmlProblem {
+    pub d: usize,
+    pub k: usize,
+    pub lambda: f32,
+}
+
+impl DmlProblem {
+    pub fn new(d: usize, k: usize, lambda: f32) -> Self {
+        assert!(k <= d, "factorization requires k <= d");
+        DmlProblem { d, k, lambda }
+    }
+
+    /// Initial L: scaled rectangular identity plus small noise — full rank
+    /// by construction, scale chosen so initial distances are O(1).
+    pub fn init_l(&self, init_scale: f32, seed: u64) -> Mat {
+        let mut l = Mat::scaled_eye(self.k, self.d, init_scale);
+        let mut rng = crate::util::rng::Pcg32::with_stream(seed, 0x111);
+        let mut noise = vec![0.0f32; self.k * self.d];
+        rng.fill_gaussian(&mut noise, 0.0, init_scale / (self.d as f32).sqrt());
+        for (a, b) in l.data.iter_mut().zip(&noise) {
+            *a += b;
+        }
+        l
+    }
+
+    /// FLOPs of one minibatch loss+grad (4 b×k×d matmuls, 2 flops/MAC).
+    pub fn step_flops(&self, bs: usize, bd: usize) -> f64 {
+        4.0 * (bs + bd) as f64 / 2.0 * self.k as f64 * self.d as f64 * 2.0
+    }
+}
+
+/// Thread-safe engine constructor. The XLA engine wraps a PJRT client
+/// (`Rc`-based, not `Send`), so worker threads each build their own
+/// engine inside the thread via one of these factories.
+pub type EngineFactory = std::sync::Arc<
+    dyn Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync,
+>;
+
+/// Factory for the native engine (always available).
+pub fn native_factory() -> EngineFactory {
+    std::sync::Arc::new(|| Ok(Box::new(NativeEngine::new()) as Box<dyn Engine>))
+}
+
+/// Gradient/step/eval backend for one problem shape.
+///
+/// Not `Send`: the PJRT-backed implementation holds `Rc` handles. Use an
+/// [`EngineFactory`] to construct engines inside worker threads.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Compute objective and gradient on a minibatch; writes the gradient
+    /// into `g` (shape k × d) and returns the loss.
+    fn loss_grad(
+        &mut self,
+        l: &Mat,
+        batch: &MinibatchRef<'_>,
+        lambda: f32,
+        g: &mut Mat,
+    ) -> anyhow::Result<f32>;
+
+    /// Fused SGD step `L ← L − lr·∇f(L)`; returns the (pre-step) loss.
+    /// Default: loss_grad + axpy. The XLA engine overrides this with the
+    /// donated-buffer fused artifact.
+    fn step(
+        &mut self,
+        l: &mut Mat,
+        batch: &MinibatchRef<'_>,
+        lambda: f32,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let mut g = Mat::zeros(l.rows, l.cols);
+        let loss = self.loss_grad(l, batch, lambda, &mut g)?;
+        l.axpy_inplace(-lr, &g);
+        Ok(loss)
+    }
+
+    /// Squared Mahalanobis distances ‖LΔ‖² for rows of `diffs` (b × d).
+    fn pair_dist(&mut self, l: &Mat, diffs: &Mat)
+        -> anyhow::Result<Vec<f32>>;
+}

@@ -1,0 +1,335 @@
+//! Native CPU engine: the pure-Rust hot path.
+//!
+//! Mirrors the Pallas kernel's dataflow (project → hinge → outer-product)
+//! with cache-blocked matmuls and reusable scratch buffers — the steady
+//! state allocates nothing. Serves three roles: reference implementation
+//! for runtime tests, fallback when artifacts are absent, and the subject
+//! of the L3 performance pass (see EXPERIMENTS.md §Perf).
+
+use super::{Engine, MinibatchRef};
+use crate::linalg::{self, Mat};
+
+pub struct NativeEngine {
+    /// Scratch projections, reused across calls (resized on shape change).
+    zs: Mat,
+    zd: Mat,
+}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine { zs: Mat::zeros(0, 0), zd: Mat::zeros(0, 0) }
+    }
+
+    fn ensure_scratch(&mut self, bs: usize, bd: usize, k: usize) {
+        if self.zs.rows != bs || self.zs.cols != k {
+            self.zs = Mat::zeros(bs, k);
+        }
+        if self.zd.rows != bd || self.zd.cols != k {
+            self.zd = Mat::zeros(bd, k);
+        }
+    }
+
+    /// Z = D Lᵀ where D is a borrowed (b × d) row-major buffer.
+    fn project_into(l: &Mat, diffs: &[f32], b: usize, z: &mut Mat) {
+        let d = l.cols;
+        let k = l.rows;
+        debug_assert_eq!(z.rows, b);
+        debug_assert_eq!(z.cols, k);
+        for r in 0..b {
+            let drow = &diffs[r * d..(r + 1) * d];
+            let zrow = &mut z.data[r * k..(r + 1) * k];
+            for (j, zv) in zrow.iter_mut().enumerate() {
+                *zv = linalg::dot(drow, l.row(j));
+            }
+        }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn loss_grad(
+        &mut self,
+        l: &Mat,
+        batch: &MinibatchRef<'_>,
+        lambda: f32,
+        g: &mut Mat,
+    ) -> anyhow::Result<f32> {
+        let (bs, bd, d, k) = (batch.bs, batch.bd, batch.d, l.rows);
+        anyhow::ensure!(l.cols == d, "L dim mismatch");
+        anyhow::ensure!(
+            g.rows == k && g.cols == d,
+            "gradient buffer shape mismatch"
+        );
+        self.ensure_scratch(bs, bd, k);
+
+        // 1) project: Zs = Ds Lᵀ, Zd = Dd Lᵀ           (2 MXU-shaped GEMMs)
+        Self::project_into(l, batch.ds, bs, &mut self.zs);
+        Self::project_into(l, batch.dd, bd, &mut self.zd);
+
+        // 2) hinge + loss                                (VPU-shaped pass)
+        let mut loss_sim = 0.0f64;
+        for r in 0..bs {
+            let zrow = &self.zs.data[r * k..(r + 1) * k];
+            loss_sim += zrow.iter().map(|z| (z * z) as f64).sum::<f64>();
+        }
+        loss_sim /= bs as f64;
+
+        let mut loss_dis = 0.0f64;
+        // scale rows of Zs by 2/bs and rows of Zd by w_i * (−2λ/bd) so the
+        // two outer products below fold all scaling in.
+        let s_sim = 2.0 / bs as f32;
+        for v in &mut self.zs.data {
+            *v *= s_sim;
+        }
+        let s_dis = -2.0 * lambda / bd as f32;
+        for r in 0..bd {
+            let zrow = &mut self.zd.data[r * k..(r + 1) * k];
+            let dist: f32 = zrow.iter().map(|z| z * z).sum();
+            let hinge = (1.0 - dist).max(0.0);
+            loss_dis += hinge as f64;
+            let w = if dist < 1.0 { s_dis } else { 0.0 };
+            for v in zrow.iter_mut() {
+                *v *= w;
+            }
+        }
+        loss_dis /= bd as f64;
+        let loss = loss_sim + lambda as f64 * loss_dis;
+
+        // 3) gradient outer products: G = Zsᵀ Ds + Zdᵀ Dd (2 GEMMs)
+        let ds_mat = MatRef { data: batch.ds, rows: bs, cols: d };
+        let dd_mat = MatRef { data: batch.dd, rows: bd, cols: d };
+        at_b_into(&self.zs, ds_mat, g, 0.0);
+        at_b_into(&self.zd, dd_mat, g, 1.0);
+
+        Ok(loss as f32)
+    }
+
+    fn pair_dist(
+        &mut self,
+        l: &Mat,
+        diffs: &Mat,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(l.cols == diffs.cols, "dim mismatch");
+        let k = l.rows;
+        let mut out = Vec::with_capacity(diffs.rows);
+        let mut zrow = vec![0.0f32; k];
+        for r in 0..diffs.rows {
+            let drow = diffs.row(r);
+            for (j, zv) in zrow.iter_mut().enumerate() {
+                *zv = linalg::dot(drow, l.row(j));
+            }
+            out.push(zrow.iter().map(|z| z * z).sum());
+        }
+        Ok(out)
+    }
+}
+
+/// Borrowed row-major matrix view (avoids copying minibatch buffers into
+/// `Mat`s on the hot path).
+#[derive(Clone, Copy)]
+struct MatRef<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+}
+
+/// C = beta*C + Aᵀ·B with A owned (b × m) and B borrowed (b × n):
+/// saxpy per (A-row, B-row) pair, vectorizable along n.
+fn at_b_into(a: &Mat, b: MatRef<'_>, c: &mut Mat, beta: f32) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    }
+    let (m, n) = (a.cols, b.cols);
+    for r in 0..a.rows {
+        let arow = &a.data[r * m..(r + 1) * m];
+        let brow = &b.data[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // hinge-inactive rows were zeroed — skip them
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Straight-line scalar reference (no blocking, f64 accumulation).
+    fn ref_loss_grad(
+        l: &Mat,
+        batch: &MinibatchRef<'_>,
+        lambda: f32,
+    ) -> (f32, Mat) {
+        let (bs, bd, d, k) = (batch.bs, batch.bd, batch.d, l.rows);
+        let mut g = vec![0.0f64; k * d];
+        let mut loss_sim = 0.0f64;
+        for r in 0..bs {
+            let delta = &batch.ds[r * d..(r + 1) * d];
+            let z: Vec<f64> = (0..k)
+                .map(|j| {
+                    l.row(j)
+                        .iter()
+                        .zip(delta)
+                        .map(|(a, b)| (*a as f64) * (*b as f64))
+                        .sum()
+                })
+                .collect();
+            loss_sim += z.iter().map(|v| v * v).sum::<f64>();
+            for j in 0..k {
+                for c in 0..d {
+                    g[j * d + c] +=
+                        2.0 / bs as f64 * z[j] * delta[c] as f64;
+                }
+            }
+        }
+        loss_sim /= bs as f64;
+        let mut loss_dis = 0.0f64;
+        for r in 0..bd {
+            let delta = &batch.dd[r * d..(r + 1) * d];
+            let z: Vec<f64> = (0..k)
+                .map(|j| {
+                    l.row(j)
+                        .iter()
+                        .zip(delta)
+                        .map(|(a, b)| (*a as f64) * (*b as f64))
+                        .sum()
+                })
+                .collect();
+            let dist: f64 = z.iter().map(|v| v * v).sum();
+            loss_dis += (1.0 - dist).max(0.0);
+            if dist < 1.0 {
+                for j in 0..k {
+                    for c in 0..d {
+                        g[j * d + c] -= 2.0 * lambda as f64 / bd as f64
+                            * z[j]
+                            * delta[c] as f64;
+                    }
+                }
+            }
+        }
+        loss_dis /= bd as f64;
+        let loss = (loss_sim + lambda as f64 * loss_dis) as f32;
+        let gm = Mat::from_vec(k, d, g.iter().map(|&v| v as f32).collect());
+        (loss, gm)
+    }
+
+    fn rand_batch(
+        rng: &mut Pcg32,
+        bs: usize,
+        bd: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut ds = vec![0.0f32; bs * d];
+        let mut dd = vec![0.0f32; bd * d];
+        rng.fill_gaussian(&mut ds, 0.0, 1.0);
+        rng.fill_gaussian(&mut dd, 0.0, 1.0);
+        (ds, dd)
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        let mut rng = Pcg32::new(0);
+        for &(k, d, bs, bd) in
+            &[(2, 4, 1, 1), (8, 16, 4, 6), (20, 33, 7, 9), (60, 78, 10, 10)]
+        {
+            let mut l = Mat::zeros(k, d);
+            rng.fill_gaussian(&mut l.data, 0.0, 0.3 / (d as f32).sqrt());
+            let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
+            let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+            let mut eng = NativeEngine::new();
+            let mut g = Mat::zeros(k, d);
+            let loss = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+            let (rloss, rg) = ref_loss_grad(&l, &batch, 1.0);
+            assert!(
+                (loss - rloss).abs() < 1e-4 * (1.0 + rloss.abs()),
+                "loss {loss} vs {rloss} (k={k},d={d})"
+            );
+            assert!(g.max_abs_diff(&rg) < 1e-3, "grad (k={k},d={d})");
+        }
+    }
+
+    #[test]
+    fn lambda_scales_hinge_term() {
+        let mut rng = Pcg32::new(1);
+        let (k, d, bs, bd) = (4, 8, 3, 3);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.05);
+        let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
+        let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+        let mut eng = NativeEngine::new();
+        let mut g = Mat::zeros(k, d);
+        let l1 = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+        let l2 = eng.loss_grad(&l, &batch, 2.0, &mut g).unwrap();
+        // with tiny L the hinge is ~fully active: loss ≈ sim + λ·~1
+        assert!(l2 > l1 + 0.5, "{l1} {l2}");
+    }
+
+    #[test]
+    fn step_reduces_fixed_batch_loss() {
+        let mut rng = Pcg32::new(2);
+        let (k, d, bs, bd) = (8, 16, 8, 8);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.2);
+        let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
+        let mut eng = NativeEngine::new();
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+            losses.push(eng.step(&mut l, &batch, 1.0, 0.03).unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.8),
+            "{losses:?}"
+        );
+    }
+
+    #[test]
+    fn pair_dist_matches_projection() {
+        let mut rng = Pcg32::new(3);
+        let (k, d, b) = (5, 12, 9);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.5);
+        let mut diffs = Mat::zeros(b, d);
+        rng.fill_gaussian(&mut diffs.data, 0.0, 1.0);
+        let mut eng = NativeEngine::new();
+        let got = eng.pair_dist(&l, &diffs).unwrap();
+        let z = diffs.matmul_bt(&l);
+        for r in 0..b {
+            let want: f32 = z.row(r).iter().map(|v| v * v).sum();
+            assert!((got[r] - want).abs() < 1e-4 * (1.0 + want));
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        // engine must survive alternating shapes (server + eval traffic)
+        let mut rng = Pcg32::new(4);
+        let mut eng = NativeEngine::new();
+        for &(k, d, bs, bd) in &[(4, 8, 2, 2), (6, 10, 3, 5), (4, 8, 2, 2)] {
+            let mut l = Mat::zeros(k, d);
+            rng.fill_gaussian(&mut l.data, 0.0, 0.2);
+            let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
+            let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+            let mut g = Mat::zeros(k, d);
+            let loss = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+            assert!(loss.is_finite());
+        }
+    }
+}

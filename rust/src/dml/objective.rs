@@ -1,0 +1,138 @@
+//! Full-objective evaluation over (a sample of) the pair sets.
+//!
+//! The paper's convergence figures (Fig 2) plot the *global* objective
+//! value over time. Evaluating all 200M pairs each probe would dwarf
+//! training, so — like the authors must have — we evaluate on a fixed
+//! random subsample and keep it constant across probes so curves are
+//! comparable.
+
+use super::{Engine, MinibatchRef};
+use crate::data::{Dataset, PairSet};
+use crate::linalg::Mat;
+use crate::util::rng::Pcg32;
+
+/// Objective on an explicit batch of pair differences.
+pub fn objective_on_batch(
+    engine: &mut dyn Engine,
+    l: &Mat,
+    batch: &MinibatchRef<'_>,
+    lambda: f32,
+) -> f32 {
+    let mut g = Mat::zeros(l.rows, l.cols);
+    engine
+        .loss_grad(l, batch, lambda, &mut g)
+        .expect("objective evaluation failed")
+}
+
+/// Deterministic subsample of the pair sets for objective probes.
+pub struct ObjectiveProbe {
+    ds_buf: Vec<f32>,
+    dd_buf: Vec<f32>,
+    bs: usize,
+    bd: usize,
+    d: usize,
+}
+
+impl ObjectiveProbe {
+    /// Materialize `n_sim`+`n_dis` fixed pair differences (seeded).
+    pub fn new(
+        ds: &Dataset,
+        pairs: &PairSet,
+        n_sim: usize,
+        n_dis: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg32::with_stream(seed, 0x0B7);
+        let d = ds.dim();
+        let n_sim = n_sim.min(pairs.similar.len());
+        let n_dis = n_dis.min(pairs.dissimilar.len());
+        let mut ds_buf = vec![0.0f32; n_sim * d];
+        let sim_idx = rng.sample_distinct(pairs.similar.len(), n_sim);
+        for (r, &pi) in sim_idx.iter().enumerate() {
+            let p = pairs.similar[pi];
+            ds.diff_into(p.i as usize, p.j as usize,
+                         &mut ds_buf[r * d..(r + 1) * d]);
+        }
+        let mut dd_buf = vec![0.0f32; n_dis * d];
+        let dis_idx = rng.sample_distinct(pairs.dissimilar.len(), n_dis);
+        for (r, &pi) in dis_idx.iter().enumerate() {
+            let p = pairs.dissimilar[pi];
+            ds.diff_into(p.i as usize, p.j as usize,
+                         &mut dd_buf[r * d..(r + 1) * d]);
+        }
+        ObjectiveProbe { ds_buf, dd_buf, bs: n_sim, bd: n_dis, d }
+    }
+
+    /// Evaluate the objective at `l`.
+    pub fn eval(&self, engine: &mut dyn Engine, l: &Mat, lambda: f32) -> f32 {
+        let batch = MinibatchRef::new(
+            &self.ds_buf, &self.dd_buf, self.bs, self.bd, self.d,
+        );
+        objective_on_batch(engine, l, &batch, lambda)
+    }
+}
+
+/// Objective over the *entire* pair sets (exact; for small configs/tests).
+pub fn full_objective(
+    engine: &mut dyn Engine,
+    l: &Mat,
+    ds: &Dataset,
+    pairs: &PairSet,
+    lambda: f32,
+) -> f32 {
+    let probe = ObjectiveProbe::new(
+        ds,
+        pairs,
+        pairs.similar.len(),
+        pairs.dissimilar.len(),
+        0,
+    );
+    probe.eval(engine, l, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::dml::{DmlProblem, NativeEngine};
+
+    #[test]
+    fn probe_is_deterministic() {
+        let ds = SyntheticSpec::tiny().generate(0);
+        let mut rng = Pcg32::new(1);
+        let pairs = PairSet::sample(&ds, 200, 200, &mut rng);
+        let problem = DmlProblem::new(ds.dim(), 8, 1.0);
+        let l = problem.init_l(0.5, 7);
+        let mut eng = NativeEngine::new();
+        let p1 = ObjectiveProbe::new(&ds, &pairs, 50, 50, 3);
+        let p2 = ObjectiveProbe::new(&ds, &pairs, 50, 50, 3);
+        assert_eq!(p1.eval(&mut eng, &l, 1.0), p2.eval(&mut eng, &l, 1.0));
+    }
+
+    #[test]
+    fn subsample_approximates_full() {
+        let ds = SyntheticSpec::tiny().generate(2);
+        let mut rng = Pcg32::new(2);
+        let pairs = PairSet::sample(&ds, 2000, 2000, &mut rng);
+        let problem = DmlProblem::new(ds.dim(), 8, 1.0);
+        let l = problem.init_l(0.5, 8);
+        let mut eng = NativeEngine::new();
+        let full = full_objective(&mut eng, &l, &ds, &pairs, 1.0);
+        let probe = ObjectiveProbe::new(&ds, &pairs, 500, 500, 4);
+        let approx = probe.eval(&mut eng, &l, 1.0);
+        assert!(
+            (full - approx).abs() < 0.15 * full.abs().max(1.0),
+            "full={full} approx={approx}"
+        );
+    }
+
+    #[test]
+    fn probe_caps_at_available_pairs() {
+        let ds = SyntheticSpec::tiny().generate(3);
+        let mut rng = Pcg32::new(3);
+        let pairs = PairSet::sample(&ds, 20, 20, &mut rng);
+        let probe = ObjectiveProbe::new(&ds, &pairs, 1000, 1000, 5);
+        assert_eq!(probe.bs, 20);
+        assert_eq!(probe.bd, 20);
+    }
+}

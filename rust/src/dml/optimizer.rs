@@ -1,0 +1,47 @@
+//! Learning-rate schedules for the SGD loop.
+//!
+//! The paper uses plain SGD; a 1/(1+decay·t) schedule is the standard
+//! robbins-monro choice for hinge objectives and what our presets use.
+
+/// lr_t = lr0 / (1 + decay · t)
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub lr0: f32,
+    pub decay: f32,
+}
+
+impl LrSchedule {
+    pub fn new(lr0: f32, decay: f32) -> Self {
+        assert!(lr0 > 0.0 && decay >= 0.0);
+        LrSchedule { lr0, decay }
+    }
+
+    pub fn constant(lr0: f32) -> Self {
+        Self::new(lr0, 0.0)
+    }
+
+    #[inline]
+    pub fn at(&self, step: usize) -> f32 {
+        self.lr0 / (1.0 + self.decay * step as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1000), 0.1);
+    }
+
+    #[test]
+    fn decay_monotone() {
+        let s = LrSchedule::new(0.1, 0.01);
+        assert_eq!(s.at(0), 0.1);
+        assert!(s.at(10) < s.at(5));
+        assert!((s.at(100) - 0.1 / 2.0).abs() < 1e-6);
+    }
+}

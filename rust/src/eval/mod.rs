@@ -1,0 +1,224 @@
+//! Evaluation: pair-verification precision/recall (the paper's §5.4
+//! protocol), average precision, and kNN retrieval accuracy.
+//!
+//! Protocol (paper): sample held-out similar/dissimilar pairs, score each
+//! pair with the learned distance, predict "similar" when the distance is
+//! below a threshold t, and sweep t to get a precision-recall curve; the
+//! headline number is average precision.
+
+mod pr;
+
+pub use pr::{average_precision, pr_curve, PrPoint};
+
+use crate::data::{Dataset, PairSet};
+use crate::dml::Engine;
+use crate::linalg::Mat;
+
+/// Distances for all pairs of a [`PairSet`] under metric L.
+/// Returns (similar_dists, dissimilar_dists).
+pub fn score_pairs(
+    engine: &mut dyn Engine,
+    l: &Mat,
+    ds: &Dataset,
+    pairs: &PairSet,
+) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    let score = |set: &[crate::data::Pair],
+                 engine: &mut dyn Engine|
+     -> anyhow::Result<Vec<f32>> {
+        // materialize diffs in manageable chunks to bound memory
+        const CHUNK: usize = 4096;
+        let d = ds.dim();
+        let mut out = Vec::with_capacity(set.len());
+        let mut buf = Mat::zeros(CHUNK.min(set.len().max(1)), d);
+        let mut i = 0;
+        while i < set.len() {
+            let n = (set.len() - i).min(CHUNK);
+            if buf.rows != n {
+                buf = Mat::zeros(n, d);
+            }
+            for (r, p) in set[i..i + n].iter().enumerate() {
+                ds.diff_into(p.i as usize, p.j as usize, buf.row_mut(r));
+            }
+            out.extend(engine.pair_dist(l, &buf)?);
+            i += n;
+        }
+        Ok(out)
+    };
+    Ok((score(&pairs.similar, engine)?, score(&pairs.dissimilar, engine)?))
+}
+
+/// Euclidean pair distances (baseline): L = I without materializing it.
+pub fn score_pairs_euclidean(
+    ds: &Dataset,
+    pairs: &PairSet,
+) -> (Vec<f32>, Vec<f32>) {
+    let score = |set: &[crate::data::Pair]| -> Vec<f32> {
+        set.iter()
+            .map(|p| {
+                ds.feature(p.i as usize)
+                    .iter()
+                    .zip(ds.feature(p.j as usize))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            })
+            .collect()
+    };
+    (score(&pairs.similar), score(&pairs.dissimilar))
+}
+
+/// Mahalanobis pair distances under a full M (d×d) — used by baselines
+/// that learn M directly (Xing2002, ITML, KISS): dist = δᵀ M δ.
+pub fn score_pairs_mahalanobis(
+    m: &Mat,
+    ds: &Dataset,
+    pairs: &PairSet,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = ds.dim();
+    assert_eq!((m.rows, m.cols), (d, d));
+    let mut diff = vec![0.0f32; d];
+    let mut score = |set: &[crate::data::Pair]| -> Vec<f32> {
+        set.iter()
+            .map(|p| {
+                ds.diff_into(p.i as usize, p.j as usize, &mut diff);
+                let md = m.matvec(&diff);
+                crate::linalg::dot(&diff, &md)
+            })
+            .collect()
+    };
+    let sim = score(&pairs.similar);
+    let dis = score(&pairs.dissimilar);
+    (sim, dis)
+}
+
+/// k-nearest-neighbour classification accuracy of `test` against `train`
+/// under the metric L (L = None → Euclidean). The paper motivates DML
+/// through exactly this task (kNN/clustering accuracy).
+pub fn knn_accuracy(
+    l: Option<&Mat>,
+    train: &Dataset,
+    test: &Dataset,
+    k: usize,
+    max_test: usize,
+) -> f64 {
+    // project once: in the learned space distances are Euclidean
+    let (tr, te): (Mat, Mat) = match l {
+        Some(l) => (train.x.matmul_bt(l), test.x.matmul_bt(l)),
+        None => (train.x.clone(), test.x.clone()),
+    };
+    let n_test = test.n().min(max_test);
+    let mut correct = 0usize;
+    let mut heap: Vec<(f32, u32)> = Vec::new();
+    for i in 0..n_test {
+        heap.clear();
+        let q = tr_row(&te, i);
+        for j in 0..train.n() {
+            let dist: f32 = q
+                .iter()
+                .zip(tr_row(&tr, j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if heap.len() < k {
+                heap.push((dist, train.labels[j]));
+                heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            } else if dist < heap[k - 1].0 {
+                heap[k - 1] = (dist, train.labels[j]);
+                heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        }
+        // majority vote
+        let mut counts = std::collections::HashMap::new();
+        for &(_, c) in heap.iter() {
+            *counts.entry(c).or_insert(0usize) += 1;
+        }
+        let pred = counts
+            .into_iter()
+            .max_by_key(|&(_, n)| n)
+            .map(|(c, _)| c)
+            .unwrap();
+        if pred == test.labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_test as f64
+}
+
+fn tr_row(m: &Mat, r: usize) -> &[f32] {
+    m.row(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::dml::NativeEngine;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn euclidean_and_engine_agree_on_identity_metric() {
+        let ds = SyntheticSpec::tiny().generate(0);
+        let mut rng = Pcg32::new(0);
+        let pairs = crate::data::PairSet::sample(&ds, 50, 50, &mut rng);
+        let l = Mat::eye(ds.dim());
+        let mut eng = NativeEngine::new();
+        let (s1, d1) = score_pairs(&mut eng, &l, &ds, &pairs).unwrap();
+        let (s2, d2) = score_pairs_euclidean(&ds, &pairs);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b), "{a} {b}");
+        }
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b));
+        }
+    }
+
+    #[test]
+    fn mahalanobis_identity_equals_euclidean() {
+        let ds = SyntheticSpec::tiny().generate(1);
+        let mut rng = Pcg32::new(1);
+        let pairs = crate::data::PairSet::sample(&ds, 30, 30, &mut rng);
+        let m = Mat::eye(ds.dim());
+        let (s1, _) = score_pairs_mahalanobis(&m, &ds, &pairs);
+        let (s2, _) = score_pairs_euclidean(&ds, &pairs);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b));
+        }
+    }
+
+    #[test]
+    fn mahalanobis_matches_factored_form() {
+        // dist under M = LᵀL must equal ‖LΔ‖²
+        let ds = SyntheticSpec::tiny().generate(2);
+        let mut rng = Pcg32::new(2);
+        let pairs = crate::data::PairSet::sample(&ds, 20, 20, &mut rng);
+        let mut l = Mat::zeros(8, ds.dim());
+        rng.fill_gaussian(&mut l.data, 0.0, 0.3);
+        let m = l.matmul_at(&l); // M = Lᵀ·L, (d×d)
+        let (s1, _) = score_pairs_mahalanobis(&m, &ds, &pairs);
+        let mut eng = NativeEngine::new();
+        let (s2, _) = score_pairs(&mut eng, &l, &ds, &pairs).unwrap();
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn knn_on_separated_clusters_is_accurate() {
+        let mut spec = SyntheticSpec::tiny();
+        spec.separation = 6.0; // easy
+        spec.signal_fraction = 1.0; // signal everywhere
+        spec.noise_amp = 1.0;
+        spec.outlier_prob = 0.0;
+        let mut rng = Pcg32::new(3);
+        let train = spec.generate_with(&mut rng, 300);
+        let test = spec.generate_with(&mut rng, 100);
+        let acc = knn_accuracy(None, &train, &test, 3, 100);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn knn_respects_max_test() {
+        let ds = SyntheticSpec::tiny().generate(4);
+        let acc = knn_accuracy(None, &ds, &ds, 1, 10);
+        // 1-NN on itself = perfect
+        assert_eq!(acc, 1.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Precision-recall curves and average precision for pair verification.
+//!
+//! Convention: a pair is *predicted similar* when its distance is below
+//! the threshold; *ground-truth positive* = labeled similar. Sweeping the
+//! threshold over all observed distances traces the PR curve (paper
+//! Fig. 4b/4c); average precision is the standard ranked-retrieval AP
+//! (area under the precision-recall steps).
+
+/// One PR-curve point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrPoint {
+    pub threshold: f32,
+    pub precision: f64,
+    pub recall: f64,
+}
+
+/// PR curve from similar-pair and dissimilar-pair distance scores.
+/// Points are ordered by increasing threshold (recall-ascending).
+pub fn pr_curve(sim_dists: &[f32], dis_dists: &[f32]) -> Vec<PrPoint> {
+    assert!(!sim_dists.is_empty() && !dis_dists.is_empty());
+    // Rank all scores ascending; walk thresholds between distinct values.
+    let mut scored: Vec<(f32, bool)> = sim_dists
+        .iter()
+        .map(|&d| (d, true))
+        .chain(dis_dists.iter().map(|&d| (d, false)))
+        .collect();
+    scored.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let total_pos = sim_dists.len() as f64;
+    let mut tp = 0.0f64;
+    let mut fp = 0.0f64;
+    let mut out = Vec::with_capacity(scored.len());
+    let mut i = 0;
+    while i < scored.len() {
+        // advance over ties so the threshold cut is well defined
+        let t = scored[i].0;
+        while i < scored.len() && scored[i].0 == t {
+            if scored[i].1 {
+                tp += 1.0;
+            } else {
+                fp += 1.0;
+            }
+            i += 1;
+        }
+        out.push(PrPoint {
+            threshold: t,
+            precision: tp / (tp + fp),
+            recall: tp / total_pos,
+        });
+    }
+    out
+}
+
+/// Average precision: mean of precision over the positive ranks
+/// (standard information-retrieval AP on the distance ranking).
+pub fn average_precision(sim_dists: &[f32], dis_dists: &[f32]) -> f64 {
+    assert!(!sim_dists.is_empty());
+    let mut scored: Vec<(f32, bool)> = sim_dists
+        .iter()
+        .map(|&d| (d, true))
+        .chain(dis_dists.iter().map(|&d| (d, false)))
+        .collect();
+    // ascending distance = descending similarity confidence.
+    // tie-break: dissimilar first (pessimistic, avoids inflating AP).
+    scored.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    let mut tp = 0.0f64;
+    let mut ap = 0.0f64;
+    for (rank, &(_, is_pos)) in scored.iter().enumerate() {
+        if is_pos {
+            tp += 1.0;
+            ap += tp / (rank as f64 + 1.0);
+        }
+    }
+    ap / sim_dists.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_gives_ap_one() {
+        let sim = [0.1, 0.2, 0.3];
+        let dis = [1.0, 2.0, 3.0];
+        assert!((average_precision(&sim, &dis) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_separation_gives_low_ap() {
+        let sim = [1.0, 2.0, 3.0];
+        let dis = [0.1, 0.2, 0.3];
+        let ap = average_precision(&sim, &dis);
+        assert!(ap < 0.6, "ap={ap}");
+    }
+
+    #[test]
+    fn random_scores_give_ap_near_prior() {
+        // With equal counts and random scores AP ≈ positive prior = 0.5
+        let mut rng = crate::util::rng::Pcg32::new(0);
+        let sim: Vec<f32> = (0..2000).map(|_| rng.f32()).collect();
+        let dis: Vec<f32> = (0..2000).map(|_| rng.f32()).collect();
+        let ap = average_precision(&sim, &dis);
+        assert!((ap - 0.5).abs() < 0.05, "ap={ap}");
+    }
+
+    #[test]
+    fn pr_curve_monotone_recall_and_endpoints() {
+        let mut rng = crate::util::rng::Pcg32::new(1);
+        let sim: Vec<f32> = (0..500).map(|_| rng.f32() * 0.8).collect();
+        let dis: Vec<f32> =
+            (0..500).map(|_| 0.2 + rng.f32() * 0.8).collect();
+        let curve = pr_curve(&sim, &dis);
+        for w in curve.windows(2) {
+            assert!(w[1].recall >= w[0].recall);
+            assert!(w[1].threshold > w[0].threshold);
+        }
+        let last = curve.last().unwrap();
+        assert!((last.recall - 1.0).abs() < 1e-12);
+        assert!((last.precision - 0.5).abs() < 1e-12);
+        // separated data: early points should be high precision
+        assert!(curve[0].precision > 0.9);
+    }
+
+    #[test]
+    fn pr_handles_ties() {
+        let sim = [0.5, 0.5, 0.5];
+        let dis = [0.5, 0.5, 0.5];
+        let curve = pr_curve(&sim, &dis);
+        assert_eq!(curve.len(), 1);
+        assert!((curve[0].precision - 0.5).abs() < 1e-12);
+        assert!((curve[0].recall - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ap_tie_break_is_pessimistic() {
+        // one positive and one negative at the same distance:
+        // pessimistic ranking puts the negative first → AP = 1/2
+        let ap = average_precision(&[1.0], &[1.0]);
+        assert!((ap - 0.5).abs() < 1e-12, "ap={ap}");
+    }
+}

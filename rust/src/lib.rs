@@ -1,0 +1,55 @@
+//! # dmlps — Large Scale Distributed Distance Metric Learning
+//!
+//! A production-shaped reproduction of *"Large Scale Distributed Distance
+//! Metric Learning"* (Pengtao Xie & Eric Xing, CMU, 2014) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: an asynchronous
+//!   parameter server ([`ps`]) with the exact thread/message-queue
+//!   architecture of paper §4.2, plus every substrate it needs: synthetic
+//!   datasets and pair sampling ([`data`]), the DML problem and a native
+//!   CPU engine ([`dml`]), a PJRT runtime that executes the AOT-compiled
+//!   JAX/Pallas artifacts ([`runtime`]), the single-machine baselines the
+//!   paper compares against ([`baselines`]), evaluation ([`eval`]), a
+//!   discrete-event cluster simulator for the scalability study
+//!   ([`simcluster`]), metrics ([`metrics`]), and config/CLI plumbing.
+//! * **L2/L1 (python/, build-time only)** — the minibatch DML
+//!   loss/gradient as a JAX graph calling Pallas kernels, lowered once to
+//!   HLO text in `artifacts/` by `make artifacts`. Python never runs on
+//!   the training path.
+//!
+//! ## The problem
+//!
+//! Given pairs labeled similar (S) or dissimilar (D), learn a Mahalanobis
+//! metric `M = LᵀL` (L is `k×d`) by minimizing the paper's Eq. 4:
+//!
+//! ```text
+//! f(L) = mean_{(x,y)∈S} ‖L(x−y)‖² + λ · mean_{(x,y)∈D} max(0, 1 − ‖L(x−y)‖²)
+//! ```
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dmlps::config::Preset;
+//! use dmlps::data::SyntheticSpec;
+//! use dmlps::dml::{DmlProblem, NativeEngine, Engine};
+//!
+//! let spec = SyntheticSpec::tiny();
+//! let data = spec.generate(42);
+//! let problem = DmlProblem::new(16, /*k=*/8, /*lambda=*/1.0);
+//! let engine = NativeEngine::new();
+//! // see examples/quickstart.rs for the full train/eval loop
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod dml;
+pub mod eval;
+pub mod linalg;
+pub mod metrics;
+pub mod ps;
+pub mod runtime;
+pub mod simcluster;
+pub mod util;

@@ -1,0 +1,155 @@
+//! Cholesky factorization, triangular solves, SPD inverse.
+//!
+//! Used by the KISS baseline (inverting pair-difference covariances) and
+//! by tests as an independent PSD check.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor of an SPD matrix: A = G Gᵀ.
+/// Returns `None` if the matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut g = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= g.at(i, k) as f64 * g.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *g.at_mut(i, j) = (s as f32).sqrt().max(f32::MIN_POSITIVE);
+            } else {
+                *g.at_mut(i, j) = (s / g.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(g)
+}
+
+/// Solve G y = b for lower-triangular G (forward substitution).
+pub fn solve_lower(g: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = g.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= g.at(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (s / g.at(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve Gᵀ x = y for lower-triangular G (back substitution).
+pub fn solve_lower_t(g: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = g.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in (i + 1)..n {
+            s -= g.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (s / g.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f32]) -> Option<Vec<f32>> {
+    let g = cholesky(a)?;
+    Some(solve_lower_t(&g, &solve_lower(&g, b)))
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solves).
+pub fn inverse_spd(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    let g = cholesky(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e[c] = 1.0;
+        let x = solve_lower_t(&g, &solve_lower(&g, &e));
+        for r in 0..n {
+            *inv.at_mut(r, c) = x[r];
+        }
+        e[c] = 0.0;
+    }
+    // Symmetrize to clean round-off.
+    inv.symmetrize_inplace();
+    Some(inv)
+}
+
+/// log-determinant of an SPD matrix (via Cholesky).
+pub fn logdet_spd(a: &Mat) -> Option<f64> {
+    let g = cholesky(a)?;
+    Some(2.0 * (0..g.rows).map(|i| (g.at(i, i) as f64).ln()).sum::<f64>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Random SPD matrix A = B Bᵀ + eps I.
+    fn rand_spd(rng: &mut Pcg32, n: usize) -> Mat {
+        let mut b = Mat::zeros(n, n);
+        rng.fill_gaussian(&mut b.data, 0.0, 1.0);
+        let mut a = b.matmul_bt(&b);
+        for i in 0..n {
+            *a.at_mut(i, i) += 0.5;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg32::new(0);
+        for &n in &[1, 2, 5, 20, 50] {
+            let a = rand_spd(&mut rng, n);
+            let g = cholesky(&a).expect("SPD");
+            let rec = g.matmul_bt(&g);
+            assert!(rec.max_abs_diff(&a) < 1e-2 * n as f32, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_residual_small() {
+        let mut rng = Pcg32::new(1);
+        let a = rand_spd(&mut rng, 12);
+        let b: Vec<f32> = (0..12).map(|i| (i as f32) - 6.0).collect();
+        let x = solve_spd(&a, &b).unwrap();
+        let ax = a.matvec(&x);
+        for i in 0..12 {
+            assert!((ax[i] - b[i]).abs() < 1e-2, "{} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn inverse_spd_gives_identity() {
+        let mut rng = Pcg32::new(2);
+        let a = rand_spd(&mut rng, 15);
+        let inv = inverse_spd(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Mat::eye(15)) < 5e-2);
+    }
+
+    #[test]
+    fn logdet_matches_eigen_for_diagonal() {
+        let a = Mat::from_vec(3, 3,
+            vec![2.0, 0.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 4.0]);
+        let ld = logdet_spd(&a).unwrap();
+        assert!((ld - (24.0f64).ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,220 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices + the PSD
+//! projection that makes Xing et al. (2002)'s projected gradient loop
+//! possible — this is exactly the O(d³) step whose elimination is the
+//! paper's algorithmic contribution, so it matters that it is real.
+
+use super::Mat;
+
+/// Eigendecomposition A = V diag(w) Vᵀ of a symmetric matrix.
+/// `vectors` holds eigenvectors as *columns*; `values` ascending.
+pub struct Eigen {
+    pub values: Vec<f32>,
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi with threshold sweeps. Converges quadratically; fine for
+/// the baseline dimensions (d ≤ ~1000 after PCA).
+pub fn eigh(a: &Mat) -> Eigen {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    // f64 working copy for numerical headroom.
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off(A): sqrt of sum of squares of off-diagonal entries
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-10 * (1.0 + frob(&m, n)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                // Rotation angle (Golub & Van Loan 8.4)
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // A <- Jᵀ A J on rows/cols p, q
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+                // V <- V J
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract + sort ascending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    idx.sort_by(|&a, &b| diag[a].partial_cmp(&diag[b]).unwrap());
+    let values: Vec<f32> = idx.iter().map(|&i| diag[i] as f32).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_c, &old_c) in idx.iter().enumerate() {
+        for r in 0..n {
+            *vectors.at_mut(r, new_c) = v[r * n + old_c] as f32;
+        }
+    }
+    Eigen { values, vectors }
+}
+
+fn frob(m: &[f64], n: usize) -> f64 {
+    m.iter().take(n * n).map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Project a symmetric matrix onto the PSD cone: clamp negative
+/// eigenvalues to zero and reassemble. This is the O(d³) bottleneck of
+/// the original (2002) formulation that the paper's reformulation avoids.
+pub fn project_psd(a: &Mat) -> Mat {
+    let n = a.rows;
+    let e = eigh(a);
+    // B = V diag(max(w,0)); out = B Vᵀ
+    let mut b = Mat::zeros(n, n);
+    for c in 0..n {
+        let w = e.values[c].max(0.0);
+        if w == 0.0 {
+            continue;
+        }
+        for r in 0..n {
+            *b.at_mut(r, c) = e.vectors.at(r, c) * w;
+        }
+    }
+    let mut out = b.matmul_bt(&e.vectors);
+    out.symmetrize_inplace();
+    out
+}
+
+/// Smallest eigenvalue (convenience for PSD checks in tests).
+pub fn min_eigenvalue(a: &Mat) -> f32 {
+    eigh(a).values[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_sym(rng: &mut Pcg32, n: usize) -> Mat {
+        let mut b = Mat::zeros(n, n);
+        rng.fill_gaussian(&mut b.data, 0.0, 1.0);
+        let mut a = b.clone();
+        a.axpy_inplace(1.0, &b.transpose());
+        a.scale_inplace(0.5);
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_vec(3, 3,
+            vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-5);
+        assert!((e.values[1] - 2.0).abs() < 1e-5);
+        assert!((e.values[2] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-5);
+        assert!((e.values[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Pcg32::new(3);
+        for &n in &[2, 5, 16, 40] {
+            let a = rand_sym(&mut rng, n);
+            let e = eigh(&a);
+            // V Vᵀ = I
+            let vvt = e.vectors.matmul_bt(&e.vectors);
+            assert!(vvt.max_abs_diff(&Mat::eye(n)) < 1e-3, "orth n={n}");
+            // V diag(w) Vᵀ = A
+            let mut vd = Mat::zeros(n, n);
+            for c in 0..n {
+                for r in 0..n {
+                    *vd.at_mut(r, c) = e.vectors.at(r, c) * e.values[c];
+                }
+            }
+            let rec = vd.matmul_bt(&e.vectors);
+            assert!(rec.max_abs_diff(&a) < 1e-2, "recon n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_ascending() {
+        let mut rng = Pcg32::new(4);
+        let a = rand_sym(&mut rng, 20);
+        let e = eigh(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-6);
+        }
+    }
+
+    #[test]
+    fn psd_projection_properties() {
+        let mut rng = Pcg32::new(5);
+        let a = rand_sym(&mut rng, 12);
+        let p = project_psd(&a);
+        // (1) result is PSD
+        assert!(min_eigenvalue(&p) > -1e-3);
+        // (2) projection is idempotent
+        let pp = project_psd(&p);
+        assert!(pp.max_abs_diff(&p) < 1e-2);
+        // (3) an already-PSD matrix is (nearly) unchanged
+        let spd = {
+            let mut b = Mat::zeros(8, 8);
+            rng.fill_gaussian(&mut b.data, 0.0, 1.0);
+            let mut s = b.matmul_bt(&b);
+            for i in 0..8 {
+                *s.at_mut(i, i) += 0.1;
+            }
+            s
+        };
+        assert!(project_psd(&spd).max_abs_diff(&spd) < 1e-2);
+    }
+
+    #[test]
+    fn psd_projection_zeroes_negative_part() {
+        // diag(2, -3): projection = diag(2, 0)
+        let a = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, -3.0]);
+        let p = project_psd(&a);
+        let want = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, 0.0]);
+        assert!(p.max_abs_diff(&want) < 1e-5);
+    }
+}

@@ -1,0 +1,71 @@
+//! Binary matrix persistence (save/load learned metrics).
+//!
+//! Format: `DMLPSMAT` magic, u64 LE rows, u64 LE cols, then rows·cols
+//! f32 LE values. Used by `dmlps train --save-model` / `dmlps eval`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::Mat;
+
+const MAGIC: &[u8; 8] = b"DMLPSMAT";
+
+impl Mat {
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.rows as u64).to_le_bytes())?;
+        f.write_all(&(self.cols as u64).to_le_bytes())?;
+        for v in &self.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Mat> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a DMLPSMAT file");
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let rows = u64::from_le_bytes(b8) as usize;
+        f.read_exact(&mut b8)?;
+        let cols = u64::from_le_bytes(b8) as usize;
+        anyhow::ensure!(
+            rows.saturating_mul(cols) < (1 << 33),
+            "matrix too large ({rows}x{cols})"
+        );
+        let mut data = vec![0.0f32; rows * cols];
+        let mut b4 = [0u8; 4];
+        for v in data.iter_mut() {
+            f.read_exact(&mut b4)?;
+            *v = f32::from_le_bytes(b4);
+        }
+        Ok(Mat { rows, cols, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg32::new(0);
+        let mut m = Mat::zeros(17, 23);
+        rng.fill_gaussian(&mut m.data, 0.0, 1.0);
+        let path = std::env::temp_dir().join("dmlps_mat_roundtrip.bin");
+        m.save(&path).unwrap();
+        let m2 = Mat::load(&path).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("dmlps_mat_garbage.bin");
+        std::fs::write(&path, b"not a matrix").unwrap();
+        assert!(Mat::load(&path).is_err());
+    }
+}

@@ -1,0 +1,383 @@
+//! Dense linear algebra substrate (no external BLAS in the vendor set).
+//!
+//! Provides the row-major f32 [`Mat`] type with cache-blocked matmul
+//! kernels (the same ones the native DML engine builds on), plus the
+//! factorizations the single-machine baselines need: Cholesky ([`chol`]),
+//! Jacobi eigendecomposition ([`eigen`]), and PCA ([`pca`]).
+
+pub mod chol;
+pub mod eigen;
+pub mod io;
+pub mod pca;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// Cache block edge for the blocked matmul kernels. 64×64 f32 tiles are
+/// 16 KiB — three of them sit comfortably in a 128 KiB L2 slice.
+const BLK: usize = 64;
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Identity-like rectangular matrix scaled by `s` (used to init L).
+    pub fn scaled_eye(rows: usize, cols: usize, s: f32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m.data[i * cols + i] = s;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// self += s * other
+    pub fn axpy_inplace(&mut self, s: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // matmul kernels
+    // ------------------------------------------------------------------
+
+    /// C = A · B (blocked ikj; autovectorizes on the innermost j loop).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut c, 0.0);
+        c
+    }
+
+    /// C = A · Bᵀ. The DML hot path's shape (`Z = D Lᵀ`): both operands
+    /// are traversed row-major, so rows dot rows — ideal locality.
+    pub fn matmul_bt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_bt shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        matmul_bt_into(self, b, &mut c);
+        c
+    }
+
+    /// C = Aᵀ · B (the gradient outer-product shape `G = Zᵀ D`).
+    pub fn matmul_at(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_at shape mismatch");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        matmul_at_into(self, b, &mut c, 0.0);
+        c
+    }
+
+    /// y = A · x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Max |a - b| across entries (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Symmetrize in place: M = (M + Mᵀ)/2 (numerical hygiene for the
+    /// baselines' PSD iterates).
+    pub fn symmetrize_inplace(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let avg = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = avg;
+                self.data[j * n + i] = avg;
+            }
+        }
+    }
+}
+
+/// C = beta*C + A·B, cache-blocked.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, beta: f32) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    } else if beta != 1.0 {
+        c.scale_inplace(beta);
+    }
+    let (m, kk, n) = (a.rows, a.cols, b.cols);
+    for i0 in (0..m).step_by(BLK) {
+        let i1 = (i0 + BLK).min(m);
+        for k0 in (0..kk).step_by(BLK) {
+            let k1 = (k0 + BLK).min(kk);
+            for i in i0..i1 {
+                let arow = &a.data[i * kk..(i + 1) * kk];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for k in k0..k1 {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[k * n..(k + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A · Bᵀ (rows-dot-rows; unrolled 4-wide accumulators).
+pub fn matmul_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let d = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
+        for j in 0..b.rows {
+            crow[j] = dot(arow, &b.data[j * d..(j + 1) * d]);
+        }
+    }
+}
+
+/// C = beta*C + Aᵀ · B. A is (r×m), B is (r×n), C is (m×n):
+/// row-major saxpy per (row of A, row of B) pair — fully vectorizable.
+pub fn matmul_at_into(a: &Mat, b: &Mat, c: &mut Mat, beta: f32) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    } else if beta != 1.0 {
+        c.scale_inplace(beta);
+    }
+    let (m, n) = (a.cols, b.cols);
+    for r in 0..a.rows {
+        let arow = &a.data[r * m..(r + 1) * m];
+        let brow = &b.data[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Dot product with 4 independent accumulators (breaks the fp dependency
+/// chain so LLVM can vectorize + pipeline).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut tail = 0.0f32;
+    while i < a.len() {
+        tail += a[i] * b[i];
+        i += 1;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randm(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_gaussian(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 130, 3),
+                            (100, 17, 33)] {
+            let a = randm(&mut rng, m, k);
+            let b = randm(&mut rng, k, n);
+            let got = a.matmul(&b);
+            let want = matmul_naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-3 * k as f32,
+                    "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose_path() {
+        let mut rng = Pcg32::new(1);
+        let a = randm(&mut rng, 10, 20);
+        let b = randm(&mut rng, 15, 20);
+        let got = a.matmul_bt(&b);
+        let want = a.matmul(&b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose_path() {
+        let mut rng = Pcg32::new(2);
+        let a = randm(&mut rng, 12, 8);
+        let b = randm(&mut rng, 12, 9);
+        let got = a.matmul_at(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_at_into_accumulates() {
+        let mut rng = Pcg32::new(3);
+        let a = randm(&mut rng, 6, 4);
+        let b = randm(&mut rng, 6, 5);
+        let mut c = randm(&mut rng, 4, 5);
+        let c0 = c.clone();
+        matmul_at_into(&a, &b, &mut c, 1.0);
+        let mut want = a.transpose().matmul(&b);
+        want.axpy_inplace(1.0, &c0);
+        assert!(c.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::new(4);
+        let a = randm(&mut rng, 7, 5);
+        let x: Vec<f32> = (0..5).map(|i| i as f32).collect();
+        let y = a.matvec(&x);
+        let xm = Mat::from_vec(5, 1, x);
+        let want = a.matmul(&xm);
+        for i in 0..7 {
+            assert!((y[i] - want.at(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i = Mat::eye(4);
+        assert_eq!(i.transpose(), i);
+        let mut rng = Pcg32::new(5);
+        let a = randm(&mut rng, 4, 4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn symmetrize() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0, 4.0, 3.0]);
+        m.symmetrize_inplace();
+        assert_eq!(m.at(0, 1), 3.0);
+        assert_eq!(m.at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn dot_matches_scalar() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.01).collect();
+        let b: Vec<f32> = (0..103).map(|i| 1.0 - (i as f32) * 0.005).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+    }
+}

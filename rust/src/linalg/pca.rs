@@ -1,0 +1,168 @@
+//! PCA dimensionality reduction.
+//!
+//! The KISS baseline requires invertible covariance matrices, which the
+//! paper obtains by reducing MNIST to 600 dimensions with PCA (§5.4). We
+//! implement PCA over the sample covariance via the Jacobi eigensolver.
+
+use super::eigen::eigh;
+use super::Mat;
+
+/// A fitted PCA transform: `project` maps (n, d) data to (n, out_dim).
+pub struct Pca {
+    /// (out_dim, d) — rows are principal directions (descending variance).
+    pub components: Mat,
+    pub mean: Vec<f32>,
+    /// Eigenvalues (variances) for the kept components, descending.
+    pub explained: Vec<f32>,
+}
+
+impl Pca {
+    /// Fit on rows of `x` (n_samples × d), keeping `out_dim` components.
+    ///
+    /// Uses the d×d covariance eigendecomposition — O(d³) — which is fine
+    /// for baseline-scale d (the paper applies KISS after PCA to 600 dims;
+    /// our baseline configs keep d ≤ a few hundred).
+    pub fn fit(x: &Mat, out_dim: usize) -> Pca {
+        let (n, d) = (x.rows, x.cols);
+        assert!(out_dim <= d, "out_dim {out_dim} > d {d}");
+        assert!(n >= 2, "need at least 2 samples");
+        // mean
+        let mut mean = vec![0.0f32; d];
+        for r in 0..n {
+            for (m, v) in mean.iter_mut().zip(x.row(r)) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f32;
+        }
+        // covariance = Xcᵀ Xc / (n-1)
+        let mut xc = x.clone();
+        for r in 0..n {
+            for (v, m) in xc.row_mut(r).iter_mut().zip(&mean) {
+                *v -= m;
+            }
+        }
+        let mut cov = xc.matmul_at(&xc);
+        cov.scale_inplace(1.0 / (n - 1) as f32);
+        let e = eigh(&cov);
+        // take top `out_dim` eigenvectors (eigh sorts ascending)
+        let mut components = Mat::zeros(out_dim, d);
+        let mut explained = Vec::with_capacity(out_dim);
+        for i in 0..out_dim {
+            let c = d - 1 - i; // descending
+            explained.push(e.values[c].max(0.0));
+            for j in 0..d {
+                *components.at_mut(i, j) = e.vectors.at(j, c);
+            }
+        }
+        Pca { components, mean, explained }
+    }
+
+    /// Project rows of `x` into the PCA space: (n, out_dim).
+    pub fn project(&self, x: &Mat) -> Mat {
+        let mut xc = x.clone();
+        for r in 0..x.rows {
+            for (v, m) in xc.row_mut(r).iter_mut().zip(&self.mean) {
+                *v -= m;
+            }
+        }
+        xc.matmul_bt(&self.components)
+    }
+
+    /// Project a single vector.
+    pub fn project_vec(&self, x: &[f32]) -> Vec<f32> {
+        let centered: Vec<f32> =
+            x.iter().zip(&self.mean).map(|(v, m)| v - m).collect();
+        self.components.matvec(&centered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Data concentrated along a known direction is recovered by PC 1.
+    #[test]
+    fn recovers_dominant_direction() {
+        let mut rng = Pcg32::new(0);
+        let d = 6;
+        let n = 400;
+        let dir: Vec<f32> = {
+            let mut v = vec![0.0f32; d];
+            rng.fill_gaussian(&mut v, 0.0, 1.0);
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter().map(|x| x / norm).collect()
+        };
+        let mut x = Mat::zeros(n, d);
+        for r in 0..n {
+            let t = rng.gaussian() as f32 * 5.0; // big variance along dir
+            for c in 0..d {
+                *x.at_mut(r, c) =
+                    t * dir[c] + 0.1 * rng.gaussian() as f32;
+            }
+        }
+        let pca = Pca::fit(&x, 2);
+        let pc1 = pca.components.row(0);
+        let cos: f32 = pc1.iter().zip(&dir).map(|(a, b)| a * b).sum();
+        assert!(cos.abs() > 0.98, "cos={cos}");
+        assert!(pca.explained[0] > 10.0 * pca.explained[1]);
+    }
+
+    #[test]
+    fn projection_shape_and_centering() {
+        let mut rng = Pcg32::new(1);
+        let mut x = Mat::zeros(50, 8);
+        rng.fill_gaussian(&mut x.data, 3.0, 1.0);
+        let pca = Pca::fit(&x, 3);
+        let p = pca.project(&x);
+        assert_eq!((p.rows, p.cols), (50, 3));
+        // projected data is centered
+        for c in 0..3 {
+            let mean: f32 =
+                (0..50).map(|r| p.at(r, c)).sum::<f32>() / 50.0;
+            assert!(mean.abs() < 0.1, "mean={mean}");
+        }
+    }
+
+    #[test]
+    fn full_dim_projection_preserves_distances() {
+        let mut rng = Pcg32::new(2);
+        let mut x = Mat::zeros(30, 5);
+        rng.fill_gaussian(&mut x.data, 0.0, 1.0);
+        let pca = Pca::fit(&x, 5);
+        let p = pca.project(&x);
+        // pairwise distances preserved under orthogonal transform
+        for i in 0..5 {
+            for j in (i + 1)..6 {
+                let d_orig: f32 = x
+                    .row(i)
+                    .iter()
+                    .zip(x.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                let d_proj: f32 = p
+                    .row(i)
+                    .iter()
+                    .zip(p.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!((d_orig - d_proj).abs() < 1e-2 * (1.0 + d_orig));
+            }
+        }
+    }
+
+    #[test]
+    fn project_vec_matches_project() {
+        let mut rng = Pcg32::new(3);
+        let mut x = Mat::zeros(20, 6);
+        rng.fill_gaussian(&mut x.data, 0.0, 1.0);
+        let pca = Pca::fit(&x, 4);
+        let p = pca.project(&x);
+        let pv = pca.project_vec(x.row(7));
+        for c in 0..4 {
+            assert!((p.at(7, c) - pv[c]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,4 @@
+//! `dmlps` CLI launcher — temporary stub; real dispatcher in cli module.
+fn main() -> anyhow::Result<()> {
+    dmlps::cli::main_entry()
+}

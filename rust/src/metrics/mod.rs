@@ -1,0 +1,186 @@
+//! Metrics: time-series recording (objective vs time), CSV/JSON export,
+//! speedup computation — everything the paper's figures are built from.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One convergence-curve point.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Seconds since run start (wall clock or simulated, per producer).
+    pub time_s: f64,
+    /// Global SGD step count at probe time.
+    pub step: usize,
+    /// Objective value.
+    pub objective: f64,
+}
+
+/// A labeled convergence curve (one line in Fig 2 / Fig 4a).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub label: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>) -> Curve {
+        Curve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, time_s: f64, step: usize, objective: f64) {
+        self.points.push(CurvePoint { time_s, step, objective });
+    }
+
+    pub fn final_objective(&self) -> Option<f64> {
+        self.points.last().map(|p| p.objective)
+    }
+
+    /// First time at which the objective reaches (≤) `target`.
+    /// `None` if never reached.
+    pub fn time_to_reach(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.objective <= target)
+            .map(|p| p.time_s)
+    }
+
+    /// Render as CSV rows `time_s,step,objective`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("time_s,step,objective\n");
+        for p in &self.points {
+            s.push_str(&format!("{},{},{}\n", p.time_s, p.step, p.objective));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("time_s",
+             Json::arr_f64(&self.points.iter().map(|p| p.time_s)
+                 .collect::<Vec<_>>())),
+            ("step",
+             Json::arr_usize(&self.points.iter().map(|p| p.step)
+                 .collect::<Vec<_>>())),
+            ("objective",
+             Json::arr_f64(&self.points.iter().map(|p| p.objective)
+                 .collect::<Vec<_>>())),
+        ])
+    }
+}
+
+/// Wall-clock stopwatch for curve recording.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Speedup table (Fig 3): time-to-target per worker/core count relative
+/// to the smallest configuration.
+#[derive(Clone, Debug)]
+pub struct SpeedupRow {
+    pub cores: usize,
+    pub time_to_target_s: f64,
+    pub speedup: f64,
+    pub linear: f64,
+}
+
+/// Compute speedup factors from (cores, time_to_target) measurements.
+/// The first row is the baseline (speedup 1); `linear` is the ideal
+/// cores/base_cores line the paper plots in blue.
+pub fn speedup_table(mut meas: Vec<(usize, f64)>) -> Vec<SpeedupRow> {
+    assert!(!meas.is_empty());
+    meas.sort_by_key(|&(c, _)| c);
+    let (base_cores, base_time) = meas[0];
+    meas.iter()
+        .map(|&(cores, t)| SpeedupRow {
+            cores,
+            time_to_target_s: t,
+            speedup: base_time / t,
+            linear: cores as f64 / base_cores as f64,
+        })
+        .collect()
+}
+
+/// Markdown rendering of a set of curves, sampled at up to `max_rows`
+/// points (bench output stays readable).
+pub fn curves_to_markdown(curves: &[Curve], max_rows: usize) -> String {
+    let mut s = String::new();
+    for c in curves {
+        s.push_str(&format!("\n### {}\n", c.label));
+        s.push_str("| time_s | step | objective |\n|---|---|---|\n");
+        let stride = (c.points.len() / max_rows.max(1)).max(1);
+        for p in c.points.iter().step_by(stride) {
+            s.push_str(&format!(
+                "| {:.3} | {} | {:.6} |\n",
+                p.time_s, p.step, p.objective
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(label: &str, objs: &[f64]) -> Curve {
+        let mut c = Curve::new(label);
+        for (i, &o) in objs.iter().enumerate() {
+            c.push(i as f64, i * 10, o);
+        }
+        c
+    }
+
+    #[test]
+    fn time_to_reach_finds_first_crossing() {
+        let c = curve("x", &[5.0, 3.0, 2.0, 1.5, 1.2]);
+        assert_eq!(c.time_to_reach(2.0), Some(2.0));
+        assert_eq!(c.time_to_reach(1.2), Some(4.0));
+        assert_eq!(c.time_to_reach(0.5), None);
+    }
+
+    #[test]
+    fn speedup_table_is_relative_to_smallest() {
+        let rows = speedup_table(vec![(64, 30.0), (16, 100.0), (32, 52.0)]);
+        assert_eq!(rows[0].cores, 16);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-12);
+        assert!((rows[1].speedup - 100.0 / 52.0).abs() < 1e-12);
+        assert!((rows[2].linear - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let c = curve("test", &[2.0, 1.0]);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("time_s,step,objective\n"));
+        assert_eq!(csv.lines().count(), 3);
+        let j = c.to_json();
+        assert_eq!(j.get("label").as_str(), Some("test"));
+        assert_eq!(j.get("objective").idx(1).as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn markdown_sampling() {
+        let c = curve("long", &vec![1.0; 100]);
+        let md = curves_to_markdown(&[c], 10);
+        let rows = md.lines().filter(|l| l.starts_with("| ")).count();
+        assert!(rows <= 13, "{rows}");
+    }
+}

@@ -1,0 +1,66 @@
+//! Message types exchanged between workers and the central server.
+//!
+//! The paper's protocol (§4.1): workers push gradient updates ΔL_p; the
+//! server aggregates them into the global L and pushes fresh parameters
+//! back. Messages carry dense f32 payloads (the full k×d matrix), which
+//! is exactly the communication volume the paper's scalability analysis
+//! assumes.
+
+/// Worker → server.
+pub enum ToServer {
+    /// A gradient update computed on one minibatch.
+    Grad {
+        worker: usize,
+        /// The worker's local step index this gradient belongs to.
+        step: u64,
+        /// Row-major k×d gradient.
+        grad: Vec<f32>,
+        /// Minibatch loss at the worker's local parameters (telemetry).
+        loss: f32,
+    },
+    /// Worker finished its step budget.
+    Done { worker: usize },
+}
+
+/// Server → worker.
+pub enum ToWorker {
+    /// Fresh global parameters.
+    Param {
+        /// Number of gradient updates applied to the global L so far.
+        version: u64,
+        /// SSP clock: min over workers of applied-update counts.
+        clock: u64,
+        /// Row-major k×d parameters.
+        data: Vec<f32>,
+    },
+}
+
+impl std::fmt::Debug for ToServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ToServer::Grad { worker, step, loss, grad } => f
+                .debug_struct("Grad")
+                .field("worker", worker)
+                .field("step", step)
+                .field("loss", loss)
+                .field("len", &grad.len())
+                .finish(),
+            ToServer::Done { worker } => {
+                f.debug_struct("Done").field("worker", worker).finish()
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for ToWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ToWorker::Param { version, clock, data } => f
+                .debug_struct("Param")
+                .field("version", version)
+                .field("clock", clock)
+                .field("len", &data.len())
+                .finish(),
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! L3: the paper's distributed system — an asynchronous parameter server
+//! for distance metric learning.
+//!
+//! Topology (paper Fig. 1): one central server holding the global L and P
+//! workers each holding a local copy L_p and a shard of the pair sets.
+//! Workers compute minibatch gradients, push them to the server, and
+//! receive fresh parameters; the server folds gradients into the global L
+//! and broadcasts. All threads are "best-effort" and coordinate only
+//! through message queues (§4.2).
+//!
+//! [`run_training`] wires everything together and is the entry point used
+//! by the CLI, the end-to-end example, and the benches.
+
+mod messages;
+mod server;
+mod transport;
+mod worker;
+
+pub use messages::{ToServer, ToWorker};
+pub use server::{ProbeFn, Server, ServerConfig, ServerResult};
+pub use transport::{drain, FaultSpec, FaultySender};
+pub use worker::{Worker, WorkerConfig, WorkerStats};
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::{partition_pairs, Dataset, PairSet};
+use crate::dml::{DmlProblem, EngineFactory, LrSchedule};
+use crate::linalg::Mat;
+use crate::metrics::Curve;
+
+/// Everything a finished distributed run reports.
+pub struct TrainResult {
+    pub l: Mat,
+    pub curve: Curve,
+    pub applied_updates: u64,
+    pub broadcasts: u64,
+    pub worker_stats: Vec<WorkerStats>,
+    pub wall_s: f64,
+}
+
+/// Options beyond the experiment config (fault injection, probe cadence).
+#[derive(Clone)]
+pub struct RunOptions {
+    pub faults: FaultSpec,
+    /// Curve-probe cadence in applied updates.
+    pub probe_every: u64,
+    /// Probe sample sizes (similar, dissimilar).
+    pub probe_pairs: (usize, usize),
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            faults: FaultSpec::perfect(),
+            probe_every: 20,
+            probe_pairs: (200, 200),
+        }
+    }
+}
+
+/// Run distributed DML training with the threaded parameter server.
+///
+/// * `engines` — factory each worker's computing thread uses; pass
+///   [`crate::dml::native_factory`] or [`crate::runtime::xla_factory`].
+/// * The probe engine (objective recording on the server's update thread)
+///   is always the native engine: probes are off the hot path and must
+///   not depend on artifacts being present.
+pub fn run_training(
+    cfg: &ExperimentConfig,
+    dataset: Arc<Dataset>,
+    pairs: &PairSet,
+    engines: EngineFactory,
+    opts: &RunOptions,
+) -> anyhow::Result<TrainResult> {
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    let l0 = problem.init_l(cfg.model.init_scale, cfg.seed);
+    let p = cfg.cluster.workers;
+    anyhow::ensure!(p > 0, "need at least one worker");
+
+    // ---- shard the pair sets across workers (paper §4.1) ----
+    let shards = partition_pairs(pairs, p, cfg.seed ^ 0x5A4D);
+
+    // ---- channels: workers → server (shared), server → each worker ----
+    let (to_server_tx, to_server_rx) = channel::<ToServer>();
+    let mut to_worker_txs = Vec::with_capacity(p);
+    let mut to_worker_rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel::<ToWorker>();
+        to_worker_txs.push(tx);
+        to_worker_rxs.push(rx);
+    }
+
+    // ---- objective probe (runs on the server update thread) ----
+    let probe = make_probe(
+        &dataset,
+        pairs,
+        cfg.optim.lambda,
+        opts.probe_pairs,
+        cfg.seed,
+    );
+
+    // ---- spawn server ----
+    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
+    let watch = crate::metrics::Stopwatch::start();
+    let server = Server::spawn(
+        ServerConfig {
+            workers: p,
+            server_batch: cfg.cluster.server_batch,
+            lr,
+            lr_scale: 1.0 / p as f32,
+            probe_every: opts.probe_every,
+            faults: opts.faults,
+            seed: cfg.seed ^ 0x5E2,
+        },
+        l0.clone(),
+        to_server_rx,
+        to_worker_txs,
+        probe,
+    );
+
+    // ---- spawn workers ----
+    let mut workers = Vec::with_capacity(p);
+    for (w, shard) in shards.into_iter().enumerate() {
+        let wcfg = WorkerConfig {
+            id: w,
+            steps: cfg.optim.steps,
+            batch_sim: cfg.optim.batch_sim,
+            batch_dis: cfg.optim.batch_dis,
+            lambda: cfg.optim.lambda,
+            lr,
+            consistency: cfg.cluster.consistency,
+            faults: opts.faults,
+            seed: cfg.seed ^ ((w as u64 + 1) << 16),
+        };
+        workers.push(Worker::spawn(
+            wcfg,
+            l0.clone(),
+            dataset.clone(),
+            shard,
+            to_server_tx.clone(),
+            to_worker_rxs.remove(0),
+            engines.clone(),
+        ));
+    }
+    drop(to_server_tx); // server sees disconnect when all workers finish
+
+    // ---- join ----
+    let worker_stats: Vec<WorkerStats> =
+        workers.into_iter().map(Worker::join).collect();
+    let sr = server.join();
+    Ok(TrainResult {
+        l: sr.l,
+        curve: sr.curve,
+        applied_updates: sr.applied_updates,
+        broadcasts: sr.broadcasts,
+        worker_stats,
+        wall_s: watch.elapsed_s(),
+    })
+}
+
+/// Build the server-side objective probe: materializes a fixed pair
+/// subsample (Send-safe buffers) and evaluates with a native engine
+/// constructed inside the update thread.
+fn make_probe(
+    dataset: &Dataset,
+    pairs: &PairSet,
+    lambda: f32,
+    probe_pairs: (usize, usize),
+    seed: u64,
+) -> ProbeFn {
+    let probe = crate::dml::ObjectiveProbe::new(
+        dataset,
+        pairs,
+        probe_pairs.0,
+        probe_pairs.1,
+        seed ^ 0x0B5,
+    );
+    let mut engine: Option<crate::dml::NativeEngine> = None;
+    Box::new(move |l: &Mat, step: u64, t: f64, curve: &mut Curve| {
+        let eng = engine.get_or_insert_with(crate::dml::NativeEngine::new);
+        let obj = probe.eval(eng, l, lambda);
+        curve.push(t, step as usize, obj as f64);
+    })
+}

@@ -1,0 +1,257 @@
+//! The central parameter server (paper §4.2, server side).
+//!
+//! Two threads, two queues — exactly the paper's design:
+//!
+//! * **communication thread** — receives gradient messages from workers
+//!   and puts them on the *inbound* queue; takes fresh parameters off the
+//!   *outbound* queue and broadcasts them to all workers.
+//! * **update thread** — takes a batch of gradient updates off the
+//!   inbound queue, applies them to the global parameter L, and puts the
+//!   updated parameter on the outbound queue.
+//!
+//! Threads run "best-effort … coordinated indirectly by the message
+//! queues" (§4.2) — no shared locks between them, only channels.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::messages::{ToServer, ToWorker};
+use super::transport::{drain, FaultSpec, FaultySender};
+use crate::dml::LrSchedule;
+use crate::linalg::Mat;
+use crate::metrics::{Curve, Stopwatch};
+
+/// A probe the update thread calls periodically to record the global
+/// objective (must be `Send`; engines are created inside the thread).
+pub type ProbeFn = Box<dyn FnMut(&Mat, u64, f64, &mut Curve) + Send>;
+
+pub struct ServerConfig {
+    pub workers: usize,
+    /// Max gradient messages folded per update-thread dequeue round.
+    pub server_batch: usize,
+    pub lr: LrSchedule,
+    /// Server-side lr multiplier. With P workers pushing independent
+    /// gradient streams, 1/P makes the global step size invariant to P
+    /// (gradient averaging) — without it ASP's effective lr grows with
+    /// the worker count and diverges once staleness is non-trivial.
+    pub lr_scale: f32,
+    /// Record a curve point every `probe_every` applied updates.
+    pub probe_every: u64,
+    pub faults: FaultSpec,
+    pub seed: u64,
+}
+
+/// What the server hands back after shutdown.
+pub struct ServerResult {
+    pub l: Mat,
+    pub curve: Curve,
+    pub applied_updates: u64,
+    pub broadcasts: u64,
+    /// Mean worker-reported minibatch loss over the last probe window.
+    pub last_loss: f32,
+}
+
+/// Handle to the running server threads.
+pub struct Server {
+    update_handle: std::thread::JoinHandle<ServerResult>,
+    comm_handle: std::thread::JoinHandle<()>,
+}
+
+impl Server {
+    /// Spawn the server. `from_workers` is the shared worker→server
+    /// channel; `to_workers[w]` sends parameters to worker w.
+    pub fn spawn(
+        cfg: ServerConfig,
+        l0: Mat,
+        from_workers: Receiver<ToServer>,
+        to_workers: Vec<Sender<ToWorker>>,
+        mut probe: ProbeFn,
+    ) -> Server {
+        // The two §4.2 queues between comm and update threads:
+        let (inbound_tx, inbound_rx) = channel::<ToServer>();
+        let (outbound_tx, outbound_rx) = channel::<ToWorker>();
+        let done = Arc::new(AtomicBool::new(false));
+
+        // ------------------------- update thread -------------------------
+        let update_done = done.clone();
+        let workers = cfg.workers;
+        let server_batch = cfg.server_batch.max(1);
+        let lr = cfg.lr;
+        let lr_scale = cfg.lr_scale;
+        let probe_every = cfg.probe_every.max(1);
+        let update_handle = std::thread::Builder::new()
+            .name("ps-server-update".into())
+            .spawn(move || {
+                let mut l = l0;
+                let mut curve = Curve::new("server");
+                let clock_counts = vec![0u64; workers];
+                let mut counts = clock_counts;
+                let mut applied = 0u64;
+                let mut broadcasts = 0u64;
+                let mut finished = vec![false; workers];
+                let mut loss_acc = 0.0f64;
+                let mut loss_n = 0u64;
+                let mut last_loss = 0.0f32;
+                let watch = Stopwatch::start();
+                // initial probe (t=0 point on every convergence curve)
+                probe(&l, 0, 0.0, &mut curve);
+                loop {
+                    let batch = match drain(
+                        &inbound_rx,
+                        server_batch,
+                        Duration::from_millis(20),
+                    ) {
+                        Ok(b) => b,
+                        Err(_) => break, // comm thread gone
+                    };
+                    if batch.is_empty() {
+                        if finished.iter().all(|&f| f) {
+                            break;
+                        }
+                        continue;
+                    }
+                    let mut applied_this_round = false;
+                    for msg in batch {
+                        match msg {
+                            ToServer::Grad { worker, grad, loss, .. } => {
+                                // L ← L − lr_t · ΔL_p  (server-side SGD)
+                                let lr_t =
+                                    lr.at(applied as usize) * lr_scale;
+                                for (a, gv) in
+                                    l.data.iter_mut().zip(&grad)
+                                {
+                                    *a -= lr_t * gv;
+                                }
+                                applied += 1;
+                                counts[worker] += 1;
+                                loss_acc += loss as f64;
+                                loss_n += 1;
+                                applied_this_round = true;
+                                if applied % probe_every == 0 {
+                                    probe(
+                                        &l,
+                                        applied,
+                                        watch.elapsed_s(),
+                                        &mut curve,
+                                    );
+                                    last_loss = (loss_acc
+                                        / loss_n.max(1) as f64)
+                                        as f32;
+                                    loss_acc = 0.0;
+                                    loss_n = 0;
+                                }
+                            }
+                            ToServer::Done { worker } => {
+                                finished[worker] = true;
+                            }
+                        }
+                    }
+                    if applied_this_round {
+                        let clock = counts
+                            .iter()
+                            .zip(&finished)
+                            .map(|(&c, &f)| if f { u64::MAX } else { c })
+                            .min()
+                            .unwrap_or(0);
+                        let clock = if clock == u64::MAX {
+                            *counts.iter().max().unwrap_or(&0)
+                        } else {
+                            clock
+                        };
+                        broadcasts += 1;
+                        // put fresh parameters on the outbound queue
+                        let _ = outbound_tx.send(ToWorker::Param {
+                            version: applied,
+                            clock,
+                            data: l.data.clone(),
+                        });
+                    }
+                    if finished.iter().all(|&f| f) {
+                        break;
+                    }
+                }
+                // final probe
+                probe(&l, applied, watch.elapsed_s(), &mut curve);
+                update_done.store(true, Ordering::SeqCst);
+                ServerResult {
+                    l,
+                    curve,
+                    applied_updates: applied,
+                    broadcasts,
+                    last_loss,
+                }
+            })
+            .expect("spawn server update thread");
+
+        // ----------------------- communication thread --------------------
+        let comm_done = done;
+        let faults = cfg.faults;
+        let seed = cfg.seed;
+        let comm_handle = std::thread::Builder::new()
+            .name("ps-server-comm".into())
+            .spawn(move || {
+                let mut senders: Vec<FaultySender<ToWorker>> = to_workers
+                    .into_iter()
+                    .enumerate()
+                    .map(|(w, tx)| {
+                        FaultySender::new(
+                            tx,
+                            faults.drop_param_prob,
+                            faults.latency,
+                            seed ^ (w as u64) << 8,
+                        )
+                    })
+                    .collect();
+                loop {
+                    // inbound direction: workers → update thread
+                    match from_workers.recv_timeout(Duration::from_millis(5))
+                    {
+                        Ok(msg) => {
+                            if inbound_tx.send(msg).is_err() {
+                                break; // update thread exited
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(_) => break, // all workers hung up
+                    }
+                    // outbound direction: update thread → workers.
+                    // Collapse to the freshest parameter if several are
+                    // queued (later params supersede earlier ones).
+                    let mut latest: Option<ToWorker> = None;
+                    while let Ok(p) = outbound_rx.try_recv() {
+                        latest = Some(p);
+                    }
+                    if let Some(ToWorker::Param { version, clock, data }) =
+                        latest
+                    {
+                        for s in senders.iter_mut() {
+                            let _ = s.send(ToWorker::Param {
+                                version,
+                                clock,
+                                data: data.clone(),
+                            });
+                        }
+                    }
+                    if comm_done.load(Ordering::SeqCst) {
+                        // flush any remaining inbound Done messages
+                        while let Ok(msg) = from_workers.try_recv() {
+                            let _ = inbound_tx.send(msg);
+                        }
+                        break;
+                    }
+                }
+            })
+            .expect("spawn server comm thread");
+
+        Server { update_handle, comm_handle }
+    }
+
+    /// Join both threads and return the final state.
+    pub fn join(self) -> ServerResult {
+        let result = self.update_handle.join().expect("server update panicked");
+        self.comm_handle.join().expect("server comm panicked");
+        result
+    }
+}

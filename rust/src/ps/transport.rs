@@ -1,0 +1,175 @@
+//! In-process transport between workers and the server.
+//!
+//! On the paper's cluster this is the network; here it is `std::sync::mpsc`
+//! channels wrapped with an optional fault model (message drops, injected
+//! latency) so tests can exercise the protocol under degraded conditions
+//! and benches can study sensitivity to communication cost.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use crate::util::rng::Pcg32;
+
+/// Fault/latency injection parameters (all zero = perfect transport).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSpec {
+    /// Probability a *gradient* message is silently dropped.
+    pub drop_grad_prob: f64,
+    /// Probability a *parameter* broadcast to one worker is dropped.
+    pub drop_param_prob: f64,
+    /// Fixed latency added to every delivered message.
+    pub latency: Duration,
+}
+
+impl FaultSpec {
+    pub fn perfect() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    pub fn is_perfect(&self) -> bool {
+        self.drop_grad_prob == 0.0
+            && self.drop_param_prob == 0.0
+            && self.latency.is_zero()
+    }
+}
+
+/// Sender wrapper that applies the fault model.
+pub struct FaultySender<T> {
+    tx: Sender<T>,
+    drop_prob: f64,
+    latency: Duration,
+    rng: Pcg32,
+    sent: u64,
+    dropped: u64,
+}
+
+impl<T> FaultySender<T> {
+    pub fn new(tx: Sender<T>, drop_prob: f64, latency: Duration,
+               seed: u64) -> Self {
+        FaultySender {
+            tx,
+            drop_prob,
+            latency,
+            rng: Pcg32::with_stream(seed, 0xFA017),
+            sent: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Send through the fault model. Returns Ok even when the message is
+    /// dropped (that's the point); Err only when the peer hung up.
+    pub fn send(&mut self, msg: T) -> Result<(), ()> {
+        if self.drop_prob > 0.0 && self.rng.f64() < self.drop_prob {
+            self.dropped += 1;
+            return Ok(());
+        }
+        if !self.latency.is_zero() {
+            // Injected latency models serialization + wire time. The
+            // sender blocks, which matches a synchronous send over a
+            // socket with a small kernel buffer.
+            std::thread::sleep(self.latency);
+        }
+        self.sent += 1;
+        self.tx.send(msg).map_err(|_| ())
+    }
+
+    /// Send bypassing the fault model (control messages like `Done`
+    /// model a reliable control plane).
+    pub fn send_reliable(&mut self, msg: T) -> Result<(), ()> {
+        self.sent += 1;
+        self.tx.send(msg).map_err(|_| ())
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.sent, self.dropped)
+    }
+}
+
+/// Drain up to `max` pending messages without blocking; first waits up to
+/// `timeout` for one message. The server comm thread's dequeue pattern.
+pub fn drain<T>(
+    rx: &Receiver<T>,
+    max: usize,
+    timeout: Duration,
+) -> Result<Vec<T>, RecvTimeoutError> {
+    let mut out = Vec::new();
+    match rx.recv_timeout(timeout) {
+        Ok(m) => out.push(m),
+        Err(RecvTimeoutError::Timeout) => return Ok(out),
+        Err(e) => return Err(e),
+    }
+    while out.len() < max {
+        match rx.try_recv() {
+            Ok(m) => out.push(m),
+            Err(_) => break,
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn perfect_sender_delivers_everything() {
+        let (tx, rx) = channel();
+        let mut s = FaultySender::new(tx, 0.0, Duration::ZERO, 0);
+        for i in 0..100 {
+            s.send(i).unwrap();
+        }
+        let got: Vec<i32> = rx.try_iter().collect();
+        assert_eq!(got.len(), 100);
+        assert_eq!(s.stats(), (100, 0));
+    }
+
+    #[test]
+    fn lossy_sender_drops_roughly_p() {
+        let (tx, rx) = channel();
+        let mut s = FaultySender::new(tx, 0.3, Duration::ZERO, 1);
+        for i in 0..10_000 {
+            s.send(i).unwrap();
+        }
+        let got = rx.try_iter().count();
+        let (sent, dropped) = s.stats();
+        assert_eq!(sent as usize, got);
+        assert_eq!(sent + dropped, 10_000);
+        let rate = dropped as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn send_to_hungup_peer_errors() {
+        let (tx, rx) = channel::<i32>();
+        drop(rx);
+        let mut s = FaultySender::new(tx, 0.0, Duration::ZERO, 2);
+        assert!(s.send(1).is_err());
+    }
+
+    #[test]
+    fn drain_batches_available_messages() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let batch = drain(&rx, 4, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = drain(&rx, 100, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 6);
+    }
+
+    #[test]
+    fn drain_times_out_empty() {
+        let (_tx, rx) = channel::<i32>();
+        let batch = drain(&rx, 4, Duration::from_millis(5)).unwrap();
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn drain_detects_disconnect() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        assert!(drain(&rx, 4, Duration::from_millis(5)).is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! Worker machine (paper §4.2, worker side).
+//!
+//! Three threads per worker, exactly the paper's structure:
+//!
+//! * **local computing thread** — takes a minibatch of its pair shard,
+//!   computes the gradient on the local parameter copy, applies it
+//!   locally, and puts it on the outbound queue;
+//! * **communication thread** — ships outbound gradients to the server
+//!   and moves incoming parameter messages onto the inbound queue;
+//! * **remote update thread** — takes fresh parameters off the inbound
+//!   queue and replaces the local copy.
+//!
+//! Consistency (ASP/BSP/SSP) is enforced in the computing thread: under
+//! SSP(s) a worker at local step t blocks until the server clock reaches
+//! t − s; ASP is s = ∞ (never blocks — the paper's mode); BSP is s = 0.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::messages::{ToServer, ToWorker};
+use super::transport::{FaultSpec, FaultySender};
+use crate::config::Consistency;
+use crate::data::{Dataset, MinibatchIter, PairShard};
+use crate::dml::{EngineFactory, LrSchedule, MinibatchRef};
+use crate::linalg::Mat;
+use crate::util::rng::Pcg32;
+
+pub struct WorkerConfig {
+    pub id: usize,
+    pub steps: usize,
+    pub batch_sim: usize,
+    pub batch_dis: usize,
+    pub lambda: f32,
+    /// Local learning rate the worker applies to its own copy between
+    /// server refreshes.
+    pub lr: LrSchedule,
+    pub consistency: Consistency,
+    pub faults: FaultSpec,
+    pub seed: u64,
+}
+
+/// Per-worker telemetry returned on join.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub id: usize,
+    pub steps_done: u64,
+    pub grads_sent: u64,
+    pub grads_dropped: u64,
+    pub params_received: u64,
+    /// Total seconds the computing thread spent blocked on consistency.
+    pub wait_s: f64,
+    pub last_loss: f32,
+}
+
+/// Shared state between the three worker threads.
+struct Shared {
+    /// Local parameter copy L_p.
+    l: Mutex<Mat>,
+    /// Latest server clock seen (for SSP gating).
+    clock: AtomicU64,
+    /// Latest parameter version seen.
+    version: AtomicU64,
+    /// Signalled by the remote-update thread when new state arrives.
+    cv: Condvar,
+    cv_m: Mutex<()>,
+    stop: AtomicBool,
+    params_received: AtomicU64,
+}
+
+pub struct Worker {
+    compute: std::thread::JoinHandle<WorkerStats>,
+    remote_update: std::thread::JoinHandle<()>,
+    comm: std::thread::JoinHandle<(u64, u64)>,
+    shared: Arc<Shared>,
+}
+
+impl Worker {
+    /// Spawn a worker's three threads.
+    ///
+    /// * `dataset`/`shard`: this worker's pair shard (paper §4.1).
+    /// * `to_server`: shared channel into the server's comm thread.
+    /// * `from_server`: this worker's parameter channel.
+    /// * `engines`: factory; the computing thread builds its engine
+    ///   inside the thread (PJRT handles are not `Send`).
+    pub fn spawn(
+        cfg: WorkerConfig,
+        l0: Mat,
+        dataset: Arc<Dataset>,
+        shard: PairShard,
+        to_server: Sender<ToServer>,
+        from_server: Receiver<ToWorker>,
+        engines: EngineFactory,
+    ) -> Worker {
+        let shared = Arc::new(Shared {
+            l: Mutex::new(l0),
+            clock: AtomicU64::new(0),
+            version: AtomicU64::new(0),
+            cv: Condvar::new(),
+            cv_m: Mutex::new(()),
+            stop: AtomicBool::new(false),
+            params_received: AtomicU64::new(0),
+        });
+
+        // internal queues (paper: worker-side inbound/outbound queues)
+        let (outbound_tx, outbound_rx) = channel::<ToServer>();
+        let (inbound_tx, inbound_rx) = channel::<ToWorker>();
+
+        // --------------------- local computing thread ---------------------
+        let c_shared = shared.clone();
+        let id = cfg.id;
+        let compute = std::thread::Builder::new()
+            .name(format!("ps-worker{id}-compute"))
+            .spawn(move || {
+                let mut engine = (engines)().expect("engine construction");
+                let mut iter = MinibatchIter::new(
+                    &dataset,
+                    &shard.pairs,
+                    cfg.batch_sim,
+                    cfg.batch_dis,
+                    Pcg32::with_stream(cfg.seed, 0x3000 + id as u64),
+                );
+                let staleness = match cfg.consistency {
+                    Consistency::Asp => u64::MAX,
+                    Consistency::Bsp => 0,
+                    Consistency::Ssp { staleness } => staleness as u64,
+                };
+                let (k, d) = {
+                    let l = c_shared.l.lock().unwrap();
+                    (l.rows, l.cols)
+                };
+                let mut l_snap = Mat::zeros(k, d);
+                let mut g = Mat::zeros(k, d);
+                let mut stats = WorkerStats { id, ..Default::default() };
+                for step in 0..cfg.steps as u64 {
+                    // ---- consistency gate (SSP inequality) ----
+                    if staleness != u64::MAX && step > staleness {
+                        let need = step - staleness;
+                        let t0 = std::time::Instant::now();
+                        let mut guard = c_shared.cv_m.lock().unwrap();
+                        while c_shared.clock.load(Ordering::SeqCst) < need
+                            && !c_shared.stop.load(Ordering::SeqCst)
+                        {
+                            let (g2, _timeout) = c_shared
+                                .cv
+                                .wait_timeout(
+                                    guard,
+                                    Duration::from_millis(50),
+                                )
+                                .unwrap();
+                            guard = g2;
+                        }
+                        drop(guard);
+                        stats.wait_s += t0.elapsed().as_secs_f64();
+                    }
+                    if c_shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // ---- compute gradient on the local copy ----
+                    iter.next_batch();
+                    {
+                        let l = c_shared.l.lock().unwrap();
+                        l_snap.data.copy_from_slice(&l.data);
+                    }
+                    let batch = MinibatchRef::new(
+                        &iter.ds_buf,
+                        &iter.dd_buf,
+                        cfg.batch_sim,
+                        cfg.batch_dis,
+                        d,
+                    );
+                    let loss = engine
+                        .loss_grad(&l_snap, &batch, cfg.lambda, &mut g)
+                        .expect("worker gradient");
+                    stats.last_loss = loss;
+                    // ---- apply locally (keeps progressing between
+                    //      server refreshes) ----
+                    {
+                        let mut l = c_shared.l.lock().unwrap();
+                        let lr_t = cfg.lr.at(step as usize);
+                        for (a, gv) in l.data.iter_mut().zip(&g.data) {
+                            *a -= lr_t * gv;
+                        }
+                    }
+                    // ---- enqueue for the server ----
+                    let msg = ToServer::Grad {
+                        worker: id,
+                        step,
+                        grad: g.data.clone(),
+                        loss,
+                    };
+                    if outbound_tx.send(msg).is_err() {
+                        break; // comm thread gone
+                    }
+                    stats.steps_done += 1;
+                }
+                let _ = outbound_tx.send(ToServer::Done { worker: id });
+                stats
+            })
+            .expect("spawn compute thread");
+
+        // --------------------- remote update thread ----------------------
+        let r_shared = shared.clone();
+        let remote_update = std::thread::Builder::new()
+            .name(format!("ps-worker{id}-remote-update"))
+            .spawn(move || {
+                loop {
+                    match inbound_rx.recv_timeout(Duration::from_millis(20))
+                    {
+                        Ok(ToWorker::Param { version, clock, data }) => {
+                            {
+                                let mut l = r_shared.l.lock().unwrap();
+                                // replace local copy with global L (§4.1)
+                                l.data.copy_from_slice(&data);
+                            }
+                            r_shared
+                                .version
+                                .store(version, Ordering::SeqCst);
+                            r_shared.clock.store(clock, Ordering::SeqCst);
+                            r_shared
+                                .params_received
+                                .fetch_add(1, Ordering::Relaxed);
+                            r_shared.cv.notify_all();
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            if r_shared.stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn remote-update thread");
+
+        // ----------------------- communication thread --------------------
+        let w_shared = shared.clone();
+        let faults = cfg.faults;
+        let seed = cfg.seed;
+        let comm = std::thread::Builder::new()
+            .name(format!("ps-worker{id}-comm"))
+            .spawn(move || {
+                let mut to_server = FaultySender::new(
+                    to_server,
+                    faults.drop_grad_prob,
+                    faults.latency,
+                    seed ^ 0xC0,
+                );
+                loop {
+                    let mut did_work = false;
+                    // outbound: gradients → server
+                    match outbound_rx.try_recv() {
+                        Ok(msg) => {
+                            let is_done =
+                                matches!(msg, ToServer::Done { .. });
+                            // Done must never be dropped: bypass faults.
+                            if is_done {
+                                // consume the faulty sender's inner tx
+                                // via a clean send path
+                                let _ = to_server.send_reliable(msg);
+                            } else {
+                                let _ = to_server.send(msg);
+                            }
+                            did_work = true;
+                        }
+                        Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                        Err(_) => {
+                            // compute thread done & channel drained
+                        }
+                    }
+                    // inbound: params ← server
+                    match from_server.try_recv() {
+                        Ok(msg) => {
+                            if inbound_tx.send(msg).is_err() {
+                                break;
+                            }
+                            did_work = true;
+                        }
+                        Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                        Err(_) => {
+                            // server comm thread exited
+                        }
+                    }
+                    if w_shared.stop.load(Ordering::SeqCst) {
+                        // flush outbound then exit
+                        while let Ok(msg) = outbound_rx.try_recv() {
+                            let _ = to_server.send_reliable(msg);
+                        }
+                        break;
+                    }
+                    if !did_work {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+                to_server.stats()
+            })
+            .expect("spawn comm thread");
+
+        Worker { compute, remote_update, comm, shared }
+    }
+
+    /// Join the compute thread, then stop and join the service threads.
+    pub fn join(self) -> WorkerStats {
+        let mut stats = self.compute.join().expect("compute panicked");
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let (sent, dropped) = self.comm.join().expect("comm panicked");
+        self.remote_update.join().expect("remote-update panicked");
+        stats.grads_sent = sent;
+        stats.grads_dropped = dropped;
+        stats.params_received =
+            self.shared.params_received.load(Ordering::Relaxed);
+        stats
+    }
+
+    /// Signal the worker to stop early (used by failure-injection tests).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+    }
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest: what `python/compile/aot.py` exported.
+//!
+//! The manifest lets the rust side validate shapes/marshalling without
+//! parsing HLO text, and lets the CLI's `inspect-artifacts` subcommand
+//! describe what is available.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Shape parameters of one exported variant (mirrors
+/// `python/compile/model.py::VARIANTS`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantShape {
+    pub k: usize,
+    pub d: usize,
+    pub bs: usize,
+    pub bd: usize,
+    pub eval_batch: usize,
+}
+
+/// One exported (variant, function) HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub variant: String,
+    pub function: String,
+    pub file: String,
+    /// Input shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantShape>,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        anyhow::ensure!(
+            j.get("format").as_str() == Some("hlo-text/1"),
+            "unsupported artifact format {:?}",
+            j.get("format")
+        );
+        let mut variants = BTreeMap::new();
+        if let Some(vs) = j.get("variants").as_obj() {
+            for (name, v) in vs {
+                variants.insert(
+                    name.clone(),
+                    VariantShape {
+                        k: req_usize(v, "k")?,
+                        d: req_usize(v, "d")?,
+                        bs: req_usize(v, "bs")?,
+                        bd: req_usize(v, "bd")?,
+                        eval_batch: req_usize(v, "eval_batch")?,
+                    },
+                );
+            }
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries").as_arr().unwrap_or(&[]) {
+            entries.push(ArtifactEntry {
+                variant: req_str(e, "variant")?,
+                function: req_str(e, "function")?,
+                file: req_str(e, "file")?,
+                inputs: shape_list(e.get("inputs"))?,
+                outputs: shape_list(e.get("outputs"))?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants, entries })
+    }
+
+    pub fn entry(
+        &self,
+        variant: &str,
+        function: &str,
+    ) -> anyhow::Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.variant == variant && e.function == function)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {variant}.{function} not in manifest \
+                     (have: {:?})",
+                    self.entries
+                        .iter()
+                        .map(|e| format!("{}.{}", e.variant, e.function))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<VariantShape> {
+        self.variants.get(name).copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "variant '{name}' not in manifest (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn req_usize(j: &Json, k: &str) -> anyhow::Result<usize> {
+    j.get(k)
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing usize '{k}'"))
+}
+
+fn req_str(j: &Json, k: &str) -> anyhow::Result<String> {
+    Ok(j.get(k)
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing str '{k}'"))?
+        .to_string())
+}
+
+fn shape_list(j: &Json) -> anyhow::Result<Vec<Vec<usize>>> {
+    let mut out = Vec::new();
+    for item in j.as_arr().unwrap_or(&[]) {
+        let shape: Option<Vec<usize>> = item
+            .get("shape")
+            .as_arr()
+            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect());
+        out.push(shape.ok_or_else(|| {
+            anyhow::anyhow!("manifest: entry missing 'shape'")
+        })?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("dmlps_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{
+              "format": "hlo-text/1",
+              "variants": {"tiny": {"k": 8, "d": 16, "bs": 4, "bd": 4,
+                                    "eval_batch": 16}},
+              "entries": [{
+                "variant": "tiny", "function": "step",
+                "file": "tiny.step.hlo.txt",
+                "inputs": [{"shape": [8, 16], "dtype": "float32"},
+                           {"shape": [4, 16], "dtype": "float32"}],
+                "outputs": [{"shape": [1, 1], "dtype": "float32"}]
+              }]
+            }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variant("tiny").unwrap().d, 16);
+        let e = m.entry("tiny", "step").unwrap();
+        assert_eq!(e.inputs[0], vec![8, 16]);
+        assert_eq!(m.hlo_path(e), dir.join("tiny.step.hlo.txt"));
+        assert!(m.entry("tiny", "nope").is_err());
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let dir = std::env::temp_dir().join("dmlps_manifest_badfmt");
+        write_manifest(&dir, r#"{"format": "hlo-bin/9"}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").is_file() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        // the python test suite pins these shapes too
+        let mnist = m.variant("mnist").unwrap();
+        assert_eq!((mnist.k, mnist.d, mnist.bs, mnist.bd),
+                   (600, 780, 500, 500));
+        for f in ["loss_grad", "step", "pair_dist", "apply_update"] {
+            let e = m.entry("mnist", f).unwrap();
+            assert!(m.hlo_path(e).is_file(), "missing {}", e.file);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build-time Python pipeline (`make artifacts`) lowers the L2 model
+//! (which calls the L1 Pallas kernels) to **HLO text** — see
+//! `python/compile/aot.py` for why text, not serialized protos. This
+//! module is the production hot path: it parses the manifest, compiles
+//! each needed HLO module once on the PJRT CPU client, and exposes the
+//! same [`Engine`](crate::dml::Engine) interface the native engine
+//! implements, so the parameter server is backend-agnostic.
+
+mod manifest;
+mod xla_engine;
+
+pub use manifest::{ArtifactEntry, Manifest, VariantShape};
+pub use xla_engine::{xla_factory, XlaEngine};
+
+/// Default artifacts directory, relative to the repo root. Overridable
+/// via the `DMLPS_ARTIFACTS` environment variable (used by tests).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("DMLPS_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| find_artifacts_upward())
+}
+
+/// Walk up from CWD looking for an `artifacts/manifest.json` so binaries
+/// work from the repo root, `rust/`, or a bench/test cwd.
+fn find_artifacts_upward() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir()
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    for _ in 0..5 {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}
+
+/// True if AOT artifacts are available (tests degrade gracefully when
+/// `make artifacts` has not run).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").is_file()
+}

@@ -1,0 +1,291 @@
+//! The PJRT-backed [`Engine`]: executes AOT artifacts on the hot path.
+//!
+//! One `XlaEngine` owns compiled executables for a single shape variant
+//! (`loss_grad`, `step`, `pair_dist`, `apply_update`). Executables are
+//! compiled once at construction; per-call work is literal marshalling +
+//! `execute`.
+//!
+//! PJRT client handles are `Rc`-based (not `Send`), so worker threads
+//! construct their own engine via [`xla_factory`].
+
+use anyhow::Context;
+
+use super::manifest::{Manifest, VariantShape};
+use crate::dml::{Engine, EngineFactory, MinibatchRef};
+use crate::linalg::Mat;
+
+pub struct XlaEngine {
+    variant: String,
+    shape: VariantShape,
+    loss_grad_exe: xla::PjRtLoadedExecutable,
+    step_exe: xla::PjRtLoadedExecutable,
+    pair_dist_exe: xla::PjRtLoadedExecutable,
+}
+
+/// f32 slice → (rows, cols) literal.
+fn lit2d(data: &[f32], rows: usize, cols: usize) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    let bytes = unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            data.len() * std::mem::size_of::<f32>(),
+        )
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[rows, cols],
+        bytes,
+    )?)
+}
+
+fn scalar11(v: f32) -> anyhow::Result<xla::Literal> {
+    lit2d(&[v], 1, 1)
+}
+
+fn first_f32(lit: &xla::Literal) -> anyhow::Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}
+
+impl XlaEngine {
+    /// Compile all entry points of `variant` from the artifacts in `dir`.
+    pub fn load(dir: &std::path::Path, variant: &str) -> anyhow::Result<XlaEngine> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let shape = manifest.variant(variant)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |function: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let entry = manifest.entry(variant, function)?;
+            let path = manifest.hlo_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {variant}.{function}"))
+        };
+        Ok(XlaEngine {
+            variant: variant.to_string(),
+            shape,
+            loss_grad_exe: compile("loss_grad")?,
+            step_exe: compile("step")?,
+            pair_dist_exe: compile("pair_dist")?,
+        })
+    }
+
+    pub fn shape(&self) -> VariantShape {
+        self.shape
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    fn check_batch(&self, batch: &MinibatchRef<'_>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            batch.bs == self.shape.bs
+                && batch.bd == self.shape.bd
+                && batch.d == self.shape.d,
+            "batch shape (bs={}, bd={}, d={}) does not match artifact \
+             variant '{}' (bs={}, bd={}, d={}) — HLO is shape-specialized",
+            batch.bs, batch.bd, batch.d,
+            self.variant, self.shape.bs, self.shape.bd, self.shape.d,
+        );
+        Ok(())
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn loss_grad(
+        &mut self,
+        l: &Mat,
+        batch: &MinibatchRef<'_>,
+        lambda: f32,
+        g: &mut Mat,
+    ) -> anyhow::Result<f32> {
+        self.check_batch(batch)?;
+        anyhow::ensure!(
+            l.rows == self.shape.k && l.cols == self.shape.d,
+            "L shape mismatch vs variant '{}'",
+            self.variant
+        );
+        let args = [
+            lit2d(&l.data, l.rows, l.cols)?,
+            lit2d(batch.ds, batch.bs, batch.d)?,
+            lit2d(batch.dd, batch.bd, batch.d)?,
+            scalar11(lambda)?,
+        ];
+        let result = self.loss_grad_exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (loss_lit, g_lit) = result.to_tuple2()?;
+        let gv = g_lit.to_vec::<f32>()?;
+        anyhow::ensure!(gv.len() == g.data.len(), "gradient size mismatch");
+        g.data.copy_from_slice(&gv);
+        first_f32(&loss_lit)
+    }
+
+    fn step(
+        &mut self,
+        l: &mut Mat,
+        batch: &MinibatchRef<'_>,
+        lambda: f32,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        self.check_batch(batch)?;
+        let args = [
+            lit2d(&l.data, l.rows, l.cols)?,
+            lit2d(batch.ds, batch.bs, batch.d)?,
+            lit2d(batch.dd, batch.bd, batch.d)?,
+            scalar11(lambda)?,
+            scalar11(lr)?,
+        ];
+        let result = self.step_exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (loss_lit, l_lit) = result.to_tuple2()?;
+        let lv = l_lit.to_vec::<f32>()?;
+        anyhow::ensure!(lv.len() == l.data.len(), "L' size mismatch");
+        l.data.copy_from_slice(&lv);
+        first_f32(&loss_lit)
+    }
+
+    fn pair_dist(
+        &mut self,
+        l: &Mat,
+        diffs: &Mat,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(diffs.cols == self.shape.d, "diff dim mismatch");
+        let be = self.shape.eval_batch;
+        let l_lit = lit2d(&l.data, l.rows, l.cols)?;
+        let mut out = Vec::with_capacity(diffs.rows);
+        let mut chunk = vec![0.0f32; be * self.shape.d];
+        let mut r = 0;
+        while r < diffs.rows {
+            let n = (diffs.rows - r).min(be);
+            // pad the trailing chunk with zeros (discarded below)
+            chunk.fill(0.0);
+            chunk[..n * self.shape.d].copy_from_slice(
+                &diffs.data[r * self.shape.d..(r + n) * self.shape.d],
+            );
+            let d_lit = lit2d(&chunk, be, self.shape.d)?;
+            let result = self
+                .pair_dist_exe
+                .execute::<xla::Literal>(&[l_lit.clone(), d_lit])?[0][0]
+                .to_literal_sync()?;
+            let dist_lit = result.to_tuple1()?;
+            let dv = dist_lit.to_vec::<f32>()?;
+            out.extend_from_slice(&dv[..n]);
+            r += n;
+        }
+        Ok(out)
+    }
+}
+
+/// Engine factory for worker threads: each call loads + compiles the
+/// variant's artifacts on a fresh PJRT CPU client inside the calling
+/// thread.
+pub fn xla_factory(variant: &str) -> EngineFactory {
+    let variant = variant.to_string();
+    let dir = super::artifacts_dir();
+    std::sync::Arc::new(move || {
+        Ok(Box::new(XlaEngine::load(&dir, &variant)?) as Box<dyn Engine>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::NativeEngine;
+    use crate::util::rng::Pcg32;
+
+    fn engine_or_skip(variant: &str) -> Option<XlaEngine> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").is_file() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(XlaEngine::load(&dir, variant).expect("load artifacts"))
+    }
+
+    #[test]
+    fn xla_matches_native_on_test_small() {
+        let Some(mut xe) = engine_or_skip("test_small") else { return };
+        let s = xe.shape();
+        let mut rng = Pcg32::new(0);
+        let mut l = Mat::zeros(s.k, s.d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.3);
+        let mut ds = vec![0.0f32; s.bs * s.d];
+        let mut dd = vec![0.0f32; s.bd * s.d];
+        rng.fill_gaussian(&mut ds, 0.0, 1.0);
+        rng.fill_gaussian(&mut dd, 0.0, 1.0);
+        let batch = MinibatchRef::new(&ds, &dd, s.bs, s.bd, s.d);
+
+        let mut ne = NativeEngine::new();
+        let mut gx = Mat::zeros(s.k, s.d);
+        let mut gn = Mat::zeros(s.k, s.d);
+        let lx = xe.loss_grad(&l, &batch, 1.0, &mut gx).unwrap();
+        let ln = ne.loss_grad(&l, &batch, 1.0, &mut gn).unwrap();
+        assert!((lx - ln).abs() < 1e-4 * (1.0 + ln.abs()),
+                "loss {lx} vs {ln}");
+        assert!(gx.max_abs_diff(&gn) < 1e-3);
+    }
+
+    #[test]
+    fn xla_step_matches_native_step() {
+        let Some(mut xe) = engine_or_skip("test_small") else { return };
+        let s = xe.shape();
+        let mut rng = Pcg32::new(1);
+        let mut lx = Mat::zeros(s.k, s.d);
+        rng.fill_gaussian(&mut lx.data, 0.0, 0.3);
+        let mut ln = lx.clone();
+        let mut ds = vec![0.0f32; s.bs * s.d];
+        let mut dd = vec![0.0f32; s.bd * s.d];
+        rng.fill_gaussian(&mut ds, 0.0, 1.0);
+        rng.fill_gaussian(&mut dd, 0.0, 1.0);
+
+        let mut ne = NativeEngine::new();
+        for step in 0..5 {
+            let batch = MinibatchRef::new(&ds, &dd, s.bs, s.bd, s.d);
+            let fx = xe.step(&mut lx, &batch, 1.0, 0.05).unwrap();
+            let batch = MinibatchRef::new(&ds, &dd, s.bs, s.bd, s.d);
+            let fn_ = ne.step(&mut ln, &batch, 1.0, 0.05).unwrap();
+            assert!((fx - fn_).abs() < 1e-3 * (1.0 + fn_.abs()),
+                    "step {step}: {fx} vs {fn_}");
+        }
+        assert!(lx.max_abs_diff(&ln) < 1e-2);
+    }
+
+    #[test]
+    fn pair_dist_chunks_and_pads() {
+        let Some(mut xe) = engine_or_skip("test_small") else { return };
+        let s = xe.shape();
+        let mut rng = Pcg32::new(2);
+        let mut l = Mat::zeros(s.k, s.d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.5);
+        // rows deliberately NOT a multiple of eval_batch
+        let rows = s.eval_batch * 2 + 3;
+        let mut diffs = Mat::zeros(rows, s.d);
+        rng.fill_gaussian(&mut diffs.data, 0.0, 1.0);
+        let got = xe.pair_dist(&l, &diffs).unwrap();
+        assert_eq!(got.len(), rows);
+        let want = NativeEngine::new().pair_dist(&l, &diffs).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(mut xe) = engine_or_skip("test_small") else { return };
+        let s = xe.shape();
+        let l = Mat::zeros(s.k, s.d);
+        let ds = vec![0.0f32; (s.bs + 1) * s.d];
+        let dd = vec![0.0f32; s.bd * s.d];
+        let batch = MinibatchRef::new(&ds, &dd, s.bs + 1, s.bd, s.d);
+        let mut g = Mat::zeros(s.k, s.d);
+        let err = xe.loss_grad(&l, &batch, 1.0, &mut g).unwrap_err();
+        assert!(err.to_string().contains("shape-specialized"));
+    }
+}

@@ -1,0 +1,65 @@
+//! Discrete-event cluster simulator — the substitute testbed for the
+//! paper's 4×64-core cluster (this box has one core; see DESIGN.md
+//! §substitutions).
+//!
+//! The simulator executes the *actual* asynchronous-SGD algorithm — real
+//! gradients on real data, real staleness — but under a simulated clock:
+//! machine compute times, network transfer times, and server apply times
+//! are modeled (calibrated from measured single-thread step times), and
+//! events are processed in simulated-causal order. Objective-vs-time
+//! curves (Fig 2) and time-to-target speedups (Fig 3) therefore reflect
+//! true algorithm dynamics, not a throughput extrapolation.
+//!
+//! A cost-only mode (`NullWorkload`) runs the same event machinery
+//! without numerics, which makes the *paper-true* ImageNet shapes
+//! (220M parameters) representable for throughput/speedup analysis.
+
+mod network;
+mod sim;
+mod workload;
+
+pub use network::NetworkModel;
+pub use sim::{SimConfig, SimResult, Simulator};
+pub use workload::{DmlWorkload, NullWorkload, Workload};
+
+use crate::dml::DmlProblem;
+
+/// Calibrate the simulator's per-core gradient time by timing the native
+/// engine at the given shape (a handful of steps, median).
+pub fn calibrate_grad_seconds(
+    problem: &DmlProblem,
+    bs: usize,
+    bd: usize,
+    reps: usize,
+) -> f64 {
+    use crate::dml::{Engine, MinibatchRef, NativeEngine};
+    use crate::util::rng::Pcg32;
+
+    let mut rng = Pcg32::new(0xCA11B);
+    let l = problem.init_l(0.1, 1);
+    let mut ds = vec![0.0f32; bs * problem.d];
+    let mut dd = vec![0.0f32; bd * problem.d];
+    rng.fill_gaussian(&mut ds, 0.0, 1.0);
+    rng.fill_gaussian(&mut dd, 0.0, 1.0);
+    let mut g = crate::linalg::Mat::zeros(problem.k, problem.d);
+    let mut eng = NativeEngine::new();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(3) {
+        let batch = MinibatchRef::new(&ds, &dd, bs, bd, problem.d);
+        let t0 = std::time::Instant::now();
+        eng.loss_grad(&l, &batch, 1.0, &mut g).expect("calibration");
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    crate::util::stats::median(&times)
+}
+
+/// Extrapolate a measured per-core gradient time to a different shape by
+/// FLOP ratio (used to cost the paper-true ImageNet shapes that cannot
+/// run natively on this box).
+pub fn extrapolate_grad_seconds(
+    measured: f64,
+    measured_flops: f64,
+    target_flops: f64,
+) -> f64 {
+    measured * target_flops / measured_flops
+}

@@ -1,0 +1,139 @@
+//! Network model: per-link serialization + propagation latency, plus a
+//! shared server NIC that becomes the scalability ceiling at high
+//! machine counts (the effect behind the paper's 3.6–3.8× at 4 machines
+//! instead of 4×).
+
+/// Simple fluid model: a transfer of B bytes over a link with bandwidth
+/// W occupies the link for B/W seconds; the link is FIFO. Each machine
+/// has its own full-duplex link to the switch; the server has one
+/// ingress and one egress link shared by all machines.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    pub latency_s: f64,
+    /// Per-machine link bandwidth (bytes/sec).
+    pub machine_bw: f64,
+    /// Server NIC bandwidth, each direction (bytes/sec).
+    pub server_bw: f64,
+    /// Next time the server ingress link is free.
+    ingress_free: f64,
+    /// Next time the server egress link is free.
+    egress_free: f64,
+}
+
+impl NetworkModel {
+    /// A 10 GbE cluster (the paper's era): 1.25 GB/s links, 100 µs RTT/2.
+    pub fn ten_gbe() -> NetworkModel {
+        NetworkModel {
+            latency_s: 100e-6,
+            machine_bw: 1.25e9,
+            server_bw: 1.25e9,
+            ingress_free: 0.0,
+            egress_free: 0.0,
+        }
+    }
+
+    /// An idealized infinitely-fast network (ablation).
+    pub fn infinite() -> NetworkModel {
+        NetworkModel {
+            latency_s: 0.0,
+            machine_bw: f64::INFINITY,
+            server_bw: f64::INFINITY,
+            ingress_free: 0.0,
+            egress_free: 0.0,
+        }
+    }
+
+    /// Deliver `bytes` from a machine to the server, starting no earlier
+    /// than `t`. Returns arrival time.
+    pub fn to_server(&mut self, t: f64, bytes: f64) -> f64 {
+        let ser_machine = bytes / self.machine_bw;
+        let start = t.max(self.ingress_free);
+        let ser_server = bytes / self.server_bw;
+        self.ingress_free = start + ser_server;
+        start + ser_machine.max(ser_server) + self.latency_s
+    }
+
+    /// Broadcast `bytes` from the server to `n` machines starting at `t`;
+    /// returns per-machine arrival times. The egress link serializes the
+    /// copies (this is what saturates first as machines are added).
+    pub fn broadcast(&mut self, t: f64, bytes: f64, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        let mut start = t.max(self.egress_free);
+        for _ in 0..n {
+            let ser = bytes / self.server_bw;
+            let arrive = start + ser + bytes / self.machine_bw
+                + self.latency_s;
+            start += ser;
+            out.push(arrive);
+        }
+        self.egress_free = start;
+        out
+    }
+
+    /// Seconds of work already queued on the egress link at time `t`
+    /// (the server-side backpressure signal used to coalesce broadcasts).
+    pub fn egress_backlog(&self, t: f64) -> f64 {
+        (self.egress_free - t).max(0.0)
+    }
+
+    /// Time to serialize one `bytes` message on the server egress link.
+    pub fn egress_cost(&self, bytes: f64) -> f64 {
+        bytes / self.server_bw
+    }
+
+    pub fn reset(&mut self) {
+        self.ingress_free = 0.0;
+        self.egress_free = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_transfers_queue_on_ingress() {
+        let mut net = NetworkModel {
+            latency_s: 0.0,
+            machine_bw: f64::INFINITY,
+            server_bw: 100.0,
+            ingress_free: 0.0,
+            egress_free: 0.0,
+        };
+        let a = net.to_server(0.0, 100.0); // 1s serialization
+        let b = net.to_server(0.0, 100.0); // queued behind a
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_serializes_on_egress() {
+        let mut net = NetworkModel {
+            latency_s: 0.5,
+            machine_bw: f64::INFINITY,
+            server_bw: 10.0,
+            ingress_free: 0.0,
+            egress_free: 0.0,
+        };
+        let arr = net.broadcast(0.0, 10.0, 3); // 1s per copy
+        assert!((arr[0] - 1.5).abs() < 1e-9);
+        assert!((arr[1] - 2.5).abs() < 1e-9);
+        assert!((arr[2] - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_network_is_latency_only() {
+        let mut net = NetworkModel::infinite();
+        assert_eq!(net.to_server(5.0, 1e12), 5.0);
+        let arr = net.broadcast(7.0, 1e12, 4);
+        assert!(arr.iter().all(|&a| a == 7.0));
+    }
+
+    #[test]
+    fn ten_gbe_transfer_time_sane() {
+        let mut net = NetworkModel::ten_gbe();
+        // 1.872 MB (mnist L) at 1.25 GB/s ≈ 1.5 ms + latency
+        let t = net.to_server(0.0, 468_000.0 * 4.0);
+        assert!(t > 1e-3 && t < 3e-3, "t={t}");
+    }
+}

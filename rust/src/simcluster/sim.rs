@@ -1,0 +1,430 @@
+//! The discrete-event simulation core.
+//!
+//! Entities: P machines (each an aggregated C-core compute engine that
+//! finishes one minibatch gradient every `grad_seconds / C` on average),
+//! one parameter server (serial applies of `apply_seconds` each), and the
+//! network of [`NetworkModel`]. The protocol simulated is the paper's
+//! ASP parameter server: machines never wait; the server applies
+//! gradients as they arrive and broadcasts fresh parameters.
+//!
+//! Numerics are *real*: gradients are computed on the machine's local
+//! parameter snapshot at the simulated completion time, so parameter
+//! staleness — the thing that makes async SGD converge differently from
+//! serial SGD — is faithfully reproduced, just under a simulated clock.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use super::network::NetworkModel;
+use super::workload::Workload;
+use crate::dml::LrSchedule;
+use crate::linalg::Mat;
+use crate::metrics::Curve;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub machines: usize,
+    pub cores_per_machine: usize,
+    /// Calibrated single-core minibatch gradient time (seconds).
+    pub grad_seconds: f64,
+    /// Server parameter-update time per gradient (seconds).
+    pub apply_seconds: f64,
+    /// Message payload size (bytes) — k·d·4 for dense f32 updates.
+    pub bytes_per_msg: f64,
+    pub network: NetworkModel,
+    /// Relative compute jitter (0.05 = ±5% uniform).
+    pub jitter: f64,
+    /// Stop after this many gradient updates applied at the server.
+    pub total_updates: u64,
+    /// Record a curve point every `probe_every` applied updates.
+    pub probe_every: u64,
+    /// Broadcast fresh parameters every `broadcast_every` applies
+    /// (the server-side batching knob; 1 = after every apply).
+    pub broadcast_every: u64,
+    pub lr: LrSchedule,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Effective mean seconds between gradient completions on a machine.
+    pub fn machine_interval(&self) -> f64 {
+        self.grad_seconds / self.cores_per_machine as f64
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.machines * self.cores_per_machine
+    }
+}
+
+pub struct SimResult {
+    pub curve: Curve,
+    pub applied_updates: u64,
+    pub sim_seconds: f64,
+    pub broadcasts: u64,
+    /// Mean staleness (server version − version the gradient was computed
+    /// at), over all applied updates — the async-SGD health metric.
+    pub mean_staleness: f64,
+}
+
+#[derive(Debug)]
+enum Event {
+    /// A machine finished computing one gradient.
+    GradReady { machine: usize },
+    /// A gradient arrived at the server.
+    GradArrive { grad_id: usize },
+    /// A parameter broadcast reached a machine.
+    ParamArrive { machine: usize, bcast_id: usize },
+    /// The server finished applying a gradient.
+    ServerFree,
+}
+
+/// Heap key with total order on simulated time.
+#[derive(PartialEq)]
+struct At(f64, u64);
+
+impl Eq for At {}
+
+impl PartialOrd for At {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for At {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap()
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+pub struct Simulator<'w> {
+    cfg: SimConfig,
+    workload: &'w mut dyn Workload,
+}
+
+impl<'w> Simulator<'w> {
+    pub fn new(cfg: SimConfig, workload: &'w mut dyn Workload) -> Self {
+        Simulator { cfg, workload }
+    }
+
+    pub fn run(self) -> SimResult {
+        let (k, d) = self.workload.param_shape();
+        let p = self.cfg.machines;
+        let mut net = self.cfg.network.clone();
+        net.reset();
+        let mut rng = Pcg32::with_stream(self.cfg.seed, 0x51A1);
+
+        // global + per-machine parameter state
+        let mut l_global = self.workload.init();
+        let mut locals: Vec<Mat> = (0..p).map(|_| l_global.clone()).collect();
+        let mut local_version = vec![0u64; p];
+        let mut local_steps = vec![0u64; p];
+        let mut version = 0u64;
+
+        // in-flight gradients / broadcasts
+        struct InFlightGrad {
+            data: Mat,
+            at_version: u64,
+        }
+        let mut grads: Vec<Option<InFlightGrad>> = Vec::new();
+        let mut bcasts: Vec<Option<(u64, Arc<Vec<f32>>)>> = Vec::new();
+
+        let mut heap: BinaryHeap<Reverse<(At, usize)>> = BinaryHeap::new();
+        let mut events: Vec<Option<Event>> = Vec::new();
+        let mut seq = 0u64;
+        let mut push = |heap: &mut BinaryHeap<Reverse<(At, usize)>>,
+                        events: &mut Vec<Option<Event>>,
+                        t: f64,
+                        e: Event| {
+            let id = events.len();
+            events.push(Some(e));
+            heap.push(Reverse((At(t, seq), id)));
+            seq += 1;
+        };
+
+        // server state
+        let mut server_busy_until = 0.0f64;
+        let mut server_queue: std::collections::VecDeque<usize> =
+            Default::default();
+        let mut applied = 0u64;
+        let mut broadcasts = 0u64;
+        let mut staleness_sum = 0.0f64;
+        let mut curve = Curve::new(format!(
+            "{} cores ({}x{})",
+            self.cfg.total_cores(),
+            p,
+            self.cfg.cores_per_machine
+        ));
+        let obj0 = self.workload.objective(&l_global);
+        curve.push(0.0, 0, obj0);
+
+        // seed: every machine starts computing at t ≈ 0
+        for m in 0..p {
+            let t = self.interval(&mut rng) * rng.f64();
+            push(&mut heap, &mut events, t, Event::GradReady { machine: m });
+        }
+
+        let mut g_scratch = Mat::zeros(k, d);
+        let mut now = 0.0f64;
+        while let Some(Reverse((At(t, _), eid))) = heap.pop() {
+            now = t;
+            let ev = events[eid].take().expect("event consumed twice");
+            match ev {
+                Event::GradReady { machine } => {
+                    // real gradient on this machine's local snapshot
+                    self.workload.grad(machine, &locals[machine],
+                                       &mut g_scratch);
+                    // the worker applies its own gradient locally so it
+                    // keeps progressing between server refreshes (§4.1)
+                    let lr_local =
+                        self.cfg.lr.at(local_steps[machine] as usize);
+                    local_steps[machine] += 1;
+                    for (a, gv) in locals[machine]
+                        .data
+                        .iter_mut()
+                        .zip(&g_scratch.data)
+                    {
+                        *a -= lr_local * gv;
+                    }
+                    let grad_id = grads.len();
+                    grads.push(Some(InFlightGrad {
+                        data: g_scratch.clone(),
+                        at_version: local_version[machine],
+                    }));
+                    let arrive = net.to_server(now, self.cfg.bytes_per_msg);
+                    push(&mut heap, &mut events, arrive,
+                         Event::GradArrive { grad_id });
+                    // next gradient from this machine's core pool
+                    let next = now + self.interval(&mut rng);
+                    push(&mut heap, &mut events, next,
+                         Event::GradReady { machine });
+                }
+                Event::GradArrive { grad_id } => {
+                    server_queue.push_back(grad_id);
+                    if server_busy_until <= now {
+                        // server idle: start applying immediately
+                        server_busy_until = now + self.cfg.apply_seconds;
+                        push(&mut heap, &mut events, server_busy_until,
+                             Event::ServerFree);
+                    }
+                }
+                Event::ServerFree => {
+                    // apply exactly one queued gradient per ServerFree
+                    if let Some(gid) = server_queue.pop_front() {
+                        let g = grads[gid].take().expect("grad consumed");
+                        let lr_t = self.cfg.lr.at(applied as usize);
+                        for (a, gv) in
+                            l_global.data.iter_mut().zip(&g.data.data)
+                        {
+                            *a -= lr_t * gv;
+                        }
+                        applied += 1;
+                        staleness_sum += (version - g.at_version) as f64;
+                        version += 1;
+                        if applied % self.cfg.probe_every.max(1) == 0 {
+                            let obj = self.workload.objective(&l_global);
+                            curve.push(now, applied as usize, obj);
+                        }
+                        // Broadcast coalescing: a real parameter server
+                        // pushes its *current* L and never queues stale
+                        // snapshots behind a saturated NIC. Skip this
+                        // broadcast if more than one full broadcast is
+                        // already serializing — the next apply will send
+                        // fresher parameters anyway.
+                        let egress_ok = net.egress_backlog(now)
+                            <= net.egress_cost(self.cfg.bytes_per_msg)
+                                * p as f64;
+                        if applied
+                            % self.cfg.broadcast_every.max(1)
+                            == 0
+                            && egress_ok
+                        {
+                            broadcasts += 1;
+                            let snapshot =
+                                Arc::new(l_global.data.clone());
+                            let bcast_id = bcasts.len();
+                            bcasts.push(Some((version, snapshot)));
+                            for (m, arrive) in net
+                                .broadcast(
+                                    now,
+                                    self.cfg.bytes_per_msg,
+                                    p,
+                                )
+                                .into_iter()
+                                .enumerate()
+                            {
+                                push(&mut heap, &mut events, arrive,
+                                     Event::ParamArrive {
+                                         machine: m,
+                                         bcast_id,
+                                     });
+                            }
+                        }
+                        if applied >= self.cfg.total_updates {
+                            break;
+                        }
+                        if !server_queue.is_empty() {
+                            server_busy_until =
+                                now + self.cfg.apply_seconds;
+                            push(&mut heap, &mut events,
+                                 server_busy_until, Event::ServerFree);
+                        }
+                    }
+                }
+                Event::ParamArrive { machine, bcast_id } => {
+                    if let Some((v, snap)) = &bcasts[bcast_id] {
+                        // adopt only if newer than what the machine has
+                        if *v > local_version[machine] {
+                            locals[machine].data.copy_from_slice(snap);
+                            local_version[machine] = *v;
+                        }
+                    }
+                    // drop the snapshot once all machines were offered it
+                    // (cheap heuristic: last machine index)
+                    if machine == p - 1 {
+                        bcasts[bcast_id] = None;
+                    }
+                }
+            }
+        }
+
+        // final probe
+        let obj = self.workload.objective(&l_global);
+        curve.push(now, applied as usize, obj);
+        SimResult {
+            curve,
+            applied_updates: applied,
+            sim_seconds: now,
+            broadcasts,
+            mean_staleness: if applied > 0 {
+                staleness_sum / applied as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    fn interval(&self, rng: &mut Pcg32) -> f64 {
+        let base = self.cfg.machine_interval();
+        let j = self.cfg.jitter;
+        base * (1.0 - j + 2.0 * j * rng.f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_pairs, PairSet, SyntheticSpec};
+    use crate::dml::DmlProblem;
+    use crate::simcluster::workload::{DmlWorkload, NullWorkload};
+
+    fn base_cfg(machines: usize, cores: usize) -> SimConfig {
+        SimConfig {
+            machines,
+            cores_per_machine: cores,
+            grad_seconds: 0.1,
+            apply_seconds: 0.0005,
+            bytes_per_msg: 4.0 * 8.0 * 16.0,
+            network: NetworkModel::ten_gbe(),
+            jitter: 0.05,
+            total_updates: 200,
+            probe_every: 50,
+            broadcast_every: 1,
+            lr: LrSchedule::new(0.005, 0.001),
+            seed: 7,
+        }
+    }
+
+    fn dml_workload(p: usize) -> DmlWorkload {
+        let ds = Arc::new(SyntheticSpec::tiny().generate(0));
+        let mut rng = Pcg32::new(0);
+        let pairs = PairSet::sample(&ds, 400, 400, &mut rng);
+        let shards = partition_pairs(&pairs, p, 1);
+        DmlWorkload::new(
+            DmlProblem::new(ds.dim(), 8, 1.0),
+            0.5, ds, shards, 8, 8, (100, 100), 11,
+        )
+    }
+
+    #[test]
+    fn objective_decreases_under_sim() {
+        let mut w = dml_workload(2);
+        let r = Simulator::new(base_cfg(2, 2), &mut w).run();
+        assert_eq!(r.applied_updates, 200);
+        let first = r.curve.points.first().unwrap().objective;
+        let last = r.curve.points.last().unwrap().objective;
+        assert!(last < first * 0.9, "{first} -> {last}");
+        assert!(r.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn more_cores_finish_sooner() {
+        let mut w1 = dml_workload(1);
+        let t1 = Simulator::new(base_cfg(1, 4), &mut w1).run().sim_seconds;
+        let mut w4 = dml_workload(4);
+        let t4 = Simulator::new(base_cfg(4, 4), &mut w4).run().sim_seconds;
+        // 4x the cores → noticeably faster to the same update count
+        assert!(t4 < t1 * 0.5, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn speedup_is_sublinear_when_server_bound() {
+        // huge apply cost → server saturates, speedup flattens
+        let mut cfg1 = base_cfg(1, 1);
+        cfg1.apply_seconds = 0.05; // half of grad time
+        let mut cfg8 = base_cfg(8, 1);
+        cfg8.apply_seconds = 0.05;
+        let mut w1 = NullWorkload;
+        let t1 = Simulator::new(cfg1, &mut w1).run().sim_seconds;
+        let mut w8 = NullWorkload;
+        let t8 = Simulator::new(cfg8, &mut w8).run().sim_seconds;
+        let speedup = t1 / t8;
+        assert!(speedup < 4.0, "speedup={speedup} should be server-bound");
+        assert!(speedup > 1.2, "some speedup expected: {speedup}");
+    }
+
+    #[test]
+    fn staleness_grows_with_machines() {
+        let mut w2 = dml_workload(2);
+        let s2 = Simulator::new(base_cfg(2, 1), &mut w2)
+            .run()
+            .mean_staleness;
+        let mut w8 = dml_workload(8);
+        let s8 = Simulator::new(base_cfg(8, 1), &mut w8)
+            .run()
+            .mean_staleness;
+        assert!(s8 > s2, "s2={s2} s8={s8}");
+    }
+
+    #[test]
+    fn null_workload_runs_fast_at_paper_scale() {
+        // ImageNet-63K paper-true message size: 220M params × 4B
+        let mut cfg = base_cfg(4, 64);
+        cfg.bytes_per_msg = 215_040_000.0 * 4.0;
+        cfg.grad_seconds = 30.0;
+        cfg.apply_seconds = 0.2;
+        cfg.total_updates = 100;
+        let mut w = NullWorkload;
+        let r = Simulator::new(cfg, &mut w).run();
+        assert_eq!(r.applied_updates, 100);
+        assert!(r.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut wa = dml_workload(3);
+        let a = Simulator::new(base_cfg(3, 2), &mut wa).run();
+        let mut wb = dml_workload(3);
+        let b = Simulator::new(base_cfg(3, 2), &mut wb).run();
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+        let ao: Vec<f64> =
+            a.curve.points.iter().map(|p| p.objective).collect();
+        let bo: Vec<f64> =
+            b.curve.points.iter().map(|p| p.objective).collect();
+        assert_eq!(ao, bo);
+    }
+}

@@ -1,0 +1,248 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup, adaptive iteration counts, and robust summary
+//! statistics, and prints aligned markdown tables so `cargo bench` output
+//! can be pasted straight into EXPERIMENTS.md.
+//!
+//! ```no_run
+//! use dmlps::util::bench::Bench;
+//! let mut b = Bench::new("hot path");
+//! b.bench("native step", || { /* work */ });
+//! b.report();
+//! ```
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One measured benchmark row.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub std: Duration,
+    /// Optional user-supplied throughput denominator (e.g. FLOPs/iter).
+    pub work_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// work units per second, if `work_per_iter` was supplied.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean.as_secs_f64())
+    }
+}
+
+/// Benchmark group: collects measurements, prints one table.
+pub struct Bench {
+    title: String,
+    warmup: Duration,
+    target_time: Duration,
+    max_iters: u64,
+    rows: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(2),
+            max_iters: 1_000_000,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Tune for slow end-to-end benches: short warmup, few iterations.
+    pub fn heavy(title: &str) -> Self {
+        let mut b = Self::new(title);
+        b.warmup = Duration::from_millis(0);
+        b.target_time = Duration::from_millis(500);
+        b.max_iters = 20;
+        b
+    }
+
+    pub fn with_target_time(mut self, t: Duration) -> Self {
+        self.target_time = t;
+        self
+    }
+
+    /// Measure `f`, auto-picking an iteration count to fill target_time.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.bench_with_work(name, None, f)
+    }
+
+    /// Measure with a throughput denominator (e.g. FLOPs or bytes/iter).
+    pub fn bench_with_work<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work_per_iter: Option<f64>,
+        mut f: F,
+    ) -> &Measurement {
+        // Warmup phase: run until the warmup budget is spent.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup && warm_iters < 1000 {
+            f();
+            warm_iters += 1;
+        }
+        // Calibrate: time one call to pick the sample count.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.target_time.as_secs_f64() / once.as_secs_f64())
+            as u64)
+            .clamp(3, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            median: Duration::from_secs_f64(stats::median(&samples)),
+            p95: Duration::from_secs_f64(stats::percentile(&samples, 95.0)),
+            std: Duration::from_secs_f64(
+                variance_of(&samples).sqrt(),
+            ),
+            work_per_iter,
+        };
+        self.rows.push(m);
+        self.rows.last().unwrap()
+    }
+
+    /// Record an externally-measured duration series under a name
+    /// (used by end-to-end drivers that time whole runs themselves).
+    pub fn record(&mut self, name: &str, samples_sec: &[f64]) {
+        assert!(!samples_sec.is_empty());
+        self.rows.push(Measurement {
+            name: name.to_string(),
+            iters: samples_sec.len() as u64,
+            mean: Duration::from_secs_f64(stats::mean(samples_sec)),
+            median: Duration::from_secs_f64(stats::median(samples_sec)),
+            p95: Duration::from_secs_f64(stats::percentile(samples_sec, 95.0)),
+            std: Duration::from_secs_f64(variance_of(samples_sec).sqrt()),
+            work_per_iter: None,
+        });
+    }
+
+    pub fn rows(&self) -> &[Measurement] {
+        &self.rows
+    }
+
+    /// Print the group as a markdown table.
+    pub fn report(&self) {
+        println!("\n## {}", self.title);
+        println!(
+            "| {:<40} | {:>10} | {:>12} | {:>12} | {:>12} | {:>14} |",
+            "benchmark", "iters", "mean", "median", "p95", "throughput"
+        );
+        println!(
+            "|{}|{}|{}|{}|{}|{}|",
+            "-".repeat(42),
+            "-".repeat(12),
+            "-".repeat(14),
+            "-".repeat(14),
+            "-".repeat(14),
+            "-".repeat(16)
+        );
+        for r in &self.rows {
+            let tp = r
+                .throughput()
+                .map(|t| format_throughput(t))
+                .unwrap_or_else(|| "-".to_string());
+            println!(
+                "| {:<40} | {:>10} | {:>12} | {:>12} | {:>12} | {:>14} |",
+                r.name,
+                r.iters,
+                format_dur(r.mean),
+                format_dur(r.median),
+                format_dur(r.p95),
+                tp
+            );
+        }
+    }
+}
+
+fn variance_of(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = stats::mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn format_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub fn format_throughput(t: f64) -> String {
+    if t >= 1e12 {
+        format!("{:.2} T/s", t / 1e12)
+    } else if t >= 1e9 {
+        format!("{:.2} G/s", t / 1e9)
+    } else if t >= 1e6 {
+        format!("{:.2} M/s", t / 1e6)
+    } else if t >= 1e3 {
+        format!("{:.2} K/s", t / 1e3)
+    } else {
+        format!("{t:.2} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::new("test").with_target_time(Duration::from_millis(20));
+        let m = b.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.p95 >= m.median || m.iters < 10);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new("t").with_target_time(Duration::from_millis(10));
+        let m = b.bench_with_work("w", Some(1e6), || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        let tp = m.throughput().unwrap();
+        assert!(tp > 1e8 && tp < 1.2e10, "tp={tp}");
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bench::new("r");
+        b.record("ext", &[0.1, 0.2, 0.3]);
+        let m = &b.rows()[0];
+        assert_eq!(m.iters, 3);
+        assert!((m.mean.as_secs_f64() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_dur(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(format_dur(Duration::from_millis(5)), "5.000 ms");
+        assert!(format_throughput(2.5e9).contains("G/s"));
+    }
+}

@@ -1,0 +1,192 @@
+//! Property-testing helper (proptest is not in the offline vendor set).
+//!
+//! `forall` runs a property over N randomly generated cases from an
+//! explicit seed; on failure it retries with progressively "smaller"
+//! regenerated cases (shrink-lite: re-draw with a shrunken size hint) and
+//! reports the smallest failing case's seed so the exact case can be
+//! replayed in a debugger.
+//!
+//! ```no_run
+//! use dmlps::util::check::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Case generator handed to properties: wraps the PRNG with a size hint
+/// that shrinks on failure retries.
+pub struct Gen {
+    rng: Pcg32,
+    /// 1.0 = full size, shrinks toward 0 on failure reproduction.
+    pub size: f64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    fn new(case_seed: u64, size: f64) -> Self {
+        Self { rng: Pcg32::new(case_seed), size, case_seed }
+    }
+
+    /// Integer in [lo, hi], scaled down by the shrink size.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + self.rng.index(span.max(1).min(hi - lo + 1))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, lo + (hi - lo) * self.size)
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn gaussian_f32(&mut self, mu: f32, sigma: f32) -> f32 {
+        mu + sigma * self.rng.gaussian() as f32
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_gaussian(&mut v, 0.0, scale);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics (with the failing case
+/// seed and shrink info) if any case fails. The property signals failure
+/// by panicking (e.g. via assert!).
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u32,
+    prop: F,
+) {
+    forall_seeded(name, 0xD31A5EED, cases, prop)
+}
+
+pub fn forall_seeded<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    seed: u64,
+    cases: u32,
+    prop: F,
+) {
+    let mut master = Pcg32::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let failed = run_case(&prop, case_seed, 1.0);
+        if let Some(msg) = failed {
+            // Shrink-lite: re-run the same seed with smaller size hints and
+            // report the smallest size that still fails.
+            let mut smallest = (1.0, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                if let Some(m) = run_case(&prop, case_seed, size) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: seed={case_seed:#x}, size={}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    case_seed: u64,
+    size: f64,
+) -> Option<String> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(case_seed, size);
+        prop(&mut g);
+    });
+    match result {
+        Ok(()) => None,
+        Err(e) => Some(panic_message(&e)),
+    }
+}
+
+fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reverse twice is identity", 50, |g| {
+            let n = g.usize_in(0, 50);
+            let v: Vec<f32> = g.vec_f32(n, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        // suppress the panic backtraces from inner catch_unwind runs
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(|| {
+            forall("always fails", 10, |g| {
+                let x = g.usize_in(0, 100);
+                assert!(x > 1_000_000, "x was {x}");
+            });
+        });
+        std::panic::set_hook(prev);
+        if let Err(e) = result {
+            std::panic::resume_unwind(e);
+        }
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..1000 {
+            let x = g.usize_in(5, 10);
+            assert!((5..=10).contains(&x));
+            let y = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn shrunk_gen_produces_smaller() {
+        let mut big = Gen::new(2, 1.0);
+        let mut small = Gen::new(2, 0.01);
+        let bigs: Vec<usize> = (0..100).map(|_| big.usize_in(0, 10_000)).collect();
+        let smalls: Vec<usize> =
+            (0..100).map(|_| small.usize_in(0, 10_000)).collect();
+        let bmax = *bigs.iter().max().unwrap();
+        let smax = *smalls.iter().max().unwrap();
+        assert!(smax <= bmax / 10, "smax={smax} bmax={bmax}");
+    }
+}

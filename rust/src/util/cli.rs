@@ -1,0 +1,278 @@
+//! Declarative CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, defaults,
+//! required args, and auto-generated `--help`. Used by the `dmlps` binary
+//! and every bench/example that takes parameters.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct ArgSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    required: bool,
+    is_flag: bool,
+}
+
+/// Builder for a command's argument set.
+pub struct ArgParser {
+    command: String,
+    about: String,
+    specs: Vec<ArgSpec>,
+}
+
+/// Parsed argument values.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl ArgParser {
+    pub fn new(command: &str, about: &str) -> Self {
+        Self { command: command.into(), about: about.into(), specs: Vec::new() }
+    }
+
+    /// Optional `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            required: false,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Required `--name <value>`.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            required: true,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            required: false,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.command, self.about);
+        for spec in &self.specs {
+            let left = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else if let Some(d) = &spec.default {
+                format!("  --{} <v> (default {})", spec.name, d)
+            } else {
+                format!("  --{} <v> (required)", spec.name)
+            };
+            s.push_str(&format!("{left:<44} {}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw token list (excluding argv[0]).
+    pub fn parse(&self, tokens: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                out.values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown option --{name}\n\n{}",
+                            self.usage()
+                        )
+                    })?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{name} takes no value");
+                    }
+                    out.flags.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    anyhow::anyhow!("--{name} needs a value")
+                                })?
+                        }
+                    };
+                    out.values.insert(name, val);
+                }
+            } else {
+                out.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if spec.required && !out.values.contains_key(&spec.name) {
+                anyhow::bail!(
+                    "missing required --{}\n\n{}",
+                    spec.name,
+                    self.usage()
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment (skipping argv[0] and, for
+    /// `cargo bench`-invoked binaries, a possible `--bench` token).
+    pub fn parse_env(&self) -> anyhow::Result<Args> {
+        let tokens: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|t| t != "--bench")
+            .collect();
+        self.parse(&tokens)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("argument --{name} not declared/set"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated usize list, e.g. `--cores 16,32,64`.
+    pub fn get_usize_list(&self, name: &str) -> anyhow::Result<Vec<usize>> {
+        self.get(name)
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--{name} '{t}': {e}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn parser() -> ArgParser {
+        ArgParser::new("test", "a test")
+            .opt("steps", "100", "number of steps")
+            .opt("lr", "0.05", "learning rate")
+            .req("dataset", "dataset name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parser()
+            .parse(&toks(&["--dataset", "mnist", "--steps=250"]))
+            .unwrap();
+        assert_eq!(a.get("dataset"), "mnist");
+        assert_eq!(a.get_usize("steps").unwrap(), 250);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.05);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parser()
+            .parse(&toks(&["pos1", "--dataset", "x", "--verbose", "pos2"]))
+            .unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = parser().parse(&toks(&["--steps", "5"])).unwrap_err();
+        assert!(e.to_string().contains("missing required --dataset"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = parser()
+            .parse(&toks(&["--dataset", "x", "--nope", "1"]))
+            .unwrap_err();
+        assert!(e.to_string().contains("unknown option --nope"));
+    }
+
+    #[test]
+    fn value_missing_errors() {
+        let e = parser().parse(&toks(&["--dataset"])).unwrap_err();
+        assert!(e.to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let p = ArgParser::new("t", "t").opt("cores", "1,2,4", "core counts");
+        let a = p.parse(&toks(&[])).unwrap();
+        assert_eq!(a.get_usize_list("cores").unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let e = parser()
+            .parse(&toks(&["--dataset", "x", "--verbose=yes"]))
+            .unwrap_err();
+        assert!(e.to_string().contains("takes no value"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Integration: the four §5.4 methods run end-to-end on one shared
+//! dataset and produce comparable, sane metrics.
+
+use dmlps::baselines::{Itml, ItmlConfig, Kiss, KissConfig, LearnedMetric,
+                       Xing2002, Xing2002Config};
+use dmlps::data::{ExperimentData, PairSet};
+use dmlps::config::Preset;
+
+fn data() -> ExperimentData {
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.n_train = 600;
+    cfg.dataset.n_test = 300;
+    cfg.dataset.n_similar = 800;
+    cfg.dataset.n_dissimilar = 800;
+    cfg.dataset.n_test_pairs = 400;
+    ExperimentData::generate(&cfg.dataset, 7)
+}
+
+fn check(name: &str, m: &LearnedMetric, data: &ExperimentData) -> f64 {
+    let (sim, dis) = m.score(&data.test, &data.test_pairs);
+    assert_eq!(sim.len(), data.test_pairs.similar.len(), "{name}");
+    assert!(sim.iter().chain(dis.iter()).all(|v| v.is_finite()),
+            "{name}: non-finite distances");
+    let ap = dmlps::eval::average_precision(&sim, &dis);
+    assert!((0.0..=1.0).contains(&ap), "{name}: ap={ap}");
+    ap
+}
+
+#[test]
+fn all_methods_produce_valid_metrics() {
+    let data = data();
+    let eu = check("euclid", &LearnedMetric::Euclidean, &data);
+
+    let (x, trace) = Xing2002::new(Xing2002Config {
+        iters: 8, ..Default::default()
+    }).fit_traced(&data.train, &data.pairs, &data.test, &data.test_pairs);
+    assert!(!trace.is_empty());
+    check("xing2002", &x, &data);
+
+    let (i, trace) = Itml::new(ItmlConfig {
+        sweeps: 1, ..Default::default()
+    }).fit_traced(&data.train, &data.pairs, &data.test, &data.test_pairs);
+    assert!(!trace.is_empty());
+    let itml_ap = check("itml", &i, &data);
+    assert!(itml_ap > eu - 0.15, "ITML collapsed: {itml_ap} vs {eu}");
+
+    let k = Kiss::new(KissConfig { pca_dim: 16, ..Default::default() })
+        .fit(&data.train, &data.pairs);
+    check("kiss", &k, &data);
+}
+
+#[test]
+fn traces_are_time_ordered() {
+    let data = data();
+    let (_, trace) = Itml::new(ItmlConfig {
+        sweeps: 1, probe_every_pairs: 100, ..Default::default()
+    }).fit_traced(&data.train, &data.pairs, &data.test, &data.test_pairs);
+    for w in trace.windows(2) {
+        assert!(w[1].0 >= w[0].0);
+    }
+}
+
+#[test]
+fn kiss_handles_duplicate_heavy_pairsets() {
+    // degenerate-ish inputs: few distinct samples, many repeated pairs
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.n_train = 60;
+    cfg.dataset.n_similar = 500;
+    cfg.dataset.n_dissimilar = 500;
+    let data = ExperimentData::generate(&cfg.dataset, 9);
+    assert!(PairSet::sample(
+        &data.train, 10, 10,
+        &mut dmlps::util::rng::Pcg32::new(1)).check_labels(&data.train));
+    let k = Kiss::new(KissConfig { pca_dim: 8, ..Default::default() })
+        .fit(&data.train, &data.pairs);
+    check("kiss-degenerate", &k, &data);
+}

@@ -1,0 +1,127 @@
+//! Integration: the threaded parameter server end to end (native engine).
+
+use dmlps::config::{Consistency, Preset};
+use dmlps::data::ExperimentData;
+use dmlps::ps::{FaultSpec, RunOptions};
+
+fn tiny_cfg(steps: usize, workers: usize) -> dmlps::config::ExperimentConfig {
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = steps;
+    cfg.cluster.workers = workers;
+    cfg
+}
+
+/// mnist_small-style config: enough signal to learn in seconds, enough
+/// compute per step that parameter refreshes keep pace with workers.
+fn mid_cfg(steps: usize, workers: usize) -> dmlps::config::ExperimentConfig {
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.name = "ps_mid".into();
+    cfg.dataset.dim = 64;
+    cfg.dataset.n_classes = 10;
+    cfg.dataset.separation = 4.0;
+    cfg.dataset.n_train = 2_000;
+    cfg.dataset.n_test = 1_000;
+    cfg.dataset.n_similar = 5_000;
+    cfg.dataset.n_dissimilar = 5_000;
+    cfg.dataset.n_test_pairs = 2_000;
+    cfg.model.k = 48;
+    cfg.model.init_scale = 0.2;
+    cfg.optim.batch_sim = 16;
+    cfg.optim.batch_dis = 16;
+    cfg.optim.lr = 0.3;
+    cfg.optim.steps = steps;
+    cfg.cluster.workers = workers;
+    cfg.artifact_variant = None;
+    cfg
+}
+
+#[test]
+fn training_converges_and_beats_euclidean() {
+    let cfg = mid_cfg(1500, 2);
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default()).unwrap();
+    assert_eq!(r.applied_updates, 3000);
+    let mut eng = dmlps::dml::NativeEngine::new();
+    let ap = dmlps::cli::driver::ap_of_l(&mut eng, &r.l, &data).unwrap();
+    let eu = dmlps::cli::driver::ap_euclidean(&data);
+    assert!(ap > eu + 0.1, "ap={ap} euclid={eu}");
+}
+
+#[test]
+fn every_worker_completes_its_budget() {
+    for workers in [1usize, 3, 5] {
+        let cfg = tiny_cfg(50, workers);
+        let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+        let r = dmlps::cli::driver::train_distributed(
+            &cfg, &data, "native", &RunOptions::default()).unwrap();
+        assert_eq!(r.worker_stats.len(), workers);
+        for ws in &r.worker_stats {
+            assert_eq!(ws.steps_done, 50, "worker {}", ws.id);
+        }
+        assert_eq!(r.applied_updates, (50 * workers) as u64);
+    }
+}
+
+#[test]
+fn consistency_models_all_complete() {
+    for consistency in [Consistency::Asp, Consistency::Bsp,
+                        Consistency::Ssp { staleness: 2 }] {
+        let mut cfg = tiny_cfg(60, 3);
+        cfg.cluster.consistency = consistency;
+        let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+        let r = dmlps::cli::driver::train_distributed(
+            &cfg, &data, "native", &RunOptions::default()).unwrap();
+        assert_eq!(r.applied_updates, 180, "{consistency:?}");
+        if consistency == Consistency::Bsp {
+            // BSP workers must have blocked at the barrier at least once
+            let wait: f64 = r.worker_stats.iter().map(|w| w.wait_s).sum();
+            assert!(wait >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn survives_gradient_drops() {
+    // 20% of gradient messages dropped: training still completes and
+    // still learns (the dropped updates are simply lost work, as in a
+    // lossy datacenter transport).
+    let cfg = tiny_cfg(400, 2);
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let opts = RunOptions {
+        faults: FaultSpec {
+            drop_grad_prob: 0.2,
+            drop_param_prob: 0.0,
+            latency: std::time::Duration::ZERO,
+        },
+        ..Default::default()
+    };
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &opts).unwrap();
+    let dropped: u64 =
+        r.worker_stats.iter().map(|w| w.grads_dropped).sum();
+    assert!(dropped > 50, "fault injection inactive: {dropped}");
+    assert!(r.applied_updates < 800);
+    let first = r.curve.points.first().unwrap().objective;
+    let best = r.curve.points.iter().map(|p| p.objective)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best < first * 0.95, "no progress under drops: \
+            first={first} best={best}");
+}
+
+#[test]
+fn survives_param_drops_and_latency() {
+    let cfg = tiny_cfg(200, 2);
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let opts = RunOptions {
+        faults: FaultSpec {
+            drop_grad_prob: 0.0,
+            drop_param_prob: 0.5,
+            latency: std::time::Duration::from_micros(100),
+        },
+        ..Default::default()
+    };
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &opts).unwrap();
+    assert_eq!(r.applied_updates, 400);
+}

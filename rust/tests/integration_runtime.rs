@@ -1,0 +1,75 @@
+//! Integration: AOT artifacts → PJRT runtime → engine parity.
+//! Requires `make artifacts`; tests self-skip when absent.
+
+use dmlps::dml::{Engine, MinibatchRef, NativeEngine};
+use dmlps::linalg::Mat;
+use dmlps::runtime::{artifacts_available, artifacts_dir, Manifest, XlaEngine};
+use dmlps::util::rng::Pcg32;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn manifest_covers_all_config_variants() {
+    if skip() { return; }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    for preset in dmlps::config::Preset::all() {
+        let cfg = preset.config();
+        let variant = cfg.artifact_variant.unwrap();
+        let shape = m.variant(&variant).unwrap();
+        assert_eq!(shape.k, cfg.model.k, "{variant} k");
+        assert_eq!(shape.d, cfg.dataset.dim, "{variant} d");
+        assert_eq!(shape.bs, cfg.optim.batch_sim, "{variant} bs");
+        for f in ["loss_grad", "step", "pair_dist"] {
+            assert!(m.entry(&variant, f).is_ok(), "{variant}.{f}");
+        }
+    }
+}
+
+#[test]
+fn xla_and_native_agree_on_training_trajectory() {
+    if skip() { return; }
+    // 20 SGD steps from the same init on the same batches must produce
+    // near-identical L under both engines (end-to-end numeric parity).
+    let mut xe = XlaEngine::load(&artifacts_dir(), "test_small").unwrap();
+    let s = xe.shape();
+    let mut ne = NativeEngine::new();
+    let mut rng = Pcg32::new(42);
+    let mut lx = Mat::zeros(s.k, s.d);
+    rng.fill_gaussian(&mut lx.data, 0.0, 0.2);
+    let mut ln = lx.clone();
+    for step in 0..20 {
+        let mut ds = vec![0.0f32; s.bs * s.d];
+        let mut dd = vec![0.0f32; s.bd * s.d];
+        rng.fill_gaussian(&mut ds, 0.0, 1.0);
+        rng.fill_gaussian(&mut dd, 0.0, 1.0);
+        let b1 = MinibatchRef::new(&ds, &dd, s.bs, s.bd, s.d);
+        let fx = xe.step(&mut lx, &b1, 1.0, 0.05).unwrap();
+        let b2 = MinibatchRef::new(&ds, &dd, s.bs, s.bd, s.d);
+        let fn_ = ne.step(&mut ln, &b2, 1.0, 0.05).unwrap();
+        assert!((fx - fn_).abs() < 1e-3 * (1.0 + fn_.abs()),
+                "step {step}: loss {fx} vs {fn_}");
+    }
+    assert!(lx.max_abs_diff(&ln) < 1e-2, "trajectory diverged");
+}
+
+#[test]
+fn xla_engine_through_ps_training() {
+    if skip() { return; }
+    // full distributed path over the XLA engine on the tiny preset
+    let mut cfg = dmlps::config::Preset::Tiny.config();
+    cfg.optim.steps = 30;
+    cfg.cluster.workers = 2;
+    let data = dmlps::data::ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "xla", &dmlps::ps::RunOptions::default()).unwrap();
+    assert_eq!(r.applied_updates, 60);
+    let first = r.curve.points.first().unwrap().objective;
+    let last = r.curve.points.last().unwrap().objective;
+    assert!(last < first, "objective should decrease: {first} -> {last}");
+}

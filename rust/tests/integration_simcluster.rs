@@ -1,0 +1,56 @@
+//! Integration: the cluster simulator reproduces the paper's qualitative
+//! scalability claims on a small numeric workload.
+
+use dmlps::cli::driver::{simulate_convergence, SimKnobs};
+use dmlps::config::Preset;
+use dmlps::data::ExperimentData;
+
+fn cfg() -> dmlps::config::ExperimentConfig {
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.n_similar = 2_000;
+    cfg.dataset.n_dissimilar = 2_000;
+    cfg.optim.batch_sim = 8;
+    cfg.optim.batch_dis = 8;
+    cfg
+}
+
+#[test]
+fn more_cores_converge_faster_in_sim_time() {
+    let cfg = cfg();
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let knobs = |u| SimKnobs {
+        grad_seconds: 0.5, // compute-dominated regime (paper's)
+        bytes_per_msg: None,
+        total_updates: u,
+    };
+    let t1 = simulate_convergence(&cfg, &data, 1, 16, knobs(300));
+    let t4 = simulate_convergence(&cfg, &data, 4, 16, knobs(300));
+    assert!(t4.sim_seconds < t1.sim_seconds * 0.35,
+            "4 machines {} vs 1 machine {}", t4.sim_seconds,
+            t1.sim_seconds);
+    // both make real optimization progress
+    for r in [&t1, &t4] {
+        let first = r.curve.points.first().unwrap().objective;
+        let last = r.curve.points.last().unwrap().objective;
+        assert!(last < first, "{first} -> {last}");
+    }
+}
+
+#[test]
+fn simulated_objective_tracks_serial_quality() {
+    // 1 machine x 1 core with instant network == plain serial SGD;
+    // the simulated curve must descend like the real thing.
+    let cfg = cfg();
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = simulate_convergence(&cfg, &data, 1, 1, SimKnobs {
+        grad_seconds: 0.1,
+        bytes_per_msg: None,
+        total_updates: 400,
+    });
+    let first = r.curve.points.first().unwrap().objective;
+    let last = r.curve.points.last().unwrap().objective;
+    assert!(last < first * 0.8, "{first} -> {last}");
+    assert!((r.sim_seconds - 40.0).abs() < 5.0,
+            "serial time should be ~updates*grad_seconds: {}",
+            r.sim_seconds);
+}

@@ -1,0 +1,141 @@
+//! Property tests over coordinator invariants: routing (partitioning),
+//! batching, state (PS protocol), and numeric invariants of the
+//! objective — via the in-tree `util::check` harness.
+
+use dmlps::data::{partition_pairs, PairSet, SyntheticSpec};
+use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
+use dmlps::linalg::Mat;
+use dmlps::util::check::forall;
+use dmlps::util::rng::Pcg32;
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    forall("partition covers every pair exactly once", 40, |g| {
+        let ds = SyntheticSpec::tiny().generate(g.case_seed);
+        let n_sim = g.usize_in(20, 400);
+        let n_dis = g.usize_in(20, 400);
+        let mut rng = Pcg32::new(g.case_seed ^ 1);
+        let pairs = PairSet::sample(&ds, n_sim, n_dis, &mut rng);
+        let p = g.usize_in(1, 8.min(n_sim).min(n_dis));
+        let shards = partition_pairs(&pairs, p, g.case_seed);
+        let total: usize = shards.iter().map(|s| s.pairs.len()).sum();
+        assert_eq!(total, pairs.len());
+        // balance
+        let sizes: Vec<usize> =
+            shards.iter().map(|s| s.pairs.similar.len()).collect();
+        let (mn, mx) =
+            (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "unbalanced {sizes:?}");
+    });
+}
+
+#[test]
+fn prop_pair_labels_respected() {
+    forall("sampled pairs respect class labels", 30, |g| {
+        let mut spec = SyntheticSpec::tiny();
+        spec.n_classes = g.usize_in(2, 8);
+        let ds = spec.generate(g.case_seed);
+        let mut rng = Pcg32::new(g.case_seed ^ 2);
+        let pairs = PairSet::sample(&ds, 100, 100, &mut rng);
+        assert!(pairs.check_labels(&ds));
+    });
+}
+
+#[test]
+fn prop_objective_nonnegative_and_bounded_by_lambda_at_zero() {
+    forall("f(0) == lambda (all hinges active, sim term zero)", 30, |g| {
+        let d = g.usize_in(2, 32);
+        let k = g.usize_in(1, d);
+        let bs = g.usize_in(1, 8);
+        let bd = g.usize_in(1, 8);
+        let lambda = g.f64_in(0.1, 4.0) as f32;
+        let l = Mat::zeros(k, d);
+        let ds = g.vec_f32(bs * d, 1.0);
+        let dd = g.vec_f32(bd * d, 1.0);
+        let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+        let mut eng = NativeEngine::new();
+        let mut grad = Mat::zeros(k, d);
+        let f = eng.loss_grad(&l, &batch, lambda, &mut grad).unwrap();
+        assert!((f - lambda).abs() < 1e-5 * (1.0 + lambda));
+    });
+}
+
+#[test]
+fn prop_gradient_is_descent_direction() {
+    forall("one small step along -grad does not increase f", 25, |g| {
+        let d = g.usize_in(4, 24);
+        let k = g.usize_in(2, d);
+        let bs = g.usize_in(2, 8);
+        let bd = g.usize_in(2, 8);
+        let mut l = Mat::zeros(k, d);
+        let scale = g.f64_in(0.05, 0.5) as f32;
+        for v in l.data.iter_mut() {
+            *v = g.gaussian_f32(0.0, scale);
+        }
+        let ds = g.vec_f32(bs * d, 1.0);
+        let dd = g.vec_f32(bd * d, 1.0);
+        let mut eng = NativeEngine::new();
+        let mut grad = Mat::zeros(k, d);
+        let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+        let f0 = eng.loss_grad(&l, &batch, 1.0, &mut grad).unwrap();
+        let gnorm = grad.fro_norm();
+        if gnorm < 1e-6 {
+            return; // flat point (all hinges exactly off) — fine
+        }
+        let eps = 1e-3 / gnorm;
+        l.axpy_inplace(-eps, &grad);
+        let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+        let f1 = eng.loss_grad(&l, &batch, 1.0, &mut grad).unwrap();
+        assert!(f1 <= f0 + 1e-5, "f0={f0} f1={f1}");
+    });
+}
+
+#[test]
+fn prop_pair_dist_matches_mahalanobis_identity() {
+    forall("‖LΔ‖² == Δᵀ(LᵀL)Δ", 25, |g| {
+        let d = g.usize_in(2, 20);
+        let k = g.usize_in(1, d);
+        let b = g.usize_in(1, 10);
+        let mut l = Mat::zeros(k, d);
+        for v in l.data.iter_mut() {
+            *v = g.gaussian_f32(0.0, 0.5);
+        }
+        let mut diffs = Mat::zeros(b, d);
+        for v in diffs.data.iter_mut() {
+            *v = g.gaussian_f32(0.0, 1.0);
+        }
+        let mut eng = NativeEngine::new();
+        let dist = eng.pair_dist(&l, &diffs).unwrap();
+        let m = l.matmul_at(&l);
+        for r in 0..b {
+            let md = m.matvec(diffs.row(r));
+            let want = dmlps::linalg::dot(diffs.row(r), &md);
+            assert!((dist[r] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                    "{} vs {}", dist[r], want);
+        }
+    });
+}
+
+#[test]
+fn prop_sgd_step_is_linear_in_lr() {
+    forall("L' = L - lr*G exactly", 25, |g| {
+        let d = g.usize_in(2, 16);
+        let k = g.usize_in(1, d);
+        let bs = g.usize_in(1, 6);
+        let problem = DmlProblem::new(d, k, 1.0);
+        let l0 = problem.init_l(0.2, g.case_seed);
+        let ds = g.vec_f32(bs * d, 1.0);
+        let dd = g.vec_f32(bs * d, 1.0);
+        let lr = g.f64_in(0.001, 0.2) as f32;
+        let mut eng = NativeEngine::new();
+        let mut grad = Mat::zeros(k, d);
+        let batch = MinibatchRef::new(&ds, &dd, bs, bs, d);
+        eng.loss_grad(&l0, &batch, 1.0, &mut grad).unwrap();
+        let mut l1 = l0.clone();
+        let batch = MinibatchRef::new(&ds, &dd, bs, bs, d);
+        eng.step(&mut l1, &batch, 1.0, lr).unwrap();
+        let mut want = l0.clone();
+        want.axpy_inplace(-lr, &grad);
+        assert!(l1.max_abs_diff(&want) < 1e-5);
+    });
+}
