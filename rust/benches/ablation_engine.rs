@@ -7,8 +7,7 @@
 //! artifacts are absent.
 
 use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
-use dmlps::linalg::Mat;
-use dmlps::runtime::{artifacts_available, artifacts_dir, XlaEngine};
+use dmlps::runtime::artifacts_dir;
 use dmlps::util::bench::Bench;
 use dmlps::util::rng::Pcg32;
 use std::time::Duration;
@@ -50,29 +49,36 @@ fn main() -> anyhow::Result<()> {
             },
         );
 
-        // xla
-        if artifacts_available() {
-            let mut xe = XlaEngine::load(&artifacts_dir(), variant)?;
-            let mut l = l0.clone();
-            b.bench_with_work(
-                &format!("{variant} xla step (fused, donated)"),
-                Some(flops),
-                || {
-                    let batch = MinibatchRef::new(&dsb, &ddb, bs, bd, d);
-                    xe.step(&mut l, &batch, 1.0, 1e-6).unwrap();
-                },
-            );
-            // loss_grad path (what PS workers call)
-            let mut g = Mat::zeros(k, d);
-            let mut xe2 = XlaEngine::load(&artifacts_dir(), variant)?;
-            b.bench_with_work(
-                &format!("{variant} xla loss_grad"),
-                Some(flops),
-                || {
-                    let batch = MinibatchRef::new(&dsb, &ddb, bs, bd, d);
-                    xe2.loss_grad(&l0, &batch, 1.0, &mut g).unwrap();
-                },
-            );
+        // xla (only in builds that carry the PJRT bindings)
+        #[cfg(feature = "xla")]
+        {
+            use dmlps::linalg::Mat;
+            use dmlps::runtime::{artifacts_available, XlaEngine};
+            if artifacts_available() {
+                let mut xe = XlaEngine::load(&artifacts_dir(), variant)?;
+                let mut l = l0.clone();
+                b.bench_with_work(
+                    &format!("{variant} xla step (fused, donated)"),
+                    Some(flops),
+                    || {
+                        let batch =
+                            MinibatchRef::new(&dsb, &ddb, bs, bd, d);
+                        xe.step(&mut l, &batch, 1.0, 1e-6).unwrap();
+                    },
+                );
+                // loss_grad path (what PS workers call)
+                let mut g = Mat::zeros(k, d);
+                let mut xe2 = XlaEngine::load(&artifacts_dir(), variant)?;
+                b.bench_with_work(
+                    &format!("{variant} xla loss_grad"),
+                    Some(flops),
+                    || {
+                        let batch =
+                            MinibatchRef::new(&dsb, &ddb, bs, bd, d);
+                        xe2.loss_grad(&l0, &batch, 1.0, &mut g).unwrap();
+                    },
+                );
+            }
         }
     }
     b.report();

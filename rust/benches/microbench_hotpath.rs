@@ -1,11 +1,18 @@
-//! Microbenchmarks of the L3 hot-path components: the matmul kernels
-//! behind the native engine, the hinge pass, message-queue throughput,
-//! and parameter-copy cost — the quantities the §Perf optimization loop
-//! tracks.
+//! Microbenchmarks of the L3 hot-path components: the packed GEMM
+//! kernels behind the native engine, the full sharded `loss_grad` across
+//! thread counts, message-queue throughput, and parameter-copy cost —
+//! the quantities the §Perf optimization loop tracks.
+//!
+//! Besides the human-readable tables, this bench writes a
+//! machine-readable `BENCH_hotpath.json` (override the path with
+//! `DMLPS_BENCH_OUT`) so future PRs have a standing perf baseline:
+//! GFLOP/s per kernel, per thread count, at the paper's MNIST shapes.
 
 use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
 use dmlps::linalg::{self, Mat};
 use dmlps::util::bench::Bench;
+use dmlps::util::json::Json;
+use dmlps::util::pool;
 use dmlps::util::rng::Pcg32;
 use std::time::Duration;
 
@@ -13,13 +20,16 @@ fn main() {
     let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
     let target = Duration::from_millis(if quick { 300 } else { 1500 });
     let mut rng = Pcg32::new(3);
+    let mut groups: Vec<Json> = Vec::new();
+
+    // MNIST shapes (paper Table 1 row 1): d=780, k=600, minibatch 500+500
+    let d = 780;
+    let k = 600;
+    let bsz = 500;
 
     // ---- dot / matmul kernels at mnist shapes ----
     let mut b = Bench::new("linalg kernels (mnist shapes)")
         .with_target_time(target);
-    let d = 780;
-    let k = 600;
-    let bsz = 500;
     let mut l = Mat::zeros(k, d);
     rng.fill_gaussian(&mut l.data, 0.0, 0.1);
     let mut diffs = Mat::zeros(bsz, d);
@@ -32,20 +42,33 @@ fn main() {
     });
 
     let z_flops = 2.0 * bsz as f64 * k as f64 * d as f64;
-    b.bench_with_work("project Z = D·Lᵀ (500×780 · 780×600)",
-                      Some(z_flops), || {
-        std::hint::black_box(diffs.matmul_bt(&l));
-    });
+    b.bench_with_work(
+        &format!(
+            "project Z = D·Lᵀ (500×780 · 780×600, {} threads)",
+            pool::global().threads()
+        ),
+        Some(z_flops),
+        || {
+            std::hint::black_box(diffs.matmul_bt(&l));
+        },
+    );
 
     let z = diffs.matmul_bt(&l);
     let mut g = Mat::zeros(k, d);
-    b.bench_with_work("outer G = Zᵀ·D (600×500 · 500×780)",
-                      Some(z_flops), || {
-        linalg::matmul_at_into(&z, &diffs, &mut g, 0.0);
-    });
+    b.bench_with_work(
+        &format!(
+            "outer G = Zᵀ·D (600×500 · 500×780, {} threads)",
+            pool::global().threads()
+        ),
+        Some(z_flops),
+        || {
+            linalg::matmul_at_into(&z, &diffs, &mut g, 0.0);
+        },
+    );
     b.report();
+    groups.push(b.to_json());
 
-    // ---- full engine step decomposition ----
+    // ---- full engine step: sharded loss_grad across thread counts ----
     let mut b = Bench::new("native engine, mnist minibatch")
         .with_target_time(target);
     let problem = DmlProblem::new(d, k, 1.0);
@@ -53,26 +76,48 @@ fn main() {
     let mut ddb = vec![0.0f32; bsz * d];
     rng.fill_gaussian(&mut dsb, 0.0, 1.0);
     rng.fill_gaussian(&mut ddb, 0.0, 1.0);
+    let step_flops = problem.step_flops(bsz, bsz);
+
+    // the acceptance-tracked sweep: 1 vs 4 threads (plus the machine
+    // default when it differs)
+    let mut sweep: Vec<usize> = vec![1, 2, 4];
+    let auto = pool::default_threads();
+    if !sweep.contains(&auto) {
+        sweep.push(auto);
+    }
+    let mut gflops_by_threads: Vec<(String, Json)> = Vec::new();
+    for &threads in &sweep {
+        let mut eng = NativeEngine::with_threads(threads);
+        let mut g = Mat::zeros(k, d);
+        let m = b.bench_with_work(
+            &format!("loss_grad (4 GEMMs + hinge, {threads} threads)"),
+            Some(step_flops),
+            || {
+                let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
+                eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+            },
+        );
+        gflops_by_threads.push((
+            threads.to_string(),
+            Json::Num(m.throughput().unwrap_or(0.0) / 1e9),
+        ));
+    }
+
     let mut eng = NativeEngine::new();
-    let mut g = Mat::zeros(k, d);
-    b.bench_with_work(
-        "loss_grad (4 GEMMs + hinge)",
-        Some(problem.step_flops(bsz, bsz)),
-        || {
-            let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
-            eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
-        },
-    );
     let mut l2 = l.clone();
     b.bench_with_work(
-        "step (loss_grad + axpy)",
-        Some(problem.step_flops(bsz, bsz)),
+        &format!(
+            "step (loss_grad + axpy, {} threads)",
+            eng.threads()
+        ),
+        Some(step_flops),
         || {
             let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
             eng.step(&mut l2, &batch, 1.0, 1e-7).unwrap();
         },
     );
     b.report();
+    groups.push(b.to_json());
 
     // ---- PS plumbing: queue throughput & parameter copies ----
     let mut b = Bench::new("parameter-server plumbing")
@@ -104,6 +149,7 @@ fn main() {
         std::hint::black_box(&t);
     });
     b.report();
+    groups.push(b.to_json());
 
     // ---- minibatch materialization (diff_into path) ----
     let mut b = Bench::new("minibatch materialization")
@@ -121,4 +167,26 @@ fn main() {
         || it.next_batch(),
     );
     b.report();
+    groups.push(b.to_json());
+
+    // ---- machine-readable perf baseline ----
+    let out = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("quick", Json::Bool(quick)),
+        ("default_threads", Json::Num(auto as f64)),
+        ("shapes", Json::obj(vec![
+            ("k", Json::Num(k as f64)),
+            ("d", Json::Num(d as f64)),
+            ("batch_sim", Json::Num(bsz as f64)),
+            ("batch_dis", Json::Num(bsz as f64)),
+        ])),
+        ("loss_grad_gflops_by_threads",
+         Json::Obj(gflops_by_threads.into_iter().collect())),
+        ("groups", Json::Arr(groups)),
+    ]);
+    let path = std::env::var("DMLPS_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    std::fs::write(&path, out.to_string_pretty())
+        .expect("write bench json");
+    println!("\nwrote machine-readable baseline to {path}");
 }

@@ -21,7 +21,10 @@ use crate::simcluster::{
 use crate::util::rng::Pcg32;
 
 /// Resolve an engine factory by name: "native", "xla", or "auto"
-/// (xla when artifacts are present, else native).
+/// (xla when the runtime is compiled in and artifacts are present, else
+/// native). Per-worker compute width is applied by the worker itself:
+/// `run_training` copies `cluster.threads_per_worker` into
+/// `WorkerConfig::threads` and each worker calls `Engine::set_threads`.
 pub fn engine_factory(
     name: &str,
     cfg: &ExperimentConfig,
@@ -29,6 +32,11 @@ pub fn engine_factory(
     match name {
         "native" => Ok(native_factory()),
         "xla" => {
+            anyhow::ensure!(
+                cfg!(feature = "xla"),
+                "this binary was built without the XLA/PJRT runtime \
+                 (rebuild with `--features xla`)"
+            );
             let variant = cfg.artifact_variant.clone().ok_or_else(|| {
                 anyhow::anyhow!("config has no artifact variant for xla")
             })?;
@@ -39,12 +47,13 @@ pub fn engine_factory(
             Ok(crate::runtime::xla_factory(&variant))
         }
         "auto" => {
-            if crate::runtime::artifacts_available()
+            if cfg!(feature = "xla")
+                && crate::runtime::artifacts_available()
                 && cfg.artifact_variant.is_some()
             {
                 engine_factory("xla", cfg)
             } else {
-                Ok(native_factory())
+                engine_factory("native", cfg)
             }
         }
         other => anyhow::bail!("unknown engine '{other}' (native|xla|auto)"),

@@ -76,6 +76,11 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
     if let Ok(seed) = a.get_u64("seed") {
         cfg.seed = seed;
     }
+    if let Ok(t) = a.get_usize("threads") {
+        if t > 0 {
+            cfg.cluster.threads_per_worker = t;
+        }
+    }
     Ok(cfg)
 }
 
@@ -87,6 +92,8 @@ fn common_parser(cmd: &str, about: &str) -> ArgParser {
         .opt("steps", "0", "override steps per worker (0 = preset)")
         .opt("consistency", "", "asp|bsp|ssp:N (default from preset)")
         .opt("seed", "42", "PRNG seed")
+        .opt("threads", "0",
+             "compute threads per worker engine (0 = all cores)")
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -97,10 +104,16 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
     println!(
-        "train: dataset={} d={} k={} workers={} steps={} engine={} \
-         consistency={}",
+        "train: dataset={} d={} k={} workers={} threads/worker={} \
+         steps={} engine={} consistency={}",
         cfg.dataset.name, cfg.dataset.dim, cfg.model.k,
-        cfg.cluster.workers, cfg.optim.steps, a.get("engine"),
+        cfg.cluster.workers,
+        if cfg.cluster.threads_per_worker == 0 {
+            "auto".to_string()
+        } else {
+            cfg.cluster.threads_per_worker.to_string()
+        },
+        cfg.optim.steps, a.get("engine"),
         cfg.cluster.consistency.name()
     );
     let data = ExperimentData::generate(&cfg.dataset, cfg.seed);

@@ -114,6 +114,9 @@ pub struct ClusterConfig {
     /// Server-side gradient batch: how many worker updates the update
     /// thread folds in per dequeue round.
     pub server_batch: usize,
+    /// Compute threads per worker engine — the paper's "C cores per
+    /// machine" knob. `0` = use all available cores (machine default).
+    pub threads_per_worker: usize,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -190,6 +193,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    threads_per_worker: 0,
                 },
                 seed: 42,
                 artifact_variant: Some("test_small".into()),
@@ -220,6 +224,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    threads_per_worker: 0,
                 },
                 seed: 42,
                 artifact_variant: Some("mnist".into()),
@@ -250,6 +255,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    threads_per_worker: 0,
                 },
                 seed: 42,
                 artifact_variant: Some("imnet60k_scaled".into()),
@@ -280,6 +286,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    threads_per_worker: 0,
                 },
                 seed: 42,
                 artifact_variant: Some("imnet1m_scaled".into()),
@@ -365,6 +372,8 @@ impl ExperimentConfig {
                  Json::Str(self.cluster.consistency.name())),
                 ("server_batch",
                  Json::Num(self.cluster.server_batch as f64)),
+                ("threads_per_worker",
+                 Json::Num(self.cluster.threads_per_worker as f64)),
             ])),
             ("seed", Json::Num(self.seed as f64)),
             ("artifact_variant", match &self.artifact_variant {
@@ -423,6 +432,11 @@ impl ExperimentConfig {
                     c.get("consistency").as_str().unwrap_or("asp"),
                 )?,
                 server_batch: us(c, "server_batch")?,
+                // absent in configs predating the threads knob → auto
+                threads_per_worker: c
+                    .get("threads_per_worker")
+                    .as_usize()
+                    .unwrap_or(0),
             },
             seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
             artifact_variant: j

@@ -97,7 +97,10 @@ pub type EngineFactory = std::sync::Arc<
     dyn Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync,
 >;
 
-/// Factory for the native engine (always available).
+/// Factory for the native engine (always available) on the shared global
+/// pool. Callers that need a specific width (the PS workers, via
+/// `WorkerConfig::threads`) resize it afterwards with
+/// [`Engine::set_threads`].
 pub fn native_factory() -> EngineFactory {
     std::sync::Arc::new(|| Ok(Box::new(NativeEngine::new()) as Box<dyn Engine>))
 }
@@ -108,6 +111,11 @@ pub fn native_factory() -> EngineFactory {
 /// [`EngineFactory`] to construct engines inside worker threads.
 pub trait Engine {
     fn name(&self) -> &'static str;
+
+    /// Resize the engine's compute parallelism, if it has any (`0` =
+    /// machine default). The native engine rebuilds its thread pool;
+    /// backends without host-side parallelism ignore this.
+    fn set_threads(&mut self, _threads: usize) {}
 
     /// Compute objective and gradient on a minibatch; writes the gradient
     /// into `g` (shape k × d) and returns the loss.

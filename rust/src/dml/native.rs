@@ -1,46 +1,124 @@
-//! Native CPU engine: the pure-Rust hot path.
+//! Native CPU engine: the pure-Rust multicore hot path.
 //!
 //! Mirrors the Pallas kernel's dataflow (project → hinge → outer-product)
-//! with cache-blocked matmuls and reusable scratch buffers — the steady
-//! state allocates nothing. Serves three roles: reference implementation
-//! for runtime tests, fallback when artifacts are absent, and the subject
-//! of the L3 performance pass (see EXPERIMENTS.md §Perf).
+//! but sharded across a scoped thread pool the way the paper's worker
+//! model assumes a machine saturates its C cores: the minibatch rows are
+//! split into per-thread shards; each shard projects its row block
+//! through the packed GEMM microkernel, applies the hinge/scaling pass,
+//! and accumulates a private k×d partial gradient; a tree reduction then
+//! merges the partials (and the f64 partial losses) in a fixed order.
+//!
+//! Consequences: one `loss_grad` call genuinely uses all lanes of its
+//! pool; results are bit-reproducible for a fixed thread count (the
+//! shard split and merge order are deterministic), and match the scalar
+//! f64 reference within float tolerance at every thread count (see the
+//! property tests below). Steady state allocates nothing — all shard
+//! scratch is reused across calls.
+
+use std::sync::Arc;
 
 use super::{Engine, MinibatchRef};
+use crate::linalg::gemm::{gemm_into, KMajor};
 use crate::linalg::{self, Mat};
+use crate::util::pool::{balanced_range, ThreadPool};
+
+/// Per-shard scratch: projections for this shard's row block, a private
+/// partial gradient, and partial loss terms.
+struct ShardScratch {
+    /// Projections of this shard's similar rows: (shard bs × k).
+    zs: Mat,
+    /// Projections of this shard's dissimilar rows: (shard bd × k).
+    zd: Mat,
+    /// Partial gradient: (k × d).
+    g: Mat,
+    loss_sim: f64,
+    loss_dis: f64,
+}
+
+/// Raw shard-array pointer for the pairwise tree-reduction step; each
+/// reduction task touches a disjoint (dst, src) index pair.
+#[derive(Clone, Copy)]
+struct RawShards(*mut ShardScratch);
+unsafe impl Send for RawShards {}
+unsafe impl Sync for RawShards {}
 
 pub struct NativeEngine {
-    /// Scratch projections, reused across calls (resized on shape change).
-    zs: Mat,
-    zd: Mat,
+    pool: Arc<ThreadPool>,
+    shards: Vec<ShardScratch>,
+    /// (bs, bd, d, k) the shard scratch is currently sized for.
+    shape: (usize, usize, usize, usize),
 }
 
 impl NativeEngine {
+    /// Engine on the process-wide shared pool (all cores by default;
+    /// override with `DMLPS_THREADS` or [`NativeEngine::with_threads`]).
     pub fn new() -> Self {
-        NativeEngine { zs: Mat::zeros(0, 0), zd: Mat::zeros(0, 0) }
+        Self::with_pool(crate::util::pool::global())
     }
 
-    fn ensure_scratch(&mut self, bs: usize, bd: usize, k: usize) {
-        if self.zs.rows != bs || self.zs.cols != k {
-            self.zs = Mat::zeros(bs, k);
-        }
-        if self.zd.rows != bd || self.zd.cols != k {
-            self.zd = Mat::zeros(bd, k);
-        }
+    /// Engine with a private pool of exactly `threads` lanes.
+    pub fn with_threads(threads: usize) -> Self {
+        Self::with_pool(Arc::new(ThreadPool::new(threads)))
     }
 
-    /// Z = D Lᵀ where D is a borrowed (b × d) row-major buffer.
-    fn project_into(l: &Mat, diffs: &[f32], b: usize, z: &mut Mat) {
-        let d = l.cols;
-        let k = l.rows;
-        debug_assert_eq!(z.rows, b);
-        debug_assert_eq!(z.cols, k);
-        for r in 0..b {
-            let drow = &diffs[r * d..(r + 1) * d];
-            let zrow = &mut z.data[r * k..(r + 1) * k];
-            for (j, zv) in zrow.iter_mut().enumerate() {
-                *zv = linalg::dot(drow, l.row(j));
-            }
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        NativeEngine { pool, shards: Vec::new(), shape: (0, 0, 0, 0) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn ensure_scratch(&mut self, bs: usize, bd: usize, d: usize, k: usize) {
+        let n = self.pool.threads().min(bs.max(bd)).max(1);
+        if self.shards.len() == n && self.shape == (bs, bd, d, k) {
+            return;
+        }
+        self.shards.clear();
+        for i in 0..n {
+            let rs = balanced_range(bs, n, i).len();
+            let rd = balanced_range(bd, n, i).len();
+            self.shards.push(ShardScratch {
+                zs: Mat::zeros(rs, k),
+                zd: Mat::zeros(rd, k),
+                g: Mat::zeros(k, d),
+                loss_sim: 0.0,
+                loss_dis: 0.0,
+            });
+        }
+        self.shape = (bs, bd, d, k);
+    }
+
+    /// Merge shard partials pairwise (stride-doubling tree), each level's
+    /// disjoint pairs running in parallel; shard 0 ends up with the sum.
+    /// The merge order is a function of the shard count alone, so results
+    /// are deterministic for a fixed thread count.
+    fn tree_reduce(&mut self) {
+        let n = self.shards.len();
+        let base = RawShards(self.shards.as_mut_ptr());
+        let pool = self.pool.clone();
+        let mut stride = 1;
+        while stride < n {
+            let mut pairs: Vec<(usize, usize)> = (0..n)
+                .step_by(2 * stride)
+                .filter(|&i| i + stride < n)
+                .map(|i| (i, i + stride))
+                .collect();
+            pool.for_each_mut(&mut pairs, |_, &mut (i, j)| {
+                // SAFETY: within one level, every shard index appears in
+                // at most one (i, j) pair and i ≠ j, so the &mut and &
+                // below never alias; the barrier between levels orders
+                // the cross-level accesses.
+                let (dst, src) = unsafe {
+                    (&mut *base.0.add(i), &*base.0.add(j))
+                };
+                for (a, b) in dst.g.data.iter_mut().zip(&src.g.data) {
+                    *a += *b;
+                }
+                dst.loss_sim += src.loss_sim;
+                dst.loss_dis += src.loss_dis;
+            });
+            stride *= 2;
         }
     }
 }
@@ -56,6 +134,19 @@ impl Engine for NativeEngine {
         "native"
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        let threads = if threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            threads
+        };
+        if threads != self.pool.threads() {
+            self.pool = Arc::new(ThreadPool::new(threads));
+            self.shards.clear();
+            self.shape = (0, 0, 0, 0);
+        }
+    }
+
     fn loss_grad(
         &mut self,
         l: &Mat,
@@ -69,47 +160,81 @@ impl Engine for NativeEngine {
             g.rows == k && g.cols == d,
             "gradient buffer shape mismatch"
         );
-        self.ensure_scratch(bs, bd, k);
-
-        // 1) project: Zs = Ds Lᵀ, Zd = Dd Lᵀ           (2 MXU-shaped GEMMs)
-        Self::project_into(l, batch.ds, bs, &mut self.zs);
-        Self::project_into(l, batch.dd, bd, &mut self.zd);
-
-        // 2) hinge + loss                                (VPU-shaped pass)
-        let mut loss_sim = 0.0f64;
-        for r in 0..bs {
-            let zrow = &self.zs.data[r * k..(r + 1) * k];
-            loss_sim += zrow.iter().map(|z| (z * z) as f64).sum::<f64>();
-        }
-        loss_sim /= bs as f64;
-
-        let mut loss_dis = 0.0f64;
-        // scale rows of Zs by 2/bs and rows of Zd by w_i * (−2λ/bd) so the
-        // two outer products below fold all scaling in.
+        self.ensure_scratch(bs, bd, d, k);
+        let n_shards = self.shards.len();
+        // fold the mean/λ scaling into the projected rows so the shard
+        // outer products need no post-scaling (same trick as the seed)
         let s_sim = 2.0 / bs as f32;
-        for v in &mut self.zs.data {
-            *v *= s_sim;
-        }
         let s_dis = -2.0 * lambda / bd as f32;
-        for r in 0..bd {
-            let zrow = &mut self.zd.data[r * k..(r + 1) * k];
-            let dist: f32 = zrow.iter().map(|z| z * z).sum();
-            let hinge = (1.0 - dist).max(0.0);
-            loss_dis += hinge as f64;
-            let w = if dist < 1.0 { s_dis } else { 0.0 };
-            for v in zrow.iter_mut() {
-                *v *= w;
+        let pool = self.pool.clone();
+        pool.for_each_mut(&mut self.shards, |i, sh| {
+            let rs = balanced_range(bs, n_shards, i);
+            let rd = balanced_range(bd, n_shards, i);
+            let (nrs, nrd) = (rs.len(), rd.len());
+            let ds = &batch.ds[rs.start * d..rs.end * d];
+            let dd = &batch.dd[rd.start * d..rd.end * d];
+
+            // 1) project this shard's rows: Z = Δ Lᵀ    (2 packed GEMMs)
+            gemm_into(
+                KMajor::cols_k(ds, nrs, d),
+                KMajor::cols_k(&l.data, k, d),
+                &mut sh.zs.data,
+                0.0,
+                None,
+            );
+            gemm_into(
+                KMajor::cols_k(dd, nrd, d),
+                KMajor::cols_k(&l.data, k, d),
+                &mut sh.zd.data,
+                0.0,
+                None,
+            );
+
+            // 2) hinge + loss partials, scaling rows in place
+            sh.loss_sim = 0.0;
+            for r in 0..nrs {
+                let zrow = &mut sh.zs.data[r * k..(r + 1) * k];
+                sh.loss_sim +=
+                    zrow.iter().map(|z| (z * z) as f64).sum::<f64>();
+                for v in zrow.iter_mut() {
+                    *v *= s_sim;
+                }
             }
-        }
-        loss_dis /= bd as f64;
-        let loss = loss_sim + lambda as f64 * loss_dis;
+            sh.loss_dis = 0.0;
+            for r in 0..nrd {
+                let zrow = &mut sh.zd.data[r * k..(r + 1) * k];
+                let dist: f32 = zrow.iter().map(|z| z * z).sum();
+                let hinge = (1.0 - dist).max(0.0);
+                sh.loss_dis += hinge as f64;
+                let w = if dist < 1.0 { s_dis } else { 0.0 };
+                for v in zrow.iter_mut() {
+                    *v *= w;
+                }
+            }
 
-        // 3) gradient outer products: G = Zsᵀ Ds + Zdᵀ Dd (2 GEMMs)
-        let ds_mat = MatRef { data: batch.ds, rows: bs, cols: d };
-        let dd_mat = MatRef { data: batch.dd, rows: bd, cols: d };
-        at_b_into(&self.zs, ds_mat, g, 0.0);
-        at_b_into(&self.zd, dd_mat, g, 1.0);
+            // 3) partial gradient: G = Zsᵀ Δs + Zdᵀ Δd  (2 packed GEMMs)
+            gemm_into(
+                KMajor::rows_k(&sh.zs.data, nrs, k),
+                KMajor::rows_k(ds, nrs, d),
+                &mut sh.g.data,
+                0.0,
+                None,
+            );
+            gemm_into(
+                KMajor::rows_k(&sh.zd.data, nrd, k),
+                KMajor::rows_k(dd, nrd, d),
+                &mut sh.g.data,
+                1.0,
+                None,
+            );
+        });
 
+        // 4) merge shard partials (parallel pairwise tree)
+        self.tree_reduce();
+        let sh0 = &self.shards[0];
+        g.data.copy_from_slice(&sh0.g.data);
+        let loss = sh0.loss_sim / bs as f64
+            + lambda as f64 * (sh0.loss_dis / bd as f64);
         Ok(loss as f32)
     }
 
@@ -119,50 +244,22 @@ impl Engine for NativeEngine {
         diffs: &Mat,
     ) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(l.cols == diffs.cols, "dim mismatch");
-        let k = l.rows;
-        let mut out = Vec::with_capacity(diffs.rows);
-        let mut zrow = vec![0.0f32; k];
-        for r in 0..diffs.rows {
-            let drow = diffs.row(r);
-            for (j, zv) in zrow.iter_mut().enumerate() {
-                *zv = linalg::dot(drow, l.row(j));
+        let (k, rows) = (l.rows, diffs.rows);
+        let mut out = vec![0.0f32; rows];
+        let chunk = rows.div_ceil(self.pool.threads()).max(1);
+        let pool = self.pool.clone();
+        pool.for_each_chunk(&mut out, chunk, |start, o| {
+            for (idx, ov) in o.iter_mut().enumerate() {
+                let drow = diffs.row(start + idx);
+                let mut acc = 0.0f32;
+                for j in 0..k {
+                    let z = linalg::dot(drow, l.row(j));
+                    acc += z * z;
+                }
+                *ov = acc;
             }
-            out.push(zrow.iter().map(|z| z * z).sum());
-        }
+        });
         Ok(out)
-    }
-}
-
-/// Borrowed row-major matrix view (avoids copying minibatch buffers into
-/// `Mat`s on the hot path).
-#[derive(Clone, Copy)]
-struct MatRef<'a> {
-    data: &'a [f32],
-    rows: usize,
-    cols: usize,
-}
-
-/// C = beta*C + Aᵀ·B with A owned (b × m) and B borrowed (b × n):
-/// saxpy per (A-row, B-row) pair, vectorizable along n.
-fn at_b_into(a: &Mat, b: MatRef<'_>, c: &mut Mat, beta: f32) {
-    assert_eq!(a.rows, b.rows);
-    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
-    if beta == 0.0 {
-        c.data.fill(0.0);
-    }
-    let (m, n) = (a.cols, b.cols);
-    for r in 0..a.rows {
-        let arow = &a.data[r * m..(r + 1) * m];
-        let brow = &b.data[r * n..(r + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // hinge-inactive rows were zeroed — skip them
-            }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
     }
 }
 
@@ -243,25 +340,84 @@ mod tests {
         (ds, dd)
     }
 
+    fn assert_matches_ref(eng: &mut NativeEngine, k: usize, d: usize,
+                          bs: usize, bd: usize, seed: u64) {
+        let mut rng = Pcg32::new(seed);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.3 / (d as f32).sqrt());
+        let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
+        let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+        let mut g = Mat::zeros(k, d);
+        let loss = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+        let (rloss, rg) = ref_loss_grad(&l, &batch, 1.0);
+        assert!(
+            (loss - rloss).abs() < 1e-4 * (1.0 + rloss.abs()),
+            "loss {loss} vs {rloss} (k={k},d={d},threads={})",
+            eng.threads()
+        );
+        assert!(
+            g.max_abs_diff(&rg) < 1e-3,
+            "grad (k={k},d={d},threads={})",
+            eng.threads()
+        );
+    }
+
     #[test]
     fn matches_scalar_reference() {
-        let mut rng = Pcg32::new(0);
         for &(k, d, bs, bd) in
             &[(2, 4, 1, 1), (8, 16, 4, 6), (20, 33, 7, 9), (60, 78, 10, 10)]
         {
-            let mut l = Mat::zeros(k, d);
-            rng.fill_gaussian(&mut l.data, 0.0, 0.3 / (d as f32).sqrt());
-            let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
-            let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
             let mut eng = NativeEngine::new();
-            let mut g = Mat::zeros(k, d);
-            let loss = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
-            let (rloss, rg) = ref_loss_grad(&l, &batch, 1.0);
-            assert!(
-                (loss - rloss).abs() < 1e-4 * (1.0 + rloss.abs()),
-                "loss {loss} vs {rloss} (k={k},d={d})"
-            );
-            assert!(g.max_abs_diff(&rg) < 1e-3, "grad (k={k},d={d})");
+            assert_matches_ref(&mut eng, k, d, bs, bd, 0);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_reference_across_thread_counts() {
+        // the issue's acceptance shapes: odd sizes, non-multiple-of-tile,
+        // shard counts both below and above the row counts
+        for &threads in &[1usize, 2, 4] {
+            for &(k, d, bs, bd) in &[
+                (60, 78, 10, 10),
+                (33, 77, 7, 5),
+                (8, 16, 1, 9),
+                (5, 13, 2, 2),
+            ] {
+                let mut eng = NativeEngine::with_threads(threads);
+                assert_eq!(eng.threads(), threads);
+                assert_matches_ref(&mut eng, k, d, bs, bd, 7 + threads as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn set_threads_rebuilds_pool_and_stays_correct() {
+        let mut eng = NativeEngine::with_threads(2);
+        assert_matches_ref(&mut eng, 20, 33, 7, 9, 1);
+        eng.set_threads(3);
+        assert_eq!(eng.threads(), 3);
+        assert_matches_ref(&mut eng, 20, 33, 7, 9, 2);
+        eng.set_threads(0); // 0 = machine default
+        assert!(eng.threads() >= 1);
+        assert_matches_ref(&mut eng, 20, 33, 7, 9, 3);
+    }
+
+    #[test]
+    fn pair_dist_is_thread_count_invariant() {
+        let mut rng = Pcg32::new(8);
+        let (k, d, b) = (17, 29, 23);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.5);
+        let mut diffs = Mat::zeros(b, d);
+        rng.fill_gaussian(&mut diffs.data, 0.0, 1.0);
+        let want = NativeEngine::with_threads(1)
+            .pair_dist(&l, &diffs)
+            .unwrap();
+        for threads in [2usize, 4] {
+            let got = NativeEngine::with_threads(threads)
+                .pair_dist(&l, &diffs)
+                .unwrap();
+            assert_eq!(got, want, "pair_dist must not depend on threads");
         }
     }
 
@@ -331,5 +487,29 @@ mod tests {
             let loss = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
             assert!(loss.is_finite());
         }
+    }
+
+    #[test]
+    fn fixed_thread_count_is_deterministic() {
+        let mut rng = Pcg32::new(5);
+        let (k, d, bs, bd) = (24, 37, 9, 11);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.2);
+        let (ds, dd) = rand_batch(&mut rng, bs, bd, d);
+        let mut run = |eng: &mut NativeEngine| {
+            let batch = MinibatchRef::new(&ds, &dd, bs, bd, d);
+            let mut g = Mat::zeros(k, d);
+            let loss = eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+            (loss, g)
+        };
+        let mut e1 = NativeEngine::with_threads(3);
+        let (l1, g1) = run(&mut e1);
+        let (l2, g2) = run(&mut e1); // scratch reuse path
+        let mut e2 = NativeEngine::with_threads(3);
+        let (l3, g3) = run(&mut e2); // fresh engine, same width
+        assert_eq!(l1, l2);
+        assert_eq!(g1.data, g2.data);
+        assert_eq!(l1, l3);
+        assert_eq!(g1.data, g3.data);
     }
 }

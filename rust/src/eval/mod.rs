@@ -5,6 +5,10 @@
 //! pair with the learned distance, predict "similar" when the distance is
 //! below a threshold t, and sweep t to get a precision-recall curve; the
 //! headline number is average precision.
+//!
+//! The heavy scans are multicore: pair scoring parallelizes inside the
+//! engine's `pair_dist` (row-sharded over its pool) and the kNN scan
+//! shards test queries over the global pool.
 
 mod pr;
 
@@ -93,6 +97,10 @@ pub fn score_pairs_mahalanobis(
 /// k-nearest-neighbour classification accuracy of `test` against `train`
 /// under the metric L (L = None → Euclidean). The paper motivates DML
 /// through exactly this task (kNN/clustering accuracy).
+///
+/// The O(n_test · n_train) scan shards test queries over the global
+/// thread pool; per-query work is independent, so the result does not
+/// depend on the thread count.
 pub fn knn_accuracy(
     l: Option<&Mat>,
     train: &Dataset,
@@ -106,40 +114,48 @@ pub fn knn_accuracy(
         None => (train.x.clone(), test.x.clone()),
     };
     let n_test = test.n().min(max_test);
-    let mut correct = 0usize;
-    let mut heap: Vec<(f32, u32)> = Vec::new();
-    for i in 0..n_test {
-        heap.clear();
-        let q = tr_row(&te, i);
-        for j in 0..train.n() {
-            let dist: f32 = q
-                .iter()
-                .zip(tr_row(&tr, j))
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
-            if heap.len() < k {
-                heap.push((dist, train.labels[j]));
-                heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            } else if dist < heap[k - 1].0 {
-                heap[k - 1] = (dist, train.labels[j]);
-                heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    if n_test == 0 {
+        return 0.0;
+    }
+    let pool = crate::util::pool::global();
+    let shards = pool.threads().min(n_test);
+    let mut correct = vec![0usize; shards];
+    pool.for_each_mut(&mut correct, |s, correct_s| {
+        let mut heap: Vec<(f32, u32)> = Vec::new();
+        for i in crate::util::pool::balanced_range(n_test, shards, s) {
+            heap.clear();
+            let q = tr_row(&te, i);
+            for j in 0..train.n() {
+                let dist: f32 = q
+                    .iter()
+                    .zip(tr_row(&tr, j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if heap.len() < k {
+                    heap.push((dist, train.labels[j]));
+                    heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                } else if dist < heap[k - 1].0 {
+                    heap[k - 1] = (dist, train.labels[j]);
+                    heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                }
+            }
+            // majority vote (ties broken toward the smallest class id so
+            // the result is deterministic run-to-run)
+            let mut counts = std::collections::HashMap::new();
+            for &(_, c) in heap.iter() {
+                *counts.entry(c).or_insert(0usize) += 1;
+            }
+            let pred = counts
+                .into_iter()
+                .max_by_key(|&(c, n)| (n, std::cmp::Reverse(c)))
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred == test.labels[i] {
+                *correct_s += 1;
             }
         }
-        // majority vote
-        let mut counts = std::collections::HashMap::new();
-        for &(_, c) in heap.iter() {
-            *counts.entry(c).or_insert(0usize) += 1;
-        }
-        let pred = counts
-            .into_iter()
-            .max_by_key(|&(_, n)| n)
-            .map(|(c, _)| c)
-            .unwrap();
-        if pred == test.labels[i] {
-            correct += 1;
-        }
-    }
-    correct as f64 / n_test as f64
+    });
+    correct.iter().sum::<usize>() as f64 / n_test as f64
 }
 
 fn tr_row(m: &Mat, r: usize) -> &[f32] {

@@ -1,0 +1,424 @@
+//! Packed, register-tiled GEMM — the one microkernel every matmul shape
+//! in the repo routes through.
+//!
+//! All three hot-path products reduce to the same *K-major* form
+//! `C[i][j] = Σ_p Â(p, i) · B̂(p, j)` where Â is (K × M) and B̂ is
+//! (K × N), each viewed from a row-major buffer either directly
+//! ([`KMajor::rows_k`]) or transposed ([`KMajor::cols_k`]):
+//!
+//! * `C = A·B`   → Â = Aᵀ view, B̂ = B view      (classic matmul)
+//! * `C = A·Bᵀ`  → Â = Aᵀ view, B̂ = Bᵀ view     (projection `Z = Δ Lᵀ`)
+//! * `C = Aᵀ·B`  → Â = A view,  B̂ = B view      (gradient `G = Zᵀ Δ`)
+//!
+//! The kernel follows the BLIS decomposition: the K dimension is split
+//! into panels of [`KC`]; per panel, B̂ is packed once into contiguous
+//! [`NR`]-wide strips and Â is packed on the fly into [`MR`]-wide strips;
+//! an MR×NR register-tile microkernel (8-wide inner loop, LLVM
+//! autovectorizes it to FMA lanes) accumulates each C tile. Output row
+//! strips are distributed over the thread pool; every C element is
+//! written by exactly one strip task with a fixed K-order, so results
+//! are **bit-identical across thread counts**.
+//!
+//! Packing buffers are thread-locals reused across calls (take/put, so
+//! nested/helping execution can never observe a borrowed buffer): the
+//! steady state allocates nothing.
+
+use std::cell::RefCell;
+use std::ops::Range;
+
+use crate::util::pool::ThreadPool;
+
+/// Microkernel tile height (rows of C per A-strip).
+pub const MR: usize = 4;
+/// Microkernel tile width (columns of C per B-strip) — one 8-lane vector.
+pub const NR: usize = 8;
+/// K-panel depth: a packed B-strip is KC×NR f32 = 8 KiB, an A-strip
+/// KC×MR = 4 KiB; tile + both strips sit comfortably in L1/L2.
+pub const KC: usize = 256;
+
+/// A K-major operand view: logically (k × m), element `(p, i)`.
+#[derive(Clone, Copy)]
+pub struct KMajor<'a> {
+    data: &'a [f32],
+    k: usize,
+    m: usize,
+    /// `false`: `data` is row-major (k × m) — element = `data[p*m + i]`.
+    /// `true`:  `data` is row-major (m × k) — element = `data[i*k + p]`.
+    trans: bool,
+}
+
+impl<'a> KMajor<'a> {
+    /// View a row-major (k × m) buffer as the logical (k × m) operand.
+    pub fn rows_k(data: &'a [f32], k: usize, m: usize) -> Self {
+        assert_eq!(data.len(), k * m, "rows_k shape mismatch");
+        KMajor { data, k, m, trans: false }
+    }
+
+    /// View a row-major (m × k) buffer as its transpose (k × m).
+    pub fn cols_k(data: &'a [f32], m: usize, k: usize) -> Self {
+        assert_eq!(data.len(), m * k, "cols_k shape mismatch");
+        KMajor { data, k, m, trans: true }
+    }
+}
+
+/// Pack columns `[i0, i0+h)` of `a` over depth `[p0, p1)` into a
+/// zero-padded (p1−p0) × MR strip: `out[q*MR + r] = a(p0+q, i0+r)`.
+fn pack_a(a: &KMajor<'_>, p0: usize, p1: usize, i0: usize, h: usize, out: &mut [f32]) {
+    let kc = p1 - p0;
+    debug_assert!(h >= 1 && h <= MR);
+    debug_assert!(out.len() >= kc * MR);
+    if h < MR {
+        out[..kc * MR].fill(0.0);
+    }
+    if a.trans {
+        // element (p, i) = data[i*k + p]: sequential reads per source row
+        for r in 0..h {
+            let row = &a.data[(i0 + r) * a.k..(i0 + r) * a.k + a.k];
+            for (q, p) in (p0..p1).enumerate() {
+                out[q * MR + r] = row[p];
+            }
+        }
+    } else {
+        // element (p, i) = data[p*m + i]: contiguous h-wide copies
+        for (q, p) in (p0..p1).enumerate() {
+            let src = &a.data[p * a.m + i0..p * a.m + i0 + h];
+            out[q * MR..q * MR + h].copy_from_slice(src);
+        }
+    }
+}
+
+/// Pack the whole `[p0, p1) × [0, n)` panel of `b` into NR-wide strips:
+/// `out[s*kc*NR + q*NR + c] = b(p0+q, s*NR+c)`, zero-padded on the edge.
+fn pack_b(b: &KMajor<'_>, p0: usize, p1: usize, out: &mut [f32]) {
+    let n = b.m;
+    let kc = p1 - p0;
+    let strips = n.div_ceil(NR);
+    debug_assert!(out.len() >= strips * kc * NR);
+    for s in 0..strips {
+        let j0 = s * NR;
+        let w = (n - j0).min(NR);
+        let base = s * kc * NR;
+        if w < NR {
+            out[base..base + kc * NR].fill(0.0);
+        }
+        if b.trans {
+            // element (p, j) = data[j*k + p]
+            for c in 0..w {
+                let col = &b.data[(j0 + c) * b.k..(j0 + c) * b.k + b.k];
+                for q in 0..kc {
+                    out[base + q * NR + c] = col[p0 + q];
+                }
+            }
+        } else {
+            // element (p, j) = data[p*n + j]
+            for q in 0..kc {
+                let src = &b.data[(p0 + q) * n + j0..(p0 + q) * n + j0 + w];
+                out[base + q * NR..base + q * NR + w].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// The register tile: MR×NR accumulators, 8-wide FMA-friendly inner loop.
+#[inline(always)]
+fn microkernel(kc: usize, apack: &[f32], bstrip: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for q in 0..kc {
+        let a: &[f32; MR] = apack[q * MR..q * MR + MR].try_into().unwrap();
+        let b: &[f32; NR] = bstrip[q * NR..q * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let ar = a[r];
+            for c in 0..NR {
+                acc[r][c] += ar * b[c];
+            }
+        }
+    }
+}
+
+/// Raw C pointer that may cross task boundaries. Each strip task writes a
+/// disjoint row range, so concurrent use is race-free by construction.
+#[derive(Clone, Copy)]
+struct CPtr(*mut f32);
+unsafe impl Send for CPtr {}
+unsafe impl Sync for CPtr {}
+
+/// Add the valid h×w corner of an accumulator tile into C.
+///
+/// SAFETY: caller guarantees rows `[i0, i0+h)` of the (m × n) buffer at
+/// `cptr` are owned exclusively by this task.
+unsafe fn store_tile(
+    acc: &[[f32; NR]; MR],
+    cptr: CPtr,
+    n: usize,
+    i0: usize,
+    h: usize,
+    j0: usize,
+    w: usize,
+) {
+    for r in 0..h {
+        let base = cptr.0.add((i0 + r) * n + j0);
+        for (c, &v) in acc[r][..w].iter().enumerate() {
+            *base.add(c) += v;
+        }
+    }
+}
+
+thread_local! {
+    static APACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static BPACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Borrow a thread-local scratch buffer of at least `len` floats. The
+/// buffer is *taken* out of the slot for the duration (not held borrowed),
+/// so re-entrant use on the same thread just allocates a fresh one.
+fn with_scratch<R>(
+    slot: &'static std::thread::LocalKey<RefCell<Vec<f32>>>,
+    len: usize,
+    f: impl FnOnce(&mut [f32]) -> R,
+) -> R {
+    let mut buf = slot.with(|c| c.take());
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    let r = f(&mut buf[..len]);
+    slot.with(|c| c.replace(buf));
+    r
+}
+
+/// Process output-row strips `[s0, s1)` of C for one K-panel `[p0, p1)`.
+fn run_strips(
+    a: &KMajor<'_>,
+    bpack: &[f32],
+    cptr: CPtr,
+    m: usize,
+    n: usize,
+    p0: usize,
+    p1: usize,
+    strips: Range<usize>,
+) {
+    let kc = p1 - p0;
+    let b_strips = n.div_ceil(NR);
+    with_scratch(&APACK, kc * MR, |apack| {
+        for s in strips {
+            let i0 = s * MR;
+            let h = (m - i0).min(MR);
+            pack_a(a, p0, p1, i0, h, apack);
+            for sb in 0..b_strips {
+                let j0 = sb * NR;
+                let w = (n - j0).min(NR);
+                let bstrip = &bpack[sb * kc * NR..(sb + 1) * kc * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                microkernel(kc, apack, bstrip, &mut acc);
+                // SAFETY: strip `s` owns C rows [i0, i0+h) exclusively.
+                unsafe { store_tile(&acc, cptr, n, i0, h, j0, w) };
+            }
+        }
+    });
+}
+
+/// Problems below this MAC count stay serial: tile/pack setup and the
+/// scope barrier would dominate real work.
+const PAR_MIN_MACS: usize = 32 * 1024;
+
+/// `C = beta·C + Â·B̂` over K-major views; C is (m × n) row-major.
+///
+/// `pool: None` (or a 1-thread pool, or a small problem) runs serially on
+/// the calling thread — the path the sharded engine uses inside its own
+/// parallel region.
+pub fn gemm_into(
+    a: KMajor<'_>,
+    b: KMajor<'_>,
+    c: &mut [f32],
+    beta: f32,
+    pool: Option<&ThreadPool>,
+) {
+    let (kk, m, n) = (a.k, a.m, b.m);
+    assert_eq!(b.k, kk, "gemm inner-dimension mismatch");
+    assert_eq!(c.len(), m * n, "gemm output shape mismatch");
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+    if m == 0 || n == 0 || kk == 0 {
+        return;
+    }
+    let pool =
+        pool.filter(|p| p.threads() > 1 && m * n * kk >= PAR_MIN_MACS);
+    let a_strips = m.div_ceil(MR);
+    let b_strips = n.div_ceil(NR);
+    let cptr = CPtr(c.as_mut_ptr());
+    let kc_max = KC.min(kk);
+    with_scratch(&BPACK, b_strips * kc_max * NR, |bpack| {
+        let mut p0 = 0;
+        while p0 < kk {
+            let p1 = (p0 + KC).min(kk);
+            let kc = p1 - p0;
+            let blen = b_strips * kc * NR;
+            pack_b(&b, p0, p1, &mut bpack[..blen]);
+            let bp: &[f32] = &bpack[..blen];
+            let aref = &a;
+            match pool {
+                Some(p) => p.for_each_range(a_strips, |r| {
+                    run_strips(aref, bp, cptr, m, n, p0, p1, r)
+                }),
+                None => {
+                    run_strips(aref, bp, cptr, m, n, p0, p1, 0..a_strips)
+                }
+            }
+            p0 = p1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Pcg32;
+
+    fn randm(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_gaussian(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    fn naive_kmajor(a: &Mat, at: bool, b: &Mat, bt: bool) -> Mat {
+        // computes Âᵀ·B̂ from K-major logical views built off a and b
+        let (kk, m) = if at { (a.cols, a.rows) } else { (a.rows, a.cols) };
+        let n = if bt { b.rows } else { b.cols };
+        let av = |p: usize, i: usize| if at { a.at(i, p) } else { a.at(p, i) };
+        let bv = |p: usize, j: usize| if bt { b.at(j, p) } else { b.at(p, j) };
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..kk {
+                    s += av(p, i) * bv(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn all_view_combinations_match_naive() {
+        let mut rng = Pcg32::new(11);
+        // (kk, m, n) shapes straddling MR/NR/KC boundaries
+        for &(kk, m, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 4, 8),
+            (17, 9, 23),
+            (64, 33, 40),
+            (257, 13, 19),
+            (300, 65, 70),
+        ] {
+            for &(at, bt) in
+                &[(false, false), (true, false), (false, true), (true, true)]
+            {
+                let a = if at { randm(&mut rng, m, kk) } else { randm(&mut rng, kk, m) };
+                let b = if bt { randm(&mut rng, n, kk) } else { randm(&mut rng, kk, n) };
+                let av = if at {
+                    KMajor::cols_k(&a.data, m, kk)
+                } else {
+                    KMajor::rows_k(&a.data, kk, m)
+                };
+                let bv = if bt {
+                    KMajor::cols_k(&b.data, n, kk)
+                } else {
+                    KMajor::rows_k(&b.data, kk, n)
+                };
+                let mut c = Mat::zeros(m, n);
+                gemm_into(av, bv, &mut c.data, 0.0, None);
+                let want = naive_kmajor(&a, at, &b, bt);
+                assert!(
+                    c.max_abs_diff(&want) < 1e-3 * (1.0 + kk as f32 * 0.01),
+                    "(kk={kk},m={m},n={n},at={at},bt={bt})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beta_accumulates_and_scales() {
+        let mut rng = Pcg32::new(12);
+        let a = randm(&mut rng, 20, 6); // (kk × m)
+        let b = randm(&mut rng, 20, 9); // (kk × n)
+        let prod = naive_kmajor(&a, false, &b, false);
+        let mut c = randm(&mut rng, 6, 9);
+        let c0 = c.clone();
+        gemm_into(
+            KMajor::rows_k(&a.data, 20, 6),
+            KMajor::rows_k(&b.data, 20, 9),
+            &mut c.data,
+            1.0,
+            None,
+        );
+        let mut want = prod.clone();
+        want.axpy_inplace(1.0, &c0);
+        assert!(c.max_abs_diff(&want) < 1e-4);
+
+        let mut c2 = c0.clone();
+        gemm_into(
+            KMajor::rows_k(&a.data, 20, 6),
+            KMajor::rows_k(&b.data, 20, 9),
+            &mut c2.data,
+            0.5,
+            None,
+        );
+        let mut want2 = c0.clone();
+        want2.scale_inplace(0.5);
+        want2.axpy_inplace(1.0, &prod);
+        assert!(c2.max_abs_diff(&want2) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Pcg32::new(13);
+        let (kk, m, n) = (310, 90, 77);
+        let a = randm(&mut rng, m, kk);
+        let b = randm(&mut rng, kk, n);
+        let mut serial = Mat::zeros(m, n);
+        gemm_into(
+            KMajor::cols_k(&a.data, m, kk),
+            KMajor::rows_k(&b.data, kk, n),
+            &mut serial.data,
+            0.0,
+            None,
+        );
+        for threads in [2usize, 3, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut par = Mat::zeros(m, n);
+            gemm_into(
+                KMajor::cols_k(&a.data, m, kk),
+                KMajor::rows_k(&b.data, kk, n),
+                &mut par.data,
+                0.0,
+                Some(&pool),
+            );
+            assert_eq!(
+                serial.data, par.data,
+                "strip-parallel GEMM must be bit-identical ({threads} threads)"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_dims_zero_output_on_beta_zero() {
+        let a: Vec<f32> = vec![];
+        let b: Vec<f32> = vec![];
+        let mut c = vec![7.0f32; 12];
+        // kk = 0: C must still be beta-scaled (here: zeroed)
+        gemm_into(
+            KMajor::rows_k(&a, 0, 3),
+            KMajor::rows_k(&b, 0, 4),
+            &mut c,
+            0.0,
+            None,
+        );
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+}

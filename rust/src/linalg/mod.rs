@@ -1,14 +1,19 @@
 //! Dense linear algebra substrate (no external BLAS in the vendor set).
 //!
-//! Provides the row-major f32 [`Mat`] type with cache-blocked matmul
-//! kernels (the same ones the native DML engine builds on), plus the
+//! Provides the row-major f32 [`Mat`] type whose matmuls all route
+//! through the packed, register-tiled, pool-parallel [`gemm`] microkernel
+//! (the same one the native DML engine builds on), plus the
 //! factorizations the single-machine baselines need: Cholesky ([`chol`]),
 //! Jacobi eigendecomposition ([`eigen`]), and PCA ([`pca`]).
 
 pub mod chol;
 pub mod eigen;
+pub mod gemm;
 pub mod io;
 pub mod pca;
+
+use self::gemm::KMajor;
+use crate::util::pool;
 
 /// Row-major dense f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,9 +23,9 @@ pub struct Mat {
     pub data: Vec<f32>,
 }
 
-/// Cache block edge for the blocked matmul kernels. 64×64 f32 tiles are
-/// 16 KiB — three of them sit comfortably in a 128 KiB L2 slice.
-const BLK: usize = 64;
+/// Tile edge for the cache-blocked transpose (32×32 f32 = 4 KiB: one
+/// read tile + one write tile fit in L1 with room to spare).
+const TRANS_BLK: usize = 32;
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
@@ -71,11 +76,21 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Cache-blocked transpose: both the reads and the writes stay within
+    /// one [`TRANS_BLK`]² tile at a time, so neither side strides through
+    /// memory a full row apart per element.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        for r0 in (0..self.rows).step_by(TRANS_BLK) {
+            let r1 = (r0 + TRANS_BLK).min(self.rows);
+            for c0 in (0..self.cols).step_by(TRANS_BLK) {
+                let c1 = (c0 + TRANS_BLK).min(self.cols);
+                for r in r0..r1 {
+                    for c in c0..c1 {
+                        out.data[c * self.rows + r] =
+                            self.data[r * self.cols + c];
+                    }
+                }
             }
         }
         out
@@ -129,19 +144,10 @@ impl Mat {
         c
     }
 
-    /// y = A · x for a vector x.
+    /// y = A · x for a vector x (row dots via the 4-accumulator [`dot`]).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len());
-        let mut y = vec![0.0f32; self.rows];
-        for r in 0..self.rows {
-            let row = self.row(r);
-            let mut acc = 0.0f32;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            y[r] = acc;
-        }
-        y
+        (0..self.rows).map(|r| dot(self.row(r), x)).collect()
     }
 
     /// Max |a - b| across entries (test helper).
@@ -169,76 +175,50 @@ impl Mat {
     }
 }
 
-/// C = beta*C + A·B, cache-blocked.
+/// C = beta·C + A·B via the packed tiled kernel, parallel over the
+/// global pool.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, beta: f32) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    if beta == 0.0 {
-        c.data.fill(0.0);
-    } else if beta != 1.0 {
-        c.scale_inplace(beta);
-    }
-    let (m, kk, n) = (a.rows, a.cols, b.cols);
-    for i0 in (0..m).step_by(BLK) {
-        let i1 = (i0 + BLK).min(m);
-        for k0 in (0..kk).step_by(BLK) {
-            let k1 = (k0 + BLK).min(kk);
-            for i in i0..i1 {
-                let arow = &a.data[i * kk..(i + 1) * kk];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for k in k0..k1 {
-                    let aik = arow[k];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[k * n..(k + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
-                }
-            }
-        }
-    }
+    let p = pool::global();
+    gemm::gemm_into(
+        KMajor::cols_k(&a.data, a.rows, a.cols),
+        KMajor::rows_k(&b.data, b.rows, b.cols),
+        &mut c.data,
+        beta,
+        Some(&p),
+    );
 }
 
-/// C = A · Bᵀ (rows-dot-rows; unrolled 4-wide accumulators).
+/// C = A · Bᵀ (the DML projection shape `Z = Δ Lᵀ`) via the packed tiled
+/// kernel, parallel over the global pool.
 pub fn matmul_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
-    let d = a.cols;
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
-        for j in 0..b.rows {
-            crow[j] = dot(arow, &b.data[j * d..(j + 1) * d]);
-        }
-    }
+    let p = pool::global();
+    gemm::gemm_into(
+        KMajor::cols_k(&a.data, a.rows, a.cols),
+        KMajor::cols_k(&b.data, b.rows, b.cols),
+        &mut c.data,
+        0.0,
+        Some(&p),
+    );
 }
 
-/// C = beta*C + Aᵀ · B. A is (r×m), B is (r×n), C is (m×n):
-/// row-major saxpy per (row of A, row of B) pair — fully vectorizable.
+/// C = beta·C + Aᵀ·B (the gradient outer-product shape `G = Zᵀ Δ`;
+/// A is (r×m), B is (r×n), C is (m×n)) via the packed tiled kernel,
+/// parallel over the global pool.
 pub fn matmul_at_into(a: &Mat, b: &Mat, c: &mut Mat, beta: f32) {
     assert_eq!(a.rows, b.rows);
     assert_eq!((c.rows, c.cols), (a.cols, b.cols));
-    if beta == 0.0 {
-        c.data.fill(0.0);
-    } else if beta != 1.0 {
-        c.scale_inplace(beta);
-    }
-    let (m, n) = (a.cols, b.cols);
-    for r in 0..a.rows {
-        let arow = &a.data[r * m..(r + 1) * m];
-        let brow = &b.data[r * n..(r + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    let p = pool::global();
+    gemm::gemm_into(
+        KMajor::rows_k(&a.data, a.rows, a.cols),
+        KMajor::rows_k(&b.data, b.rows, b.cols),
+        &mut c.data,
+        beta,
+        Some(&p),
+    );
 }
 
 /// Dot product with 4 independent accumulators (breaks the fp dependency
@@ -293,7 +273,7 @@ mod tests {
     fn matmul_matches_naive() {
         let mut rng = Pcg32::new(0);
         for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 130, 3),
-                            (100, 17, 33)] {
+                            (100, 17, 33), (33, 300, 41), (70, 513, 9)] {
             let a = randm(&mut rng, m, k);
             let b = randm(&mut rng, k, n);
             let got = a.matmul(&b);
@@ -346,6 +326,22 @@ mod tests {
         let want = a.matmul(&xm);
         for i in 0..7 {
             assert!((y[i] - want.at(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn blocked_transpose_matches_naive() {
+        let mut rng = Pcg32::new(9);
+        for &(r, c) in &[(1, 1), (7, 3), (31, 33), (64, 64), (65, 130),
+                         (100, 41)] {
+            let a = randm(&mut rng, r, c);
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.at(j, i), a.at(i, j), "({r},{c}) @({i},{j})");
+                }
+            }
         }
     }
 

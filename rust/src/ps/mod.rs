@@ -134,6 +134,7 @@ pub fn run_training(
             consistency: cfg.cluster.consistency,
             faults: opts.faults,
             seed: cfg.seed ^ ((w as u64 + 1) << 16),
+            threads: cfg.cluster.threads_per_worker,
         };
         workers.push(Worker::spawn(
             wcfg,

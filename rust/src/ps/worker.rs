@@ -39,6 +39,9 @@ pub struct WorkerConfig {
     pub consistency: Consistency,
     pub faults: FaultSpec,
     pub seed: u64,
+    /// Compute threads for this worker's engine (paper: C cores per
+    /// worker machine). `0` = engine default.
+    pub threads: usize,
 }
 
 /// Per-worker telemetry returned on join.
@@ -114,6 +117,10 @@ impl Worker {
             .name(format!("ps-worker{id}-compute"))
             .spawn(move || {
                 let mut engine = (engines)().expect("engine construction");
+                if cfg.threads > 0 {
+                    // saturate this worker's configured core budget
+                    engine.set_threads(cfg.threads);
+                }
                 let mut iter = MinibatchIter::new(
                     &dataset,
                     &shard.pairs,

@@ -9,10 +9,29 @@
 //! implements, so the parameter server is backend-agnostic.
 
 mod manifest;
+#[cfg(feature = "xla")]
 mod xla_engine;
 
 pub use manifest::{ArtifactEntry, Manifest, VariantShape};
+#[cfg(feature = "xla")]
 pub use xla_engine::{xla_factory, XlaEngine};
+
+/// Stub factory used when the crate is built without the `xla` feature
+/// (the PJRT bindings are not in the offline vendor set): constructing an
+/// engine reports the missing runtime instead of linking against it.
+#[cfg(not(feature = "xla"))]
+pub fn xla_factory(variant: &str) -> crate::dml::EngineFactory {
+    let variant = variant.to_string();
+    std::sync::Arc::new(
+        move || -> anyhow::Result<Box<dyn crate::dml::Engine>> {
+            anyhow::bail!(
+                "XLA/PJRT runtime not compiled in (rebuild with \
+                 `--features xla`); cannot load artifact variant \
+                 '{variant}'"
+            )
+        },
+    )
+}
 
 /// Default artifacts directory, relative to the repo root. Overridable
 /// via the `DMLPS_ARTIFACTS` environment variable (used by tests).

@@ -24,8 +24,13 @@ pub use workload::{DmlWorkload, NullWorkload, Workload};
 
 use crate::dml::DmlProblem;
 
-/// Calibrate the simulator's per-core gradient time by timing the native
-/// engine at the given shape (a handful of steps, median).
+/// Calibrate the simulator's *per-core* gradient time by timing the
+/// native engine at the given shape (a handful of steps, median).
+///
+/// Pinned to a 1-thread engine on purpose: the simulator's machine model
+/// charges `grad_seconds / C` for a C-core machine, so the calibration
+/// must measure one core — letting the now-multicore engine use every
+/// lane here would double-count the parallelism.
 pub fn calibrate_grad_seconds(
     problem: &DmlProblem,
     bs: usize,
@@ -42,7 +47,7 @@ pub fn calibrate_grad_seconds(
     rng.fill_gaussian(&mut ds, 0.0, 1.0);
     rng.fill_gaussian(&mut dd, 0.0, 1.0);
     let mut g = crate::linalg::Mat::zeros(problem.k, problem.d);
-    let mut eng = NativeEngine::new();
+    let mut eng = NativeEngine::with_threads(1);
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps.max(3) {
         let batch = MinibatchRef::new(&ds, &dd, bs, bd, problem.d);

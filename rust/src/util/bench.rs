@@ -13,6 +13,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// One measured benchmark row.
@@ -32,6 +33,27 @@ impl Measurement {
     /// work units per second, if `work_per_iter` was supplied.
     pub fn throughput(&self) -> Option<f64> {
         self.work_per_iter.map(|w| w / self.mean.as_secs_f64())
+    }
+
+    /// Machine-readable form (seconds for times, work units/s for
+    /// throughput) — the payload of `BENCH_*.json` perf baselines.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean.as_secs_f64())),
+            ("median_s", Json::Num(self.median.as_secs_f64())),
+            ("p95_s", Json::Num(self.p95.as_secs_f64())),
+            ("std_s", Json::Num(self.std.as_secs_f64())),
+            ("work_per_iter", match self.work_per_iter {
+                Some(w) => Json::Num(w),
+                None => Json::Null,
+            }),
+            ("throughput_per_s", match self.throughput() {
+                Some(t) => Json::Num(t),
+                None => Json::Null,
+            }),
+        ])
     }
 }
 
@@ -136,6 +158,16 @@ impl Bench {
         &self.rows
     }
 
+    /// The whole group as JSON (`{"group": title, "rows": [...]}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("group", Json::Str(self.title.clone())),
+            ("rows", Json::Arr(
+                self.rows.iter().map(Measurement::to_json).collect(),
+            )),
+        ])
+    }
+
     /// Print the group as a markdown table.
     pub fn report(&self) {
         println!("\n## {}", self.title);
@@ -237,6 +269,19 @@ mod tests {
         let m = &b.rows()[0];
         assert_eq!(m.iters, 3);
         assert!((m.mean.as_secs_f64() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_payload_has_throughput() {
+        let mut b = Bench::new("j").with_target_time(Duration::from_millis(5));
+        b.bench_with_work("w", Some(100.0), || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = b.to_json();
+        assert_eq!(j.get("group").as_str().unwrap(), "j");
+        let row = j.get("rows").idx(0);
+        assert_eq!(row.get("name").as_str().unwrap(), "w");
+        assert!(row.get("throughput_per_s").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -2,12 +2,13 @@
 //!
 //! The offline vendor set ships only `xla` + `anyhow`, so everything a
 //! normal project would pull from crates.io — PRNG, JSON, CLI parsing,
-//! benchmarking, property testing, statistics — is implemented here as
-//! small, well-tested modules.
+//! benchmarking, property testing, statistics, a scoped thread pool — is
+//! implemented here as small, well-tested modules.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;

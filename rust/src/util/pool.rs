@@ -1,0 +1,440 @@
+//! Dependency-free scoped thread pool — the compute substrate under the
+//! tiled GEMM kernels, the sharded native engine, and the eval scans.
+//!
+//! Design, in the spirit of crossbeam/rayon but at ~1% of the surface:
+//!
+//! * A [`ThreadPool`] of `threads` total lanes spawns `threads − 1`
+//!   persistent workers; the calling thread is always the remaining lane,
+//!   so a 1-thread pool runs everything inline with zero overhead.
+//! * [`ThreadPool::scope_run`] executes a batch of borrowing closures and
+//!   **blocks until every one has settled**, which is what makes handing
+//!   non-`'static` borrows to the workers sound (the borrows cannot
+//!   outlive the call).
+//! * While waiting, the scoping thread *helps*: it drains jobs from the
+//!   shared queue instead of sleeping. Nested `scope_run` calls (a shard
+//!   task that itself uses the pool) therefore cannot deadlock — any
+//!   waiting lane makes progress on whatever work exists.
+//! * Panics inside tasks are caught at the task boundary, the remaining
+//!   tasks still run, and the scope call re-panics once everything has
+//!   settled — the pool itself stays usable (see the panic-safety test).
+//!
+//! Determinism note: splitting work over `p` lanes fixes the reduction
+//! grouping, so results are bit-reproducible for a fixed thread count;
+//! across different thread counts, float sums may differ at rounding
+//! level (the engine's property tests bound this against an f64 oracle).
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A queued unit of work. Jobs are always `scope_run` wrappers, which
+/// catch panics internally — a popped job never unwinds into its runner.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    /// (pending jobs, shutdown flag)
+    jobs: Mutex<(VecDeque<Job>, bool)>,
+    ready: Condvar,
+}
+
+impl Queue {
+    fn push_all(&self, jobs: impl Iterator<Item = Job>) {
+        let mut g = self.jobs.lock().unwrap();
+        for j in jobs {
+            g.0.push_back(j);
+        }
+        drop(g);
+        self.ready.notify_all();
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.jobs.lock().unwrap().0.pop_front()
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut g = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = g.0.pop_front() {
+                    break Some(j);
+                }
+                if g.1 {
+                    break None;
+                }
+                g = q.ready.wait(g).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+/// Completion barrier for one `scope_run` call.
+struct ScopeSync {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopeSync {
+    fn settle_one(&self, panicked: bool) {
+        if panicked {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// A fixed-size pool of persistent worker threads plus the caller's lane.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes (clamped to ≥ 1). `threads − 1`
+    /// OS threads are spawned; the caller is the last lane.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("dmlps-pool-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { queue, handles, threads }
+    }
+
+    /// Total parallel lanes (workers + calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion, using the calling thread plus the
+    /// workers. Blocks until all tasks have settled; if any task
+    /// panicked, re-panics here (after the barrier, so borrows stay
+    /// sound and the pool stays usable).
+    pub fn scope_run<'s>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n == 1 {
+            // No workers (or nothing to share): run inline. Panics
+            // propagate directly — there are no outstanding borrows.
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let sync = Arc::new(ScopeSync {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let mut tasks = tasks.into_iter();
+        let first = tasks.next().unwrap();
+        self.queue.push_all(tasks.map(|task| {
+            // SAFETY: the borrows inside `task` live for 's, and this
+            // function does not return until `remaining` hits zero —
+            // i.e. until every wrapper below has finished running. The
+            // queue can outlive 's only with an empty backlog.
+            let task: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(task) };
+            let s = sync.clone();
+            Box::new(move || {
+                let panicked =
+                    catch_unwind(AssertUnwindSafe(task)).is_err();
+                s.settle_one(panicked);
+            }) as Job
+        }));
+        // The caller's lane runs the first task itself…
+        let panicked = catch_unwind(AssertUnwindSafe(first)).is_err();
+        sync.settle_one(panicked);
+        // …then helps drain the queue until this scope has settled.
+        loop {
+            if *sync.remaining.lock().unwrap() == 0 {
+                break;
+            }
+            match self.queue.try_pop() {
+                Some(job) => job(),
+                None => {
+                    let r = sync.remaining.lock().unwrap();
+                    if *r == 0 {
+                        break;
+                    }
+                    // Short timed wait: our tasks may be running on
+                    // workers (notify wakes us) or sitting behind other
+                    // scopes' jobs (the timeout re-polls the queue).
+                    let _ = sync
+                        .done
+                        .wait_timeout(r, Duration::from_micros(200))
+                        .unwrap();
+                }
+            }
+        }
+        if sync.panicked.load(Ordering::SeqCst) {
+            panic!("thread-pool task panicked (see stderr for the task's panic message)");
+        }
+    }
+
+    /// Split `0..n` into up to `threads()` balanced contiguous ranges and
+    /// run `f` on each in parallel.
+    pub fn for_each_range<F>(&self, n: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let parts = self.threads.min(n);
+        if parts <= 1 {
+            f(0..n);
+            return;
+        }
+        let fref = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..parts)
+            .map(|i| {
+                Box::new(move || fref(balanced_range(n, parts, i)))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.scope_run(tasks);
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, one task per item.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        if items.is_empty() {
+            return;
+        }
+        let fref = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = items
+            .iter_mut()
+            .enumerate()
+            .map(|(i, item)| {
+                Box::new(move || fref(i, item))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.scope_run(tasks);
+    }
+
+    /// Split `items` into `chunk_len`-sized pieces and run
+    /// `f(start_index, chunk)` on each in parallel.
+    pub fn for_each_chunk<T, F>(&self, items: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if items.is_empty() {
+            return;
+        }
+        let chunk_len = chunk_len.max(1);
+        let fref = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = items
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(i, c)| {
+                Box::new(move || fref(i * chunk_len, c))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.scope_run(tasks);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.queue.jobs.lock().unwrap();
+            g.1 = true;
+        }
+        self.queue.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The `idx`-th of `parts` balanced contiguous sub-ranges of `0..n`
+/// (the first `n % parts` ranges are one element longer).
+pub fn balanced_range(n: usize, parts: usize, idx: usize) -> Range<usize> {
+    let parts = parts.max(1);
+    debug_assert!(idx < parts);
+    let base = n / parts;
+    let rem = n % parts;
+    let lo = idx * base + idx.min(rem);
+    let hi = lo + base + usize::from(idx < rem);
+    lo..hi
+}
+
+/// Default lane count: `DMLPS_THREADS` env var if set (and > 0), else the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("DMLPS_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// The process-wide shared pool (sized by [`default_threads`]), used by
+/// the `Mat` matmul wrappers and the eval scans. Engines that need a
+/// specific width own their own pool instead.
+pub fn global() -> Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(ThreadPool::new(default_threads())))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn balanced_ranges_cover_exactly() {
+        for n in [0usize, 1, 2, 5, 7, 16, 100, 101] {
+            for parts in [1usize, 2, 3, 4, 7, 16] {
+                let mut seen = vec![false; n];
+                let mut lens = Vec::new();
+                for i in 0..parts {
+                    let r = balanced_range(n, parts, i);
+                    lens.push(r.len());
+                    for x in r {
+                        assert!(!seen[x], "overlap at {x} (n={n} p={parts})");
+                        seen[x] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "gap (n={n} p={parts})");
+                let (mn, mx) = (
+                    lens.iter().min().unwrap(),
+                    lens.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1, "unbalanced {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = ThreadPool::new(threads);
+            let n = 10_000usize;
+            let total = AtomicUsize::new(0);
+            pool.for_each_range(n, |r| {
+                let s: usize = r.sum();
+                total.fetch_add(s, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), n * (n - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let pool = ThreadPool::new(4);
+        // differing shard counts against the same pool (reuse)
+        for len in [1usize, 3, 4, 9, 64] {
+            let mut items = vec![0u32; len];
+            pool.for_each_mut(&mut items, |i, v| {
+                *v += i as u32 + 1;
+            });
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_offsets_are_right() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0usize; 103];
+        pool.for_each_chunk(&mut data, 10, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each_range(8, |r| {
+                if r.contains(&3) {
+                    panic!("boom in shard");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the scope caller");
+        // the pool must remain fully usable afterwards
+        let counter = AtomicUsize::new(0);
+        pool.for_each_range(100, |r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.for_each_range(4, |outer| {
+            for _ in outer {
+                // nested use of the same pool from inside a task
+                pool.for_each_range(50, |inner| {
+                    total.fetch_add(inner.len(), Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut v = vec![0u8; 16];
+        pool.for_each_chunk(&mut v, 4, |_, c| c.fill(1));
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+        assert!(global().threads() >= 1);
+    }
+}

@@ -1,5 +1,8 @@
 //! Integration: AOT artifacts → PJRT runtime → engine parity.
 //! Requires `make artifacts`; tests self-skip when absent.
+//! The whole file needs the PJRT bindings, so it only exists under the
+//! `xla` cargo feature (the offline default build has no XLA runtime).
+#![cfg(feature = "xla")]
 
 use dmlps::dml::{Engine, MinibatchRef, NativeEngine};
 use dmlps::linalg::Mat;
