@@ -1,0 +1,124 @@
+//! Ablation: parameter-server sharding (`server_shards` knob).
+//!
+//! Trains the paper's MNIST shape (k=600, d=780 → 1.87 MB of f32
+//! parameters) with the real threaded server at S ∈ {1, 2, 4} shards and
+//! records the messaging profile: per-message bytes (the quantity
+//! sharding divides by S), physical message counts, and applied
+//! (logical) updates per second. Writes the machine-readable baseline to
+//! **`BENCH_ps.json`** (override the path with `DMLPS_BENCH_OUT`).
+//!
+//! `server_shards = 1` is the paper's single central server, so the S=1
+//! row doubles as the anchor for the existing convergence benches.
+
+use dmlps::cli::driver::train_distributed;
+use dmlps::config::Preset;
+use dmlps::data::ExperimentData;
+use dmlps::ps::{RunOptions, ShardPlan};
+use dmlps::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let mut cfg = Preset::Mnist.config();
+    // Keep the paper-true k×d message shape; shrink the data volume so
+    // the bench measures messaging and folding, not data generation.
+    cfg.dataset.n_train = 6_000;
+    cfg.dataset.n_test = 500;
+    cfg.dataset.n_similar = 20_000;
+    cfg.dataset.n_dissimilar = 20_000;
+    cfg.dataset.n_test_pairs = 1_000;
+    cfg.optim.steps = if quick { 10 } else { 40 };
+    cfg.cluster.workers = 2;
+    cfg.artifact_variant = None;
+
+    println!(
+        "ablation_shards: MNIST shape d={} k={} ({} params, {:.2} MB \
+         full message), {} workers × {} steps",
+        cfg.dataset.dim,
+        cfg.model.k,
+        cfg.model.k * cfg.dataset.dim,
+        (cfg.model.k * cfg.dataset.dim * 4) as f64 / 1e6,
+        cfg.cluster.workers,
+        cfg.optim.steps,
+    );
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let opts = RunOptions {
+        // probe only at the endpoints: the bench times messaging, not
+        // objective evaluation
+        probe_every: u64::MAX / 2,
+        probe_pairs: (50, 50),
+        ..Default::default()
+    };
+
+    println!(
+        "\n| shards | bytes/grad-msg | grad msgs | param msgs | \
+         applied | upd/s | wall s |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut baseline_ups = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let mut c = cfg.clone();
+        c.cluster.server_shards = shards;
+        let r = train_distributed(&c, &data, "native", &opts)
+            .expect("sharded training run");
+        let plan = ShardPlan::new(c.model.k, c.dataset.dim, shards);
+        // max slice size = per-message payload ceiling
+        let bytes_per_grad_msg = (0..plan.shards())
+            .map(|s| plan.len(s) * 4)
+            .max()
+            .unwrap_or(0);
+        let grads_logical: u64 =
+            r.worker_stats.iter().map(|w| w.grads_sent).sum();
+        let grad_msgs = grads_logical * shards as u64;
+        let param_msgs = r.param_msgs;
+        let ups = r.applied_updates as f64 / r.wall_s.max(1e-9);
+        if shards == 1 {
+            baseline_ups = ups;
+        }
+        println!(
+            "| {shards} | {} | {grad_msgs} | {param_msgs} | {} | \
+             {ups:.1} | {:.2} |",
+            bytes_per_grad_msg, r.applied_updates, r.wall_s
+        );
+        rows.push(Json::obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("bytes_per_grad_msg", Json::Num(bytes_per_grad_msg as f64)),
+            ("bytes_per_param_msg",
+             Json::Num(bytes_per_grad_msg as f64)),
+            ("grad_msgs", Json::Num(grad_msgs as f64)),
+            ("param_msgs", Json::Num(param_msgs as f64)),
+            ("applied_updates", Json::Num(r.applied_updates as f64)),
+            ("slice_updates", Json::Num(r.slice_updates as f64)),
+            ("broadcast_rounds", Json::Num(r.broadcasts as f64)),
+            ("updates_per_sec", Json::Num(ups)),
+            ("wall_s", Json::Num(r.wall_s)),
+            ("final_objective",
+             Json::Num(r.curve.final_objective().unwrap_or(f64::NAN))),
+        ]));
+    }
+    if baseline_ups > 0.0 {
+        println!(
+            "\n(S=1 anchor: {baseline_ups:.1} applied updates/s; \
+             per-message bytes shrink ~S× by construction)"
+        );
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("ablation_shards".into())),
+        ("quick", Json::Bool(quick)),
+        ("shape", Json::obj(vec![
+            ("k", Json::Num(cfg.model.k as f64)),
+            ("d", Json::Num(cfg.dataset.dim as f64)),
+            ("workers", Json::Num(cfg.cluster.workers as f64)),
+            ("steps", Json::Num(cfg.optim.steps as f64)),
+            ("full_msg_bytes",
+             Json::Num((cfg.model.k * cfg.dataset.dim * 4) as f64)),
+        ])),
+        ("runs", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("DMLPS_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_ps.json".into());
+    std::fs::write(&path, out.to_string_pretty())
+        .expect("write bench json");
+    println!("\nwrote machine-readable baseline to {path}");
+}

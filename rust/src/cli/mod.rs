@@ -81,6 +81,11 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
             cfg.cluster.threads_per_worker = t;
         }
     }
+    if let Ok(s) = a.get_usize("server-shards") {
+        if s > 0 {
+            cfg.cluster.server_shards = s;
+        }
+    }
     Ok(cfg)
 }
 
@@ -94,6 +99,8 @@ fn common_parser(cmd: &str, about: &str) -> ArgParser {
         .opt("seed", "42", "PRNG seed")
         .opt("threads", "0",
              "compute threads per worker engine (0 = all cores)")
+        .opt("server-shards", "0",
+             "parameter-server shards (0 = preset; 1 = single server)")
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -105,7 +112,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let cfg = load_config(&a)?;
     println!(
         "train: dataset={} d={} k={} workers={} threads/worker={} \
-         steps={} engine={} consistency={}",
+         server-shards={} steps={} engine={} consistency={}",
         cfg.dataset.name, cfg.dataset.dim, cfg.model.k,
         cfg.cluster.workers,
         if cfg.cluster.threads_per_worker == 0 {
@@ -113,6 +120,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         } else {
             cfg.cluster.threads_per_worker.to_string()
         },
+        cfg.cluster.server_shards,
         cfg.optim.steps, a.get("engine"),
         cfg.cluster.consistency.name()
     );
@@ -125,16 +133,18 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let last = result.curve.points.last().map(|p| p.objective)
         .unwrap_or(f64::NAN);
     println!(
-        "done in {:.2}s: {} updates applied, {} broadcasts, \
-         objective {first:.4} -> {last:.4}",
-        result.wall_s, result.applied_updates, result.broadcasts
+        "done in {:.2}s: {} updates applied ({} slice updates over {} \
+         shards), {} broadcasts, objective {first:.4} -> {last:.4}, \
+         last minibatch loss {:.4}",
+        result.wall_s, result.applied_updates, result.slice_updates,
+        result.server_shards, result.broadcasts, result.last_loss
     );
     for ws in &result.worker_stats {
         println!(
             "  worker {}: {} steps, {} grads sent ({} dropped), \
-             {} params received, waited {:.2}s",
+             {} params received, waited {:.2}s, max staleness {}",
             ws.id, ws.steps_done, ws.grads_sent, ws.grads_dropped,
-            ws.params_received, ws.wait_s
+            ws.params_received, ws.wait_s, ws.max_staleness
         );
     }
     let mut eng = crate::dml::NativeEngine::new();

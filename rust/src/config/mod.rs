@@ -111,9 +111,14 @@ pub struct ClusterConfig {
     /// Worker count for the real threaded parameter server.
     pub workers: usize,
     pub consistency: Consistency,
-    /// Server-side gradient batch: how many worker updates the update
-    /// thread folds in per dequeue round.
+    /// Server-side gradient batch: how many worker updates each shard's
+    /// update thread folds in per dequeue round.
     pub server_batch: usize,
+    /// Parameter-server shards: L's rows are partitioned into this many
+    /// independent server shards, each with its own update thread and
+    /// queues; messages carry per-shard row slices. `1` = the paper's
+    /// single central server (clamped to the row count `k` at run time).
+    pub server_shards: usize,
     /// Compute threads per worker engine — the paper's "C cores per
     /// machine" knob. `0` = use all available cores (machine default).
     pub threads_per_worker: usize,
@@ -193,6 +198,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    server_shards: 1,
                     threads_per_worker: 0,
                 },
                 seed: 42,
@@ -224,6 +230,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    server_shards: 1,
                     threads_per_worker: 0,
                 },
                 seed: 42,
@@ -255,6 +262,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    server_shards: 1,
                     threads_per_worker: 0,
                 },
                 seed: 42,
@@ -286,6 +294,7 @@ impl Preset {
                     workers: 2,
                     consistency: Consistency::Asp,
                     server_batch: 4,
+                    server_shards: 1,
                     threads_per_worker: 0,
                 },
                 seed: 42,
@@ -372,6 +381,8 @@ impl ExperimentConfig {
                  Json::Str(self.cluster.consistency.name())),
                 ("server_batch",
                  Json::Num(self.cluster.server_batch as f64)),
+                ("server_shards",
+                 Json::Num(self.cluster.server_shards as f64)),
                 ("threads_per_worker",
                  Json::Num(self.cluster.threads_per_worker as f64)),
             ])),
@@ -432,6 +443,13 @@ impl ExperimentConfig {
                     c.get("consistency").as_str().unwrap_or("asp"),
                 )?,
                 server_batch: us(c, "server_batch")?,
+                // absent in configs predating the sharding knob → the
+                // paper's single central server
+                server_shards: c
+                    .get("server_shards")
+                    .as_usize()
+                    .unwrap_or(1)
+                    .max(1),
                 // absent in configs predating the threads knob → auto
                 threads_per_worker: c
                     .get("threads_per_worker")
@@ -489,6 +507,18 @@ mod tests {
             let cfg2 = ExperimentConfig::from_json(&j).unwrap();
             assert_eq!(cfg, cfg2, "{p:?}");
         }
+    }
+
+    #[test]
+    fn legacy_json_without_server_shards_defaults_to_one() {
+        let mut j = Preset::Tiny.config().to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(c)) = m.get_mut("cluster") {
+                c.remove("server_shards");
+            }
+        }
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.cluster.server_shards, 1);
     }
 
     #[test]

@@ -1,36 +1,122 @@
-//! Message types exchanged between workers and the central server.
+//! Message types exchanged between workers and the sharded server, plus
+//! the static [`ShardPlan`] both sides agree on.
 //!
-//! The paper's protocol (§4.1): workers push gradient updates ΔL_p; the
-//! server aggregates them into the global L and pushes fresh parameters
-//! back. Messages carry dense f32 payloads (the full k×d matrix), which
-//! is exactly the communication volume the paper's scalability analysis
-//! assumes.
+//! The paper's protocol (§4.1) ships full k×d matrices: workers push
+//! gradient updates ΔL_p, the server pushes fresh parameters back. With
+//! the server sharded into S row-range shards, every message carries only
+//! one shard's row-slice — communication per message drops S× and shard
+//! servers fold gradients independently. `server_shards = 1` degenerates
+//! to the paper's single-server protocol exactly (one shard owning all of
+//! L, whole-matrix messages).
+
+/// Static partition of L's rows into contiguous per-shard slices.
+///
+/// Shard `s` owns rows `rows(s)` of the k×d matrix; in row-major storage
+/// that is one contiguous element range (`offset(s) .. offset(s)+len(s)`),
+/// so slicing a gradient or reassembling a parameter copy is a cheap
+/// contiguous copy, never a gather. Workers and all server shards are
+/// constructed from the same plan, so shard ids in messages are
+/// meaningful on both sides without negotiation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Rows of L.
+    pub k: usize,
+    /// Columns of L (feature dimension).
+    pub d: usize,
+    /// Row boundaries; shard `s` owns rows `bounds[s]..bounds[s+1]`.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Balanced contiguous partition. `shards` is clamped to `[1, k]`
+    /// so no shard is ever empty; the first `k % shards` shards get one
+    /// extra row.
+    pub fn new(k: usize, d: usize, shards: usize) -> ShardPlan {
+        assert!(k > 0 && d > 0, "empty parameter matrix");
+        let s = shards.clamp(1, k);
+        let base = k / s;
+        let rem = k % s;
+        let mut bounds = Vec::with_capacity(s + 1);
+        bounds.push(0);
+        let mut r = 0;
+        for i in 0..s {
+            r += base + usize::from(i < rem);
+            bounds.push(r);
+        }
+        ShardPlan { k, d, bounds }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Row range owned by shard `s`.
+    pub fn rows(&self, s: usize) -> std::ops::Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Element offset of shard `s`'s slice in row-major k×d storage.
+    pub fn offset(&self, s: usize) -> usize {
+        self.bounds[s] * self.d
+    }
+
+    /// Element count of shard `s`'s slice.
+    pub fn len(&self, s: usize) -> usize {
+        (self.bounds[s + 1] - self.bounds[s]) * self.d
+    }
+
+    /// Shard `s`'s slice of a row-major k×d buffer.
+    pub fn slice<'a>(&self, data: &'a [f32], s: usize) -> &'a [f32] {
+        &data[self.offset(s)..self.offset(s) + self.len(s)]
+    }
+
+    /// Mutable variant of [`ShardPlan::slice`].
+    pub fn slice_mut<'a>(
+        &self,
+        data: &'a mut [f32],
+        s: usize,
+    ) -> &'a mut [f32] {
+        let o = self.offset(s);
+        let n = self.len(s);
+        &mut data[o..o + n]
+    }
+}
 
 /// Worker → server.
 pub enum ToServer {
-    /// A gradient update computed on one minibatch.
+    /// One shard-slice of a gradient computed on one minibatch. A worker
+    /// step fans out into `shards()` of these, all sharing one transport
+    /// fate (a dropped step loses every slice, so shard parameters never
+    /// desynchronize within a step).
     Grad {
         worker: usize,
+        /// Which shard's row-slice this carries.
+        shard: usize,
         /// The worker's local step index this gradient belongs to.
         step: u64,
-        /// Row-major k×d gradient.
+        /// Row-major slice of the k×d gradient (rows `plan.rows(shard)`).
         grad: Vec<f32>,
-        /// Minibatch loss at the worker's local parameters (telemetry).
+        /// Minibatch loss at the worker's local parameters (telemetry;
+        /// identical across the step's slices, counted once per shard).
         loss: f32,
     },
-    /// Worker finished its step budget.
+    /// Worker finished its step budget (routed to every shard).
     Done { worker: usize },
 }
 
 /// Server → worker.
 pub enum ToWorker {
-    /// Fresh global parameters.
+    /// Fresh parameters for one shard. Versioned per shard; workers keep
+    /// the freshest version of each slice independently.
     Param {
-        /// Number of gradient updates applied to the global L so far.
+        /// Which shard's row-slice this carries.
+        shard: usize,
+        /// Number of gradient slices this shard has applied so far.
         version: u64,
-        /// SSP clock: min over workers of applied-update counts.
+        /// This shard's SSP clock: min over unfinished workers of
+        /// applied-slice counts. Workers gate on the min across shards.
         clock: u64,
-        /// Row-major k×d parameters.
+        /// Row-major slice of the k×d parameters (rows `plan.rows(shard)`).
         data: Vec<f32>,
     },
 }
@@ -38,9 +124,10 @@ pub enum ToWorker {
 impl std::fmt::Debug for ToServer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ToServer::Grad { worker, step, loss, grad } => f
+            ToServer::Grad { worker, shard, step, loss, grad } => f
                 .debug_struct("Grad")
                 .field("worker", worker)
+                .field("shard", shard)
                 .field("step", step)
                 .field("loss", loss)
                 .field("len", &grad.len())
@@ -55,12 +142,67 @@ impl std::fmt::Debug for ToServer {
 impl std::fmt::Debug for ToWorker {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ToWorker::Param { version, clock, data } => f
+            ToWorker::Param { shard, version, clock, data } => f
                 .debug_struct("Param")
+                .field("shard", shard)
                 .field("version", version)
                 .field("clock", clock)
                 .field("len", &data.len())
                 .finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_plan_covers_all_rows_balanced() {
+        for k in [1usize, 2, 5, 8, 13, 600] {
+            for shards in [1usize, 2, 3, 4, 16] {
+                let plan = ShardPlan::new(k, 7, shards);
+                assert_eq!(plan.shards(), shards.clamp(1, k));
+                let mut next = 0;
+                let mut sizes = Vec::new();
+                for s in 0..plan.shards() {
+                    let r = plan.rows(s);
+                    assert_eq!(r.start, next, "contiguous at shard {s}");
+                    assert!(r.end > r.start, "non-empty shard {s}");
+                    sizes.push(r.end - r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, k, "k={k} shards={shards}");
+                let (min, max) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                assert!(max - min <= 1, "balanced: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_slices_roundtrip() {
+        let (k, d) = (13, 5);
+        let plan = ShardPlan::new(k, d, 4);
+        let data: Vec<f32> = (0..k * d).map(|i| i as f32).collect();
+        let mut rebuilt = vec![0.0f32; k * d];
+        for s in 0..plan.shards() {
+            let src = plan.slice(&data, s).to_vec();
+            assert_eq!(src.len(), plan.len(s));
+            plan.slice_mut(&mut rebuilt, s).copy_from_slice(&src);
+        }
+        assert_eq!(rebuilt, data);
+    }
+
+    #[test]
+    fn shard_plan_offsets_are_row_aligned() {
+        let plan = ShardPlan::new(10, 3, 4);
+        for s in 0..plan.shards() {
+            assert_eq!(plan.offset(s) % plan.d, 0);
+            assert_eq!(plan.offset(s), plan.rows(s).start * plan.d);
+            assert_eq!(plan.len(s), (plan.rows(s).len()) * plan.d);
         }
     }
 }

@@ -1,12 +1,16 @@
 //! L3: the paper's distributed system — an asynchronous parameter server
-//! for distance metric learning.
+//! for distance metric learning, with the parameter space sharded.
 //!
-//! Topology (paper Fig. 1): one central server holding the global L and P
-//! workers each holding a local copy L_p and a shard of the pair sets.
-//! Workers compute minibatch gradients, push them to the server, and
-//! receive fresh parameters; the server folds gradients into the global L
-//! and broadcasts. All threads are "best-effort" and coordinate only
-//! through message queues (§4.2).
+//! Topology (paper Fig. 1, extended): the global L is row-partitioned
+//! into S server shards ([`ShardPlan`]), each with its own update thread,
+//! queues, and learning-rate clock; P workers each hold a local copy L_p
+//! and a shard of the pair sets. Workers compute minibatch gradients,
+//! split them into per-shard row slices on push, and reassemble their
+//! local copy from versioned per-shard `Param` slices (freshest wins) on
+//! pull. The SSP consistency gate operates on the min-over-shards clock.
+//! With `server_shards = 1` this is exactly the paper's single central
+//! server. All threads are "best-effort" and coordinate only through
+//! message queues (§4.2).
 //!
 //! [`run_training`] wires everything together and is the entry point used
 //! by the CLI, the end-to-end example, and the benches.
@@ -16,7 +20,7 @@ mod server;
 mod transport;
 mod worker;
 
-pub use messages::{ToServer, ToWorker};
+pub use messages::{ShardPlan, ToServer, ToWorker};
 pub use server::{ProbeFn, Server, ServerConfig, ServerResult};
 pub use transport::{drain, FaultSpec, FaultySender};
 pub use worker::{Worker, WorkerConfig, WorkerStats};
@@ -34,8 +38,22 @@ use crate::metrics::Curve;
 pub struct TrainResult {
     pub l: Mat,
     pub curve: Curve,
+    /// Logical full-gradient updates folded into the global L.
     pub applied_updates: u64,
+    /// Per-shard slice applications summed over shards
+    /// (= `applied_updates × server_shards`).
+    pub slice_updates: u64,
+    /// Broadcast rounds summed over shards (upper bound on param
+    /// traffic; the comm thread collapses to freshest-per-shard).
     pub broadcasts: u64,
+    /// Physical parameter slice messages shipped to workers.
+    pub param_msgs: u64,
+    /// Server shard count the run actually used (the config knob clamped
+    /// to the row count).
+    pub server_shards: usize,
+    /// Mean worker-reported minibatch loss over the server's last
+    /// telemetry window.
+    pub last_loss: f32,
     pub worker_stats: Vec<WorkerStats>,
     pub wall_s: f64,
 }
@@ -64,7 +82,7 @@ impl Default for RunOptions {
 ///
 /// * `engines` — factory each worker's computing thread uses; pass
 ///   [`crate::dml::native_factory`] or [`crate::runtime::xla_factory`].
-/// * The probe engine (objective recording on the server's update thread)
+/// * The probe engine (objective recording on the server's probe thread)
 ///   is always the native engine: probes are off the hot path and must
 ///   not depend on artifacts being present.
 pub fn run_training(
@@ -79,6 +97,27 @@ pub fn run_training(
     let l0 = problem.init_l(cfg.model.init_scale, cfg.seed);
     let p = cfg.cluster.workers;
     anyhow::ensure!(p > 0, "need at least one worker");
+    // BSP/SSP gates wait for server clocks that only advance when
+    // gradients arrive and parameter broadcasts land; with message drops
+    // and no retransmission the clock can stall below the gate forever.
+    // Fail fast instead of deadlocking the run.
+    anyhow::ensure!(
+        cfg.cluster.consistency == crate::config::Consistency::Asp
+            || (opts.faults.drop_grad_prob == 0.0
+                && opts.faults.drop_param_prob == 0.0),
+        "message drops require ASP consistency: BSP/SSP gates can \
+         deadlock on a dropped update (no retransmission layer)"
+    );
+
+    // ---- the shard plan both sides agree on (clamped to the row count;
+    //      server_shards = 0 is treated as 1 for configs predating the
+    //      knob) ----
+    let plan = ShardPlan::new(
+        cfg.model.k,
+        cfg.dataset.dim,
+        cfg.cluster.server_shards.max(1),
+    );
+    let server_shards = plan.shards();
 
     // ---- shard the pair sets across workers (paper §4.1) ----
     let shards = partition_pairs(pairs, p, cfg.seed ^ 0x5A4D);
@@ -93,7 +132,7 @@ pub fn run_training(
         to_worker_rxs.push(rx);
     }
 
-    // ---- objective probe (runs on the server update thread) ----
+    // ---- objective probe (runs on the server probe thread) ----
     let probe = make_probe(
         &dataset,
         pairs,
@@ -115,6 +154,7 @@ pub fn run_training(
             faults: opts.faults,
             seed: cfg.seed ^ 0x5E2,
         },
+        plan.clone(),
         l0.clone(),
         to_server_rx,
         to_worker_txs,
@@ -138,6 +178,7 @@ pub fn run_training(
         };
         workers.push(Worker::spawn(
             wcfg,
+            plan.clone(),
             l0.clone(),
             dataset.clone(),
             shard,
@@ -156,7 +197,11 @@ pub fn run_training(
         l: sr.l,
         curve: sr.curve,
         applied_updates: sr.applied_updates,
+        slice_updates: sr.slice_updates,
         broadcasts: sr.broadcasts,
+        param_msgs: sr.param_msgs,
+        server_shards,
+        last_loss: sr.last_loss,
         worker_stats,
         wall_s: watch.elapsed_s(),
     })
@@ -164,7 +209,7 @@ pub fn run_training(
 
 /// Build the server-side objective probe: materializes a fixed pair
 /// subsample (Send-safe buffers) and evaluates with a native engine
-/// constructed inside the update thread.
+/// constructed inside the probe thread.
 fn make_probe(
     dataset: &Dataset,
     pairs: &PairSet,

@@ -1,35 +1,51 @@
-//! The central parameter server (paper §4.2, server side).
+//! The sharded parameter server (paper §4.2 server side, partitioned).
 //!
-//! Two threads, two queues — exactly the paper's design:
+//! The paper's server is two threads and two queues: a communication
+//! thread feeding an inbound queue and draining an outbound queue, and an
+//! update thread folding gradients into the global L. Here the parameter
+//! space itself is partitioned: L's rows are split into S shards
+//! ([`super::ShardPlan`]), and each shard gets its *own* update thread,
+//! inbound queue, and learning-rate clock, so gradient folds for
+//! different row ranges run in parallel and every message carries only a
+//! shard's row-slice. With S = 1 this is exactly the paper's single
+//! server.
 //!
-//! * **communication thread** — receives gradient messages from workers
-//!   and puts them on the *inbound* queue; takes fresh parameters off the
-//!   *outbound* queue and broadcasts them to all workers.
-//! * **update thread** — takes a batch of gradient updates off the
-//!   inbound queue, applies them to the global parameter L, and puts the
-//!   updated parameter on the outbound queue.
+//! Threads:
 //!
-//! Threads run "best-effort … coordinated indirectly by the message
-//! queues" (§4.2) — no shared locks between them, only channels.
+//! * **communication thread** (one) — routes gradient slices from workers
+//!   to the owning shard's inbound queue, fans `Done` out to every shard,
+//!   and broadcasts fresh parameter slices (freshest version per shard
+//!   wins) to all workers through the fault model.
+//! * **shard update threads** (S) — each drains its inbound queue in
+//!   batches, applies `slice ← slice − lr(applied_s)·g_s`, tracks its own
+//!   per-worker counts and SSP clock, and emits versioned `Param` slices.
+//! * **probe thread** (one) — reassembles a full L from the slice
+//!   snapshots the shards publish and records the objective curve at the
+//!   configured cadence; keeps objective evaluation off every hot path.
+//!
+//! All coordination is through channels — no locks between threads,
+//! matching the paper's "best-effort, coordinated indirectly by the
+//! message queues" design (§4.2).
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::messages::{ToServer, ToWorker};
+use super::messages::{ShardPlan, ToServer, ToWorker};
 use super::transport::{drain, FaultSpec, FaultySender};
 use crate::dml::LrSchedule;
 use crate::linalg::Mat;
 use crate::metrics::{Curve, Stopwatch};
 
-/// A probe the update thread calls periodically to record the global
-/// objective (must be `Send`; engines are created inside the thread).
+/// A probe called periodically with the reassembled L to record the
+/// global objective (must be `Send`; engines are created inside the
+/// probe thread).
 pub type ProbeFn = Box<dyn FnMut(&Mat, u64, f64, &mut Curve) + Send>;
 
 pub struct ServerConfig {
     pub workers: usize,
-    /// Max gradient messages folded per update-thread dequeue round.
+    /// Max gradient messages folded per shard per dequeue round.
     pub server_batch: usize,
     pub lr: LrSchedule,
     /// Server-side lr multiplier. With P workers pushing independent
@@ -37,7 +53,8 @@ pub struct ServerConfig {
     /// (gradient averaging) — without it ASP's effective lr grows with
     /// the worker count and diverges once staleness is non-trivial.
     pub lr_scale: f32,
-    /// Record a curve point every `probe_every` applied updates.
+    /// Record a curve point every `probe_every` applied (logical)
+    /// updates.
     pub probe_every: u64,
     pub faults: FaultSpec,
     pub seed: u64,
@@ -47,151 +64,171 @@ pub struct ServerConfig {
 pub struct ServerResult {
     pub l: Mat,
     pub curve: Curve,
+    /// Logical full-gradient updates folded into L: the per-shard slice
+    /// applies summed over shards, divided by the shard count. Slices of
+    /// one step share one transport fate, so this is exact.
     pub applied_updates: u64,
+    /// Raw per-shard slice applications summed over shards
+    /// (= `applied_updates × shards`).
+    pub slice_updates: u64,
+    /// Broadcast rounds summed over shards. The comm thread collapses
+    /// queued rounds to the freshest slice per shard before sending, so
+    /// this is an upper bound on wire traffic — see `param_msgs`.
     pub broadcasts: u64,
-    /// Mean worker-reported minibatch loss over the last probe window.
+    /// Physical parameter slice messages actually shipped to workers
+    /// (per worker, per shard, post drop-gate).
+    pub param_msgs: u64,
+    /// Mean worker-reported minibatch loss over the last window,
+    /// averaged across shards.
     pub last_loss: f32,
+}
+
+/// What one shard's update thread hands back.
+struct ShardOutcome {
+    slice: Vec<f32>,
+    applied: u64,
+    broadcasts: u64,
+    last_loss: f32,
+    saw_loss: bool,
+}
+
+/// Slice snapshots flowing from shard update threads to the probe thread.
+enum ProbeMsg {
+    Snapshot { shard: usize, applied: u64, data: Vec<f32> },
+    ShardDone { shard: usize },
 }
 
 /// Handle to the running server threads.
 pub struct Server {
-    update_handle: std::thread::JoinHandle<ServerResult>,
-    comm_handle: std::thread::JoinHandle<()>,
+    shard_handles: Vec<std::thread::JoinHandle<ShardOutcome>>,
+    probe_handle: std::thread::JoinHandle<Curve>,
+    comm_handle: std::thread::JoinHandle<u64>,
+    plan: ShardPlan,
 }
 
 impl Server {
-    /// Spawn the server. `from_workers` is the shared worker→server
-    /// channel; `to_workers[w]` sends parameters to worker w.
+    /// Spawn the server threads. `from_workers` is the shared
+    /// worker→server channel; `to_workers[w]` sends parameter slices to
+    /// worker w.
     pub fn spawn(
         cfg: ServerConfig,
+        plan: ShardPlan,
         l0: Mat,
         from_workers: Receiver<ToServer>,
         to_workers: Vec<Sender<ToWorker>>,
         mut probe: ProbeFn,
     ) -> Server {
-        // The two §4.2 queues between comm and update threads:
-        let (inbound_tx, inbound_rx) = channel::<ToServer>();
-        let (outbound_tx, outbound_rx) = channel::<ToWorker>();
-        let done = Arc::new(AtomicBool::new(false));
-
-        // ------------------------- update thread -------------------------
-        let update_done = done.clone();
+        let shard_count = plan.shards();
         let workers = cfg.workers;
         let server_batch = cfg.server_batch.max(1);
-        let lr = cfg.lr;
-        let lr_scale = cfg.lr_scale;
         let probe_every = cfg.probe_every.max(1);
-        let update_handle = std::thread::Builder::new()
-            .name("ps-server-update".into())
+        let shards_done = Arc::new(AtomicUsize::new(0));
+
+        // Queues: one inbound per shard, one shared outbound, one probe.
+        let mut inbound_txs = Vec::with_capacity(shard_count);
+        let mut inbound_rxs = Vec::with_capacity(shard_count);
+        for _ in 0..shard_count {
+            let (tx, rx) = channel::<ToServer>();
+            inbound_txs.push(tx);
+            inbound_rxs.push(rx);
+        }
+        let (outbound_tx, outbound_rx) = channel::<ToWorker>();
+        // Bounded: periodic snapshots are best-effort telemetry and are
+        // dropped (try_send) when the probe lags, so a slow objective
+        // evaluation can never balloon memory with queued slices.
+        let (probe_tx, probe_rx) =
+            sync_channel::<ProbeMsg>(4 * shard_count + 8);
+
+        // ---------------------- shard update threads ----------------------
+        let mut shard_handles = Vec::with_capacity(shard_count);
+        for (s, inbound_rx) in inbound_rxs.into_iter().enumerate() {
+            let slice0 = plan.slice(&l0.data, s).to_vec();
+            let outbound_tx = outbound_tx.clone();
+            let probe_tx = probe_tx.clone();
+            let shards_done = shards_done.clone();
+            let lr = cfg.lr;
+            let lr_scale = cfg.lr_scale;
+            let handle = std::thread::Builder::new()
+                .name(format!("ps-server-shard{s}"))
+                .spawn(move || {
+                    let outcome = run_shard(
+                        s,
+                        slice0,
+                        workers,
+                        server_batch,
+                        lr,
+                        lr_scale,
+                        probe_every,
+                        &inbound_rx,
+                        &outbound_tx,
+                        &probe_tx,
+                    );
+                    shards_done.fetch_add(1, Ordering::SeqCst);
+                    outcome
+                })
+                .expect("spawn shard update thread");
+            shard_handles.push(handle);
+        }
+        drop(outbound_tx); // comm sees disconnect once all shards exit
+        drop(probe_tx); // probe sees disconnect once all shards exit
+
+        // -------------------------- probe thread --------------------------
+        let probe_plan = plan.clone();
+        let probe_handle = std::thread::Builder::new()
+            .name("ps-server-probe".into())
             .spawn(move || {
                 let mut l = l0;
                 let mut curve = Curve::new("server");
-                let clock_counts = vec![0u64; workers];
-                let mut counts = clock_counts;
-                let mut applied = 0u64;
-                let mut broadcasts = 0u64;
-                let mut finished = vec![false; workers];
-                let mut loss_acc = 0.0f64;
-                let mut loss_n = 0u64;
-                let mut last_loss = 0.0f32;
+                let shard_count = probe_plan.shards() as u64;
+                let mut applied = vec![0u64; probe_plan.shards()];
+                let mut done = vec![false; probe_plan.shards()];
+                let mut next_probe = probe_every;
                 let watch = Stopwatch::start();
                 // initial probe (t=0 point on every convergence curve)
                 probe(&l, 0, 0.0, &mut curve);
                 loop {
-                    let batch = match drain(
-                        &inbound_rx,
-                        server_batch,
-                        Duration::from_millis(20),
-                    ) {
-                        Ok(b) => b,
-                        Err(_) => break, // comm thread gone
-                    };
-                    if batch.is_empty() {
-                        if finished.iter().all(|&f| f) {
-                            break;
-                        }
-                        continue;
-                    }
-                    let mut applied_this_round = false;
-                    for msg in batch {
-                        match msg {
-                            ToServer::Grad { worker, grad, loss, .. } => {
-                                // L ← L − lr_t · ΔL_p  (server-side SGD)
-                                let lr_t =
-                                    lr.at(applied as usize) * lr_scale;
-                                for (a, gv) in
-                                    l.data.iter_mut().zip(&grad)
-                                {
-                                    *a -= lr_t * gv;
-                                }
-                                applied += 1;
-                                counts[worker] += 1;
-                                loss_acc += loss as f64;
-                                loss_n += 1;
-                                applied_this_round = true;
-                                if applied % probe_every == 0 {
-                                    probe(
-                                        &l,
-                                        applied,
-                                        watch.elapsed_s(),
-                                        &mut curve,
-                                    );
-                                    last_loss = (loss_acc
-                                        / loss_n.max(1) as f64)
-                                        as f32;
-                                    loss_acc = 0.0;
-                                    loss_n = 0;
-                                }
-                            }
-                            ToServer::Done { worker } => {
-                                finished[worker] = true;
+                    match probe_rx.recv() {
+                        Ok(ProbeMsg::Snapshot { shard, applied: a, data }) => {
+                            probe_plan
+                                .slice_mut(&mut l.data, shard)
+                                .copy_from_slice(&data);
+                            applied[shard] = applied[shard].max(a);
+                            let logical =
+                                applied.iter().sum::<u64>() / shard_count;
+                            if logical >= next_probe {
+                                probe(
+                                    &l,
+                                    logical,
+                                    watch.elapsed_s(),
+                                    &mut curve,
+                                );
+                                next_probe = (logical / probe_every + 1)
+                                    * probe_every;
                             }
                         }
-                    }
-                    if applied_this_round {
-                        let clock = counts
-                            .iter()
-                            .zip(&finished)
-                            .map(|(&c, &f)| if f { u64::MAX } else { c })
-                            .min()
-                            .unwrap_or(0);
-                        let clock = if clock == u64::MAX {
-                            *counts.iter().max().unwrap_or(&0)
-                        } else {
-                            clock
-                        };
-                        broadcasts += 1;
-                        // put fresh parameters on the outbound queue
-                        let _ = outbound_tx.send(ToWorker::Param {
-                            version: applied,
-                            clock,
-                            data: l.data.clone(),
-                        });
-                    }
-                    if finished.iter().all(|&f| f) {
-                        break;
+                        Ok(ProbeMsg::ShardDone { shard }) => {
+                            done[shard] = true;
+                            if done.iter().all(|&f| f) {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
                     }
                 }
-                // final probe
-                probe(&l, applied, watch.elapsed_s(), &mut curve);
-                update_done.store(true, Ordering::SeqCst);
-                ServerResult {
-                    l,
-                    curve,
-                    applied_updates: applied,
-                    broadcasts,
-                    last_loss,
-                }
+                // final probe on the fully assembled final L
+                let logical = applied.iter().sum::<u64>() / shard_count;
+                probe(&l, logical, watch.elapsed_s(), &mut curve);
+                curve
             })
-            .expect("spawn server update thread");
+            .expect("spawn server probe thread");
 
-        // ----------------------- communication thread --------------------
-        let comm_done = done;
+        // ----------------------- communication thread ---------------------
+        let comm_done = shards_done;
         let faults = cfg.faults;
         let seed = cfg.seed;
         let comm_handle = std::thread::Builder::new()
             .name("ps-server-comm".into())
-            .spawn(move || {
+            .spawn(move || -> u64 {
                 let mut senders: Vec<FaultySender<ToWorker>> = to_workers
                     .into_iter()
                     .enumerate()
@@ -204,54 +241,278 @@ impl Server {
                         )
                     })
                     .collect();
+                // reused across iterations: freshest pending Param per
+                // shard (no steady-state allocation in the poll loop)
+                let mut latest: Vec<Option<ToWorker>> =
+                    (0..inbound_txs.len()).map(|_| None).collect();
                 loop {
-                    // inbound direction: workers → update thread
-                    match from_workers.recv_timeout(Duration::from_millis(5))
+                    // inbound direction: workers → shard update threads.
+                    // Move a bounded batch per iteration so slice traffic
+                    // (S messages per step) doesn't starve the outbound
+                    // direction.
+                    match from_workers.recv_timeout(Duration::from_millis(1))
                     {
                         Ok(msg) => {
-                            if inbound_tx.send(msg).is_err() {
-                                break; // update thread exited
+                            route(&inbound_txs, msg);
+                            for _ in 0..256 {
+                                match from_workers.try_recv() {
+                                    Ok(m) => route(&inbound_txs, m),
+                                    Err(_) => break,
+                                }
                             }
                         }
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                         Err(_) => break, // all workers hung up
                     }
-                    // outbound direction: update thread → workers.
-                    // Collapse to the freshest parameter if several are
-                    // queued (later params supersede earlier ones).
-                    let mut latest: Option<ToWorker> = None;
-                    while let Ok(p) = outbound_rx.try_recv() {
-                        latest = Some(p);
+                    // outbound direction: shard update threads → workers.
+                    broadcast_freshest(
+                        &outbound_rx,
+                        &mut latest,
+                        &mut senders,
+                    );
+                    // deliver any latency-delayed messages that came due
+                    for snd in senders.iter_mut() {
+                        let _ = snd.pump();
                     }
-                    if let Some(ToWorker::Param { version, clock, data }) =
-                        latest
+                    if comm_done.load(Ordering::SeqCst)
+                        == inbound_txs.len()
                     {
-                        for s in senders.iter_mut() {
-                            let _ = s.send(ToWorker::Param {
-                                version,
-                                clock,
-                                data: data.clone(),
-                            });
-                        }
-                    }
-                    if comm_done.load(Ordering::SeqCst) {
-                        // flush any remaining inbound Done messages
+                        // all shards exited: flush remaining control
+                        // messages, ship final Param slices queued since
+                        // this iteration's drain, flush in-flight, leave
                         while let Ok(msg) = from_workers.try_recv() {
-                            let _ = inbound_tx.send(msg);
+                            route(&inbound_txs, msg);
+                        }
+                        broadcast_freshest(
+                            &outbound_rx,
+                            &mut latest,
+                            &mut senders,
+                        );
+                        for snd in senders.iter_mut() {
+                            snd.flush_blocking();
                         }
                         break;
                     }
                 }
+                // physical param messages shipped (post drop-gate),
+                // summed over workers — the bench's message-count truth
+                senders.iter().map(|s| s.stats().0).sum()
             })
             .expect("spawn server comm thread");
 
-        Server { update_handle, comm_handle }
+        Server { shard_handles, probe_handle, comm_handle, plan }
     }
 
-    /// Join both threads and return the final state.
+    /// Join all threads and return the final state.
     pub fn join(self) -> ServerResult {
-        let result = self.update_handle.join().expect("server update panicked");
-        self.comm_handle.join().expect("server comm panicked");
-        result
+        let outcomes: Vec<ShardOutcome> = self
+            .shard_handles
+            .into_iter()
+            .map(|h| h.join().expect("server shard panicked"))
+            .collect();
+        let param_msgs =
+            self.comm_handle.join().expect("server comm panicked");
+        let curve = self.probe_handle.join().expect("server probe panicked");
+
+        let mut l = Mat::zeros(self.plan.k, self.plan.d);
+        for (s, o) in outcomes.iter().enumerate() {
+            self.plan.slice_mut(&mut l.data, s).copy_from_slice(&o.slice);
+        }
+        let slice_updates: u64 = outcomes.iter().map(|o| o.applied).sum();
+        let applied_updates = slice_updates / self.plan.shards() as u64;
+        let broadcasts: u64 = outcomes.iter().map(|o| o.broadcasts).sum();
+        let (mut acc, mut n) = (0.0f64, 0u32);
+        for o in &outcomes {
+            if o.saw_loss {
+                acc += o.last_loss as f64;
+                n += 1;
+            }
+        }
+        let last_loss = if n > 0 { (acc / n as f64) as f32 } else { 0.0 };
+        ServerResult {
+            l,
+            curve,
+            applied_updates,
+            slice_updates,
+            broadcasts,
+            param_msgs,
+            last_loss,
+        }
     }
+}
+
+/// Drain the shards' outbound queue, collapse to the freshest parameter
+/// slice per shard (versions supersede), and broadcast those slices to
+/// every worker through the fault model. `latest` is the caller's reused
+/// scratch (left all-`None` on return).
+fn broadcast_freshest(
+    outbound_rx: &Receiver<ToWorker>,
+    latest: &mut [Option<ToWorker>],
+    senders: &mut [FaultySender<ToWorker>],
+) {
+    let mut any = false;
+    while let Ok(p) = outbound_rx.try_recv() {
+        let s = match &p {
+            ToWorker::Param { shard, .. } => *shard,
+        };
+        latest[s] = Some(p);
+        any = true;
+    }
+    if !any {
+        return;
+    }
+    for slot in latest.iter_mut() {
+        if let Some(ToWorker::Param { shard, version, clock, data }) =
+            slot.take()
+        {
+            for snd in senders.iter_mut() {
+                let _ = snd.send(ToWorker::Param {
+                    shard,
+                    version,
+                    clock,
+                    data: data.clone(),
+                });
+            }
+        }
+    }
+}
+
+/// Route one worker message to the owning shard (`Done` fans out to all).
+/// Send errors mean the shard already exited, which only happens after it
+/// saw every worker finish — safe to ignore.
+fn route(inbound: &[Sender<ToServer>], msg: ToServer) {
+    let target = match &msg {
+        ToServer::Grad { shard, .. } => Some(*shard),
+        ToServer::Done { .. } => None,
+    };
+    match target {
+        Some(s) if s < inbound.len() => {
+            let _ = inbound[s].send(msg);
+        }
+        Some(s) => {
+            debug_assert!(false, "grad for unknown shard {s}");
+        }
+        None => {
+            if let ToServer::Done { worker } = msg {
+                for tx in inbound {
+                    let _ = tx.send(ToServer::Done { worker });
+                }
+            }
+        }
+    }
+}
+
+/// One shard's update loop: fold gradient slices into the owned row
+/// range with this shard's own lr clock, maintain per-worker counts and
+/// the shard SSP clock, publish versioned `Param` slices and probe
+/// snapshots.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    shard: usize,
+    mut slice: Vec<f32>,
+    workers: usize,
+    server_batch: usize,
+    lr: LrSchedule,
+    lr_scale: f32,
+    probe_every: u64,
+    inbound_rx: &Receiver<ToServer>,
+    outbound_tx: &Sender<ToWorker>,
+    probe_tx: &SyncSender<ProbeMsg>,
+) -> ShardOutcome {
+    let mut counts = vec![0u64; workers];
+    let mut finished = vec![false; workers];
+    let mut applied = 0u64;
+    let mut broadcasts = 0u64;
+    let mut loss_acc = 0.0f64;
+    let mut loss_n = 0u64;
+    let mut last_loss = 0.0f32;
+    let mut saw_loss = false;
+    loop {
+        let batch = match drain(
+            inbound_rx,
+            server_batch,
+            Duration::from_millis(20),
+        ) {
+            Ok(b) => b,
+            Err(_) => break, // comm thread gone
+        };
+        if batch.is_empty() {
+            if finished.iter().all(|&f| f) {
+                break;
+            }
+            continue;
+        }
+        let mut applied_this_round = false;
+        for msg in batch {
+            match msg {
+                ToServer::Grad { worker, grad, loss, .. } => {
+                    // slice ← slice − lr_t · g_s  (per-shard lr clock)
+                    let lr_t = lr.at(applied as usize) * lr_scale;
+                    for (a, gv) in slice.iter_mut().zip(&grad) {
+                        *a -= lr_t * gv;
+                    }
+                    applied += 1;
+                    counts[worker] += 1;
+                    loss_acc += loss as f64;
+                    loss_n += 1;
+                    applied_this_round = true;
+                    if applied % probe_every == 0 {
+                        // best-effort: skip the snapshot if the probe
+                        // thread is behind (curve just loses a point)
+                        let _ = probe_tx.try_send(ProbeMsg::Snapshot {
+                            shard,
+                            applied,
+                            data: slice.clone(),
+                        });
+                        last_loss =
+                            (loss_acc / loss_n.max(1) as f64) as f32;
+                        saw_loss = true;
+                        loss_acc = 0.0;
+                        loss_n = 0;
+                    }
+                }
+                ToServer::Done { worker } => {
+                    finished[worker] = true;
+                }
+            }
+        }
+        if applied_this_round {
+            // SSP clock: min over unfinished workers' applied counts;
+            // finished workers stop holding the clock back.
+            let clock = counts
+                .iter()
+                .zip(&finished)
+                .map(|(&c, &f)| if f { u64::MAX } else { c })
+                .min()
+                .unwrap_or(0);
+            let clock = if clock == u64::MAX {
+                *counts.iter().max().unwrap_or(&0)
+            } else {
+                clock
+            };
+            broadcasts += 1;
+            let _ = outbound_tx.send(ToWorker::Param {
+                shard,
+                version: applied,
+                clock,
+                data: slice.clone(),
+            });
+        }
+        if finished.iter().all(|&f| f) {
+            break;
+        }
+    }
+    // fold the tail window into the loss telemetry, then hand the probe
+    // thread the final slice so the last curve point sees the final L
+    if loss_n > 0 {
+        last_loss = (loss_acc / loss_n as f64) as f32;
+        saw_loss = true;
+    }
+    let _ = probe_tx.send(ProbeMsg::Snapshot {
+        shard,
+        applied,
+        data: slice.clone(),
+    });
+    let _ = probe_tx.send(ProbeMsg::ShardDone { shard });
+    ShardOutcome { slice, applied, broadcasts, last_loss, saw_loss }
 }

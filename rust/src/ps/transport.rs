@@ -4,20 +4,33 @@
 //! channels wrapped with an optional fault model (message drops, injected
 //! latency) so tests can exercise the protocol under degraded conditions
 //! and benches can study sensitivity to communication cost.
+//!
+//! Latency is injected at *delivery* time, not send time: a delayed
+//! message parks in a per-sender in-flight queue and is handed to the
+//! channel once its deadline passes (on the next [`FaultySender::send`] or
+//! [`FaultySender::pump`]). The sender never blocks, so a laggy link to
+//! one worker cannot stall the comm thread that serves every other link —
+//! with the server sharded, a blocking sleep here would serialize all
+//! shards' traffic through one nap.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::rng::Pcg32;
 
 /// Fault/latency injection parameters (all zero = perfect transport).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FaultSpec {
-    /// Probability a *gradient* message is silently dropped.
+    /// Probability a *gradient* push is silently dropped. The drop is
+    /// decided once per worker step: all shard-slices of the step share
+    /// the fate, so a lossy link loses whole updates, never half of one.
     pub drop_grad_prob: f64,
-    /// Probability a *parameter* broadcast to one worker is dropped.
+    /// Probability a *parameter* slice broadcast to one worker is
+    /// dropped (decided per slice per worker; a stale shard just waits
+    /// for the next broadcast).
     pub drop_param_prob: f64,
-    /// Fixed latency added to every delivered message.
+    /// Latency added to every delivered message (delivery-time).
     pub latency: Duration,
 }
 
@@ -34,6 +47,11 @@ impl FaultSpec {
 }
 
 /// Sender wrapper that applies the fault model.
+///
+/// `stats()` counts *logical* sends: a [`FaultySender::send_group`] of S
+/// physical slices is one send (or one drop), and control messages sent
+/// via [`FaultySender::send_reliable`] are not counted at all — so a
+/// worker's `sent + dropped` equals its step count exactly.
 pub struct FaultySender<T> {
     tx: Sender<T>,
     drop_prob: f64,
@@ -41,6 +59,10 @@ pub struct FaultySender<T> {
     rng: Pcg32,
     sent: u64,
     dropped: u64,
+    /// Messages in flight: FIFO of (delivery deadline, payload). All
+    /// deadlines share the same fixed latency, so the front is always
+    /// the earliest.
+    inflight: VecDeque<(Instant, T)>,
 }
 
 impl<T> FaultySender<T> {
@@ -53,40 +75,99 @@ impl<T> FaultySender<T> {
             rng: Pcg32::with_stream(seed, 0xFA017),
             sent: 0,
             dropped: 0,
+            inflight: VecDeque::new(),
         }
     }
 
-    /// Send through the fault model. Returns Ok even when the message is
-    /// dropped (that's the point); Err only when the peer hung up.
+    /// Send one message through the fault model. Returns Ok even when
+    /// the message is dropped (that's the point); Err only when the peer
+    /// hung up.
     pub fn send(&mut self, msg: T) -> Result<(), ()> {
+        self.send_group(std::iter::once(msg))
+    }
+
+    /// Send a group of physical messages that share one transport fate:
+    /// one drop decision and one `sent`/`dropped` count for the whole
+    /// group. Used for the per-shard slices of a single gradient step.
+    pub fn send_group<I>(&mut self, msgs: I) -> Result<(), ()>
+    where
+        I: IntoIterator<Item = T>,
+    {
         if self.drop_prob > 0.0 && self.rng.f64() < self.drop_prob {
             self.dropped += 1;
+            return self.pump();
+        }
+        // count only after the transport accepted the group, so a
+        // hung-up peer doesn't inflate the sent telemetry
+        self.enqueue(msgs)?;
+        self.sent += 1;
+        self.pump()
+    }
+
+    /// Send bypassing the drop model (control messages like `Done` model
+    /// a reliable control plane). Still subject to latency, and ordered
+    /// after earlier in-flight messages. Not counted in `stats()`.
+    pub fn send_reliable(&mut self, msg: T) -> Result<(), ()> {
+        self.enqueue(std::iter::once(msg))?;
+        self.pump()
+    }
+
+    fn enqueue<I>(&mut self, msgs: I) -> Result<(), ()>
+    where
+        I: IntoIterator<Item = T>,
+    {
+        if self.latency.is_zero() && self.inflight.is_empty() {
+            // fast path: perfect-latency transport never touches the queue
+            for m in msgs {
+                self.tx.send(m).map_err(|_| ())?;
+            }
             return Ok(());
         }
-        if !self.latency.is_zero() {
-            // Injected latency models serialization + wire time. The
-            // sender blocks, which matches a synchronous send over a
-            // socket with a small kernel buffer.
-            std::thread::sleep(self.latency);
+        let due = Instant::now() + self.latency;
+        for m in msgs {
+            self.inflight.push_back((due, m));
         }
-        self.sent += 1;
-        self.tx.send(msg).map_err(|_| ())
+        Ok(())
     }
 
-    /// Send bypassing the fault model (control messages like `Done`
-    /// model a reliable control plane).
-    pub fn send_reliable(&mut self, msg: T) -> Result<(), ()> {
-        self.sent += 1;
-        self.tx.send(msg).map_err(|_| ())
+    /// Deliver every in-flight message whose latency has elapsed. Call
+    /// from the owning comm loop each iteration so deliveries happen even
+    /// when nothing new is being sent.
+    pub fn pump(&mut self) -> Result<(), ()> {
+        while !self.inflight.is_empty() {
+            let due = self.inflight.front().unwrap().0;
+            if due > Instant::now() {
+                break;
+            }
+            let (_, m) = self.inflight.pop_front().unwrap();
+            self.tx.send(m).map_err(|_| ())?;
+        }
+        Ok(())
     }
 
+    /// Wait out remaining latencies and deliver everything still in
+    /// flight (shutdown path; delivery order is preserved).
+    pub fn flush_blocking(&mut self) {
+        while let Some((due, m)) = self.inflight.pop_front() {
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            if self.tx.send(m).is_err() {
+                self.inflight.clear();
+                return;
+            }
+        }
+    }
+
+    /// (logical sends, logical drops) — see the type docs.
     pub fn stats(&self) -> (u64, u64) {
         (self.sent, self.dropped)
     }
 }
 
 /// Drain up to `max` pending messages without blocking; first waits up to
-/// `timeout` for one message. The server comm thread's dequeue pattern.
+/// `timeout` for one message. The shard update threads' dequeue pattern.
 pub fn drain<T>(
     rx: &Receiver<T>,
     max: usize,
@@ -145,6 +226,81 @@ mod tests {
         drop(rx);
         let mut s = FaultySender::new(tx, 0.0, Duration::ZERO, 2);
         assert!(s.send(1).is_err());
+    }
+
+    #[test]
+    fn group_shares_one_fate() {
+        let (tx, rx) = channel();
+        let mut s = FaultySender::new(tx, 0.4, Duration::ZERO, 3);
+        let groups = 2_000usize;
+        for g in 0..groups {
+            s.send_group((0..4).map(|i| (g, i))).unwrap();
+        }
+        let got: Vec<(usize, usize)> = rx.try_iter().collect();
+        let (sent, dropped) = s.stats();
+        assert_eq!(sent + dropped, groups as u64);
+        // delivered count is exactly 4 × logical sends: no partial groups
+        assert_eq!(got.len() as u64, 4 * sent);
+        for chunk in got.chunks(4) {
+            assert!(chunk.iter().all(|&(g, _)| g == chunk[0].0));
+            assert_eq!(
+                chunk.iter().map(|&(_, i)| i).collect::<Vec<_>>(),
+                vec![0, 1, 2, 3]
+            );
+        }
+        assert!(dropped > 0, "fault injection inactive");
+    }
+
+    #[test]
+    fn latency_does_not_block_sender() {
+        let (tx, rx) = channel();
+        let lat = Duration::from_millis(300);
+        let mut s = FaultySender::new(tx, 0.0, lat, 4);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            s.send(i).unwrap();
+        }
+        // delivery-time latency: the sends return immediately. A
+        // blocking sender would take ≥ 5 × 300 ms; the 4× bound plus
+        // the elapsed guard below keep this stable on stalled CI
+        // runners while still catching a regression to send-time sleeps.
+        assert!(
+            t0.elapsed() < lat * 4,
+            "sender blocked: {:?}",
+            t0.elapsed()
+        );
+        if t0.elapsed() < lat {
+            assert_eq!(rx.try_iter().count(), 0, "delivered early");
+        }
+        std::thread::sleep(lat + Duration::from_millis(20));
+        s.pump().unwrap();
+        let got: Vec<i32> = rx.try_iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4], "order preserved");
+    }
+
+    #[test]
+    fn flush_blocking_delivers_in_flight() {
+        let (tx, rx) = channel();
+        let mut s =
+            FaultySender::new(tx, 0.0, Duration::from_millis(15), 5);
+        for i in 0..3 {
+            s.send(i).unwrap();
+        }
+        s.send_reliable(99).unwrap();
+        s.flush_blocking();
+        let got: Vec<i32> = rx.try_iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 99]);
+    }
+
+    #[test]
+    fn reliable_sends_are_ordered_and_uncounted() {
+        let (tx, rx) = channel();
+        let mut s = FaultySender::new(tx, 0.0, Duration::ZERO, 6);
+        s.send(1).unwrap();
+        s.send_reliable(2).unwrap();
+        s.send(3).unwrap();
+        assert_eq!(rx.try_iter().collect::<Vec<i32>>(), vec![1, 2, 3]);
+        assert_eq!(s.stats(), (2, 0), "control messages not counted");
     }
 
     #[test]

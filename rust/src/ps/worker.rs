@@ -1,17 +1,20 @@
-//! Worker machine (paper §4.2, worker side).
+//! Worker machine (paper §4.2, worker side), sharded-server aware.
 //!
 //! Three threads per worker, exactly the paper's structure:
 //!
 //! * **local computing thread** — takes a minibatch of its pair shard,
 //!   computes the gradient on the local parameter copy, applies it
 //!   locally, and puts it on the outbound queue;
-//! * **communication thread** — ships outbound gradients to the server
-//!   and moves incoming parameter messages onto the inbound queue;
-//! * **remote update thread** — takes fresh parameters off the inbound
-//!   queue and replaces the local copy.
+//! * **communication thread** — splits each outbound gradient into
+//!   per-server-shard row slices (one transport fate per step) and ships
+//!   them; moves incoming parameter slices onto the inbound queue;
+//! * **remote update thread** — takes fresh parameter slices off the
+//!   inbound queue and splices them into the local copy, freshest
+//!   version per shard wins.
 //!
-//! Consistency (ASP/BSP/SSP) is enforced in the computing thread: under
-//! SSP(s) a worker at local step t blocks until the server clock reaches
+//! Consistency (ASP/BSP/SSP) is enforced in the computing thread against
+//! the *min over server shards* of the shard clocks: under SSP(s) a
+//! worker at local step t blocks until every shard's clock reaches
 //! t − s; ASP is s = ∞ (never blocks — the paper's mode); BSP is s = 0.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -19,7 +22,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use super::messages::{ToServer, ToWorker};
+use super::messages::{ShardPlan, ToServer, ToWorker};
 use super::transport::{FaultSpec, FaultySender};
 use crate::config::Consistency;
 use crate::data::{Dataset, MinibatchIter, PairShard};
@@ -49,27 +52,52 @@ pub struct WorkerConfig {
 pub struct WorkerStats {
     pub id: usize,
     pub steps_done: u64,
+    /// Logical gradient pushes (one per step; a push fans out into one
+    /// slice message per server shard, all sharing one fate).
     pub grads_sent: u64,
     pub grads_dropped: u64,
+    /// Parameter slice messages received.
     pub params_received: u64,
     /// Total seconds the computing thread spent blocked on consistency.
     pub wait_s: f64,
+    /// Max observed staleness: own step index minus the min-over-shards
+    /// server clock, measured right before each gradient computation.
+    /// SSP(s) guarantees this never exceeds s; BSP pins it to 0.
+    pub max_staleness: u64,
     pub last_loss: f32,
+}
+
+/// Worker-internal outbound queue entries (computing → comm thread).
+/// The comm thread slices `Step` into per-shard wire messages.
+enum Outbound {
+    Step { step: u64, grad: Vec<f32>, loss: f32 },
+    Done,
 }
 
 /// Shared state between the three worker threads.
 struct Shared {
-    /// Local parameter copy L_p.
+    /// Local parameter copy L_p (reassembled from shard slices).
     l: Mutex<Mat>,
-    /// Latest server clock seen (for SSP gating).
-    clock: AtomicU64,
-    /// Latest parameter version seen.
-    version: AtomicU64,
+    /// Latest server clock seen, per shard (for SSP gating).
+    clocks: Vec<AtomicU64>,
+    /// Latest parameter version seen, per shard (freshest-wins).
+    versions: Vec<AtomicU64>,
     /// Signalled by the remote-update thread when new state arrives.
     cv: Condvar,
     cv_m: Mutex<()>,
     stop: AtomicBool,
     params_received: AtomicU64,
+}
+
+impl Shared {
+    /// The SSP gate's clock: min over server shards.
+    fn min_clock(&self) -> u64 {
+        self.clocks
+            .iter()
+            .map(|c| c.load(Ordering::SeqCst))
+            .min()
+            .unwrap_or(0)
+    }
 }
 
 pub struct Worker {
@@ -82,6 +110,7 @@ pub struct Worker {
 impl Worker {
     /// Spawn a worker's three threads.
     ///
+    /// * `plan`: the shard plan shared with the server.
     /// * `dataset`/`shard`: this worker's pair shard (paper §4.1).
     /// * `to_server`: shared channel into the server's comm thread.
     /// * `from_server`: this worker's parameter channel.
@@ -89,6 +118,7 @@ impl Worker {
     ///   inside the thread (PJRT handles are not `Send`).
     pub fn spawn(
         cfg: WorkerConfig,
+        plan: ShardPlan,
         l0: Mat,
         dataset: Arc<Dataset>,
         shard: PairShard,
@@ -96,10 +126,11 @@ impl Worker {
         from_server: Receiver<ToWorker>,
         engines: EngineFactory,
     ) -> Worker {
+        let shard_count = plan.shards();
         let shared = Arc::new(Shared {
             l: Mutex::new(l0),
-            clock: AtomicU64::new(0),
-            version: AtomicU64::new(0),
+            clocks: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
+            versions: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
             cv: Condvar::new(),
             cv_m: Mutex::new(()),
             stop: AtomicBool::new(false),
@@ -107,7 +138,7 @@ impl Worker {
         });
 
         // internal queues (paper: worker-side inbound/outbound queues)
-        let (outbound_tx, outbound_rx) = channel::<ToServer>();
+        let (outbound_tx, outbound_rx) = channel::<Outbound>();
         let (inbound_tx, inbound_rx) = channel::<ToWorker>();
 
         // --------------------- local computing thread ---------------------
@@ -141,12 +172,13 @@ impl Worker {
                 let mut g = Mat::zeros(k, d);
                 let mut stats = WorkerStats { id, ..Default::default() };
                 for step in 0..cfg.steps as u64 {
-                    // ---- consistency gate (SSP inequality) ----
+                    // ---- consistency gate (SSP inequality over the
+                    //      min-over-shards clock) ----
                     if staleness != u64::MAX && step > staleness {
                         let need = step - staleness;
                         let t0 = std::time::Instant::now();
                         let mut guard = c_shared.cv_m.lock().unwrap();
-                        while c_shared.clock.load(Ordering::SeqCst) < need
+                        while c_shared.min_clock() < need
                             && !c_shared.stop.load(Ordering::SeqCst)
                         {
                             let (g2, _timeout) = c_shared
@@ -164,6 +196,11 @@ impl Worker {
                     if c_shared.stop.load(Ordering::SeqCst) {
                         break;
                     }
+                    // observed staleness at compute time (telemetry; the
+                    // SSP regression tests assert its bound)
+                    stats.max_staleness = stats.max_staleness.max(
+                        step.saturating_sub(c_shared.min_clock()),
+                    );
                     // ---- compute gradient on the local copy ----
                     iter.next_batch();
                     {
@@ -191,8 +228,7 @@ impl Worker {
                         }
                     }
                     // ---- enqueue for the server ----
-                    let msg = ToServer::Grad {
-                        worker: id,
+                    let msg = Outbound::Step {
                         step,
                         grad: g.data.clone(),
                         loss,
@@ -202,33 +238,49 @@ impl Worker {
                     }
                     stats.steps_done += 1;
                 }
-                let _ = outbound_tx.send(ToServer::Done { worker: id });
+                let _ = outbound_tx.send(Outbound::Done);
                 stats
             })
             .expect("spawn compute thread");
 
         // --------------------- remote update thread ----------------------
         let r_shared = shared.clone();
+        let r_plan = plan.clone();
         let remote_update = std::thread::Builder::new()
             .name(format!("ps-worker{id}-remote-update"))
             .spawn(move || {
                 loop {
                     match inbound_rx.recv_timeout(Duration::from_millis(20))
                     {
-                        Ok(ToWorker::Param { version, clock, data }) => {
-                            {
-                                let mut l = r_shared.l.lock().unwrap();
-                                // replace local copy with global L (§4.1)
-                                l.data.copy_from_slice(&data);
-                            }
-                            r_shared
-                                .version
-                                .store(version, Ordering::SeqCst);
-                            r_shared.clock.store(clock, Ordering::SeqCst);
+                        Ok(ToWorker::Param {
+                            shard,
+                            version,
+                            clock,
+                            data,
+                        }) => {
                             r_shared
                                 .params_received
                                 .fetch_add(1, Ordering::Relaxed);
-                            r_shared.cv.notify_all();
+                            // freshest version per shard wins
+                            if version
+                                > r_shared.versions[shard]
+                                    .load(Ordering::SeqCst)
+                            {
+                                {
+                                    let mut l =
+                                        r_shared.l.lock().unwrap();
+                                    // splice the slice into the local
+                                    // copy (§4.1, per shard)
+                                    r_plan
+                                        .slice_mut(&mut l.data, shard)
+                                        .copy_from_slice(&data);
+                                }
+                                r_shared.versions[shard]
+                                    .store(version, Ordering::SeqCst);
+                                r_shared.clocks[shard]
+                                    .store(clock, Ordering::SeqCst);
+                                r_shared.cv.notify_all();
+                            }
                         }
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
                             if r_shared.stop.load(Ordering::SeqCst) {
@@ -256,19 +308,11 @@ impl Worker {
                 );
                 loop {
                     let mut did_work = false;
-                    // outbound: gradients → server
+                    // outbound: gradient slices → server (one fate per
+                    // step), Done over the reliable control plane
                     match outbound_rx.try_recv() {
                         Ok(msg) => {
-                            let is_done =
-                                matches!(msg, ToServer::Done { .. });
-                            // Done must never be dropped: bypass faults.
-                            if is_done {
-                                // consume the faulty sender's inner tx
-                                // via a clean send path
-                                let _ = to_server.send_reliable(msg);
-                            } else {
-                                let _ = to_server.send(msg);
-                            }
+                            let _ = ship(&mut to_server, &plan, id, msg);
                             did_work = true;
                         }
                         Err(std::sync::mpsc::TryRecvError::Empty) => {}
@@ -276,24 +320,31 @@ impl Worker {
                             // compute thread done & channel drained
                         }
                     }
-                    // inbound: params ← server
+                    // inbound: parameter slices ← server. The remote-
+                    // update thread can exit slightly before us during
+                    // shutdown; a failed handoff then just means params
+                    // are no longer needed — never skip the stop-flush
+                    // below, or queued gradients and Done would be lost.
                     match from_server.try_recv() {
                         Ok(msg) => {
-                            if inbound_tx.send(msg).is_err() {
-                                break;
+                            if inbound_tx.send(msg).is_ok() {
+                                did_work = true;
                             }
-                            did_work = true;
                         }
                         Err(std::sync::mpsc::TryRecvError::Empty) => {}
                         Err(_) => {
                             // server comm thread exited
                         }
                     }
+                    // deliver latency-delayed slices that came due
+                    let _ = to_server.pump();
                     if w_shared.stop.load(Ordering::SeqCst) {
-                        // flush outbound then exit
+                        // flush outbound through the same fault model,
+                        // then wait out in-flight latencies and exit
                         while let Ok(msg) = outbound_rx.try_recv() {
-                            let _ = to_server.send_reliable(msg);
+                            let _ = ship(&mut to_server, &plan, id, msg);
                         }
+                        to_server.flush_blocking();
                         break;
                     }
                     if !did_work {
@@ -325,5 +376,32 @@ impl Worker {
     pub fn stop(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
+    }
+}
+
+/// Put one outbound entry on the wire: a `Step` becomes one gradient
+/// slice per server shard sharing a single transport fate; `Done` rides
+/// the reliable control plane (never dropped, still ordered).
+fn ship(
+    to_server: &mut FaultySender<ToServer>,
+    plan: &ShardPlan,
+    worker: usize,
+    msg: Outbound,
+) -> Result<(), ()> {
+    match msg {
+        Outbound::Step { step, grad, loss } => {
+            to_server.send_group((0..plan.shards()).map(|s| {
+                ToServer::Grad {
+                    worker,
+                    shard: s,
+                    step,
+                    grad: plan.slice(&grad, s).to_vec(),
+                    loss,
+                }
+            }))
+        }
+        Outbound::Done => {
+            to_server.send_reliable(ToServer::Done { worker })
+        }
     }
 }
