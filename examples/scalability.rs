@@ -58,7 +58,8 @@ fn main() -> anyhow::Result<()> {
                 bytes_per_msg: Some(scaled.paper_bytes),
                 total_updates: updates,
             },
-        );
+        )
+        .expect("simulated run");
         println!(
             "  {cores:>4} cores: {:>8.1} sim-s, staleness {:>6.1}, \
              final f = {:.4}",

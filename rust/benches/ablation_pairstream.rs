@@ -1,0 +1,239 @@
+//! Ablation: materialized vs streaming pair pipeline (`pairs.mode`).
+//!
+//! Three measurements, written to **`BENCH_pairs.json`** (override the
+//! path with `DMLPS_BENCH_OUT`):
+//!
+//! 1. **MNIST shape** — startup time (sample + clone-and-shuffle
+//!    partition vs class-index build), resident pair bytes, and raw
+//!    pair-draw throughput for both pipelines.
+//! 2. **Paper-extrapolated shape** — 1M points / 200M pairs (§5): the
+//!    materialized pair-storage term is computed arithmetically
+//!    (materializing it is exactly what the streaming pipeline makes
+//!    unnecessary), streaming startup + draw rate are measured for
+//!    real on a 1M-point label set.
+//! 3. **End-to-end** — the same step budget trained in both modes:
+//!    streaming must complete it with zero resident pair bytes.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dmlps::cli::driver::train_distributed;
+use dmlps::config::{FeatureKind, PairMode, Preset};
+use dmlps::data::{
+    partition_pairs, ClassIndex, Dataset, ExperimentData,
+    ImplicitPairSampler, MaterializedStream, PairSet, PairStream,
+    SyntheticSpec,
+};
+use dmlps::ps::RunOptions;
+use dmlps::util::json::Json;
+use dmlps::util::rng::Pcg32;
+
+const PAIR_BYTES: usize = 8; // two u32 indices
+const PAPER_PAIRS: f64 = 200e6; // §5: 100M similar + 100M dissimilar
+
+/// Draw `n` pairs alternating streams; fold a checksum so the draws
+/// cannot be optimized away. Returns pairs/sec.
+fn draw_rate(stream: &mut dyn PairStream, n: usize) -> (f64, u64) {
+    let t0 = Instant::now();
+    let mut checksum = 0u64;
+    for _ in 0..n / 2 {
+        checksum = checksum.wrapping_add(stream.next_similar().i as u64);
+        checksum =
+            checksum.wrapping_add(stream.next_dissimilar().j as u64);
+    }
+    (n as f64 / t0.elapsed().as_secs_f64().max(1e-9), checksum)
+}
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let workers = 4usize;
+    let seed = 42u64;
+
+    // ---------------- stage 1: MNIST shape ----------------
+    let mut cfg = Preset::Mnist.config();
+    cfg.dataset.n_train = 6_000; // data-gen cost out of the startup timer
+    let n_pairs = if quick { 20_000 } else { 100_000 };
+    let spec = SyntheticSpec::from_config(&cfg.dataset);
+    let mut rng = Pcg32::with_stream(seed, 0xDA7A);
+    let train = Arc::new(spec.generate_with(&mut rng, cfg.dataset.n_train));
+    println!(
+        "ablation_pairstream: MNIST shape, {} train points, \
+         {n_pairs}+{n_pairs} pairs, {workers} workers",
+        cfg.dataset.n_train
+    );
+
+    let t0 = Instant::now();
+    let pairs = PairSet::sample(
+        &train,
+        n_pairs,
+        n_pairs,
+        &mut Pcg32::with_stream(seed, 0x9999),
+    );
+    let shards = partition_pairs(&pairs, workers, seed).unwrap();
+    let mat_startup_s = t0.elapsed().as_secs_f64();
+    let mat_bytes = pairs.len() * PAIR_BYTES
+        + shards
+            .iter()
+            .map(|s| s.pairs.len() * PAIR_BYTES)
+            .sum::<usize>();
+
+    let t0 = Instant::now();
+    let index = Arc::new(ClassIndex::build(&train, 0.0).unwrap());
+    let samplers: Vec<ImplicitPairSampler> = (0..workers)
+        .map(|w| {
+            ImplicitPairSampler::with_index(
+                train.clone(),
+                index.clone(),
+                seed,
+                w,
+                workers,
+                0.0,
+            )
+        })
+        .collect();
+    let str_startup_s = t0.elapsed().as_secs_f64();
+    let str_pair_bytes: usize =
+        samplers.iter().map(|s| s.pair_bytes()).sum();
+    let str_index_bytes = index.index_bytes(); // shared, counted once
+    drop(samplers);
+
+    let draws = if quick { 200_000 } else { 2_000_000 };
+    let mut mat_stream =
+        MaterializedStream::new(pairs.clone(), Pcg32::new(7));
+    let (mat_rate, ck1) = draw_rate(&mut mat_stream, draws);
+    let mut str_stream =
+        ImplicitPairSampler::with_index(train.clone(), index, seed, 0, 1, 0.0);
+    let (str_rate, ck2) = draw_rate(&mut str_stream, draws);
+
+    println!(
+        "\n| pipeline | startup s | pair bytes | index bytes | pairs/s |"
+    );
+    println!("|---|---|---|---|---|");
+    println!(
+        "| materialized | {mat_startup_s:.4} | {mat_bytes} | 0 | \
+         {mat_rate:.0} |"
+    );
+    println!(
+        "| streaming | {str_startup_s:.4} | {str_pair_bytes} | \
+         {str_index_bytes} | {str_rate:.0} |  (checksums {ck1:x}/{ck2:x})"
+    );
+
+    // ---------------- stage 2: paper-extrapolated shape ----------------
+    let n_points = if quick { 100_000 } else { 1_000_000 };
+    let paper_spec = SyntheticSpec {
+        kind: FeatureKind::Gaussian,
+        dim: 8, // label geometry only; pair draws never touch features
+        n_classes: 1000,
+        separation: 3.0,
+        signal_fraction: 0.5,
+        noise_amp: 1.0,
+        outlier_prob: 0.0,
+        outlier_amp: 1.0,
+        llc_active: 4,
+        class_seed: 0xC1A55,
+    };
+    let big: Arc<Dataset> = Arc::new(paper_spec.generate_with(
+        &mut Pcg32::with_stream(seed, 0xB16),
+        n_points,
+    ));
+    let t0 = Instant::now();
+    let mut big_sampler =
+        ImplicitPairSampler::new(big.clone(), seed, 0, 1, 0.0, 0.0)
+            .unwrap();
+    let big_startup_s = t0.elapsed().as_secs_f64();
+    let big_draws = if quick { 100_000 } else { 1_000_000 };
+    let (big_rate, _) = draw_rate(&mut big_sampler, big_draws);
+    let paper_mat_bytes = PAPER_PAIRS * PAIR_BYTES as f64;
+    println!(
+        "\npaper scale ({n_points} points, 200M pairs): materialized \
+         needs {:.2} GB of pair storage (plus a transient clone-and-\
+         shuffle copy); streaming holds {} pair bytes + a {:.2} MB \
+         shared class index, built in {big_startup_s:.4}s, draws \
+         {big_rate:.0} pairs/s",
+        paper_mat_bytes / 1e9,
+        big_sampler.pair_bytes(),
+        big_sampler.index_bytes() as f64 / 1e6,
+    );
+
+    // ---------------- stage 3: end-to-end, same step budget ------------
+    let mut tcfg = Preset::Tiny.config();
+    tcfg.optim.steps = if quick { 30 } else { 120 };
+    tcfg.cluster.workers = 2;
+    tcfg.artifact_variant = None;
+    let opts = RunOptions {
+        probe_every: u64::MAX / 2,
+        probe_pairs: (50, 50),
+        ..Default::default()
+    };
+    let mut train_rows: Vec<Json> = Vec::new();
+    println!(
+        "\n| mode | applied | wall s | resident pair bytes | final f |"
+    );
+    println!("|---|---|---|---|---|");
+    for mode in [PairMode::Materialized, PairMode::Streaming] {
+        let mut c = tcfg.clone();
+        c.cluster.pairs.mode = mode;
+        let data =
+            ExperimentData::generate_for(&c.dataset, mode, c.seed);
+        let r = train_distributed(&c, &data, "native", &opts)
+            .expect("pairstream training run");
+        let resident: usize =
+            r.worker_stats.iter().map(|w| w.pair_bytes).sum();
+        let fobj = r.curve.final_objective().unwrap_or(f64::NAN);
+        println!(
+            "| {} | {} | {:.2} | {resident} | {fobj:.4} |",
+            mode.name(),
+            r.applied_updates,
+            r.wall_s
+        );
+        train_rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.name().into())),
+            ("applied_updates", Json::Num(r.applied_updates as f64)),
+            ("wall_s", Json::Num(r.wall_s)),
+            ("resident_pair_bytes", Json::Num(resident as f64)),
+            ("pairs_drawn",
+             Json::Num(r.worker_stats.iter()
+                 .map(|w| w.pairs_drawn as f64).sum::<f64>())),
+            ("final_objective", Json::Num(fobj)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("ablation_pairstream".into())),
+        ("quick", Json::Bool(quick)),
+        ("mnist_shape", Json::obj(vec![
+            ("n_train", Json::Num(cfg.dataset.n_train as f64)),
+            ("n_pairs", Json::Num((2 * n_pairs) as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("materialized", Json::obj(vec![
+                ("startup_s", Json::Num(mat_startup_s)),
+                ("resident_pair_bytes", Json::Num(mat_bytes as f64)),
+                ("pairs_per_sec", Json::Num(mat_rate)),
+            ])),
+            ("streaming", Json::obj(vec![
+                ("startup_s", Json::Num(str_startup_s)),
+                ("resident_pair_bytes",
+                 Json::Num(str_pair_bytes as f64)),
+                ("shared_index_bytes",
+                 Json::Num(str_index_bytes as f64)),
+                ("pairs_per_sec", Json::Num(str_rate)),
+            ])),
+        ])),
+        ("paper_shape", Json::obj(vec![
+            ("n_points", Json::Num(n_points as f64)),
+            ("n_pairs", Json::Num(PAPER_PAIRS)),
+            ("materialized_pair_bytes", Json::Num(paper_mat_bytes)),
+            ("streaming_pair_bytes", Json::Num(0.0)),
+            ("streaming_index_bytes",
+             Json::Num(big_sampler.index_bytes() as f64)),
+            ("streaming_startup_s", Json::Num(big_startup_s)),
+            ("streaming_pairs_per_sec", Json::Num(big_rate)),
+        ])),
+        ("train", Json::Arr(train_rows)),
+    ]);
+    let path = std::env::var("DMLPS_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_pairs.json".into());
+    std::fs::write(&path, out.to_string_pretty())
+        .expect("write bench json");
+    println!("\nwrote machine-readable baseline to {path}");
+}

@@ -59,7 +59,8 @@ fn main() {
                     bytes_per_msg: Some(scaled.paper_bytes),
                     total_updates: updates,
                 },
-            );
+            )
+            .expect("simulated run");
             println!(
                 "  {cores:>4} cores: {:>9.1} sim-s to {updates} updates, \
                  staleness {:>6.1}, final f = {:.4}",

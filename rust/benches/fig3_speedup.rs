@@ -55,7 +55,8 @@ fn main() {
                     bytes_per_msg: Some(scaled.paper_bytes),
                     total_updates: updates,
                 },
-            );
+            )
+            .expect("simulated run");
             curves.push((cores, r.curve));
         }
         let target = curves[0].1.final_objective().unwrap();

@@ -186,17 +186,18 @@ pub struct SimKnobs {
 ///
 /// `knobs.grad_seconds` should come from [`calibrate_for`] (possibly
 /// FLOP-extrapolated to the paper-true shape) so the simulated clock is
-/// anchored to real measured compute cost.
+/// anchored to real measured compute cost. Errors when the materialized
+/// pair sets cannot cover `machines` workers.
 pub fn simulate_convergence(
     cfg: &ExperimentConfig,
     data: &ExperimentData,
     machines: usize,
     cores_per_machine: usize,
     knobs: SimKnobs,
-) -> crate::simcluster::SimResult {
+) -> anyhow::Result<crate::simcluster::SimResult> {
     let problem =
         DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
-    let shards = partition_pairs(&data.pairs, machines, cfg.seed ^ 0xFA);
+    let shards = partition_pairs(&data.pairs, machines, cfg.seed ^ 0xFA)?;
     let dataset = Arc::new(clone_dataset(&data.train));
     let mut workload = DmlWorkload::new(
         problem,
@@ -226,7 +227,7 @@ pub fn simulate_convergence(
         lr: LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay),
         seed: cfg.seed,
     };
-    Simulator::new(sim_cfg, &mut workload).run()
+    Ok(Simulator::new(sim_cfg, &mut workload).run())
 }
 
 /// A dimension-scaled copy of a config for simulator numerics, plus the

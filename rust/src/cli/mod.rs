@@ -10,7 +10,7 @@
 
 pub mod driver;
 
-use crate::config::{Consistency, ExperimentConfig, Preset};
+use crate::config::{Consistency, ExperimentConfig, PairMode, Preset};
 use crate::data::{DatasetStats, ExperimentData};
 use crate::util::cli::ArgParser;
 
@@ -86,6 +86,29 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
             cfg.cluster.server_shards = s;
         }
     }
+    let pm = a.get("pairs-mode");
+    if !pm.is_empty() {
+        cfg.cluster.pairs.mode = PairMode::parse(pm)?;
+    }
+    // exactly -1 = keep the preset/config value; anything else must be
+    // a valid knob value — never a silent fallback
+    let x = a.get_f64("pair-noise")?;
+    if x != -1.0 {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&x),
+            "--pair-noise must be in [0, 1] (or -1 for preset default)"
+        );
+        cfg.cluster.pairs.label_noise = x as f32;
+    }
+    let x = a.get_f64("pair-imbalance")?;
+    if x != -1.0 {
+        anyhow::ensure!(
+            x >= 0.0 && x.is_finite(),
+            "--pair-imbalance must be finite and >= 0 \
+             (or -1 for preset default)"
+        );
+        cfg.cluster.pairs.imbalance = x as f32;
+    }
     Ok(cfg)
 }
 
@@ -101,6 +124,12 @@ fn common_parser(cmd: &str, about: &str) -> ArgParser {
              "compute threads per worker engine (0 = all cores)")
         .opt("server-shards", "0",
              "parameter-server shards (0 = preset; 1 = single server)")
+        .opt("pairs-mode", "",
+             "materialized|streaming pair pipeline (default from preset)")
+        .opt("pair-noise", "-1",
+             "streaming label-noise fraction in [0,1] (-1 = preset)")
+        .opt("pair-imbalance", "-1",
+             "streaming class-imbalance Zipf exponent (-1 = preset)")
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -112,7 +141,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let cfg = load_config(&a)?;
     println!(
         "train: dataset={} d={} k={} workers={} threads/worker={} \
-         server-shards={} steps={} engine={} consistency={}",
+         server-shards={} steps={} engine={} consistency={} pairs={}",
         cfg.dataset.name, cfg.dataset.dim, cfg.model.k,
         cfg.cluster.workers,
         if cfg.cluster.threads_per_worker == 0 {
@@ -122,9 +151,14 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         },
         cfg.cluster.server_shards,
         cfg.optim.steps, a.get("engine"),
-        cfg.cluster.consistency.name()
+        cfg.cluster.consistency.name(),
+        cfg.cluster.pairs.mode.name()
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    // streaming mode never materializes the train pair sets — the
+    // startup cost and memory term the implicit sampler removes
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
     let opts = crate::ps::RunOptions::default();
     let result =
         driver::train_distributed(&cfg, &data, a.get("engine"), &opts)?;
@@ -142,9 +176,11 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     for ws in &result.worker_stats {
         println!(
             "  worker {}: {} steps, {} grads sent ({} dropped), \
-             {} params received, waited {:.2}s, max staleness {}",
+             {} params received, waited {:.2}s, max staleness {}, \
+             {} pairs drawn ({} pair bytes resident)",
             ws.id, ws.steps_done, ws.grads_sent, ws.grads_dropped,
-            ws.params_received, ws.wait_s, ws.max_staleness
+            ws.params_received, ws.wait_s, ws.max_staleness,
+            ws.pairs_drawn, ws.pair_bytes
         );
     }
     let mut eng = crate::dml::NativeEngine::new();
@@ -172,6 +208,13 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
     .opt("updates", "2000", "total applied updates per run");
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
+    // the simulator's workload consumes materialized pair shards; fail
+    // clearly rather than silently ignoring a streaming request
+    anyhow::ensure!(
+        cfg.cluster.pairs.mode == PairMode::Materialized,
+        "simulate supports only the materialized pair pipeline \
+         (drop --pairs-mode streaming)"
+    );
     let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
     let grad_s = driver::calibrate_for(&cfg);
     println!(
@@ -191,7 +234,7 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
                 bytes_per_msg: None,
                 total_updates: updates,
             },
-        );
+        )?;
         println!(
             "  {:>4} cores ({} machines): {:.2} sim-s for {} updates, \
              mean staleness {:.2}, final objective {:.4}",
@@ -216,7 +259,11 @@ fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
         .req("model", "path to a saved L matrix (DMLPSMAT)");
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    // eval only touches the (always materialized) test pairs; honoring
+    // the mode skips the pointless train-pair sampling
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
     let l = crate::linalg::Mat::load(std::path::Path::new(a.get("model")))?;
     anyhow::ensure!(
         l.cols == cfg.dataset.dim,
@@ -255,7 +302,9 @@ fn cmd_gen_data(args: &[String]) -> anyhow::Result<()> {
         stats.name, stats.feat_dim, stats.k, stats.param_str(),
         stats.n_samples, stats.n_similar, stats.n_dissimilar
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
     println!(
         "\ngenerated: train {}×{}, test {}×{}, pairs {}S/{}D \
          (labels verified: {})",

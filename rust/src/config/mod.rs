@@ -44,6 +44,61 @@ impl Consistency {
     }
 }
 
+/// How workers obtain their pair constraints (the `pairs.mode` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairMode {
+    /// Sample and store the full pair sets up front, clone-and-shuffle
+    /// partition them across workers — the historical pipeline,
+    /// reproduced bit for bit.
+    Materialized,
+    /// Generate pairs lazily: pair `t` for worker `w` is a pure
+    /// function of `(seed, w, t)`; O(1) pair memory per worker, zero
+    /// startup shuffle, partitioning by index arithmetic.
+    Streaming,
+}
+
+impl PairMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "materialized" => Ok(PairMode::Materialized),
+            "streaming" => Ok(PairMode::Streaming),
+            _ => anyhow::bail!(
+                "unknown pairs mode '{s}' (materialized|streaming)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PairMode::Materialized => "materialized",
+            PairMode::Streaming => "streaming",
+        }
+    }
+}
+
+/// Pair-pipeline knobs (`cluster.pairs` in the JSON config).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PairsConfig {
+    pub mode: PairMode,
+    /// Streaming only: fraction of drawn constraints whose
+    /// similar/dissimilar role is flipped (label-noise robustness
+    /// scenario; 0 = clean labels).
+    pub label_noise: f32,
+    /// Streaming only: Zipf exponent skewing class frequency in pair
+    /// draws (class-imbalance scenario; 0 = uniform classes).
+    pub imbalance: f32,
+}
+
+impl Default for PairsConfig {
+    fn default() -> Self {
+        PairsConfig {
+            mode: PairMode::Materialized,
+            label_noise: 0.0,
+            imbalance: 0.0,
+        }
+    }
+}
+
 /// Synthetic dataset family (see `data` module for generators).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FeatureKind {
@@ -122,6 +177,9 @@ pub struct ClusterConfig {
     /// Compute threads per worker engine — the paper's "C cores per
     /// machine" knob. `0` = use all available cores (machine default).
     pub threads_per_worker: usize,
+    /// Pair-pipeline mode and scenario knobs (absent in legacy configs
+    /// → materialized, clean, balanced).
+    pub pairs: PairsConfig,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -200,6 +258,7 @@ impl Preset {
                     server_batch: 4,
                     server_shards: 1,
                     threads_per_worker: 0,
+                    pairs: PairsConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("test_small".into()),
@@ -232,6 +291,7 @@ impl Preset {
                     server_batch: 4,
                     server_shards: 1,
                     threads_per_worker: 0,
+                    pairs: PairsConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("mnist".into()),
@@ -264,6 +324,7 @@ impl Preset {
                     server_batch: 4,
                     server_shards: 1,
                     threads_per_worker: 0,
+                    pairs: PairsConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("imnet60k_scaled".into()),
@@ -296,6 +357,7 @@ impl Preset {
                     server_batch: 4,
                     server_shards: 1,
                     threads_per_worker: 0,
+                    pairs: PairsConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("imnet1m_scaled".into()),
@@ -385,6 +447,14 @@ impl ExperimentConfig {
                  Json::Num(self.cluster.server_shards as f64)),
                 ("threads_per_worker",
                  Json::Num(self.cluster.threads_per_worker as f64)),
+                ("pairs", Json::obj(vec![
+                    ("mode",
+                     Json::Str(self.cluster.pairs.mode.name().into())),
+                    ("label_noise",
+                     Json::Num(self.cluster.pairs.label_noise as f64)),
+                    ("imbalance",
+                     Json::Num(self.cluster.pairs.imbalance as f64)),
+                ])),
             ])),
             ("seed", Json::Num(self.seed as f64)),
             ("artifact_variant", match &self.artifact_variant {
@@ -410,7 +480,7 @@ impl ExperimentConfig {
         let m = j.get("model");
         let o = j.get("optim");
         let c = j.get("cluster");
-        Ok(ExperimentConfig {
+        let cfg = ExperimentConfig {
             dataset: DatasetConfig {
                 name: d.get("name").as_str().unwrap_or("custom").into(),
                 kind: FeatureKind::parse(
@@ -455,13 +525,46 @@ impl ExperimentConfig {
                     .get("threads_per_worker")
                     .as_usize()
                     .unwrap_or(0),
+                // absent in configs predating the streaming pipeline →
+                // materialized, clean labels, balanced classes
+                pairs: PairsConfig {
+                    mode: PairMode::parse(
+                        c.get("pairs")
+                            .get("mode")
+                            .as_str()
+                            .unwrap_or("materialized"),
+                    )?,
+                    label_noise: c
+                        .get("pairs")
+                        .get("label_noise")
+                        .as_f64()
+                        .unwrap_or(0.0) as f32,
+                    imbalance: c
+                        .get("pairs")
+                        .get("imbalance")
+                        .as_f64()
+                        .unwrap_or(0.0) as f32,
+                },
             },
             seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
             artifact_variant: j
                 .get("artifact_variant")
                 .as_str()
                 .map(|s| s.to_string()),
-        })
+        };
+        // same bounds the CLI enforces; NaN fails the range check
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.cluster.pairs.label_noise),
+            "cluster.pairs.label_noise must be in [0, 1], got {}",
+            cfg.cluster.pairs.label_noise
+        );
+        anyhow::ensure!(
+            cfg.cluster.pairs.imbalance >= 0.0
+                && cfg.cluster.pairs.imbalance.is_finite(),
+            "cluster.pairs.imbalance must be finite and >= 0, got {}",
+            cfg.cluster.pairs.imbalance
+        );
+        Ok(cfg)
     }
 
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -519,6 +622,52 @@ mod tests {
         }
         let cfg = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(cfg.cluster.server_shards, 1);
+    }
+
+    #[test]
+    fn legacy_json_without_pairs_block_defaults_to_materialized() {
+        let mut j = Preset::Tiny.config().to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(c)) = m.get_mut("cluster") {
+                c.remove("pairs");
+            }
+        }
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.cluster.pairs, PairsConfig::default());
+    }
+
+    #[test]
+    fn pairs_block_roundtrips() {
+        let mut cfg = Preset::Tiny.config();
+        cfg.cluster.pairs = PairsConfig {
+            mode: PairMode::Streaming,
+            label_noise: 0.1,
+            imbalance: 1.5,
+        };
+        let cfg2 = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+
+    #[test]
+    fn invalid_pairs_knobs_rejected_on_load() {
+        let mut cfg = Preset::Tiny.config();
+        cfg.cluster.pairs.label_noise = 7.0;
+        let err =
+            ExperimentConfig::from_json(&cfg.to_json()).unwrap_err();
+        assert!(err.to_string().contains("label_noise"), "{err}");
+        let mut cfg = Preset::Tiny.config();
+        cfg.cluster.pairs.imbalance = -1.0;
+        let err =
+            ExperimentConfig::from_json(&cfg.to_json()).unwrap_err();
+        assert!(err.to_string().contains("imbalance"), "{err}");
+    }
+
+    #[test]
+    fn pair_mode_parse_roundtrip() {
+        for m in [PairMode::Materialized, PairMode::Streaming] {
+            assert_eq!(PairMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(PairMode::parse("implicit").is_err());
     }
 
     #[test]

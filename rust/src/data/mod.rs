@@ -12,12 +12,17 @@
 mod dataset;
 mod pairs;
 mod partition;
+mod stream;
 
 pub use dataset::{Dataset, SyntheticSpec};
 pub use pairs::{MinibatchIter, Pair, PairSet};
 pub use partition::{partition_pairs, PairShard};
+pub use stream::{
+    ClassIndex, ImplicitPairSampler, MaterializedStream, PairStream,
+    WorkerPairs,
+};
 
-use crate::config::DatasetConfig;
+use crate::config::{DatasetConfig, PairMode};
 
 /// Generate train/test datasets plus train pair sets and held-out test
 /// pairs, all from one seed — the standard entry point used by the CLI,
@@ -31,16 +36,36 @@ pub struct ExperimentData {
 
 impl ExperimentData {
     pub fn generate(cfg: &DatasetConfig, seed: u64) -> ExperimentData {
+        Self::generate_for(cfg, PairMode::Materialized, seed)
+    }
+
+    /// Mode-aware generation. `Materialized` is the historical path
+    /// (bit-identical to the pre-stream `generate`). `Streaming` skips
+    /// materializing the train pair sets entirely — that startup cost
+    /// and memory term is the point of the streaming pipeline; workers
+    /// draw from [`ImplicitPairSampler`]s instead. Held-out test pairs
+    /// are always materialized (evaluation needs a fixed finite set);
+    /// because the train-pair draws are skipped, streaming-mode test
+    /// pairs come from a later RNG state than materialized-mode ones —
+    /// test pairs are mode-local and never compared across modes.
+    pub fn generate_for(
+        cfg: &DatasetConfig,
+        mode: PairMode,
+        seed: u64,
+    ) -> ExperimentData {
         let spec = SyntheticSpec::from_config(cfg);
         let mut rng = crate::util::rng::Pcg32::with_stream(seed, 0xDA7A);
         let train = spec.generate_with(&mut rng, cfg.n_train);
         let test = spec.generate_with(&mut rng, cfg.n_test);
-        let pairs = PairSet::sample(
-            &train,
-            cfg.n_similar,
-            cfg.n_dissimilar,
-            &mut rng,
-        );
+        let pairs = match mode {
+            PairMode::Materialized => PairSet::sample(
+                &train,
+                cfg.n_similar,
+                cfg.n_dissimilar,
+                &mut rng,
+            ),
+            PairMode::Streaming => PairSet::default(),
+        };
         let test_pairs =
             PairSet::sample(&test, cfg.n_test_pairs, cfg.n_test_pairs,
                             &mut rng);

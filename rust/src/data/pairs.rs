@@ -82,16 +82,16 @@ impl PairSet {
     }
 }
 
-/// Streaming minibatch iterator: repeatedly samples `bs` similar and `bd`
-/// dissimilar pairs (with replacement, matching the paper's "randomly
-/// picks up a mini-batch" loop) and materializes their difference vectors
-/// into caller-visible row-major buffers.
+/// Streaming minibatch iterator: repeatedly draws `bs` similar and `bd`
+/// dissimilar pairs from a [`PairStream`](super::PairStream) (with
+/// replacement, matching the paper's "randomly picks up a mini-batch"
+/// loop) and materializes their difference vectors into caller-visible
+/// row-major buffers.
 pub struct MinibatchIter<'a> {
     ds: &'a Dataset,
-    pairs: &'a PairSet,
+    stream: Box<dyn super::PairStream>,
     bs: usize,
     bd: usize,
-    rng: Pcg32,
     /// (bs × d) similar diffs, reused across batches.
     pub ds_buf: Vec<f32>,
     /// (bd × d) dissimilar diffs, reused across batches.
@@ -99,6 +99,9 @@ pub struct MinibatchIter<'a> {
 }
 
 impl<'a> MinibatchIter<'a> {
+    /// Legacy constructor over a materialized [`PairSet`]: wraps a
+    /// [`MaterializedStream`](super::MaterializedStream) whose draw
+    /// sequence is bit-identical to the pre-stream iterator's.
     pub fn new(
         ds: &'a Dataset,
         pairs: &'a PairSet,
@@ -107,13 +110,28 @@ impl<'a> MinibatchIter<'a> {
         rng: Pcg32,
     ) -> Self {
         assert!(!pairs.similar.is_empty() && !pairs.dissimilar.is_empty());
+        Self::from_stream(
+            ds,
+            Box::new(super::MaterializedStream::new(pairs.clone(), rng)),
+            bs,
+            bd,
+        )
+    }
+
+    /// Draw batches from any pair stream (the streaming-mode entry
+    /// point used by the parameter-server workers).
+    pub fn from_stream(
+        ds: &'a Dataset,
+        stream: Box<dyn super::PairStream>,
+        bs: usize,
+        bd: usize,
+    ) -> Self {
         let d = ds.dim();
         MinibatchIter {
             ds,
-            pairs,
+            stream,
             bs,
             bd,
-            rng,
             ds_buf: vec![0.0; bs * d],
             dd_buf: vec![0.0; bd * d],
         }
@@ -123,8 +141,7 @@ impl<'a> MinibatchIter<'a> {
     pub fn next_batch(&mut self) {
         let d = self.ds.dim();
         for r in 0..self.bs {
-            let p = self.pairs.similar
-                [self.rng.index(self.pairs.similar.len())];
+            let p = self.stream.next_similar();
             self.ds.diff_into(
                 p.i as usize,
                 p.j as usize,
@@ -132,8 +149,7 @@ impl<'a> MinibatchIter<'a> {
             );
         }
         for r in 0..self.bd {
-            let p = self.pairs.dissimilar
-                [self.rng.index(self.pairs.dissimilar.len())];
+            let p = self.stream.next_dissimilar();
             self.ds.diff_into(
                 p.i as usize,
                 p.j as usize,
@@ -144,6 +160,16 @@ impl<'a> MinibatchIter<'a> {
 
     pub fn shapes(&self) -> (usize, usize, usize) {
         (self.bs, self.bd, self.ds.dim())
+    }
+
+    /// Resident pair-storage bytes of the backing stream (telemetry).
+    pub fn pair_bytes(&self) -> usize {
+        self.stream.pair_bytes()
+    }
+
+    /// Pairs drawn so far from the backing stream (telemetry).
+    pub fn pairs_drawn(&self) -> u64 {
+        self.stream.drawn()
     }
 }
 
@@ -209,6 +235,37 @@ mod tests {
             b.next_batch();
             assert_eq!(a.ds_buf, b.ds_buf);
             assert_eq!(a.dd_buf, b.dd_buf);
+        }
+    }
+
+    #[test]
+    fn legacy_constructor_is_bit_identical_to_direct_sampling() {
+        // The pre-stream iterator drew `rng.index(len)` per similar row
+        // then per dissimilar row; the materialized adapter must consume
+        // the RNG identically, or `pairs.mode = materialized` stops
+        // reproducing historical traces.
+        let ds = tiny_ds();
+        let mut rng = Pcg32::new(6);
+        let ps = PairSet::sample(&ds, 120, 80, &mut rng);
+        let mut it = MinibatchIter::new(&ds, &ps, 5, 3, Pcg32::new(77));
+        let mut direct = Pcg32::new(77);
+        let d = ds.dim();
+        for _ in 0..4 {
+            it.next_batch();
+            let mut want_s = vec![0.0f32; 5 * d];
+            for r in 0..5 {
+                let p = ps.similar[direct.index(ps.similar.len())];
+                ds.diff_into(p.i as usize, p.j as usize,
+                             &mut want_s[r * d..(r + 1) * d]);
+            }
+            let mut want_d = vec![0.0f32; 3 * d];
+            for r in 0..3 {
+                let p = ps.dissimilar[direct.index(ps.dissimilar.len())];
+                ds.diff_into(p.i as usize, p.j as usize,
+                             &mut want_d[r * d..(r + 1) * d]);
+            }
+            assert_eq!(it.ds_buf, want_s);
+            assert_eq!(it.dd_buf, want_d);
         }
     }
 

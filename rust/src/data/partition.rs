@@ -17,18 +17,30 @@ pub struct PairShard {
 /// Shuffling before splitting matters: pair generation is class-ordered,
 /// and an unshuffled contiguous split would give workers class-biased
 /// gradient distributions (slower convergence under ASP).
-pub fn partition_pairs(pairs: &PairSet, p: usize, seed: u64) -> Vec<PairShard> {
-    assert!(p > 0, "need at least one worker");
-    assert!(
+///
+/// Errors (rather than panicking — this is library code reached from
+/// the CLI) when `p == 0` or either pair set has fewer pairs than
+/// workers, since at least one shard would then be empty and its worker
+/// could never form a minibatch.
+pub fn partition_pairs(
+    pairs: &PairSet,
+    p: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<PairShard>> {
+    anyhow::ensure!(p > 0, "need at least one worker");
+    anyhow::ensure!(
         pairs.similar.len() >= p && pairs.dissimilar.len() >= p,
-        "fewer pairs than workers"
+        "fewer pairs than workers: {} similar / {} dissimilar pairs \
+         across {p} workers (reduce --workers or sample more pairs)",
+        pairs.similar.len(),
+        pairs.dissimilar.len()
     );
     let mut rng = Pcg32::with_stream(seed, 0x5AAD);
     let mut sim = pairs.similar.clone();
     let mut dis = pairs.dissimilar.clone();
     rng.shuffle(&mut sim);
     rng.shuffle(&mut dis);
-    (0..p)
+    Ok((0..p)
         .map(|w| PairShard {
             worker: w,
             pairs: PairSet {
@@ -36,7 +48,7 @@ pub fn partition_pairs(pairs: &PairSet, p: usize, seed: u64) -> Vec<PairShard> {
                 dissimilar: slice_shard(&dis, w, p),
             },
         })
-        .collect()
+        .collect())
 }
 
 /// Contiguous shard `w` of `p` with remainder spread over the first
@@ -65,7 +77,7 @@ mod tests {
     fn shards_cover_everything_exactly_once() {
         let ps = pairs();
         for p in [1, 2, 3, 7, 16] {
-            let shards = partition_pairs(&ps, p, 42);
+            let shards = partition_pairs(&ps, p, 42).unwrap();
             assert_eq!(shards.len(), p);
             let total_sim: usize =
                 shards.iter().map(|s| s.pairs.similar.len()).sum();
@@ -89,7 +101,7 @@ mod tests {
     #[test]
     fn shards_are_balanced() {
         let ps = pairs();
-        let shards = partition_pairs(&ps, 7, 1);
+        let shards = partition_pairs(&ps, 7, 1).unwrap();
         let sizes: Vec<usize> =
             shards.iter().map(|s| s.pairs.similar.len()).collect();
         let min = sizes.iter().min().unwrap();
@@ -100,19 +112,19 @@ mod tests {
     #[test]
     fn partition_is_deterministic_per_seed() {
         let ps = pairs();
-        let a = partition_pairs(&ps, 4, 9);
-        let b = partition_pairs(&ps, 4, 9);
+        let a = partition_pairs(&ps, 4, 9).unwrap();
+        let b = partition_pairs(&ps, 4, 9).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.pairs.similar, y.pairs.similar);
         }
-        let c = partition_pairs(&ps, 4, 10);
+        let c = partition_pairs(&ps, 4, 10).unwrap();
         assert_ne!(a[0].pairs.similar, c[0].pairs.similar);
     }
 
     #[test]
     fn shards_are_shuffled_not_contiguous() {
         let ps = pairs();
-        let shards = partition_pairs(&ps, 2, 3);
+        let shards = partition_pairs(&ps, 2, 3).unwrap();
         // shard 0 should not simply be the first half of the original
         let first_half: Vec<Pair> =
             ps.similar[..shards[0].pairs.similar.len()].to_vec();
@@ -120,11 +132,13 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "fewer pairs")]
-    fn too_many_workers_panics() {
+    fn too_many_workers_is_a_clean_error_not_a_panic() {
         let ds = SyntheticSpec::tiny().generate(2);
         let mut rng = Pcg32::new(1);
         let ps = PairSet::sample(&ds, 3, 3, &mut rng);
-        partition_pairs(&ps, 10, 0);
+        let err = partition_pairs(&ps, 10, 0).unwrap_err();
+        assert!(err.to_string().contains("fewer pairs"), "{err}");
+        let err = partition_pairs(&ps, 0, 0).unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
     }
 }

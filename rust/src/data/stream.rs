@@ -1,0 +1,469 @@
+//! Streaming pair-constraint pipeline.
+//!
+//! The paper's headline workload is 200M labeled pairs (§5); holding
+//! them as index vectors costs 1.6 GB plus a full clone-and-shuffle per
+//! run before any worker can move. A [`PairStream`] decouples *how pairs
+//! are obtained* from *how minibatches consume them*:
+//!
+//! * [`MaterializedStream`] — compatibility adapter over a sampled
+//!   [`PairSet`]; draws with replacement exactly like the pre-stream
+//!   minibatch iterator (bit-identical RNG trace).
+//! * [`ImplicitPairSampler`] — pair `t` for worker `w` is a pure
+//!   function of `(seed, w, t)`: each global pair index gets its own
+//!   dedicated [`Pcg32`] stream, so a 200M-pair run needs O(1) pair
+//!   memory per worker and zero startup shuffle. Partitioning across
+//!   `P` workers is index-space arithmetic — worker `w` owns global
+//!   indices `≡ w (mod P)` — so worker index-spaces are disjoint and
+//!   jointly exhaustive by construction, and the multiset of pairs a
+//!   cluster draws depends only on `(seed, total draws)`, never on the
+//!   worker count, batch size, or draw chunking.
+//!
+//! The implicit sampler also carries the robustness knobs the related
+//! work probes (Qian et al., arXiv:1304.1192 / arXiv:1509.04355):
+//! a label-noise fraction (a drawn constraint's similar/dissimilar role
+//! is flipped) and a class-imbalance skew (Zipf-weighted class draws).
+
+use std::sync::Arc;
+
+use super::dataset::Dataset;
+use super::pairs::{Pair, PairSet};
+use super::partition::PairShard;
+use crate::util::rng::Pcg32;
+
+/// Salt mixed into the sampler seed so pair streams never collide with
+/// the repo's other derived RNG streams for the same experiment seed.
+const SAMPLER_SALT: u64 = 0x9A12_57AE_D00D_F00D;
+
+/// A source of similar/dissimilar pair constraints.
+///
+/// Streams are infinite (sampling with replacement, matching the
+/// paper's "randomly picks up a mini-batch" loop) and `Send` so a
+/// worker's computing thread can own one.
+pub trait PairStream: Send {
+    /// Next pair from the similar-constraint stream.
+    fn next_similar(&mut self) -> Pair;
+
+    /// Next pair from the dissimilar-constraint stream.
+    fn next_dissimilar(&mut self) -> Pair;
+
+    /// Total pairs drawn so far (both streams; telemetry).
+    fn drawn(&self) -> u64;
+
+    /// Resident bytes of materialized pair storage this stream holds —
+    /// the quantity the streaming pipeline makes independent of pair
+    /// count (0 for implicit samplers).
+    fn pair_bytes(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------
+// Materialized adapter
+// ---------------------------------------------------------------------
+
+/// Compatibility adapter: draws uniformly with replacement from a
+/// materialized [`PairSet`], consuming the RNG in exactly the order the
+/// pre-stream `MinibatchIter` did (one `rng.index` per draw), so
+/// `pairs.mode = materialized` reproduces historical traces bit for bit.
+pub struct MaterializedStream {
+    pairs: PairSet,
+    rng: Pcg32,
+    drawn: u64,
+}
+
+impl MaterializedStream {
+    pub fn new(pairs: PairSet, rng: Pcg32) -> Self {
+        assert!(
+            !pairs.similar.is_empty() && !pairs.dissimilar.is_empty(),
+            "materialized stream needs non-empty pair sets"
+        );
+        MaterializedStream { pairs, rng, drawn: 0 }
+    }
+}
+
+impl PairStream for MaterializedStream {
+    fn next_similar(&mut self) -> Pair {
+        self.drawn += 1;
+        self.pairs.similar[self.rng.index(self.pairs.similar.len())]
+    }
+
+    fn next_dissimilar(&mut self) -> Pair {
+        self.drawn += 1;
+        self.pairs.dissimilar[self.rng.index(self.pairs.dissimilar.len())]
+    }
+
+    fn drawn(&self) -> u64 {
+        self.drawn
+    }
+
+    fn pair_bytes(&self) -> usize {
+        self.pairs.len() * std::mem::size_of::<Pair>()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Implicit sampler
+// ---------------------------------------------------------------------
+
+/// Class membership index shared by all of a run's samplers: O(n) in
+/// dataset size, independent of pair count. Also holds the (optionally
+/// Zipf-skewed) class-draw weights.
+pub struct ClassIndex {
+    /// Member indices per class.
+    groups: Vec<Vec<u32>>,
+    /// Classes with ≥ 2 members (the only ones that can source similar
+    /// pairs; skewed draws pick from these).
+    eligible: Vec<u32>,
+    /// Cumulative unnormalized weights aligned with `eligible`
+    /// (`w_i ∝ (i+1)^-imbalance`); empty when the draw is uniform.
+    cum: Vec<f64>,
+}
+
+impl ClassIndex {
+    /// Build the index. `imbalance` is the Zipf exponent skewing class
+    /// frequency in streamed draws (0 = uniform, the default).
+    pub fn build(ds: &Dataset, imbalance: f32) -> anyhow::Result<ClassIndex> {
+        let groups: Vec<Vec<u32>> = ds
+            .by_class()
+            .into_iter()
+            .map(|g| g.into_iter().map(|i| i as u32).collect())
+            .collect();
+        let eligible: Vec<u32> = (0..groups.len() as u32)
+            .filter(|&c| groups[c as usize].len() >= 2)
+            .collect();
+        anyhow::ensure!(
+            eligible.len() >= 2,
+            "need >=2 classes with >=2 members to stream pairs \
+             ({} eligible of {} classes)",
+            eligible.len(),
+            groups.len()
+        );
+        let cum = if imbalance > 0.0 {
+            let mut acc = 0.0f64;
+            eligible
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    acc += (i as f64 + 1.0).powf(-(imbalance as f64));
+                    acc
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(ClassIndex { groups, eligible, cum })
+    }
+
+    /// Draw an eligible class (uniform, or Zipf-skewed when built with
+    /// `imbalance > 0`).
+    fn pick_class(&self, rng: &mut Pcg32) -> usize {
+        if self.cum.is_empty() {
+            self.eligible[rng.index(self.eligible.len())] as usize
+        } else {
+            let total = *self.cum.last().unwrap();
+            let u = rng.f64() * total;
+            let k = self.cum.partition_point(|&c| c <= u);
+            self.eligible[k.min(self.eligible.len() - 1)] as usize
+        }
+    }
+
+    fn skewed(&self) -> bool {
+        !self.cum.is_empty()
+    }
+
+    /// Approximate resident bytes (bench telemetry).
+    pub fn index_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.len() * 4).sum::<usize>()
+            + self.eligible.len() * 4
+            + self.cum.len() * 8
+    }
+}
+
+/// O(1)-memory pair source: pair `t` is a pure function of `(seed, t)`
+/// via a dedicated PCG32 stream per global pair index; worker `w` of
+/// `P` draws the index-space slice `{w, w+P, w+2P, …}` of each
+/// constraint stream.
+pub struct ImplicitPairSampler {
+    ds: Arc<Dataset>,
+    index: Arc<ClassIndex>,
+    seed: u64,
+    /// Probability a drawn constraint's similar/dissimilar role is
+    /// flipped (label noise; decided inside the per-index stream, so
+    /// the `(seed, w, t)` contract is unaffected).
+    label_noise: f32,
+    stride: u64,
+    next_sim: u64,
+    next_dis: u64,
+    drawn: u64,
+}
+
+impl ImplicitPairSampler {
+    /// Build a sampler with its own class index. `worker`/`stride` place
+    /// it in the index space (`stride` = cluster worker count `P`).
+    pub fn new(
+        ds: Arc<Dataset>,
+        seed: u64,
+        worker: usize,
+        stride: usize,
+        label_noise: f32,
+        imbalance: f32,
+    ) -> anyhow::Result<Self> {
+        let index = Arc::new(ClassIndex::build(&ds, imbalance)?);
+        Ok(Self::with_index(ds, index, seed, worker, stride, label_noise))
+    }
+
+    /// Build a sampler over a shared, pre-built class index (the cheap
+    /// path `run_training` uses: one index, `P` samplers).
+    pub fn with_index(
+        ds: Arc<Dataset>,
+        index: Arc<ClassIndex>,
+        seed: u64,
+        worker: usize,
+        stride: usize,
+        label_noise: f32,
+    ) -> Self {
+        assert!(stride > 0 && worker < stride, "worker {worker} of {stride}");
+        ImplicitPairSampler {
+            ds,
+            index,
+            seed,
+            label_noise,
+            stride: stride as u64,
+            next_sim: worker as u64,
+            next_dis: worker as u64,
+            drawn: 0,
+        }
+    }
+
+    /// The similar-stream pair at global index `t` — pure in `(seed, t)`.
+    pub fn similar_at(&self, t: u64) -> Pair {
+        let mut rng = Pcg32::with_stream(self.seed ^ SAMPLER_SALT, t << 1);
+        self.draw(&mut rng, true)
+    }
+
+    /// The dissimilar-stream pair at global index `t` — pure in
+    /// `(seed, t)`.
+    pub fn dissimilar_at(&self, t: u64) -> Pair {
+        let mut rng =
+            Pcg32::with_stream(self.seed ^ SAMPLER_SALT, (t << 1) | 1);
+        self.draw(&mut rng, false)
+    }
+
+    /// Next global index each constraint stream will draw (test hook
+    /// for the index-space partitioning contract).
+    pub fn cursors(&self) -> (u64, u64) {
+        (self.next_sim, self.next_dis)
+    }
+
+    /// Resident bytes of the backing class index (shared across a
+    /// run's samplers; O(n) in dataset size, not in pair count).
+    pub fn index_bytes(&self) -> usize {
+        self.index.index_bytes()
+    }
+
+    fn draw(&self, rng: &mut Pcg32, want_similar: bool) -> Pair {
+        // label noise: flip the constraint's role for this index
+        let flip = self.label_noise > 0.0 && rng.f32() < self.label_noise;
+        if want_similar != flip {
+            self.draw_matched(rng)
+        } else {
+            self.draw_mismatched(rng)
+        }
+    }
+
+    /// Same-class pair (mirrors `PairSet::sample`'s similar recipe:
+    /// re-pick class and members until the endpoints differ).
+    fn draw_matched(&self, rng: &mut Pcg32) -> Pair {
+        loop {
+            let g = &self.index.groups[self.index.pick_class(rng)];
+            let a = g[rng.index(g.len())];
+            let b = g[rng.index(g.len())];
+            if a != b {
+                return Pair { i: a, j: b };
+            }
+        }
+    }
+
+    /// Cross-class pair. The head point follows the class skew (when
+    /// enabled); the tail is uniform over the dataset, rejected until
+    /// the labels differ — guaranteed to terminate because the index
+    /// requires ≥ 2 eligible classes.
+    fn draw_mismatched(&self, rng: &mut Pcg32) -> Pair {
+        let n = self.ds.n();
+        loop {
+            let a = if self.index.skewed() {
+                let g = &self.index.groups[self.index.pick_class(rng)];
+                g[rng.index(g.len())] as usize
+            } else {
+                rng.index(n)
+            };
+            let b = rng.index(n);
+            if self.ds.labels[a] != self.ds.labels[b] {
+                return Pair { i: a as u32, j: b as u32 };
+            }
+        }
+    }
+}
+
+impl PairStream for ImplicitPairSampler {
+    fn next_similar(&mut self) -> Pair {
+        let p = self.similar_at(self.next_sim);
+        self.next_sim += self.stride;
+        self.drawn += 1;
+        p
+    }
+
+    fn next_dissimilar(&mut self) -> Pair {
+        let p = self.dissimilar_at(self.next_dis);
+        self.next_dis += self.stride;
+        self.drawn += 1;
+        p
+    }
+
+    fn drawn(&self) -> u64 {
+        self.drawn
+    }
+
+    fn pair_bytes(&self) -> usize {
+        0 // pairs are generated, never stored
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker-side selection
+// ---------------------------------------------------------------------
+
+/// What a parameter-server worker is handed as its pair source —
+/// the `pairs.mode` knob, resolved.
+pub enum WorkerPairs {
+    /// A materialized shard (paper §4.1 clone-and-shuffle partitioning).
+    Materialized(PairShard),
+    /// An implicit `(seed, w, t)` sampler (index-space partitioning).
+    Streaming(ImplicitPairSampler),
+}
+
+impl WorkerPairs {
+    /// Turn the source into a boxed stream. `rng` seeds the materialized
+    /// adapter's draw sequence (must match the historical per-worker
+    /// minibatch RNG for bit-identical traces); the implicit sampler is
+    /// `(seed, w, t)`-pure and ignores it.
+    pub fn into_stream(self, rng: Pcg32) -> Box<dyn PairStream> {
+        match self {
+            WorkerPairs::Materialized(shard) => {
+                Box::new(MaterializedStream::new(shard.pairs, rng))
+            }
+            WorkerPairs::Streaming(sampler) => Box::new(sampler),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SyntheticSpec;
+
+    fn tiny_ds() -> Arc<Dataset> {
+        Arc::new(SyntheticSpec::tiny().generate(1))
+    }
+
+    #[test]
+    fn materialized_stream_matches_direct_indexing() {
+        let ds = tiny_ds();
+        let mut rng = Pcg32::new(0);
+        let pairs = PairSet::sample(&ds, 100, 100, &mut rng);
+        let mut s =
+            MaterializedStream::new(pairs.clone(), Pcg32::new(7));
+        let mut reference = Pcg32::new(7);
+        for _ in 0..50 {
+            let want = pairs.similar[reference.index(pairs.similar.len())];
+            assert_eq!(s.next_similar(), want);
+        }
+        for _ in 0..50 {
+            let want =
+                pairs.dissimilar[reference.index(pairs.dissimilar.len())];
+            assert_eq!(s.next_dissimilar(), want);
+        }
+        assert_eq!(s.drawn(), 100);
+        assert_eq!(s.pair_bytes(), 200 * std::mem::size_of::<Pair>());
+    }
+
+    #[test]
+    fn implicit_sampler_is_pure_in_seed_and_index() {
+        let ds = tiny_ds();
+        let a = ImplicitPairSampler::new(ds.clone(), 9, 0, 1, 0.0, 0.0)
+            .unwrap();
+        let b = ImplicitPairSampler::new(ds.clone(), 9, 0, 1, 0.0, 0.0)
+            .unwrap();
+        for t in 0..200 {
+            assert_eq!(a.similar_at(t), b.similar_at(t));
+            assert_eq!(a.dissimilar_at(t), b.dissimilar_at(t));
+        }
+        let c = ImplicitPairSampler::new(ds, 10, 0, 1, 0.0, 0.0).unwrap();
+        let same = (0..64)
+            .filter(|&t| a.similar_at(t) == c.similar_at(t))
+            .count();
+        assert!(same < 8, "different seeds should decorrelate: {same}");
+    }
+
+    #[test]
+    fn implicit_sampler_draws_advance_by_stride() {
+        let ds = tiny_ds();
+        let mut s = ImplicitPairSampler::new(ds, 3, 2, 4, 0.0, 0.0)
+            .unwrap();
+        assert_eq!(s.cursors(), (2, 2));
+        let p0 = s.next_similar();
+        let p1 = s.next_similar();
+        assert_eq!(s.cursors(), (10, 2));
+        assert_eq!(p0, s.similar_at(2));
+        assert_eq!(p1, s.similar_at(6));
+        assert_eq!(s.pair_bytes(), 0);
+        assert_eq!(s.drawn(), 2);
+    }
+
+    #[test]
+    fn implicit_sampler_respects_labels_without_noise() {
+        let ds = tiny_ds();
+        let mut s =
+            ImplicitPairSampler::new(ds.clone(), 5, 0, 1, 0.0, 0.0)
+                .unwrap();
+        for _ in 0..500 {
+            let p = s.next_similar();
+            assert_ne!(p.i, p.j);
+            assert_eq!(
+                ds.labels[p.i as usize],
+                ds.labels[p.j as usize]
+            );
+            let q = s.next_dissimilar();
+            assert_ne!(
+                ds.labels[q.i as usize],
+                ds.labels[q.j as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn class_index_rejects_degenerate_datasets() {
+        // one class only → no dissimilar pairs exist
+        let mut ds = SyntheticSpec::tiny().generate(2);
+        for l in ds.labels.iter_mut() {
+            *l = 0;
+        }
+        let err = ClassIndex::build(&ds, 0.0).unwrap_err();
+        assert!(err.to_string().contains("classes"), "{err}");
+    }
+
+    #[test]
+    fn zipf_skew_overweights_head_classes() {
+        let ds = tiny_ds();
+        let idx = ClassIndex::build(&ds, 2.0).unwrap();
+        let mut rng = Pcg32::new(11);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            if idx.pick_class(&mut rng) == idx.eligible[0] as usize {
+                head += 1;
+            }
+        }
+        let frac = head as f64 / n as f64;
+        // uniform share over 4 tiny-spec classes would be 0.25
+        assert!(frac > 0.5, "head-class share {frac} not skewed");
+    }
+}

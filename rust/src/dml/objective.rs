@@ -63,6 +63,32 @@ impl ObjectiveProbe {
         ObjectiveProbe { ds_buf, dd_buf, bs: n_sim, bd: n_dis, d }
     }
 
+    /// Streaming-mode analogue of [`ObjectiveProbe::new`]: materialize
+    /// a fixed `n_sim`+`n_dis` probe batch by drawing from a pair
+    /// stream. Deterministic when the stream is (probes stay
+    /// comparable across a run because the batch is drawn once).
+    pub fn from_stream(
+        ds: &Dataset,
+        stream: &mut dyn crate::data::PairStream,
+        n_sim: usize,
+        n_dis: usize,
+    ) -> Self {
+        let d = ds.dim();
+        let mut ds_buf = vec![0.0f32; n_sim * d];
+        for r in 0..n_sim {
+            let p = stream.next_similar();
+            ds.diff_into(p.i as usize, p.j as usize,
+                         &mut ds_buf[r * d..(r + 1) * d]);
+        }
+        let mut dd_buf = vec![0.0f32; n_dis * d];
+        for r in 0..n_dis {
+            let p = stream.next_dissimilar();
+            ds.diff_into(p.i as usize, p.j as usize,
+                         &mut dd_buf[r * d..(r + 1) * d]);
+        }
+        ObjectiveProbe { ds_buf, dd_buf, bs: n_sim, bd: n_dis, d }
+    }
+
     /// Evaluate the objective at `l`.
     pub fn eval(&self, engine: &mut dyn Engine, l: &Mat, lambda: f32) -> f32 {
         let batch = MinibatchRef::new(
@@ -124,6 +150,25 @@ mod tests {
             (full - approx).abs() < 0.15 * full.abs().max(1.0),
             "full={full} approx={approx}"
         );
+    }
+
+    #[test]
+    fn stream_probe_is_deterministic_and_matches_materialized_math() {
+        use crate::data::ImplicitPairSampler;
+        let ds = std::sync::Arc::new(SyntheticSpec::tiny().generate(4));
+        let problem = DmlProblem::new(ds.dim(), 8, 1.0);
+        let l = problem.init_l(0.5, 9);
+        let mut eng = NativeEngine::new();
+        let mut s1 =
+            ImplicitPairSampler::new(ds.clone(), 6, 0, 1, 0.0, 0.0)
+                .unwrap();
+        let mut s2 =
+            ImplicitPairSampler::new(ds.clone(), 6, 0, 1, 0.0, 0.0)
+                .unwrap();
+        let p1 = ObjectiveProbe::from_stream(&ds, &mut s1, 40, 40);
+        let p2 = ObjectiveProbe::from_stream(&ds, &mut s2, 40, 40);
+        assert_eq!(p1.eval(&mut eng, &l, 1.0), p2.eval(&mut eng, &l, 1.0));
+        assert!(p1.eval(&mut eng, &l, 1.0).is_finite());
     }
 
     #[test]

@@ -28,8 +28,11 @@ pub use worker::{Worker, WorkerConfig, WorkerStats};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 
-use crate::config::ExperimentConfig;
-use crate::data::{partition_pairs, Dataset, PairSet};
+use crate::config::{ExperimentConfig, PairMode};
+use crate::data::{
+    partition_pairs, ClassIndex, Dataset, ImplicitPairSampler, PairSet,
+    WorkerPairs,
+};
 use crate::dml::{DmlProblem, EngineFactory, LrSchedule};
 use crate::linalg::Mat;
 use crate::metrics::Curve;
@@ -119,8 +122,36 @@ pub fn run_training(
     );
     let server_shards = plan.shards();
 
-    // ---- shard the pair sets across workers (paper §4.1) ----
-    let shards = partition_pairs(pairs, p, cfg.seed ^ 0x5A4D);
+    // ---- pair sources: materialized shards (paper §4.1 clone-and-
+    //      shuffle) or implicit (seed, w, t) samplers whose index
+    //      spaces partition by worker ≡ w (mod P). The class index is
+    //      O(n) in dataset size and shared by all samplers (workers
+    //      and the probe alike). ----
+    let stream_index = match cfg.cluster.pairs.mode {
+        PairMode::Materialized => None,
+        PairMode::Streaming => Some(Arc::new(ClassIndex::build(
+            &dataset,
+            cfg.cluster.pairs.imbalance,
+        )?)),
+    };
+    let sources: Vec<WorkerPairs> = match &stream_index {
+        None => partition_pairs(pairs, p, cfg.seed ^ 0x5A4D)?
+            .into_iter()
+            .map(WorkerPairs::Materialized)
+            .collect(),
+        Some(index) => (0..p)
+            .map(|w| {
+                WorkerPairs::Streaming(ImplicitPairSampler::with_index(
+                    dataset.clone(),
+                    index.clone(),
+                    cfg.seed,
+                    w,
+                    p,
+                    cfg.cluster.pairs.label_noise,
+                ))
+            })
+            .collect(),
+    };
 
     // ---- channels: workers → server (shared), server → each worker ----
     let (to_server_tx, to_server_rx) = channel::<ToServer>();
@@ -133,13 +164,8 @@ pub fn run_training(
     }
 
     // ---- objective probe (runs on the server probe thread) ----
-    let probe = make_probe(
-        &dataset,
-        pairs,
-        cfg.optim.lambda,
-        opts.probe_pairs,
-        cfg.seed,
-    );
+    let probe =
+        make_probe(&dataset, pairs, cfg, opts.probe_pairs, stream_index);
 
     // ---- spawn server ----
     let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
@@ -163,7 +189,7 @@ pub fn run_training(
 
     // ---- spawn workers ----
     let mut workers = Vec::with_capacity(p);
-    for (w, shard) in shards.into_iter().enumerate() {
+    for (w, source) in sources.into_iter().enumerate() {
         let wcfg = WorkerConfig {
             id: w,
             steps: cfg.optim.steps,
@@ -181,7 +207,7 @@ pub fn run_training(
             plan.clone(),
             l0.clone(),
             dataset.clone(),
-            shard,
+            source,
             to_server_tx.clone(),
             to_worker_rxs.remove(0),
             engines.clone(),
@@ -209,21 +235,43 @@ pub fn run_training(
 
 /// Build the server-side objective probe: materializes a fixed pair
 /// subsample (Send-safe buffers) and evaluates with a native engine
-/// constructed inside the probe thread.
+/// constructed inside the probe thread. In streaming mode the
+/// subsample is drawn from a dedicated implicit sampler on a reserved
+/// seed (the materialized pair sets may be empty — that's the point),
+/// with the same scenario knobs the workers train under.
 fn make_probe(
-    dataset: &Dataset,
+    dataset: &Arc<Dataset>,
     pairs: &PairSet,
-    lambda: f32,
+    cfg: &ExperimentConfig,
     probe_pairs: (usize, usize),
-    seed: u64,
+    stream_index: Option<Arc<ClassIndex>>,
 ) -> ProbeFn {
-    let probe = crate::dml::ObjectiveProbe::new(
-        dataset,
-        pairs,
-        probe_pairs.0,
-        probe_pairs.1,
-        seed ^ 0x0B5,
-    );
+    let lambda = cfg.optim.lambda;
+    let probe = match stream_index {
+        None => crate::dml::ObjectiveProbe::new(
+            dataset,
+            pairs,
+            probe_pairs.0,
+            probe_pairs.1,
+            cfg.seed ^ 0x0B5,
+        ),
+        Some(index) => {
+            let mut sampler = ImplicitPairSampler::with_index(
+                dataset.clone(),
+                index,
+                cfg.seed ^ 0x0B5E,
+                0,
+                1,
+                cfg.cluster.pairs.label_noise,
+            );
+            crate::dml::ObjectiveProbe::from_stream(
+                dataset,
+                &mut sampler,
+                probe_pairs.0,
+                probe_pairs.1,
+            )
+        }
+    };
     let mut engine: Option<crate::dml::NativeEngine> = None;
     Box::new(move |l: &Mat, step: u64, t: f64, curve: &mut Curve| {
         let eng = engine.get_or_insert_with(crate::dml::NativeEngine::new);

@@ -25,7 +25,7 @@ use std::time::Duration;
 use super::messages::{ShardPlan, ToServer, ToWorker};
 use super::transport::{FaultSpec, FaultySender};
 use crate::config::Consistency;
-use crate::data::{Dataset, MinibatchIter, PairShard};
+use crate::data::{Dataset, MinibatchIter, WorkerPairs};
 use crate::dml::{EngineFactory, LrSchedule, MinibatchRef};
 use crate::linalg::Mat;
 use crate::util::rng::Pcg32;
@@ -65,6 +65,11 @@ pub struct WorkerStats {
     /// SSP(s) guarantees this never exceeds s; BSP pins it to 0.
     pub max_staleness: u64,
     pub last_loss: f32,
+    /// Resident bytes of materialized pair storage this worker held
+    /// (shard size in materialized mode, 0 in streaming mode).
+    pub pair_bytes: usize,
+    /// Pairs drawn from this worker's pair stream.
+    pub pairs_drawn: u64,
 }
 
 /// Worker-internal outbound queue entries (computing → comm thread).
@@ -111,7 +116,8 @@ impl Worker {
     /// Spawn a worker's three threads.
     ///
     /// * `plan`: the shard plan shared with the server.
-    /// * `dataset`/`shard`: this worker's pair shard (paper §4.1).
+    /// * `dataset`/`pairs`: this worker's pair source — a materialized
+    ///   shard (paper §4.1) or an implicit `(seed, w, t)` sampler.
     /// * `to_server`: shared channel into the server's comm thread.
     /// * `from_server`: this worker's parameter channel.
     /// * `engines`: factory; the computing thread builds its engine
@@ -121,7 +127,7 @@ impl Worker {
         plan: ShardPlan,
         l0: Mat,
         dataset: Arc<Dataset>,
-        shard: PairShard,
+        pairs: WorkerPairs,
         to_server: Sender<ToServer>,
         from_server: Receiver<ToWorker>,
         engines: EngineFactory,
@@ -152,12 +158,17 @@ impl Worker {
                     // saturate this worker's configured core budget
                     engine.set_threads(cfg.threads);
                 }
-                let mut iter = MinibatchIter::new(
+                // materialized mode must keep the historical per-worker
+                // minibatch RNG stream; the implicit sampler ignores it
+                // (its draws are pure in (seed, w, t))
+                let mut iter = MinibatchIter::from_stream(
                     &dataset,
-                    &shard.pairs,
+                    pairs.into_stream(Pcg32::with_stream(
+                        cfg.seed,
+                        0x3000 + id as u64,
+                    )),
                     cfg.batch_sim,
                     cfg.batch_dis,
-                    Pcg32::with_stream(cfg.seed, 0x3000 + id as u64),
                 );
                 let staleness = match cfg.consistency {
                     Consistency::Asp => u64::MAX,
@@ -170,7 +181,11 @@ impl Worker {
                 };
                 let mut l_snap = Mat::zeros(k, d);
                 let mut g = Mat::zeros(k, d);
-                let mut stats = WorkerStats { id, ..Default::default() };
+                let mut stats = WorkerStats {
+                    id,
+                    pair_bytes: iter.pair_bytes(),
+                    ..Default::default()
+                };
                 for step in 0..cfg.steps as u64 {
                     // ---- consistency gate (SSP inequality over the
                     //      min-over-shards clock) ----
@@ -238,6 +253,7 @@ impl Worker {
                     }
                     stats.steps_done += 1;
                 }
+                stats.pairs_drawn = iter.pairs_drawn();
                 let _ = outbound_tx.send(Outbound::Done);
                 stats
             })

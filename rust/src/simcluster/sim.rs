@@ -343,7 +343,7 @@ mod tests {
         let ds = Arc::new(SyntheticSpec::tiny().generate(0));
         let mut rng = Pcg32::new(0);
         let pairs = PairSet::sample(&ds, 400, 400, &mut rng);
-        let shards = partition_pairs(&pairs, p, 1);
+        let shards = partition_pairs(&pairs, p, 1).unwrap();
         DmlWorkload::new(
             DmlProblem::new(ds.dim(), 8, 1.0),
             0.5, ds, shards, 8, 8, (100, 100), 11,

@@ -175,7 +175,7 @@ mod tests {
         let ds = Arc::new(SyntheticSpec::tiny().generate(0));
         let mut rng = Pcg32::new(0);
         let pairs = PairSet::sample(&ds, 100, 100, &mut rng);
-        let shards = partition_pairs(&pairs, 2, 1);
+        let shards = partition_pairs(&pairs, 2, 1).unwrap();
         let problem = DmlProblem::new(ds.dim(), 8, 1.0);
         let mut w = DmlWorkload::new(
             problem, 0.5, ds, shards, 4, 4, (50, 50), 42,
@@ -194,7 +194,7 @@ mod tests {
         let ds = Arc::new(SyntheticSpec::tiny().generate(1));
         let mut rng = Pcg32::new(1);
         let pairs = PairSet::sample(&ds, 100, 100, &mut rng);
-        let shards = partition_pairs(&pairs, 2, 2);
+        let shards = partition_pairs(&pairs, 2, 2).unwrap();
         let problem = DmlProblem::new(ds.dim(), 4, 1.0);
         let mut w = DmlWorkload::new(
             problem, 0.5, ds, shards, 4, 4, (50, 50), 43,

@@ -318,7 +318,8 @@ fn single_worker_single_shard_bsp_matches_sequential_sgd() {
     let problem = DmlProblem::new(
         cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
     let mut l = problem.init_l(cfg.model.init_scale, cfg.seed);
-    let shards = partition_pairs(&data.pairs, 1, cfg.seed ^ 0x5A4D);
+    let shards =
+        partition_pairs(&data.pairs, 1, cfg.seed ^ 0x5A4D).unwrap();
     let mut iter = MinibatchIter::new(
         &data.train,
         &shards[0].pairs,

@@ -23,8 +23,8 @@ fn more_cores_converge_faster_in_sim_time() {
         bytes_per_msg: None,
         total_updates: u,
     };
-    let t1 = simulate_convergence(&cfg, &data, 1, 16, knobs(300));
-    let t4 = simulate_convergence(&cfg, &data, 4, 16, knobs(300));
+    let t1 = simulate_convergence(&cfg, &data, 1, 16, knobs(300)).unwrap();
+    let t4 = simulate_convergence(&cfg, &data, 4, 16, knobs(300)).unwrap();
     assert!(t4.sim_seconds < t1.sim_seconds * 0.35,
             "4 machines {} vs 1 machine {}", t4.sim_seconds,
             t1.sim_seconds);
@@ -46,7 +46,7 @@ fn simulated_objective_tracks_serial_quality() {
         grad_seconds: 0.1,
         bytes_per_msg: None,
         total_updates: 400,
-    });
+    }).unwrap();
     let first = r.curve.points.first().unwrap().objective;
     let last = r.curve.points.last().unwrap().objective;
     assert!(last < first * 0.8, "{first} -> {last}");

@@ -17,7 +17,7 @@ fn prop_partition_is_exact_cover() {
         let mut rng = Pcg32::new(g.case_seed ^ 1);
         let pairs = PairSet::sample(&ds, n_sim, n_dis, &mut rng);
         let p = g.usize_in(1, 8.min(n_sim).min(n_dis));
-        let shards = partition_pairs(&pairs, p, g.case_seed);
+        let shards = partition_pairs(&pairs, p, g.case_seed).unwrap();
         let total: usize = shards.iter().map(|s| s.pairs.len()).sum();
         assert_eq!(total, pairs.len());
         // balance

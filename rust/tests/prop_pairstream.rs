@@ -1,0 +1,368 @@
+//! Property + golden tests for the streaming pair pipeline — the
+//! data-layer suite CI runs in release under a hard timeout.
+//!
+//! Covers the `(seed, w, t)` determinism contract of the implicit
+//! sampler (multiset invariance over worker count / batch size / draw
+//! chunking; disjoint + jointly exhaustive worker index spaces), the
+//! streaming analogue of `PairSet::check_labels`, the scenario knobs
+//! (label noise, class imbalance), the golden streaming ≡ sequential
+//! SGD equivalence, and the `pairs < workers` clean-error regression.
+
+use std::sync::Arc;
+
+use dmlps::config::{Consistency, PairMode, Preset};
+use dmlps::data::{
+    Dataset, ExperimentData, ImplicitPairSampler, MinibatchIter,
+    SyntheticSpec, WorkerPairs,
+};
+use dmlps::dml::{DmlProblem, Engine, LrSchedule, MinibatchRef, NativeEngine};
+use dmlps::linalg::Mat;
+use dmlps::ps::RunOptions;
+use dmlps::util::check::forall;
+use dmlps::util::rng::Pcg32;
+
+fn tiny_ds(seed: u64) -> Arc<Dataset> {
+    Arc::new(SyntheticSpec::tiny().generate(seed))
+}
+
+fn sampler(
+    ds: &Arc<Dataset>,
+    seed: u64,
+    worker: usize,
+    stride: usize,
+) -> ImplicitPairSampler {
+    ImplicitPairSampler::new(ds.clone(), seed, worker, stride, 0.0, 0.0)
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Determinism contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_multiset_invariant_to_worker_count_and_chunking() {
+    forall(
+        "same (seed, total draws) ⇒ same pair multiset for any P / chunking",
+        10,
+        |g| {
+            let ds = tiny_ds(g.case_seed);
+            let seed = g.case_seed ^ 0xABCD;
+            let per = g.usize_in(2, 16);
+            let total = 12 * per; // divisible by every P below
+            // reference: a single worker drawing everything in order
+            let mut r = sampler(&ds, seed, 0, 1);
+            let mut want_sim: Vec<(u32, u32)> = (0..total)
+                .map(|_| {
+                    let p = r.next_similar();
+                    (p.i, p.j)
+                })
+                .collect();
+            let mut want_dis: Vec<(u32, u32)> = (0..total)
+                .map(|_| {
+                    let p = r.next_dissimilar();
+                    (p.i, p.j)
+                })
+                .collect();
+            want_sim.sort_unstable();
+            want_dis.sort_unstable();
+            for workers in [2usize, 3, 4, 6] {
+                let n = total / workers;
+                let mut got_sim = Vec::with_capacity(total);
+                let mut got_dis = Vec::with_capacity(total);
+                for w in 0..workers {
+                    let mut s = sampler(&ds, seed, w, workers);
+                    // draw in randomly sized interleaved chunks: the
+                    // multiset must not depend on batch size or on how
+                    // sim/dis draws interleave
+                    let (mut ns, mut nd) = (0usize, 0usize);
+                    while ns < n || nd < n {
+                        for _ in 0..g.usize_in(1, 5).min(n - ns) {
+                            let p = s.next_similar();
+                            got_sim.push((p.i, p.j));
+                            ns += 1;
+                        }
+                        for _ in 0..g.usize_in(1, 5).min(n - nd) {
+                            let p = s.next_dissimilar();
+                            got_dis.push((p.i, p.j));
+                            nd += 1;
+                        }
+                    }
+                }
+                got_sim.sort_unstable();
+                got_dis.sort_unstable();
+                assert_eq!(got_sim, want_sim, "P={workers} similar");
+                assert_eq!(got_dis, want_dis, "P={workers} dissimilar");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_worker_index_spaces_are_disjoint_and_exhaustive() {
+    forall(
+        "worker w owns indices ≡ w (mod P), pure in (seed, t)",
+        12,
+        |g| {
+            let ds = tiny_ds(g.case_seed ^ 7);
+            let seed = g.case_seed;
+            let workers = g.usize_in(1, 6);
+            let n = g.usize_in(1, 24);
+            // oracle sampler used only through its pure (seed, t) fns
+            let oracle = sampler(&ds, seed, 0, 1);
+            let mut seen: Vec<u64> = Vec::with_capacity(workers * n);
+            for w in 0..workers {
+                let mut s = sampler(&ds, seed, w, workers);
+                for k in 0..n {
+                    let t = s.cursors().0;
+                    assert_eq!(
+                        t,
+                        (w + k * workers) as u64,
+                        "worker {w} of {workers}, draw {k}"
+                    );
+                    assert_eq!(s.next_similar(), oracle.similar_at(t));
+                    seen.push(t);
+                }
+            }
+            // disjoint + jointly exhaustive: the union of the worker
+            // index spaces is exactly 0..n*P, each index once
+            seen.sort_unstable();
+            let want: Vec<u64> = (0..(workers * n) as u64).collect();
+            assert_eq!(seen, want);
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Label semantics (streaming analogue of PairSet::check_labels)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_streamed_pairs_respect_labels_without_noise() {
+    forall("clean streams: similar matched, dissimilar mismatched", 10, |g| {
+        let mut spec = SyntheticSpec::tiny();
+        spec.n_classes = g.usize_in(2, 8);
+        let ds = Arc::new(spec.generate(g.case_seed));
+        let imbalance = *g.pick(&[0.0f32, 0.5, 2.0]);
+        let mut s = ImplicitPairSampler::new(
+            ds.clone(),
+            g.case_seed ^ 0x11,
+            0,
+            1,
+            0.0,
+            imbalance,
+        )
+        .unwrap();
+        for _ in 0..300 {
+            let p = s.next_similar();
+            assert_ne!(p.i, p.j, "self pair");
+            assert_eq!(
+                ds.labels[p.i as usize], ds.labels[p.j as usize],
+                "similar pair with mismatched labels (imb={imbalance})"
+            );
+            let q = s.next_dissimilar();
+            assert_ne!(
+                ds.labels[q.i as usize], ds.labels[q.j as usize],
+                "dissimilar pair with matched labels (imb={imbalance})"
+            );
+        }
+    });
+}
+
+#[test]
+fn label_noise_flips_the_expected_fraction() {
+    let ds = tiny_ds(3);
+    let noise = 0.3f32;
+    let mut s =
+        ImplicitPairSampler::new(ds.clone(), 21, 0, 1, noise, 0.0).unwrap();
+    let n = 4000;
+    let mut sim_flipped = 0usize;
+    let mut dis_flipped = 0usize;
+    for _ in 0..n {
+        let p = s.next_similar();
+        if ds.labels[p.i as usize] != ds.labels[p.j as usize] {
+            sim_flipped += 1;
+        }
+        let q = s.next_dissimilar();
+        if ds.labels[q.i as usize] == ds.labels[q.j as usize] {
+            dis_flipped += 1;
+        }
+    }
+    let fs = sim_flipped as f64 / n as f64;
+    let fd = dis_flipped as f64 / n as f64;
+    // binomial sd at n=4000, p=0.3 is ~0.007; ±0.05 is >6 sigma
+    assert!((fs - 0.3).abs() < 0.05, "similar flip rate {fs}");
+    assert!((fd - 0.3).abs() < 0.05, "dissimilar flip rate {fd}");
+}
+
+#[test]
+fn imbalance_skews_class_draw_frequencies() {
+    let ds = tiny_ds(4); // 4 well-populated classes
+    let share_of_head = |imbalance: f32| -> f64 {
+        let mut s =
+            ImplicitPairSampler::new(ds.clone(), 33, 0, 1, 0.0, imbalance)
+                .unwrap();
+        let n = 4000;
+        let head = (0..n)
+            .filter(|_| {
+                let p = s.next_similar();
+                ds.labels[p.i as usize] == 0
+            })
+            .count();
+        head as f64 / n as f64
+    };
+    let uniform = share_of_head(0.0);
+    assert!((uniform - 0.25).abs() < 0.05, "uniform head share {uniform}");
+    // Zipf(2) over 4 classes puts ~0.70 of the mass on the head class
+    let skewed = share_of_head(2.0);
+    assert!(skewed > 0.5, "skewed head share {skewed}");
+}
+
+// ---------------------------------------------------------------------
+// Golden equivalence: streaming == sequential SGD, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_streaming_bsp_single_worker_matches_sequential_sgd() {
+    // 1 worker + 1 server shard + BSP + perfect transport is sequential
+    // SGD in disguise (see integration_ps for the materialized twin).
+    // Feeding the *same pair sequence* — an identically constructed
+    // (seed, w=0, stride=1) implicit sampler — the streaming pipeline
+    // must produce a bit-identical L, anchoring the refactor.
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = 60;
+    cfg.cluster.workers = 1;
+    cfg.cluster.server_shards = 1;
+    cfg.cluster.consistency = Consistency::Bsp;
+    cfg.cluster.pairs.mode = PairMode::Streaming;
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, PairMode::Streaming, cfg.seed,
+    );
+    assert!(data.pairs.is_empty(), "streaming mode must not materialize");
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap();
+
+    // sequential reference over the identical pair sequence
+    let train = Arc::new(SyntheticSpec::from_config(&cfg.dataset).generate_with(
+        &mut Pcg32::with_stream(cfg.seed, 0xDA7A),
+        cfg.dataset.n_train,
+    ));
+    assert_eq!(train.x.data, data.train.x.data, "train regeneration");
+    let s = ImplicitPairSampler::new(train.clone(), cfg.seed, 0, 1, 0.0, 0.0)
+        .unwrap();
+    let mut iter = MinibatchIter::from_stream(
+        &train,
+        WorkerPairs::Streaming(s)
+            .into_stream(Pcg32::with_stream(cfg.seed, 0x3000)),
+        cfg.optim.batch_sim,
+        cfg.optim.batch_dis,
+    );
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    let mut l = problem.init_l(cfg.model.init_scale, cfg.seed);
+    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
+    let mut eng = NativeEngine::new();
+    let mut g = Mat::zeros(cfg.model.k, cfg.dataset.dim);
+    for step in 0..cfg.optim.steps {
+        iter.next_batch();
+        let batch = MinibatchRef::new(
+            &iter.ds_buf,
+            &iter.dd_buf,
+            cfg.optim.batch_sim,
+            cfg.optim.batch_dis,
+            cfg.dataset.dim,
+        );
+        eng.loss_grad(&l, &batch, cfg.optim.lambda, &mut g).unwrap();
+        let lr_t = lr.at(step);
+        for (a, gv) in l.data.iter_mut().zip(&g.data) {
+            *a -= lr_t * gv;
+        }
+    }
+    assert_eq!(r.applied_updates, 60);
+    assert_eq!(
+        r.l.data, l.data,
+        "streaming(1 worker, 1 shard, BSP) must equal sequential SGD \
+         bit for bit"
+    );
+}
+
+// ---------------------------------------------------------------------
+// End-to-end streaming behaviour + clean-error regression
+// ---------------------------------------------------------------------
+
+#[test]
+fn streaming_run_completes_budget_with_zero_pair_bytes() {
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = 50;
+    cfg.cluster.workers = 3;
+    cfg.cluster.pairs.mode = PairMode::Streaming;
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, PairMode::Streaming, cfg.seed,
+    );
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(r.applied_updates, 150);
+    let per_step = (cfg.optim.batch_sim + cfg.optim.batch_dis) as u64;
+    for ws in &r.worker_stats {
+        assert_eq!(ws.steps_done, 50, "worker {}", ws.id);
+        assert_eq!(ws.pair_bytes, 0, "worker {} stores pairs", ws.id);
+        assert_eq!(ws.pairs_drawn, 50 * per_step, "worker {}", ws.id);
+    }
+    // materialized twin holds its shard in memory
+    let mut mcfg = cfg.clone();
+    mcfg.cluster.pairs.mode = PairMode::Materialized;
+    let mdata = ExperimentData::generate(&mcfg.dataset, mcfg.seed);
+    let m = dmlps::cli::driver::train_distributed(
+        &mcfg, &mdata, "native", &RunOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(m.applied_updates, 150);
+    for ws in &m.worker_stats {
+        assert!(ws.pair_bytes > 0, "worker {} shard bytes", ws.id);
+    }
+}
+
+#[test]
+fn streaming_scenario_knobs_train_to_finite_loss() {
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = 40;
+    cfg.cluster.workers = 2;
+    cfg.cluster.pairs.mode = PairMode::Streaming;
+    cfg.cluster.pairs.label_noise = 0.2;
+    cfg.cluster.pairs.imbalance = 1.0;
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, PairMode::Streaming, cfg.seed,
+    );
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(r.applied_updates, 80);
+    assert!(r.last_loss.is_finite(), "loss {}", r.last_loss);
+    for pt in &r.curve.points {
+        assert!(pt.objective.is_finite());
+    }
+}
+
+#[test]
+fn fewer_pairs_than_workers_is_a_clean_error() {
+    // regression: partition_pairs used to hard-assert and kill the
+    // process from library code; it must surface as a normal error
+    let mut cfg = Preset::Tiny.config();
+    cfg.dataset.n_similar = 3;
+    cfg.dataset.n_dissimilar = 3;
+    cfg.optim.steps = 5;
+    cfg.cluster.workers = 10;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let err = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("fewer pairs than workers"),
+        "unexpected error: {err}"
+    );
+}
