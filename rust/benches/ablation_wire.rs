@@ -1,0 +1,132 @@
+//! Ablation: PS wire compression (`cluster.compression` knob).
+//!
+//! Trains the paper's MNIST shape (k=600, d=780 → 1.87 MB of f32
+//! parameters per full message) with the real threaded server under
+//! every compression mode and records the wire profile next to the
+//! fidelity it buys: encoded gradient bytes per step, the compression
+//! ratio against the dense `mode=none` anchor, applied-updates/s, and
+//! the objective after the fixed step budget — ratio and loss in one
+//! table, so a fidelity regression can't hide behind a byte win.
+//! Writes the machine-readable baseline to **`BENCH_wire.json`**
+//! (override the path with `DMLPS_BENCH_OUT`).
+//!
+//! Byte accounting is *encoded payload per physical slice message*
+//! (control/`Done` messages excluded) — the same contract as
+//! `BENCH_ps.json`, so the two baselines compare directly.
+
+use dmlps::cli::driver::train_distributed;
+use dmlps::config::{CompressionConfig, CompressionMode, Preset};
+use dmlps::data::ExperimentData;
+use dmlps::ps::RunOptions;
+use dmlps::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let mut cfg = Preset::Mnist.config();
+    // Keep the paper-true k×d message shape; shrink the data volume so
+    // the bench measures the wire, not data generation.
+    cfg.dataset.n_train = 6_000;
+    cfg.dataset.n_test = 500;
+    cfg.dataset.n_similar = 20_000;
+    cfg.dataset.n_dissimilar = 20_000;
+    cfg.dataset.n_test_pairs = 1_000;
+    cfg.optim.steps = if quick { 8 } else { 30 };
+    cfg.cluster.workers = 2;
+    cfg.cluster.server_shards = 2;
+    cfg.artifact_variant = None;
+    let keep = 0.25f32;
+
+    let dense_step_bytes = (cfg.model.k * cfg.dataset.dim * 4) as f64;
+    println!(
+        "ablation_wire: MNIST shape d={} k={} ({} params, {:.2} MB \
+         dense per step), {} workers × {} steps, {} shards, keep={keep}",
+        cfg.dataset.dim,
+        cfg.model.k,
+        cfg.model.k * cfg.dataset.dim,
+        dense_step_bytes / 1e6,
+        cfg.cluster.workers,
+        cfg.optim.steps,
+        cfg.cluster.server_shards,
+    );
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let opts = RunOptions {
+        // probe only at the endpoints: the last curve point is the
+        // loss-after-N-steps fidelity figure
+        probe_every: u64::MAX / 2,
+        probe_pairs: (50, 50),
+        ..Default::default()
+    };
+
+    println!(
+        "\n| mode | grad B/step | ratio | param B/msg | applied | \
+         upd/s | final obj | wall s |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    let mut rows: Vec<Json> = Vec::new();
+    let mut dense_measured = 0.0f64;
+    for mode in [CompressionMode::None, CompressionMode::Int8,
+                 CompressionMode::TopK, CompressionMode::TopKInt8] {
+        let mut c = cfg.clone();
+        c.cluster.compression = CompressionConfig { mode, keep };
+        let r = train_distributed(&c, &data, "native", &opts)
+            .expect("compressed training run");
+        let steps_sent: u64 =
+            r.worker_stats.iter().map(|w| w.grads_sent).sum();
+        let grad_bytes_per_step =
+            r.grad_bytes_received as f64 / steps_sent.max(1) as f64;
+        if mode == CompressionMode::None {
+            dense_measured = grad_bytes_per_step;
+        }
+        let ratio = dense_measured / grad_bytes_per_step.max(1.0);
+        let param_bytes_per_msg =
+            r.param_bytes_sent as f64 / r.param_msgs.max(1) as f64;
+        let ups = r.applied_updates as f64 / r.wall_s.max(1e-9);
+        let final_obj = r.curve.final_objective().unwrap_or(f64::NAN);
+        println!(
+            "| {} | {grad_bytes_per_step:.0} | {ratio:.2}x | \
+             {param_bytes_per_msg:.0} | {} | {ups:.1} | \
+             {final_obj:.4} | {:.2} |",
+            mode.name(), r.applied_updates, r.wall_s
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.name().into())),
+            ("keep", Json::Num(keep as f64)),
+            ("grad_bytes_per_step", Json::Num(grad_bytes_per_step)),
+            ("grad_bytes_total",
+             Json::Num(r.grad_bytes_received as f64)),
+            ("compression_ratio", Json::Num(ratio)),
+            ("param_bytes_per_msg", Json::Num(param_bytes_per_msg)),
+            ("param_bytes_total", Json::Num(r.param_bytes_sent as f64)),
+            ("param_msgs", Json::Num(r.param_msgs as f64)),
+            ("applied_updates", Json::Num(r.applied_updates as f64)),
+            ("updates_per_sec", Json::Num(ups)),
+            ("final_objective", Json::Num(final_obj)),
+            ("wall_s", Json::Num(r.wall_s)),
+        ]));
+    }
+    println!(
+        "\n(dense anchor: {dense_measured:.0} B/step = 4·k·d; \
+         topk_int8 target ≥ 4× at keep={keep})"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("ablation_wire".into())),
+        ("quick", Json::Bool(quick)),
+        ("shape", Json::obj(vec![
+            ("k", Json::Num(cfg.model.k as f64)),
+            ("d", Json::Num(cfg.dataset.dim as f64)),
+            ("workers", Json::Num(cfg.cluster.workers as f64)),
+            ("server_shards",
+             Json::Num(cfg.cluster.server_shards as f64)),
+            ("steps", Json::Num(cfg.optim.steps as f64)),
+            ("keep", Json::Num(keep as f64)),
+            ("dense_step_bytes", Json::Num(dense_step_bytes)),
+        ])),
+        ("runs", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("DMLPS_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_wire.json".into());
+    std::fs::write(&path, out.to_string_pretty())
+        .expect("write bench json");
+    println!("\nwrote machine-readable baseline to {path}");
+}

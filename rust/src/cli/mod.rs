@@ -10,7 +10,9 @@
 
 pub mod driver;
 
-use crate::config::{Consistency, ExperimentConfig, PairMode, Preset};
+use crate::config::{
+    CompressionMode, Consistency, ExperimentConfig, PairMode, Preset,
+};
 use crate::data::{DatasetStats, ExperimentData};
 use crate::util::cli::ArgParser;
 
@@ -109,6 +111,18 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
         );
         cfg.cluster.pairs.imbalance = x as f32;
     }
+    let cm = a.get("compression");
+    if !cm.is_empty() {
+        cfg.cluster.compression.mode = CompressionMode::parse(cm)?;
+    }
+    let x = a.get_f64("keep")?;
+    if x != -1.0 {
+        anyhow::ensure!(
+            x > 0.0 && x <= 1.0,
+            "--keep must be in (0, 1] (or -1 for preset default)"
+        );
+        cfg.cluster.compression.keep = x as f32;
+    }
     Ok(cfg)
 }
 
@@ -130,6 +144,11 @@ fn common_parser(cmd: &str, about: &str) -> ArgParser {
              "streaming label-noise fraction in [0,1] (-1 = preset)")
         .opt("pair-imbalance", "-1",
              "streaming class-imbalance Zipf exponent (-1 = preset)")
+        .opt("compression", "",
+             "PS wire compression: none|int8|topk|topk_int8 \
+              (default from preset)")
+        .opt("keep", "-1",
+             "top-k kept fraction in (0,1] (-1 = preset)")
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -141,7 +160,8 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let cfg = load_config(&a)?;
     println!(
         "train: dataset={} d={} k={} workers={} threads/worker={} \
-         server-shards={} steps={} engine={} consistency={} pairs={}",
+         server-shards={} steps={} engine={} consistency={} pairs={} \
+         compression={} (keep={})",
         cfg.dataset.name, cfg.dataset.dim, cfg.model.k,
         cfg.cluster.workers,
         if cfg.cluster.threads_per_worker == 0 {
@@ -152,7 +172,9 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         cfg.cluster.server_shards,
         cfg.optim.steps, a.get("engine"),
         cfg.cluster.consistency.name(),
-        cfg.cluster.pairs.mode.name()
+        cfg.cluster.pairs.mode.name(),
+        cfg.cluster.compression.mode.name(),
+        cfg.cluster.compression.keep
     );
     // streaming mode never materializes the train pair sets — the
     // startup cost and memory term the implicit sampler removes
@@ -173,13 +195,21 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         result.wall_s, result.applied_updates, result.slice_updates,
         result.server_shards, result.broadcasts, result.last_loss
     );
+    println!(
+        "wire: {} grad bytes folded, {} param bytes broadcast \
+         ({} param msgs)",
+        result.grad_bytes_received, result.param_bytes_sent,
+        result.param_msgs
+    );
     for ws in &result.worker_stats {
         println!(
-            "  worker {}: {} steps, {} grads sent ({} dropped), \
-             {} params received, waited {:.2}s, max staleness {}, \
+            "  worker {}: {} steps, {} grads sent ({} dropped, \
+             {} grad bytes), {} params received ({} param bytes), \
+             waited {:.2}s, max staleness {}, \
              {} pairs drawn ({} pair bytes resident)",
             ws.id, ws.steps_done, ws.grads_sent, ws.grads_dropped,
-            ws.params_received, ws.wait_s, ws.max_staleness,
+            ws.grad_bytes_sent, ws.params_received,
+            ws.param_bytes_received, ws.wait_s, ws.max_staleness,
             ws.pairs_drawn, ws.pair_bytes
         );
     }
@@ -214,6 +244,15 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
         cfg.cluster.pairs.mode == PairMode::Materialized,
         "simulate supports only the materialized pair pipeline \
          (drop --pairs-mode streaming)"
+    );
+    // the simulator's cost model charges dense f32 bytes per message;
+    // fail clearly rather than print dense-wire scalability numbers
+    // for a config that asked for a compressed wire
+    anyhow::ensure!(
+        cfg.cluster.compression.mode == CompressionMode::None,
+        "simulate models the dense f32 wire only \
+         (drop --compression {})",
+        cfg.cluster.compression.mode.name()
     );
     let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
     let grad_s = driver::calibrate_for(&cfg);

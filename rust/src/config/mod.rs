@@ -99,6 +99,78 @@ impl Default for PairsConfig {
     }
 }
 
+/// How gradient/parameter slices are encoded on the PS wire
+/// (`cluster.compression.mode`). Every mode is self-describing on the
+/// wire and decodes to a dense f32 slice on the receiving side; workers
+/// keep per-shard error-feedback residuals, so compression delays update
+/// mass but never loses it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressionMode {
+    /// Dense f32 slices — the historical protocol, bit for bit.
+    None,
+    /// Stochastic int8 quantization with a per-slice scale (gradients
+    /// and parameter broadcasts).
+    Int8,
+    /// Top-k magnitude sparsification of gradient slices, f32 values,
+    /// delta-varint coordinates (parameters stay dense: they are
+    /// absolute state, not deltas, so there is no residual to absorb
+    /// the dropped mass).
+    TopK,
+    /// Top-k sparsification + int8 values on gradients, int8 parameter
+    /// broadcasts — the full compression stack.
+    TopKInt8,
+}
+
+impl CompressionMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "none" => Ok(CompressionMode::None),
+            "int8" => Ok(CompressionMode::Int8),
+            "topk" => Ok(CompressionMode::TopK),
+            "topk_int8" => Ok(CompressionMode::TopKInt8),
+            _ => anyhow::bail!(
+                "unknown compression mode '{s}' \
+                 (none|int8|topk|topk_int8)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionMode::None => "none",
+            CompressionMode::Int8 => "int8",
+            CompressionMode::TopK => "topk",
+            CompressionMode::TopKInt8 => "topk_int8",
+        }
+    }
+
+    /// Whether gradient slices are top-k sparsified under this mode.
+    pub fn sparsifies(&self) -> bool {
+        matches!(self, CompressionMode::TopK | CompressionMode::TopKInt8)
+    }
+
+    /// Whether values travel as int8 under this mode.
+    pub fn quantizes(&self) -> bool {
+        matches!(self, CompressionMode::Int8 | CompressionMode::TopKInt8)
+    }
+}
+
+/// PS wire-compression knobs (`cluster.compression` in the JSON config).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompressionConfig {
+    pub mode: CompressionMode,
+    /// Top-k modes only: fraction of slice coordinates kept per push
+    /// (`ceil(keep · len)`, clamped to at least one). Ignored by
+    /// `none`/`int8`.
+    pub keep: f32,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig { mode: CompressionMode::None, keep: 0.25 }
+    }
+}
+
 /// Synthetic dataset family (see `data` module for generators).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FeatureKind {
@@ -180,6 +252,9 @@ pub struct ClusterConfig {
     /// Pair-pipeline mode and scenario knobs (absent in legacy configs
     /// → materialized, clean, balanced).
     pub pairs: PairsConfig,
+    /// Wire-compression mode and knobs for gradient/parameter slices
+    /// (absent in legacy configs → `none`, the dense f32 protocol).
+    pub compression: CompressionConfig,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -259,6 +334,7 @@ impl Preset {
                     server_shards: 1,
                     threads_per_worker: 0,
                     pairs: PairsConfig::default(),
+                    compression: CompressionConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("test_small".into()),
@@ -292,6 +368,7 @@ impl Preset {
                     server_shards: 1,
                     threads_per_worker: 0,
                     pairs: PairsConfig::default(),
+                    compression: CompressionConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("mnist".into()),
@@ -325,6 +402,7 @@ impl Preset {
                     server_shards: 1,
                     threads_per_worker: 0,
                     pairs: PairsConfig::default(),
+                    compression: CompressionConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("imnet60k_scaled".into()),
@@ -358,6 +436,7 @@ impl Preset {
                     server_shards: 1,
                     threads_per_worker: 0,
                     pairs: PairsConfig::default(),
+                    compression: CompressionConfig::default(),
                 },
                 seed: 42,
                 artifact_variant: Some("imnet1m_scaled".into()),
@@ -455,6 +534,14 @@ impl ExperimentConfig {
                     ("imbalance",
                      Json::Num(self.cluster.pairs.imbalance as f64)),
                 ])),
+                ("compression", Json::obj(vec![
+                    ("mode",
+                     Json::Str(
+                         self.cluster.compression.mode.name().into(),
+                     )),
+                    ("keep",
+                     Json::Num(self.cluster.compression.keep as f64)),
+                ])),
             ])),
             ("seed", Json::Num(self.seed as f64)),
             ("artifact_variant", match &self.artifact_variant {
@@ -545,6 +632,22 @@ impl ExperimentConfig {
                         .as_f64()
                         .unwrap_or(0.0) as f32,
                 },
+                // absent in configs predating wire compression → the
+                // dense f32 protocol (and the default keep fraction)
+                compression: CompressionConfig {
+                    mode: CompressionMode::parse(
+                        c.get("compression")
+                            .get("mode")
+                            .as_str()
+                            .unwrap_or("none"),
+                    )?,
+                    keep: c
+                        .get("compression")
+                        .get("keep")
+                        .as_f64()
+                        .unwrap_or(CompressionConfig::default().keep as f64)
+                        as f32,
+                },
             },
             seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
             artifact_variant: j
@@ -563,6 +666,12 @@ impl ExperimentConfig {
                 && cfg.cluster.pairs.imbalance.is_finite(),
             "cluster.pairs.imbalance must be finite and >= 0, got {}",
             cfg.cluster.pairs.imbalance
+        );
+        anyhow::ensure!(
+            cfg.cluster.compression.keep > 0.0
+                && cfg.cluster.compression.keep <= 1.0,
+            "cluster.compression.keep must be in (0, 1], got {}",
+            cfg.cluster.compression.keep
         );
         Ok(cfg)
     }
@@ -660,6 +769,52 @@ mod tests {
         let err =
             ExperimentConfig::from_json(&cfg.to_json()).unwrap_err();
         assert!(err.to_string().contains("imbalance"), "{err}");
+    }
+
+    #[test]
+    fn legacy_json_without_compression_block_defaults_to_none() {
+        let mut j = Preset::Tiny.config().to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(c)) = m.get_mut("cluster") {
+                c.remove("compression");
+            }
+        }
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.cluster.compression, CompressionConfig::default());
+        assert_eq!(cfg.cluster.compression.mode, CompressionMode::None);
+    }
+
+    #[test]
+    fn compression_block_roundtrips() {
+        for mode in [CompressionMode::None, CompressionMode::Int8,
+                     CompressionMode::TopK, CompressionMode::TopKInt8] {
+            let mut cfg = Preset::Tiny.config();
+            cfg.cluster.compression =
+                CompressionConfig { mode, keep: 0.125 };
+            let cfg2 =
+                ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, cfg2, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn invalid_compression_keep_rejected_on_load() {
+        for keep in [0.0f32, -0.5, 1.5, f32::NAN] {
+            let mut cfg = Preset::Tiny.config();
+            cfg.cluster.compression.keep = keep;
+            let err =
+                ExperimentConfig::from_json(&cfg.to_json()).unwrap_err();
+            assert!(err.to_string().contains("keep"), "{keep}: {err}");
+        }
+    }
+
+    #[test]
+    fn compression_mode_parse_roundtrip() {
+        for m in [CompressionMode::None, CompressionMode::Int8,
+                  CompressionMode::TopK, CompressionMode::TopKInt8] {
+            assert_eq!(CompressionMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(CompressionMode::parse("gzip").is_err());
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Wire compression for PS slices: top-k sparsification and stochastic
+//! int8 quantization with worker-side error feedback.
+//!
+//! The paper's protocol moves O(P·k·d) dense f32s per logical clock;
+//! at the ImageNet shape that is gigabytes of traffic per round, and the
+//! paper names communication as a first-order scaling cost. Following
+//! the "move less, not just in smaller pieces" direction of Qian et al.
+//! (*Towards Making High Dimensional Distance Metric Learning
+//! Practical*, 2015), this module shrinks what actually crosses the
+//! wire while preserving the optimizer's long-run update mass:
+//!
+//! * **Top-k sparsification** — keep the `ceil(keep·len)` largest-
+//!   magnitude coordinates of a gradient slice; coordinates travel as
+//!   LEB128 delta-varint gaps (~1 byte each at practical densities).
+//! * **Stochastic int8 quantization** — values scaled by
+//!   `max|x|/127` and rounded *stochastically* (`⌊y⌋ + Bernoulli(frac)`),
+//!   so `E[decode(encode(x))] = x` exactly: quantization adds variance,
+//!   never bias.
+//! * **Error feedback** — each worker keeps one residual buffer per
+//!   server shard. Every push folds the residual into the raw gradient
+//!   slice before encoding and stores back whatever the encoder dropped
+//!   (unsent coordinates) or rounded away (quantization error). Over a
+//!   run, `Σ decode(sent_t) + residual_T = Σ grad_t` to f32 round-off:
+//!   compression changes *when* mass reaches the server, never
+//!   *whether*. The residual is charged at encode time — a slice the
+//!   transport then drops is lost work, exactly as an uncompressed drop
+//!   was (one fate per step, no retransmission).
+//! * **Reproducibility** — the rounding RNG is a dedicated [`Pcg32`]
+//!   stream keyed purely by `(seed, worker, shard, step)` (parameter
+//!   broadcasts use a reserved worker lane keyed by `(shard, version)`),
+//!   so a rerun of the same config produces bit-identical wire traffic
+//!   regardless of thread interleaving.
+//!
+//! `mode = none` routes through [`SliceEncoding::Dense`] with no RNG
+//! construction and no residual allocation — the PR-2/PR-3 protocol
+//! bit for bit.
+
+use super::messages::{ShardPlan, SliceEncoding};
+use crate::config::{CompressionConfig, CompressionMode};
+use crate::util::rng::Pcg32;
+
+/// Reserved "worker" lane for parameter-broadcast quantization streams
+/// (real worker ids are process-local and far smaller).
+const PARAM_LANE: u64 = u64::MAX;
+
+/// The rounding RNG for one slice: pure in `(seed, worker, shard, step)`.
+fn rounding_rng(seed: u64, worker: u64, shard: u64, step: u64) -> Pcg32 {
+    // step perturbs the seed (golden-ratio mix keeps nearby steps on
+    // unrelated orbits); (worker, shard) select the stream
+    Pcg32::with_stream(
+        seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        0xC0DE_C000 ^ (worker << 20) ^ shard,
+    )
+}
+
+/// Coordinates kept by a top-k pass: `ceil(keep · len)`, at least 1.
+pub fn keep_count(keep: f32, len: usize) -> usize {
+    ((keep as f64 * len as f64).ceil() as usize).clamp(1, len)
+}
+
+/// LEB128 varint append.
+fn push_varint(buf: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// LEB128 varint read at `*pos`, advancing it.
+fn read_varint(buf: &[u8], pos: &mut usize) -> u32 {
+    let mut v = 0u32;
+    let mut shift = 0;
+    loop {
+        let b = buf[*pos];
+        *pos += 1;
+        v |= ((b & 0x7F) as u32) << shift;
+        if b & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+    }
+}
+
+/// Indices of the `n` largest-magnitude entries of `x`, ascending.
+/// Total order (|x| desc, index asc on ties) via `total_cmp`, so the
+/// selection is deterministic for any input.
+fn select_topk(x: &[f32], n: usize) -> Vec<u32> {
+    debug_assert!(n >= 1 && n <= x.len());
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    if n < x.len() {
+        idx.select_nth_unstable_by(n - 1, |&a, &b| {
+            x[b as usize]
+                .abs()
+                .total_cmp(&x[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        idx.truncate(n);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// One stochastically rounded int8 for `v` at `1/scale`. Unbiased:
+/// `E[q] = v/scale` whenever `|v| ≤ 127·scale` (true by construction of
+/// the per-slice scale; the clamp only absorbs f32 round-off).
+fn stochastic_q(v: f32, inv_scale: f32, rng: &mut Pcg32) -> i8 {
+    let y = v * inv_scale;
+    let f = y.floor();
+    let q = f as i32 + i32::from(rng.f32() < y - f);
+    q.clamp(-127, 127) as i8
+}
+
+/// Quantize a full slice to int8 without touching the input (parameter
+/// broadcasts keep no residual). Returns `(scale, q)`.
+fn quantize_ref(v: &[f32], rng: &mut Pcg32) -> (f32, Vec<i8>) {
+    let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = amax / 127.0;
+    let mut q = vec![0i8; v.len()];
+    if scale > 0.0 {
+        let inv = 1.0 / scale;
+        for (qi, &vi) in q.iter_mut().zip(v.iter()) {
+            *qi = stochastic_q(vi, inv, rng);
+        }
+    }
+    (scale, q)
+}
+
+/// [`quantize_ref`], additionally leaving the rounding error
+/// (`v − q·scale`) behind in `v` — the gradient path's residual update.
+/// Identical RNG consumption and encoding to the non-mutating variant.
+fn quantize_dense(v: &mut [f32], rng: &mut Pcg32) -> (f32, Vec<i8>) {
+    let (scale, q) = quantize_ref(v, rng);
+    if scale > 0.0 {
+        for (vi, &qi) in v.iter_mut().zip(&q) {
+            *vi -= qi as f32 * scale;
+        }
+    }
+    (scale, q)
+}
+
+/// Encode the coordinate stream of a sorted index list as varint gaps.
+fn encode_gaps(idx: &[u32]) -> Vec<u8> {
+    let mut gaps = Vec::with_capacity(idx.len() + 2);
+    let mut prev = 0u32;
+    for (j, &i) in idx.iter().enumerate() {
+        push_varint(&mut gaps, if j == 0 { i } else { i - prev });
+        prev = i;
+    }
+    gaps
+}
+
+/// Worker-side gradient encoder with per-shard error-feedback residuals.
+///
+/// One per worker comm thread. `encode_grad` must be called with the
+/// worker's own monotone step sequence (the comm thread's outbound
+/// order); residual state makes consecutive encodes of one shard
+/// interdependent, which is exactly the error-feedback contract.
+pub struct Compressor {
+    mode: CompressionMode,
+    keep: f32,
+    seed: u64,
+    worker: u64,
+    /// One residual per server shard (empty under `mode = none`).
+    residuals: Vec<Vec<f32>>,
+}
+
+impl Compressor {
+    pub fn new(
+        cfg: CompressionConfig,
+        seed: u64,
+        worker: usize,
+        plan: &ShardPlan,
+    ) -> Compressor {
+        let residuals = if cfg.mode == CompressionMode::None {
+            Vec::new()
+        } else {
+            (0..plan.shards()).map(|s| vec![0.0; plan.len(s)]).collect()
+        };
+        Compressor {
+            mode: cfg.mode,
+            keep: cfg.keep,
+            seed,
+            worker: worker as u64,
+            residuals,
+        }
+    }
+
+    /// Residual currently held for `shard` (test/telemetry access).
+    pub fn residual(&self, shard: usize) -> &[f32] {
+        &self.residuals[shard]
+    }
+
+    /// Encode one gradient slice for `shard` at local step `step`,
+    /// folding the shard's residual in first and leaving the dropped/
+    /// rounded mass behind in it.
+    pub fn encode_grad(
+        &mut self,
+        shard: usize,
+        step: u64,
+        slice: &[f32],
+    ) -> SliceEncoding {
+        if self.mode == CompressionMode::None {
+            return SliceEncoding::Dense(slice.to_vec());
+        }
+        let r = &mut self.residuals[shard];
+        debug_assert_eq!(r.len(), slice.len(), "shard {shard} slice len");
+        for (ri, &g) in r.iter_mut().zip(slice) {
+            *ri += g;
+        }
+        let mut rng = rounding_rng(self.seed, self.worker, shard as u64, step);
+        match self.mode {
+            CompressionMode::None => unreachable!(),
+            CompressionMode::Int8 => {
+                let (scale, q) = quantize_dense(r, &mut rng);
+                SliceEncoding::Int8 { scale, q }
+            }
+            CompressionMode::TopK => {
+                let idx = select_topk(r, keep_count(self.keep, r.len()));
+                let mut vals = Vec::with_capacity(idx.len());
+                for &i in &idx {
+                    // f32 values ship exactly: the kept mass leaves the
+                    // residual in full
+                    vals.push(std::mem::take(&mut r[i as usize]));
+                }
+                SliceEncoding::TopK { gaps: encode_gaps(&idx), vals }
+            }
+            CompressionMode::TopKInt8 => {
+                let idx = select_topk(r, keep_count(self.keep, r.len()));
+                // top-k keeps the largest magnitudes, so the max over
+                // the kept values IS the slice max
+                let amax = idx
+                    .iter()
+                    .map(|&i| r[i as usize].abs())
+                    .fold(0.0f32, f32::max);
+                let scale = amax / 127.0;
+                let mut vals = Vec::with_capacity(idx.len());
+                if scale > 0.0 {
+                    let inv = 1.0 / scale;
+                    for &i in &idx {
+                        let q = stochastic_q(r[i as usize], inv, &mut rng);
+                        r[i as usize] -= q as f32 * scale;
+                        vals.push(q);
+                    }
+                } else {
+                    vals.resize(idx.len(), 0);
+                }
+                SliceEncoding::TopKInt8 {
+                    scale,
+                    gaps: encode_gaps(&idx),
+                    vals,
+                }
+            }
+        }
+    }
+}
+
+/// Encode one parameter-broadcast slice. Parameters are absolute state,
+/// not deltas: there is no receiver-side accumulation to absorb dropped
+/// mass, so only the (unbiased, bounded-error) int8 quantization ever
+/// applies — `none` and `topk` broadcast dense f32. Keyed by
+/// `(shard, version)` on a reserved lane, so broadcasts are reproducible
+/// and independent of worker streams.
+pub fn encode_param(
+    mode: CompressionMode,
+    seed: u64,
+    shard: usize,
+    version: u64,
+    data: &[f32],
+) -> SliceEncoding {
+    if !mode.quantizes() {
+        return SliceEncoding::Dense(data.to_vec());
+    }
+    let mut rng = rounding_rng(seed, PARAM_LANE, shard as u64, version);
+    let (scale, q) = quantize_ref(data, &mut rng);
+    SliceEncoding::Int8 { scale, q }
+}
+
+/// Decode any wire encoding into a dense f32 slice. The `Dense` arm is
+/// a plain copy, which keeps the `mode = none` golden paths bit-exact.
+pub fn decode_into(enc: &SliceEncoding, out: &mut [f32]) {
+    match enc {
+        SliceEncoding::Dense(v) => out.copy_from_slice(v),
+        SliceEncoding::Int8 { scale, q } => {
+            assert_eq!(q.len(), out.len(), "int8 slice length");
+            for (o, &qi) in out.iter_mut().zip(q) {
+                *o = qi as f32 * scale;
+            }
+        }
+        SliceEncoding::TopK { gaps, vals } => {
+            out.fill(0.0);
+            scatter(gaps, out, vals.iter().copied());
+        }
+        SliceEncoding::TopKInt8 { scale, gaps, vals } => {
+            out.fill(0.0);
+            scatter(gaps, out, vals.iter().map(|&q| q as f32 * scale));
+        }
+    }
+}
+
+/// Walk a varint gap stream, writing `vals` at the decoded coordinates.
+fn scatter<I: Iterator<Item = f32>>(gaps: &[u8], out: &mut [f32], vals: I) {
+    let mut pos = 0usize;
+    let mut idx = 0u32;
+    for (j, v) in vals.enumerate() {
+        let g = read_varint(gaps, &mut pos);
+        idx = if j == 0 { g } else { idx + g };
+        out[idx as usize] = v;
+    }
+    debug_assert_eq!(pos, gaps.len(), "trailing bytes in gap stream");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals =
+            [0u32, 1, 127, 128, 300, 16_383, 16_384, 1 << 20, u32::MAX];
+        for &v in &vals {
+            push_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_varint(&buf, &mut pos), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn varint_small_gaps_are_one_byte() {
+        let mut buf = Vec::new();
+        for v in 0u32..128 {
+            push_varint(&mut buf, v);
+        }
+        assert_eq!(buf.len(), 128, "gaps < 128 must cost one byte");
+    }
+
+    #[test]
+    fn select_topk_picks_largest_magnitudes() {
+        let x = [0.1f32, -5.0, 0.0, 3.0, -0.2, 4.0];
+        assert_eq!(select_topk(&x, 3), vec![1, 3, 5]);
+        assert_eq!(select_topk(&x, 1), vec![1]);
+        // full selection: every index, ascending
+        assert_eq!(select_topk(&x, 6), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn select_topk_ties_break_by_index() {
+        let x = [1.0f32, -1.0, 1.0, -1.0];
+        assert_eq!(select_topk(&x, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn keep_count_is_ceil_and_clamped() {
+        assert_eq!(keep_count(0.25, 100), 25);
+        assert_eq!(keep_count(0.25, 101), 26);
+        assert_eq!(keep_count(1.0, 7), 7);
+        assert_eq!(keep_count(0.001, 10), 1, "never below one coordinate");
+    }
+
+    #[test]
+    fn zero_slice_encodes_and_decodes_to_zero() {
+        let plan = ShardPlan::new(4, 5, 2);
+        for mode in [CompressionMode::Int8, CompressionMode::TopK,
+                     CompressionMode::TopKInt8] {
+            let mut c = Compressor::new(
+                CompressionConfig { mode, keep: 0.5 },
+                9,
+                0,
+                &plan,
+            );
+            let enc = c.encode_grad(0, 0, &vec![0.0f32; plan.len(0)]);
+            let mut out = vec![1.0f32; plan.len(0)];
+            decode_into(&enc, &mut out);
+            assert!(out.iter().all(|&v| v == 0.0), "{mode:?}");
+            assert!(c.residual(0).iter().all(|&v| v == 0.0), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn dense_mode_is_a_verbatim_copy() {
+        let plan = ShardPlan::new(3, 4, 2);
+        let mut c = Compressor::new(
+            CompressionConfig::default(),
+            1,
+            0,
+            &plan,
+        );
+        let x: Vec<f32> = (0..plan.len(1)).map(|i| i as f32 * 0.5).collect();
+        let enc = c.encode_grad(1, 3, &x);
+        assert_eq!(enc.encoded_bytes(), 4 * x.len() as u64);
+        let mut out = vec![0.0f32; x.len()];
+        decode_into(&enc, &mut out);
+        assert_eq!(out, x, "mode=none must be bit-exact");
+    }
+
+    #[test]
+    fn param_encoding_modes() {
+        let data = vec![0.5f32, -1.0, 0.25, 0.0];
+        for mode in [CompressionMode::None, CompressionMode::TopK] {
+            match encode_param(mode, 7, 0, 1, &data) {
+                SliceEncoding::Dense(v) => assert_eq!(v, data),
+                other => panic!("{mode:?} must stay dense: {other:?}"),
+            }
+        }
+        for mode in [CompressionMode::Int8, CompressionMode::TopKInt8] {
+            let enc = encode_param(mode, 7, 0, 1, &data);
+            assert!(matches!(enc, SliceEncoding::Int8 { .. }), "{mode:?}");
+            let mut out = vec![0.0f32; data.len()];
+            decode_into(&enc, &mut out);
+            let scale = 1.0 / 127.0; // max|data| = 1.0
+            for (o, d) in out.iter().zip(&data) {
+                assert!((o - d).abs() <= scale + 1e-7, "{o} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn param_encoding_is_deterministic_in_shard_and_version() {
+        let data: Vec<f32> =
+            (0..64).map(|i| ((i * 37 % 13) as f32 - 6.0) * 0.1).collect();
+        let a = encode_param(CompressionMode::Int8, 5, 2, 9, &data);
+        let b = encode_param(CompressionMode::Int8, 5, 2, 9, &data);
+        let (mut da, mut db) = (vec![0.0; 64], vec![0.0; 64]);
+        decode_into(&a, &mut da);
+        decode_into(&b, &mut db);
+        assert_eq!(da, db);
+        let c = encode_param(CompressionMode::Int8, 5, 2, 10, &data);
+        let mut dc = vec![0.0; 64];
+        decode_into(&c, &mut dc);
+        assert_ne!(da, dc, "version must key the rounding stream");
+    }
+}

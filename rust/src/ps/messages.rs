@@ -82,6 +82,77 @@ impl ShardPlan {
     }
 }
 
+/// Encoded payload of one shard slice on the wire — the unit both
+/// [`ToServer::Grad`] and [`ToWorker::Param`] carry. Every variant is
+/// self-describing (the receiver needs no out-of-band mode agreement)
+/// and decodes to a dense f32 slice via
+/// [`super::compress::decode_into`].
+///
+/// [`SliceEncoding::encoded_bytes`] is the *exact* wire size of the
+/// payload as it would serialize — the byte-accounting truth used by
+/// `WorkerStats`/`ServerResult` telemetry and `BENCH_wire.json`. It
+/// counts payload only: message header fields (worker/shard/step/
+/// version/clock/loss) are topology-constant and excluded, which keeps
+/// the numbers comparable with `BENCH_ps.json`'s per-message payload
+/// sizes.
+#[derive(Clone)]
+pub enum SliceEncoding {
+    /// Uncompressed f32 values — the PR-2/PR-3 protocol verbatim.
+    Dense(Vec<f32>),
+    /// Stochastic int8 quantization: one shared f32 scale, one i8 per
+    /// coordinate (`x ≈ q · scale`).
+    Int8 { scale: f32, q: Vec<i8> },
+    /// Top-k sparse, f32 values. Coordinates travel as LEB128 varint
+    /// gaps: the first entry is the first index, each later entry is
+    /// `idx[j] − idx[j−1]` (≥ 1, indices strictly increase).
+    TopK { gaps: Vec<u8>, vals: Vec<f32> },
+    /// Top-k sparse with int8 values and a per-slice scale; same gap
+    /// coordinate stream as [`SliceEncoding::TopK`].
+    TopKInt8 { scale: f32, gaps: Vec<u8>, vals: Vec<i8> },
+}
+
+impl SliceEncoding {
+    /// Exact serialized payload size in bytes.
+    pub fn encoded_bytes(&self) -> u64 {
+        match self {
+            SliceEncoding::Dense(v) => 4 * v.len() as u64,
+            SliceEncoding::Int8 { q, .. } => 4 + q.len() as u64,
+            SliceEncoding::TopK { gaps, vals } => {
+                gaps.len() as u64 + 4 * vals.len() as u64
+            }
+            SliceEncoding::TopKInt8 { gaps, vals, .. } => {
+                4 + gaps.len() as u64 + vals.len() as u64
+            }
+        }
+    }
+
+    /// Non-zero coordinates carried (= slice length for dense forms).
+    pub fn nnz(&self) -> usize {
+        match self {
+            SliceEncoding::Dense(v) => v.len(),
+            SliceEncoding::Int8 { q, .. } => q.len(),
+            SliceEncoding::TopK { vals, .. } => vals.len(),
+            SliceEncoding::TopKInt8 { vals, .. } => vals.len(),
+        }
+    }
+}
+
+impl std::fmt::Debug for SliceEncoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let tag = match self {
+            SliceEncoding::Dense(_) => "dense",
+            SliceEncoding::Int8 { .. } => "int8",
+            SliceEncoding::TopK { .. } => "topk",
+            SliceEncoding::TopKInt8 { .. } => "topk_int8",
+        };
+        f.debug_struct("SliceEncoding")
+            .field("tag", &tag)
+            .field("nnz", &self.nnz())
+            .field("bytes", &self.encoded_bytes())
+            .finish()
+    }
+}
+
 /// Worker → server.
 pub enum ToServer {
     /// One shard-slice of a gradient computed on one minibatch. A worker
@@ -94,8 +165,9 @@ pub enum ToServer {
         shard: usize,
         /// The worker's local step index this gradient belongs to.
         step: u64,
-        /// Row-major slice of the k×d gradient (rows `plan.rows(shard)`).
-        grad: Vec<f32>,
+        /// Encoded row-major slice of the k×d gradient (rows
+        /// `plan.rows(shard)`); `Dense` under `compression.mode=none`.
+        grad: SliceEncoding,
         /// Minibatch loss at the worker's local parameters (telemetry;
         /// identical across the step's slices, counted once per shard).
         loss: f32,
@@ -116,8 +188,11 @@ pub enum ToWorker {
         /// This shard's SSP clock: min over unfinished workers of
         /// applied-slice counts. Workers gate on the min across shards.
         clock: u64,
-        /// Row-major slice of the k×d parameters (rows `plan.rows(shard)`).
-        data: Vec<f32>,
+        /// Encoded row-major slice of the k×d parameters (rows
+        /// `plan.rows(shard)`). `Dense` except under the int8
+        /// compression modes (parameters are absolute state: top-k
+        /// sparsification never applies to them).
+        data: SliceEncoding,
     },
 }
 
@@ -130,7 +205,7 @@ impl std::fmt::Debug for ToServer {
                 .field("shard", shard)
                 .field("step", step)
                 .field("loss", loss)
-                .field("len", &grad.len())
+                .field("grad", grad)
                 .finish(),
             ToServer::Done { worker } => {
                 f.debug_struct("Done").field("worker", worker).finish()
@@ -147,7 +222,7 @@ impl std::fmt::Debug for ToWorker {
                 .field("shard", shard)
                 .field("version", version)
                 .field("clock", clock)
-                .field("len", &data.len())
+                .field("data", data)
                 .finish(),
         }
     }
@@ -194,6 +269,33 @@ mod tests {
             plan.slice_mut(&mut rebuilt, s).copy_from_slice(&src);
         }
         assert_eq!(rebuilt, data);
+    }
+
+    #[test]
+    fn encoded_bytes_is_exact_per_variant() {
+        assert_eq!(SliceEncoding::Dense(vec![0.0; 10]).encoded_bytes(), 40);
+        assert_eq!(
+            SliceEncoding::Int8 { scale: 1.0, q: vec![0; 10] }
+                .encoded_bytes(),
+            4 + 10
+        );
+        assert_eq!(
+            SliceEncoding::TopK {
+                gaps: vec![0; 3],
+                vals: vec![0.0; 3],
+            }
+            .encoded_bytes(),
+            3 + 12
+        );
+        assert_eq!(
+            SliceEncoding::TopKInt8 {
+                scale: 1.0,
+                gaps: vec![0; 3],
+                vals: vec![0; 3],
+            }
+            .encoded_bytes(),
+            4 + 3 + 3
+        );
     }
 
     #[test]

@@ -15,12 +15,14 @@
 //! [`run_training`] wires everything together and is the entry point used
 //! by the CLI, the end-to-end example, and the benches.
 
+mod compress;
 mod messages;
 mod server;
 mod transport;
 mod worker;
 
-pub use messages::{ShardPlan, ToServer, ToWorker};
+pub use compress::{decode_into, encode_param, keep_count, Compressor};
+pub use messages::{ShardPlan, SliceEncoding, ToServer, ToWorker};
 pub use server::{ProbeFn, Server, ServerConfig, ServerResult};
 pub use transport::{drain, FaultSpec, FaultySender};
 pub use worker::{Worker, WorkerConfig, WorkerStats};
@@ -57,6 +59,11 @@ pub struct TrainResult {
     /// Mean worker-reported minibatch loss over the server's last
     /// telemetry window.
     pub last_loss: f32,
+    /// Encoded payload bytes of gradient slices the server folded
+    /// (wire size as received).
+    pub grad_bytes_received: u64,
+    /// Encoded payload bytes of parameter slices shipped to workers.
+    pub param_bytes_sent: u64,
     pub worker_stats: Vec<WorkerStats>,
     pub wall_s: f64,
 }
@@ -179,6 +186,7 @@ pub fn run_training(
             probe_every: opts.probe_every,
             faults: opts.faults,
             seed: cfg.seed ^ 0x5E2,
+            compression: cfg.cluster.compression,
         },
         plan.clone(),
         l0.clone(),
@@ -201,6 +209,7 @@ pub fn run_training(
             faults: opts.faults,
             seed: cfg.seed ^ ((w as u64 + 1) << 16),
             threads: cfg.cluster.threads_per_worker,
+            compression: cfg.cluster.compression,
         };
         workers.push(Worker::spawn(
             wcfg,
@@ -228,6 +237,8 @@ pub fn run_training(
         param_msgs: sr.param_msgs,
         server_shards,
         last_loss: sr.last_loss,
+        grad_bytes_received: sr.grad_bytes_received,
+        param_bytes_sent: sr.param_bytes_sent,
         worker_stats,
         wall_s: watch.elapsed_s(),
     })

@@ -32,8 +32,10 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::compress::{decode_into, encode_param};
 use super::messages::{ShardPlan, ToServer, ToWorker};
 use super::transport::{drain, FaultSpec, FaultySender};
+use crate::config::CompressionConfig;
 use crate::dml::LrSchedule;
 use crate::linalg::Mat;
 use crate::metrics::{Curve, Stopwatch};
@@ -58,6 +60,10 @@ pub struct ServerConfig {
     pub probe_every: u64,
     pub faults: FaultSpec,
     pub seed: u64,
+    /// Wire compression: shards decode gradient slices before folding
+    /// (any mode decodes — the wire format is self-describing) and
+    /// encode parameter broadcasts per this mode.
+    pub compression: CompressionConfig,
 }
 
 /// What the server hands back after shutdown.
@@ -81,6 +87,12 @@ pub struct ServerResult {
     /// Mean worker-reported minibatch loss over the last window,
     /// averaged across shards.
     pub last_loss: f32,
+    /// Encoded payload bytes of the gradient slices the shards folded
+    /// (wire size as received, before decoding).
+    pub grad_bytes_received: u64,
+    /// Encoded payload bytes of the parameter slices actually shipped
+    /// to workers (post drop-gate; pairs with `param_msgs`).
+    pub param_bytes_sent: u64,
 }
 
 /// What one shard's update thread hands back.
@@ -88,6 +100,7 @@ struct ShardOutcome {
     slice: Vec<f32>,
     applied: u64,
     broadcasts: u64,
+    grad_bytes: u64,
     last_loss: f32,
     saw_loss: bool,
 }
@@ -102,7 +115,8 @@ enum ProbeMsg {
 pub struct Server {
     shard_handles: Vec<std::thread::JoinHandle<ShardOutcome>>,
     probe_handle: std::thread::JoinHandle<Curve>,
-    comm_handle: std::thread::JoinHandle<u64>,
+    /// Returns (param slice messages shipped, encoded param bytes).
+    comm_handle: std::thread::JoinHandle<(u64, u64)>,
     plan: ShardPlan,
 }
 
@@ -148,6 +162,8 @@ impl Server {
             let shards_done = shards_done.clone();
             let lr = cfg.lr;
             let lr_scale = cfg.lr_scale;
+            let compression = cfg.compression;
+            let seed = cfg.seed;
             let handle = std::thread::Builder::new()
                 .name(format!("ps-server-shard{s}"))
                 .spawn(move || {
@@ -159,6 +175,8 @@ impl Server {
                         lr,
                         lr_scale,
                         probe_every,
+                        compression,
+                        seed,
                         &inbound_rx,
                         &outbound_tx,
                         &probe_tx,
@@ -228,7 +246,7 @@ impl Server {
         let seed = cfg.seed;
         let comm_handle = std::thread::Builder::new()
             .name("ps-server-comm".into())
-            .spawn(move || -> u64 {
+            .spawn(move || -> (u64, u64) {
                 let mut senders: Vec<FaultySender<ToWorker>> = to_workers
                     .into_iter()
                     .enumerate()
@@ -294,9 +312,13 @@ impl Server {
                         break;
                     }
                 }
-                // physical param messages shipped (post drop-gate),
-                // summed over workers — the bench's message-count truth
-                senders.iter().map(|s| s.stats().0).sum()
+                // physical param messages + encoded bytes shipped (post
+                // drop-gate), summed over workers — the benches'
+                // message/byte-count truth
+                (
+                    senders.iter().map(|s| s.stats().0).sum(),
+                    senders.iter().map(|s| s.bytes_sent()).sum(),
+                )
             })
             .expect("spawn server comm thread");
 
@@ -310,7 +332,7 @@ impl Server {
             .into_iter()
             .map(|h| h.join().expect("server shard panicked"))
             .collect();
-        let param_msgs =
+        let (param_msgs, param_bytes_sent) =
             self.comm_handle.join().expect("server comm panicked");
         let curve = self.probe_handle.join().expect("server probe panicked");
 
@@ -321,6 +343,8 @@ impl Server {
         let slice_updates: u64 = outcomes.iter().map(|o| o.applied).sum();
         let applied_updates = slice_updates / self.plan.shards() as u64;
         let broadcasts: u64 = outcomes.iter().map(|o| o.broadcasts).sum();
+        let grad_bytes_received: u64 =
+            outcomes.iter().map(|o| o.grad_bytes).sum();
         let (mut acc, mut n) = (0.0f64, 0u32);
         for o in &outcomes {
             if o.saw_loss {
@@ -337,6 +361,8 @@ impl Server {
             broadcasts,
             param_msgs,
             last_loss,
+            grad_bytes_received,
+            param_bytes_sent,
         }
     }
 }
@@ -365,13 +391,17 @@ fn broadcast_freshest(
         if let Some(ToWorker::Param { shard, version, clock, data }) =
             slot.take()
         {
+            let bytes = data.encoded_bytes();
             for snd in senders.iter_mut() {
-                let _ = snd.send(ToWorker::Param {
-                    shard,
-                    version,
-                    clock,
-                    data: data.clone(),
-                });
+                let _ = snd.send_bytes(
+                    ToWorker::Param {
+                        shard,
+                        version,
+                        clock,
+                        data: data.clone(),
+                    },
+                    bytes,
+                );
             }
         }
     }
@@ -402,10 +432,10 @@ fn route(inbound: &[Sender<ToServer>], msg: ToServer) {
     }
 }
 
-/// One shard's update loop: fold gradient slices into the owned row
-/// range with this shard's own lr clock, maintain per-worker counts and
-/// the shard SSP clock, publish versioned `Param` slices and probe
-/// snapshots.
+/// One shard's update loop: decode and fold gradient slices into the
+/// owned row range with this shard's own lr clock, maintain per-worker
+/// counts and the shard SSP clock, publish versioned (encoded) `Param`
+/// slices and (raw f32) probe snapshots.
 #[allow(clippy::too_many_arguments)]
 fn run_shard(
     shard: usize,
@@ -415,6 +445,8 @@ fn run_shard(
     lr: LrSchedule,
     lr_scale: f32,
     probe_every: u64,
+    compression: CompressionConfig,
+    seed: u64,
     inbound_rx: &Receiver<ToServer>,
     outbound_tx: &Sender<ToWorker>,
     probe_tx: &SyncSender<ProbeMsg>,
@@ -423,10 +455,15 @@ fn run_shard(
     let mut finished = vec![false; workers];
     let mut applied = 0u64;
     let mut broadcasts = 0u64;
+    let mut grad_bytes = 0u64;
     let mut loss_acc = 0.0f64;
     let mut loss_n = 0u64;
     let mut last_loss = 0.0f32;
     let mut saw_loss = false;
+    // reused decode scratch: every wire encoding lands here as dense
+    // f32 before folding (the Dense arm is a plain copy, so mode=none
+    // folds the exact bits the worker computed)
+    let mut dec = vec![0.0f32; slice.len()];
     loop {
         let batch = match drain(
             inbound_rx,
@@ -446,9 +483,11 @@ fn run_shard(
         for msg in batch {
             match msg {
                 ToServer::Grad { worker, grad, loss, .. } => {
+                    grad_bytes += grad.encoded_bytes();
+                    decode_into(&grad, &mut dec);
                     // slice ← slice − lr_t · g_s  (per-shard lr clock)
                     let lr_t = lr.at(applied as usize) * lr_scale;
-                    for (a, gv) in slice.iter_mut().zip(&grad) {
+                    for (a, gv) in slice.iter_mut().zip(&dec) {
                         *a -= lr_t * gv;
                     }
                     applied += 1;
@@ -495,7 +534,15 @@ fn run_shard(
                 shard,
                 version: applied,
                 clock,
-                data: slice.clone(),
+                // encoded once per broadcast round, keyed by
+                // (shard, version) so reruns are reproducible
+                data: encode_param(
+                    compression.mode,
+                    seed,
+                    shard,
+                    applied,
+                    &slice,
+                ),
             });
         }
         if finished.iter().all(|&f| f) {
@@ -514,5 +561,12 @@ fn run_shard(
         data: slice.clone(),
     });
     let _ = probe_tx.send(ProbeMsg::ShardDone { shard });
-    ShardOutcome { slice, applied, broadcasts, last_loss, saw_loss }
+    ShardOutcome {
+        slice,
+        applied,
+        broadcasts,
+        grad_bytes,
+        last_loss,
+        saw_loss,
+    }
 }

@@ -48,10 +48,20 @@ impl FaultSpec {
 
 /// Sender wrapper that applies the fault model.
 ///
-/// `stats()` counts *logical* sends: a [`FaultySender::send_group`] of S
-/// physical slices is one send (or one drop), and control messages sent
-/// via [`FaultySender::send_reliable`] are not counted at all — so a
-/// worker's `sent + dropped` equals its step count exactly.
+/// **Accounting contract** (the telemetry and the benches rely on it):
+///
+/// * `stats()` counts *logical* sends: a [`FaultySender::send_group`] of
+///   S physical slices is one send (or one drop), and control messages
+///   sent via [`FaultySender::send_reliable`] are not counted at all —
+///   so a worker's `sent + dropped` equals its step count exactly.
+/// * `bytes_sent()` counts *encoded payload* bytes of the physical
+///   slice messages the transport accepted (post drop-gate): a dropped
+///   group contributes zero bytes, and control/`Done` messages are
+///   excluded, mirroring `stats()`. Callers pass the payload size with
+///   [`FaultySender::send_group_bytes`] / [`FaultySender::send_bytes`]
+///   because the payload type is opaque here. Header fields are not
+///   bytes — `BENCH_wire.json` ratios therefore compare directly with
+///   `BENCH_ps.json`'s per-message payload sizes.
 pub struct FaultySender<T> {
     tx: Sender<T>,
     drop_prob: f64,
@@ -59,6 +69,7 @@ pub struct FaultySender<T> {
     rng: Pcg32,
     sent: u64,
     dropped: u64,
+    bytes_sent: u64,
     /// Messages in flight: FIFO of (delivery deadline, payload). All
     /// deadlines share the same fixed latency, so the front is always
     /// the earliest.
@@ -75,6 +86,7 @@ impl<T> FaultySender<T> {
             rng: Pcg32::with_stream(seed, 0xFA017),
             sent: 0,
             dropped: 0,
+            bytes_sent: 0,
             inflight: VecDeque::new(),
         }
     }
@@ -86,10 +98,32 @@ impl<T> FaultySender<T> {
         self.send_group(std::iter::once(msg))
     }
 
+    /// [`FaultySender::send`] with payload-byte accounting: `bytes` is
+    /// added to `bytes_sent()` iff the message survives the drop gate.
+    pub fn send_bytes(&mut self, msg: T, bytes: u64) -> Result<(), ()> {
+        self.send_group_bytes(std::iter::once(msg), bytes)
+    }
+
     /// Send a group of physical messages that share one transport fate:
     /// one drop decision and one `sent`/`dropped` count for the whole
     /// group. Used for the per-shard slices of a single gradient step.
     pub fn send_group<I>(&mut self, msgs: I) -> Result<(), ()>
+    where
+        I: IntoIterator<Item = T>,
+    {
+        self.send_group_bytes(msgs, 0)
+    }
+
+    /// [`FaultySender::send_group`] with payload-byte accounting:
+    /// `payload_bytes` is the summed encoded size of the group's
+    /// messages, added to `bytes_sent()` iff the group survives the
+    /// drop gate (the byte counter and `stats()` always agree on which
+    /// messages exist).
+    pub fn send_group_bytes<I>(
+        &mut self,
+        msgs: I,
+        payload_bytes: u64,
+    ) -> Result<(), ()>
     where
         I: IntoIterator<Item = T>,
     {
@@ -101,6 +135,7 @@ impl<T> FaultySender<T> {
         // hung-up peer doesn't inflate the sent telemetry
         self.enqueue(msgs)?;
         self.sent += 1;
+        self.bytes_sent += payload_bytes;
         self.pump()
     }
 
@@ -163,6 +198,12 @@ impl<T> FaultySender<T> {
     /// (logical sends, logical drops) — see the type docs.
     pub fn stats(&self) -> (u64, u64) {
         (self.sent, self.dropped)
+    }
+
+    /// Encoded payload bytes accepted by the transport (post drop-gate;
+    /// control messages excluded) — see the type docs.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
     }
 }
 
@@ -301,6 +342,27 @@ mod tests {
         s.send(3).unwrap();
         assert_eq!(rx.try_iter().collect::<Vec<i32>>(), vec![1, 2, 3]);
         assert_eq!(s.stats(), (2, 0), "control messages not counted");
+    }
+
+    #[test]
+    fn byte_accounting_agrees_with_message_accounting() {
+        // The contract the wire telemetry rests on: bytes are counted
+        // per *accepted* group (same drop gate as `sent`), and control
+        // messages contribute neither messages nor bytes.
+        let (tx, rx) = channel();
+        let mut s = FaultySender::new(tx, 0.4, Duration::ZERO, 11);
+        let group_bytes = 400u64;
+        for g in 0..2_000usize {
+            s.send_group_bytes((0..4).map(|i| (g, i)), group_bytes)
+                .unwrap();
+        }
+        s.send_reliable((usize::MAX, 0)).unwrap(); // control: uncounted
+        let (sent, dropped) = s.stats();
+        assert!(dropped > 0, "fault injection inactive");
+        assert_eq!(s.bytes_sent(), sent * group_bytes,
+                   "bytes must track accepted groups exactly");
+        // physical deliveries: 4 slices per accepted group + 1 control
+        assert_eq!(rx.try_iter().count() as u64, 4 * sent + 1);
     }
 
     #[test]

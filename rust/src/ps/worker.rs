@@ -22,9 +22,10 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use super::compress::{decode_into, Compressor};
 use super::messages::{ShardPlan, ToServer, ToWorker};
 use super::transport::{FaultSpec, FaultySender};
-use crate::config::Consistency;
+use crate::config::{CompressionConfig, Consistency};
 use crate::data::{Dataset, MinibatchIter, WorkerPairs};
 use crate::dml::{EngineFactory, LrSchedule, MinibatchRef};
 use crate::linalg::Mat;
@@ -45,6 +46,10 @@ pub struct WorkerConfig {
     /// Compute threads for this worker's engine (paper: C cores per
     /// worker machine). `0` = engine default.
     pub threads: usize,
+    /// Wire compression for gradient pushes (and, symmetrically on the
+    /// server, parameter broadcasts). `mode = none` is the dense f32
+    /// protocol bit for bit.
+    pub compression: CompressionConfig,
 }
 
 /// Per-worker telemetry returned on join.
@@ -70,6 +75,12 @@ pub struct WorkerStats {
     pub pair_bytes: usize,
     /// Pairs drawn from this worker's pair stream.
     pub pairs_drawn: u64,
+    /// Encoded payload bytes of gradient slices the transport accepted
+    /// (post drop-gate; `Done` excluded — the same contract as
+    /// `grads_sent`, see `FaultySender`).
+    pub grad_bytes_sent: u64,
+    /// Encoded payload bytes of parameter slices received.
+    pub param_bytes_received: u64,
 }
 
 /// Worker-internal outbound queue entries (computing → comm thread).
@@ -92,6 +103,7 @@ struct Shared {
     cv_m: Mutex<()>,
     stop: AtomicBool,
     params_received: AtomicU64,
+    param_bytes: AtomicU64,
 }
 
 impl Shared {
@@ -108,7 +120,8 @@ impl Shared {
 pub struct Worker {
     compute: std::thread::JoinHandle<WorkerStats>,
     remote_update: std::thread::JoinHandle<()>,
-    comm: std::thread::JoinHandle<(u64, u64)>,
+    /// Returns (grads sent, grads dropped, encoded grad bytes sent).
+    comm: std::thread::JoinHandle<(u64, u64, u64)>,
     shared: Arc<Shared>,
 }
 
@@ -141,6 +154,7 @@ impl Worker {
             cv_m: Mutex::new(()),
             stop: AtomicBool::new(false),
             params_received: AtomicU64::new(0),
+            param_bytes: AtomicU64::new(0),
         });
 
         // internal queues (paper: worker-side inbound/outbound queues)
@@ -277,6 +291,10 @@ impl Worker {
                             r_shared
                                 .params_received
                                 .fetch_add(1, Ordering::Relaxed);
+                            r_shared.param_bytes.fetch_add(
+                                data.encoded_bytes(),
+                                Ordering::Relaxed,
+                            );
                             // freshest version per shard wins
                             if version
                                 > r_shared.versions[shard]
@@ -285,11 +303,14 @@ impl Worker {
                                 {
                                     let mut l =
                                         r_shared.l.lock().unwrap();
-                                    // splice the slice into the local
-                                    // copy (§4.1, per shard)
-                                    r_plan
-                                        .slice_mut(&mut l.data, shard)
-                                        .copy_from_slice(&data);
+                                    // splice the decoded slice into the
+                                    // local copy (§4.1, per shard);
+                                    // Dense decodes by plain copy
+                                    decode_into(
+                                        &data,
+                                        r_plan
+                                            .slice_mut(&mut l.data, shard),
+                                    );
                                 }
                                 r_shared.versions[shard]
                                     .store(version, Ordering::SeqCst);
@@ -313,6 +334,7 @@ impl Worker {
         let w_shared = shared.clone();
         let faults = cfg.faults;
         let seed = cfg.seed;
+        let compression = cfg.compression;
         let comm = std::thread::Builder::new()
             .name(format!("ps-worker{id}-comm"))
             .spawn(move || {
@@ -322,13 +344,23 @@ impl Worker {
                     faults.latency,
                     seed ^ 0xC0,
                 );
+                // gradient encoder: per-shard error-feedback residuals
+                // live here, on the thread that owns the outbound order
+                let mut compressor =
+                    Compressor::new(compression, seed, id, &plan);
                 loop {
                     let mut did_work = false;
                     // outbound: gradient slices → server (one fate per
                     // step), Done over the reliable control plane
                     match outbound_rx.try_recv() {
                         Ok(msg) => {
-                            let _ = ship(&mut to_server, &plan, id, msg);
+                            let _ = ship(
+                                &mut to_server,
+                                &mut compressor,
+                                &plan,
+                                id,
+                                msg,
+                            );
                             did_work = true;
                         }
                         Err(std::sync::mpsc::TryRecvError::Empty) => {}
@@ -358,7 +390,13 @@ impl Worker {
                         // flush outbound through the same fault model,
                         // then wait out in-flight latencies and exit
                         while let Ok(msg) = outbound_rx.try_recv() {
-                            let _ = ship(&mut to_server, &plan, id, msg);
+                            let _ = ship(
+                                &mut to_server,
+                                &mut compressor,
+                                &plan,
+                                id,
+                                msg,
+                            );
                         }
                         to_server.flush_blocking();
                         break;
@@ -367,7 +405,8 @@ impl Worker {
                         std::thread::sleep(Duration::from_micros(200));
                     }
                 }
-                to_server.stats()
+                let (sent, dropped) = to_server.stats();
+                (sent, dropped, to_server.bytes_sent())
             })
             .expect("spawn comm thread");
 
@@ -379,12 +418,16 @@ impl Worker {
         let mut stats = self.compute.join().expect("compute panicked");
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
-        let (sent, dropped) = self.comm.join().expect("comm panicked");
+        let (sent, dropped, grad_bytes) =
+            self.comm.join().expect("comm panicked");
         self.remote_update.join().expect("remote-update panicked");
         stats.grads_sent = sent;
         stats.grads_dropped = dropped;
+        stats.grad_bytes_sent = grad_bytes;
         stats.params_received =
             self.shared.params_received.load(Ordering::Relaxed);
+        stats.param_bytes_received =
+            self.shared.param_bytes.load(Ordering::Relaxed);
         stats
     }
 
@@ -395,26 +438,38 @@ impl Worker {
     }
 }
 
-/// Put one outbound entry on the wire: a `Step` becomes one gradient
-/// slice per server shard sharing a single transport fate; `Done` rides
-/// the reliable control plane (never dropped, still ordered).
+/// Put one outbound entry on the wire: a `Step` becomes one *encoded*
+/// gradient slice per server shard sharing a single transport fate;
+/// `Done` rides the reliable control plane (never dropped, still
+/// ordered). Encoding (and the error-feedback residual update) happens
+/// before the group's drop decision: a transport-dropped step is lost
+/// work exactly as in the dense protocol — error feedback recovers
+/// compression losses, not network losses.
 fn ship(
     to_server: &mut FaultySender<ToServer>,
+    comp: &mut Compressor,
     plan: &ShardPlan,
     worker: usize,
     msg: Outbound,
 ) -> Result<(), ()> {
     match msg {
         Outbound::Step { step, grad, loss } => {
-            to_server.send_group((0..plan.shards()).map(|s| {
-                ToServer::Grad {
-                    worker,
-                    shard: s,
-                    step,
-                    grad: plan.slice(&grad, s).to_vec(),
-                    loss,
-                }
-            }))
+            let mut bytes = 0u64;
+            let msgs: Vec<ToServer> = (0..plan.shards())
+                .map(|s| {
+                    let enc =
+                        comp.encode_grad(s, step, plan.slice(&grad, s));
+                    bytes += enc.encoded_bytes();
+                    ToServer::Grad {
+                        worker,
+                        shard: s,
+                        step,
+                        grad: enc,
+                        loss,
+                    }
+                })
+                .collect();
+            to_server.send_group_bytes(msgs, bytes)
         }
         Outbound::Done => {
             to_server.send_reliable(ToServer::Done { worker })

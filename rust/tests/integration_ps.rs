@@ -1,7 +1,9 @@
 //! Integration: the threaded (and sharded) parameter server end to end,
 //! native engine — the PS-protocol suite CI runs under a hard timeout.
 
-use dmlps::config::{Consistency, Preset};
+use dmlps::config::{
+    CompressionConfig, CompressionMode, Consistency, Preset,
+};
 use dmlps::data::{partition_pairs, ExperimentData, MinibatchIter};
 use dmlps::dml::{DmlProblem, Engine, LrSchedule, MinibatchRef, NativeEngine};
 use dmlps::linalg::Mat;
@@ -299,22 +301,13 @@ fn bsp_degenerates_to_lockstep() {
     }
 }
 
-#[test]
-fn single_worker_single_shard_bsp_matches_sequential_sgd() {
-    // 1 worker + 1 shard + BSP + perfect transport is sequential SGD in
-    // disguise: every step computes on the server's L (the gate admits
-    // step t only after the server applied and broadcast grad t−1), so
-    // the final L must be *bit-identical* to a sequential loop with the
-    // same seed, minibatch stream, and lr schedule.
-    let mut cfg = tiny_cfg(60, 1);
-    cfg.cluster.server_shards = 1;
-    cfg.cluster.consistency = Consistency::Bsp;
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
-    let r = dmlps::cli::driver::train_distributed(
-        &cfg, &data, "native", &RunOptions::default()).unwrap();
-
-    // sequential reference, mirroring the worker's exact sampling and
-    // the server's exact apply arithmetic (lr_scale = 1/P = 1)
+/// Sequential SGD mirroring a 1-worker run's exact sampling and the
+/// server's exact apply arithmetic (lr_scale = 1/P = 1) — the golden
+/// anchor the distributed protocol is pinned against.
+fn sequential_reference(
+    cfg: &dmlps::config::ExperimentConfig,
+    data: &ExperimentData,
+) -> Mat {
     let problem = DmlProblem::new(
         cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
     let mut l = problem.init_l(cfg.model.init_scale, cfg.seed);
@@ -345,6 +338,23 @@ fn single_worker_single_shard_bsp_matches_sequential_sgd() {
             *a -= lr_t * gv;
         }
     }
+    l
+}
+
+#[test]
+fn single_worker_single_shard_bsp_matches_sequential_sgd() {
+    // 1 worker + 1 shard + BSP + perfect transport is sequential SGD in
+    // disguise: every step computes on the server's L (the gate admits
+    // step t only after the server applied and broadcast grad t−1), so
+    // the final L must be *bit-identical* to a sequential loop with the
+    // same seed, minibatch stream, and lr schedule.
+    let mut cfg = tiny_cfg(60, 1);
+    cfg.cluster.server_shards = 1;
+    cfg.cluster.consistency = Consistency::Bsp;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default()).unwrap();
+    let l = sequential_reference(&cfg, &data);
     assert_eq!(r.applied_updates, 60);
     assert_eq!(
         r.l.data, l.data,
@@ -371,6 +381,228 @@ fn last_loss_is_surfaced() {
         (r.last_loss as f64) < first * 10.0,
         "last_loss {} implausible vs initial objective {first}",
         r.last_loss
+    );
+}
+
+// ---------------------------------------------------------------------
+// Compressed wire-protocol suite
+// ---------------------------------------------------------------------
+
+#[test]
+fn compression_none_is_bit_identical_to_sequential_anchor() {
+    // The explicit mode=none config must reproduce the PR-2/PR-3 dense
+    // protocol bit for bit — same golden anchor as the test above, now
+    // routed through the compression-aware encode/decode paths.
+    let mut cfg = tiny_cfg(60, 1);
+    cfg.cluster.server_shards = 1;
+    cfg.cluster.consistency = Consistency::Bsp;
+    cfg.cluster.compression = CompressionConfig {
+        mode: CompressionMode::None,
+        keep: 0.5, // must be inert under mode=none
+    };
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default()).unwrap();
+    let l = sequential_reference(&cfg, &data);
+    assert_eq!(
+        r.l.data, l.data,
+        "mode=none must stay bit-identical to sequential SGD"
+    );
+}
+
+#[test]
+fn topk_int8_error_feedback_tracks_dense_final_loss() {
+    // Error-feedback contract, end to end: at keep=0.25 the compressed
+    // run moves ~4-8× fewer bytes yet must land within a small ε of the
+    // dense final objective. 1 worker + BSP makes both runs
+    // deterministic, so this is a stable regression, not a flake.
+    let mut dense_cfg = mid_cfg(400, 1);
+    dense_cfg.cluster.server_shards = 2;
+    dense_cfg.cluster.consistency = Consistency::Bsp;
+    let mut topk_cfg = dense_cfg.clone();
+    topk_cfg.cluster.compression = CompressionConfig {
+        mode: CompressionMode::TopKInt8,
+        keep: 0.25,
+    };
+    let data = ExperimentData::generate(&dense_cfg.dataset,
+                                        dense_cfg.seed);
+    let rd = dmlps::cli::driver::train_distributed(
+        &dense_cfg, &data, "native", &RunOptions::default()).unwrap();
+    let rt = dmlps::cli::driver::train_distributed(
+        &topk_cfg, &data, "native", &RunOptions::default()).unwrap();
+    assert_eq!(rd.applied_updates, 400);
+    assert_eq!(rt.applied_updates, 400);
+
+    let first = rd.curve.points.first().unwrap().objective;
+    let dense_final = rd.curve.points.last().unwrap().objective;
+    let topk_final = rt.curve.points.last().unwrap().objective;
+    assert!(dense_final < first * 0.5, "dense run failed to learn");
+    assert!(topk_final < first * 0.5, "compressed run failed to learn");
+    assert!(
+        (topk_final - dense_final).abs() <= 0.10 * first,
+        "compressed final {topk_final} drifted from dense \
+         {dense_final} (initial {first})"
+    );
+
+    // and the byte reduction that motivated the ε: ≥ 4× on the wire
+    let dense_bytes: u64 =
+        rd.worker_stats.iter().map(|w| w.grad_bytes_sent).sum();
+    let topk_bytes: u64 =
+        rt.worker_stats.iter().map(|w| w.grad_bytes_sent).sum();
+    assert!(
+        topk_bytes * 4 <= dense_bytes,
+        "expected ≥4× reduction: {topk_bytes} vs {dense_bytes}"
+    );
+}
+
+#[test]
+fn fault_injection_accounting_identity_holds_with_compression() {
+    // The PR-2 identity re-verified with the compressed protocol under
+    // drops on both directions plus delivery latency: encoding must not
+    // change what a "message" is — one fate per step, sent + dropped =
+    // steps, and the server can never fold more than was sent.
+    let mut cfg = tiny_cfg(400, 2);
+    cfg.cluster.server_shards = 3;
+    cfg.cluster.compression = CompressionConfig {
+        mode: CompressionMode::TopKInt8,
+        keep: 0.25,
+    };
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let opts = RunOptions {
+        faults: FaultSpec {
+            drop_grad_prob: 0.2,
+            drop_param_prob: 0.15,
+            latency: std::time::Duration::from_micros(200),
+        },
+        ..Default::default()
+    };
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &opts).unwrap();
+    let mut total_sent = 0u64;
+    let mut total_dropped = 0u64;
+    let mut total_grad_bytes = 0u64;
+    for ws in &r.worker_stats {
+        assert_eq!(
+            ws.grads_sent + ws.grads_dropped,
+            ws.steps_done,
+            "worker {}: sent {} + dropped {} != steps {}",
+            ws.id, ws.grads_sent, ws.grads_dropped, ws.steps_done
+        );
+        assert_eq!(ws.steps_done, 400);
+        assert!(ws.grad_bytes_sent > 0, "worker {} byte telemetry",
+                ws.id);
+        total_sent += ws.grads_sent;
+        total_dropped += ws.grads_dropped;
+        total_grad_bytes += ws.grad_bytes_sent;
+    }
+    assert!(total_dropped > 50, "fault injection inactive");
+    assert!(r.applied_updates <= total_sent,
+            "applied {} > sent {total_sent}", r.applied_updates);
+    assert_eq!(r.slice_updates, r.applied_updates * 3);
+    // bytes obey the same drop gate as messages: the server can only
+    // have received what workers' transports accepted
+    assert!(
+        r.grad_bytes_received <= total_grad_bytes,
+        "server folded {} bytes but transports accepted only {}",
+        r.grad_bytes_received, total_grad_bytes
+    );
+    // compression is actually on: well under half the dense volume
+    let dense_step_bytes =
+        (cfg.model.k * cfg.dataset.dim * 4) as u64;
+    assert!(
+        total_grad_bytes < total_sent * dense_step_bytes / 2,
+        "wire not compressed: {total_grad_bytes}"
+    );
+    // and training still learns despite drops + compression
+    let first = r.curve.points.first().unwrap().objective;
+    let best = r.curve.points.iter().map(|p| p.objective)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best < first * 0.95,
+            "no progress under faults: first={first} best={best}");
+}
+
+#[test]
+fn dense_byte_accounting_matches_shardplan_arithmetic() {
+    // mode=none over a perfect transport: every byte counter must equal
+    // the ShardPlan slice-size arithmetic exactly — the unit anchor that
+    // keeps BENCH_wire.json comparable with BENCH_ps.json.
+    let (steps, workers, shards) = (30usize, 2usize, 3usize);
+    let mut cfg = tiny_cfg(steps, workers);
+    cfg.cluster.server_shards = shards;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default()).unwrap();
+    let plan = dmlps::ps::ShardPlan::new(
+        cfg.model.k, cfg.dataset.dim, shards);
+    // Σ over shards of 4·len(s) = 4·k·d per step, regardless of S
+    let step_bytes: u64 =
+        (0..plan.shards()).map(|s| 4 * plan.len(s) as u64).sum();
+    assert_eq!(step_bytes, (4 * cfg.model.k * cfg.dataset.dim) as u64);
+    for ws in &r.worker_stats {
+        assert_eq!(
+            ws.grad_bytes_sent,
+            steps as u64 * step_bytes,
+            "worker {}: dense bytes must be steps × 4kd exactly",
+            ws.id
+        );
+    }
+    assert_eq!(
+        r.grad_bytes_received,
+        (steps * workers) as u64 * step_bytes,
+        "server-side fold bytes must match what workers shipped"
+    );
+
+    // single shard: every param message is the full 4·k·d payload, so
+    // both ends' counters are exact multiples of the message count
+    let mut cfg1 = tiny_cfg(steps, 1);
+    cfg1.cluster.server_shards = 1;
+    let r1 = dmlps::cli::driver::train_distributed(
+        &cfg1, &data, "native", &RunOptions::default()).unwrap();
+    let full = (4 * cfg1.model.k * cfg1.dataset.dim) as u64;
+    assert_eq!(r1.param_bytes_sent, r1.param_msgs * full);
+    let ws = &r1.worker_stats[0];
+    assert_eq!(
+        ws.param_bytes_received,
+        ws.params_received * full,
+        "worker param bytes must be params_received × 4kd"
+    );
+    assert!(
+        ws.param_bytes_received <= r1.param_bytes_sent,
+        "worker cannot receive more than the server shipped"
+    );
+}
+
+#[test]
+fn compressed_run_meets_four_x_wire_budget_end_to_end() {
+    let (steps, workers) = (50usize, 2usize);
+    let mut cfg = tiny_cfg(steps, workers);
+    cfg.cluster.server_shards = 2;
+    cfg.cluster.compression = CompressionConfig {
+        mode: CompressionMode::TopKInt8,
+        keep: 0.25,
+    };
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default()).unwrap();
+    // perfect transport: the server folds exactly what workers shipped
+    let sent_bytes: u64 =
+        r.worker_stats.iter().map(|w| w.grad_bytes_sent).sum();
+    assert_eq!(r.grad_bytes_received, sent_bytes);
+    let dense_total =
+        ((steps * workers) * 4 * cfg.model.k * cfg.dataset.dim) as u64;
+    assert!(
+        sent_bytes * 4 <= dense_total,
+        "topk_int8@0.25 under-compressed: {sent_bytes} of {dense_total}"
+    );
+    // int8 param broadcasts: every slice is exactly 4 (scale) +
+    // k·d/S (one i8 per element) bytes here (k divides evenly by S)
+    assert!(r.param_msgs > 0);
+    let int8_slice_bytes =
+        4 + (cfg.model.k * cfg.dataset.dim / r.server_shards) as u64;
+    assert_eq!(
+        r.param_bytes_sent,
+        r.param_msgs * int8_slice_bytes,
+        "param slices not int8-quantized"
     );
 }
 
