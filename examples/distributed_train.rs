@@ -4,17 +4,22 @@
 //! This is the run recorded in EXPERIMENTS.md §End-to-end: the full
 //! three-layer stack composes — Pallas kernels → JAX model → HLO text →
 //! PJRT runtime → async parameter server — on a 0.47M-parameter model
-//! (the paper's own MNIST model size, Table 1) with minibatch 1000.
+//! (the paper's own MNIST model size, Table 1) with minibatch 1000,
+//! driven entirely through the `Session` builder; the learned metric
+//! leaves as a reloadable `MetricModel` artifact.
 //!
 //! ```bash
 //! cargo run --release --example distributed_train [steps] [workers]
 //! ```
 
-use dmlps::cli::driver::{ap_euclidean, ap_of_l, train_distributed};
+use std::sync::Arc;
+
 use dmlps::config::Preset;
 use dmlps::data::ExperimentData;
+use dmlps::dml::NativeEngine;
+use dmlps::eval::{ap_euclidean, ap_of_l};
 use dmlps::metrics::curves_to_markdown;
-use dmlps::ps::RunOptions;
+use dmlps::session::{MetricModel, Session};
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args()
@@ -41,29 +46,31 @@ fn main() -> anyhow::Result<()> {
         cfg.optim.batch_dis,
         workers,
         steps,
-        cfg.cluster.consistency.name(),
+        cfg.cluster.consistency,
     );
 
     println!("generating synthetic MNIST-like data \
               (100K similar + 100K dissimilar pairs)...");
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
 
-    let result = train_distributed(&cfg, &data, "auto", &RunOptions {
-        probe_every: ((steps * workers) as u64 / 15).max(1),
-        ..Default::default()
-    })?;
+    let run = Session::from_config(cfg)
+        .engine("auto")
+        .data(data.clone())
+        .probe(((steps * workers) as u64 / 15).max(1), (200, 200))
+        .train_distributed()?;
 
     println!("{}", curves_to_markdown(
-        std::slice::from_ref(&result.curve), 20));
+        std::slice::from_ref(&run.curve), 20));
     println!(
         "\nwall time {:.1}s | {} updates applied | {} broadcasts | \
          {:.2} updates/s",
-        result.wall_s,
-        result.applied_updates,
-        result.broadcasts,
-        result.applied_updates as f64 / result.wall_s
+        run.wall_s,
+        run.applied_updates,
+        run.broadcasts,
+        run.applied_updates as f64 / run.wall_s
     );
-    for ws in &result.worker_stats {
+    for ws in &run.worker_stats {
         println!(
             "worker {}: {} steps, {} grads sent, {} params received, \
              last minibatch loss {:.4}",
@@ -72,8 +79,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let mut eng = dmlps::dml::NativeEngine::new();
-    let ap = ap_of_l(&mut eng, &result.l, &data)?;
+    let mut eng = NativeEngine::new();
+    let model = run.require_model()?;
+    let ap = ap_of_l(&mut eng, model.l(), &data)?;
     let ap_eu = ap_euclidean(&data);
     println!("\nheld-out pair verification:");
     println!("  ours      AP = {ap:.4}");
@@ -84,9 +92,16 @@ fn main() -> anyhow::Result<()> {
         println!("(short run: pass ≥100 steps for the full AP check)");
     }
 
-    let out = std::path::Path::new("mnist_L.bin");
-    result.l.save(out)?;
-    println!("\nmodel saved to {} ({}x{})", out.display(), result.l.rows,
-             result.l.cols);
+    // persist the artifact and prove the reload serves the same metric
+    let out = std::path::Path::new("mnist_metric.bin");
+    model.save(out)?;
+    let served = MetricModel::load(out)?;
+    anyhow::ensure!(served.l() == model.l(), "reload must be exact");
+    println!(
+        "\nmodel saved to {} ({}x{}, config digest {:016x}) and \
+         reloaded bit-exact",
+        out.display(), served.k(), served.dim(),
+        served.meta().config_digest
+    );
     Ok(())
 }

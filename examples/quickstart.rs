@@ -1,14 +1,17 @@
 //! Quickstart: learn a Mahalanobis metric on a tiny synthetic dataset in
-//! a few seconds, single-threaded, and compare against Euclidean.
+//! a few seconds through the public `Session` API, persist it as a
+//! `MetricModel` artifact, reload it, and compare against Euclidean.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use dmlps::cli::driver::{ap_euclidean, train_single_thread};
+use std::sync::Arc;
+
 use dmlps::config::Preset;
 use dmlps::data::ExperimentData;
-use dmlps::dml::NativeEngine;
+use dmlps::eval::ap_euclidean;
+use dmlps::session::{MetricModel, Session};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = Preset::Tiny.config();
@@ -22,9 +25,12 @@ fn main() -> anyhow::Result<()> {
         cfg.dataset.dim, cfg.model.k, cfg.optim.lambda, cfg.optim.lr,
         cfg.optim.steps
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
-    let mut engine = NativeEngine::new();
-    let run = train_single_thread(&cfg, &data, &mut engine, 25)?;
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+    let run = Session::from_config(cfg)
+        .data(data.clone())
+        .probe(25, (500, 500))
+        .train_sequential()?;
 
     println!("\nobjective curve:");
     for p in run.curve.points.iter().step_by(2) {
@@ -35,5 +41,19 @@ fn main() -> anyhow::Result<()> {
     println!("\ntest AP: ours {:.4} vs Euclidean {:.4}", ap_ours,
              ap_euclidean(&data));
     println!("trained in {:.2}s", run.wall_s);
+
+    // persist → reload → serve: the train-once/use-everywhere loop
+    let path = std::env::temp_dir().join("quickstart_metric.bin");
+    let model = run.into_model()?;
+    model.save(&path)?;
+    let served = MetricModel::load(&path)?;
+    assert_eq!(model.l(), served.l());
+    let query = data.test.feature(0);
+    let hits = served.knn(&data.train, query, 5);
+    println!(
+        "\nmodel saved to {} and reloaded; 5-NN of test point 0: {:?}",
+        path.display(),
+        hits.iter().map(|&(i, _)| i).collect::<Vec<_>>()
+    );
     Ok(())
 }

@@ -2,20 +2,21 @@
 //! distance-based retrieval and kNN classification with a learned metric
 //! on LLC-like sparse features (the ImageNet regime).
 //!
-//! Trains on a small LLC-like dataset, then compares Euclidean vs the
-//! learned Mahalanobis metric on (a) kNN classification accuracy and
-//! (b) precision@k retrieval.
+//! Trains through the `Session` API, then serves the resulting
+//! `MetricModel` artifact: kNN classification accuracy and precision@k
+//! retrieval, Euclidean vs the learned Mahalanobis metric.
 //!
 //! ```bash
 //! cargo run --release --example retrieval
 //! ```
 
-use dmlps::cli::driver::train_single_thread;
+use std::sync::Arc;
+
 use dmlps::config::{FeatureKind, Preset};
 use dmlps::data::ExperimentData;
-use dmlps::dml::NativeEngine;
 use dmlps::eval::knn_accuracy;
 use dmlps::linalg::Mat;
+use dmlps::session::{MetricModel, Session};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = Preset::Tiny.config();
@@ -40,22 +41,27 @@ fn main() -> anyhow::Result<()> {
         "retrieval: LLC-like features d={} classes={} k={}",
         cfg.dataset.dim, cfg.dataset.n_classes, cfg.model.k
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
-    let mut engine = NativeEngine::new();
-    let run = train_single_thread(&cfg, &data, &mut engine, 250)?;
+    let steps = cfg.optim.steps;
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+    let run = Session::from_config(cfg)
+        .data(data.clone())
+        .probe(250, (500, 500))
+        .train_sequential()?;
     println!(
         "trained {} steps in {:.1}s, objective {:.3} → {:.3}",
-        cfg.optim.steps,
+        steps,
         run.wall_s,
         run.curve.points.first().unwrap().objective,
         run.curve.points.last().unwrap().objective
     );
+    let model = run.into_model()?;
 
     // kNN classification (paper §1: accuracy depends on the metric)
     for k in [1usize, 5] {
         let acc_eu = knn_accuracy(None, &data.train, &data.test, k, 200);
-        let acc_l =
-            knn_accuracy(Some(&run.l), &data.train, &data.test, k, 200);
+        let acc_l = knn_accuracy(Some(model.l()), &data.train,
+                                 &data.test, k, 200);
         println!(
             "kNN (k={k}): euclidean {:.3} → learned {:.3}",
             acc_eu, acc_l
@@ -66,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     // *train* points sharing the query's class
     for &topk in &[5usize, 10] {
         let p_eu = precision_at_k(None, &data, topk, 150);
-        let p_l = precision_at_k(Some(&run.l), &data, topk, 150);
+        let p_l = precision_at_k(Some(&model), &data, topk, 150);
         println!(
             "precision@{topk}: euclidean {:.3} → learned {:.3}",
             p_eu, p_l
@@ -76,33 +82,25 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn precision_at_k(
-    l: Option<&Mat>,
+    model: Option<&MetricModel>,
     data: &ExperimentData,
     k: usize,
     max_queries: usize,
 ) -> f64 {
-    let (tr, te) = match l {
-        Some(l) => (data.train.x.matmul_bt(l), data.test.x.matmul_bt(l)),
+    // project the gallery once (identity for the Euclidean baseline),
+    // then retrieval is a Euclidean scan in the projected space
+    let (tr, te): (Mat, Mat) = match model {
+        Some(m) => (m.transform(&data.train.x),
+                    m.transform(&data.test.x)),
         None => (data.train.x.clone(), data.test.x.clone()),
     };
     let nq = data.test.n().min(max_queries);
     let mut hits = 0usize;
     let mut total = 0usize;
     for q in 0..nq {
-        let qv = te.row(q);
-        let mut dists: Vec<(f32, u32)> = (0..data.train.n())
-            .map(|j| {
-                let d: f32 = qv
-                    .iter()
-                    .zip(tr.row(j))
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
-                (d, data.train.labels[j])
-            })
-            .collect();
-        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
-        for &(_, c) in dists.iter().take(k) {
-            hits += usize::from(c == data.test.labels[q]);
+        for (_, j) in dmlps::eval::nearest_k(&tr, te.row(q), k) {
+            hits += usize::from(
+                data.train.labels[j] == data.test.labels[q]);
             total += 1;
         }
     }

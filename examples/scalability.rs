@@ -3,14 +3,16 @@
 //! Sweeps simulated cluster sizes (16 → 256 cores, the paper's range) on
 //! a dimension-scaled MNIST problem with the simulated clock charged at
 //! the FLOP-extrapolated paper-true cost, then prints convergence curves
-//! and the speedup table.
+//! and the speedup table. Each cluster size is one `Session::simulate`
+//! run over the shared dataset.
 //!
 //! ```bash
 //! cargo run --release --example scalability [updates]
 //! ```
 
-use dmlps::cli::driver::{calibrate_for, sim_scaled, simulate_convergence,
-                         SimKnobs};
+use std::sync::Arc;
+
+use dmlps::session::{calibrate_for, sim_scaled, Session, SimKnobs};
 
 /// Era calibration: the paper's 2014 testbed retires the minibatch
 /// gradient ~10x slower than this box's single core (anchor: the paper
@@ -35,7 +37,8 @@ fn main() -> anyhow::Result<()> {
          scaled; clock charged at paper-true MNIST cost)",
         cfg.dataset.name, cfg.dataset.dim, cfg.model.k
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
     let grad_scaled = calibrate_for(cfg);
     let grad_paper = grad_scaled * scaled.flop_ratio * ERA_SLOWDOWN;
     println!(
@@ -48,18 +51,16 @@ fn main() -> anyhow::Result<()> {
     let mut meas = Vec::new();
     for &cores in &[16usize, 32, 64, 128, 256] {
         let machines = (cores / 16).max(1);
-        let r = simulate_convergence(
-            cfg,
-            &data,
-            machines,
-            16,
-            SimKnobs {
+        let r = Session::from_config(cfg.clone())
+            .data(data.clone())
+            .topology(machines, 16)
+            .sim_knobs(SimKnobs {
                 grad_seconds: grad_paper,
                 bytes_per_msg: Some(scaled.paper_bytes),
                 total_updates: updates,
-            },
-        )
-        .expect("simulated run");
+            })
+            .simulate()
+            .expect("simulated run");
         println!(
             "  {cores:>4} cores: {:>8.1} sim-s, staleness {:>6.1}, \
              final f = {:.4}",

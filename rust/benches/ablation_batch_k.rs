@@ -69,7 +69,8 @@ fn main() -> anyhow::Result<()> {
     cfg.dataset.n_dissimilar = 5_000;
     cfg.model.k = 32;
     cfg.artifact_variant = None;
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data = std::sync::Arc::new(
+        ExperimentData::generate(&cfg.dataset, cfg.seed));
     let pair_budget = if quick { 20_000 } else { 100_000 };
     println!("| batch | steps | final objective | test AP |");
     println!("|---|---|---|---|");
@@ -78,15 +79,17 @@ fn main() -> anyhow::Result<()> {
         c.optim.batch_sim = batch;
         c.optim.batch_dis = batch;
         c.optim.steps = pair_budget / (2 * batch);
+        let steps = c.optim.steps;
+        let run = dmlps::session::Session::from_config(c)
+            .data(data.clone())
+            .probe(steps.max(1) as u64, (500, 500))
+            .train_sequential()?;
         let mut eng = NativeEngine::new();
-        let run = dmlps::cli::driver::train_single_thread(
-            &c, &data, &mut eng, c.optim.steps.max(1),
-        )?;
-        let ap = dmlps::cli::driver::ap_of_l(&mut eng, &run.l, &data)?;
+        let ap = dmlps::eval::ap_of_l(&mut eng, run.l()?, &data)?;
         println!(
             "| {} | {} | {:.4} | {:.4} |",
             2 * batch,
-            c.optim.steps,
+            steps,
             run.curve.final_objective().unwrap_or(f64::NAN),
             ap
         );

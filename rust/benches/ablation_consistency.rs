@@ -7,10 +7,12 @@
 //! Expected shape (paper §1/§2): ASP never waits, BSP pays barrier time;
 //! all three reach comparable quality at this scale.
 
-use dmlps::cli::driver::{ap_euclidean, ap_of_l, train_distributed};
+use std::sync::Arc;
+
 use dmlps::config::{Consistency, FeatureKind, Preset};
 use dmlps::data::ExperimentData;
-use dmlps::ps::RunOptions;
+use dmlps::eval::{ap_euclidean, ap_of_l};
+use dmlps::session::Session;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
@@ -47,7 +49,8 @@ fn main() -> anyhow::Result<()> {
          final f | test AP |"
     );
     println!("|---|---|---|---|---|---|");
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
     let ap_eu = ap_euclidean(&data);
     for consistency in [
         Consistency::Asp,
@@ -56,15 +59,16 @@ fn main() -> anyhow::Result<()> {
     ] {
         let mut c = cfg.clone();
         c.cluster.consistency = consistency;
-        let r = train_distributed(&c, &data, "native",
-                                  &RunOptions::default())?;
+        let r = Session::from_config(c)
+            .engine("native")
+            .data(data.clone())
+            .train_distributed()?;
         let wait: f64 = r.worker_stats.iter().map(|w| w.wait_s).sum();
 
         let mut eng = dmlps::dml::NativeEngine::new();
-        let ap = ap_of_l(&mut eng, &r.l, &data)?;
+        let ap = ap_of_l(&mut eng, r.l()?, &data)?;
         println!(
-            "| {} | {:.2} | {} | {:.2} | {:.4} | {:.4} |",
-            consistency.name(),
+            "| {consistency} | {:.2} | {} | {:.2} | {:.4} | {:.4} |",
             r.wall_s,
             r.applied_updates,
             wait,

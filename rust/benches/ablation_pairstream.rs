@@ -17,7 +17,6 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use dmlps::cli::driver::train_distributed;
 use dmlps::config::{FeatureKind, PairMode, Preset};
 use dmlps::data::{
     partition_pairs, ClassIndex, Dataset, ExperimentData,
@@ -25,6 +24,7 @@ use dmlps::data::{
     SyntheticSpec,
 };
 use dmlps::ps::RunOptions;
+use dmlps::session::Session;
 use dmlps::util::json::Json;
 use dmlps::util::rng::Pcg32;
 
@@ -173,9 +173,13 @@ fn main() {
     for mode in [PairMode::Materialized, PairMode::Streaming] {
         let mut c = tcfg.clone();
         c.cluster.pairs.mode = mode;
-        let data =
-            ExperimentData::generate_for(&c.dataset, mode, c.seed);
-        let r = train_distributed(&c, &data, "native", &opts)
+        let data = Arc::new(
+            ExperimentData::generate_for(&c.dataset, mode, c.seed));
+        let r = Session::from_config(c)
+            .engine("native")
+            .data(data)
+            .run_options(opts.clone())
+            .train_distributed()
             .expect("pairstream training run");
         let resident: usize =
             r.worker_stats.iter().map(|w| w.pair_bytes).sum();

@@ -10,10 +10,12 @@
 //! `server_shards = 1` is the paper's single central server, so the S=1
 //! row doubles as the anchor for the existing convergence benches.
 
-use dmlps::cli::driver::train_distributed;
+use std::sync::Arc;
+
 use dmlps::config::Preset;
 use dmlps::data::ExperimentData;
 use dmlps::ps::{RunOptions, ShardPlan};
+use dmlps::session::Session;
 use dmlps::util::json::Json;
 
 fn main() {
@@ -40,7 +42,8 @@ fn main() {
         cfg.cluster.workers,
         cfg.optim.steps,
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
     let opts = RunOptions {
         // probe only at the endpoints: the bench times messaging, not
         // objective evaluation
@@ -59,7 +62,11 @@ fn main() {
     for shards in [1usize, 2, 4] {
         let mut c = cfg.clone();
         c.cluster.server_shards = shards;
-        let r = train_distributed(&c, &data, "native", &opts)
+        let r = Session::from_config(c.clone())
+            .engine("native")
+            .data(data.clone())
+            .run_options(opts.clone())
+            .train_distributed()
             .expect("sharded training run");
         let plan = ShardPlan::new(c.model.k, c.dataset.dim, shards);
         // max slice size = per-message payload ceiling

@@ -14,10 +14,12 @@
 //! (control/`Done` messages excluded) — the same contract as
 //! `BENCH_ps.json`, so the two baselines compare directly.
 
-use dmlps::cli::driver::train_distributed;
+use std::sync::Arc;
+
 use dmlps::config::{CompressionConfig, CompressionMode, Preset};
 use dmlps::data::ExperimentData;
 use dmlps::ps::RunOptions;
+use dmlps::session::Session;
 use dmlps::util::json::Json;
 
 fn main() {
@@ -48,7 +50,8 @@ fn main() {
         cfg.optim.steps,
         cfg.cluster.server_shards,
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
     let opts = RunOptions {
         // probe only at the endpoints: the last curve point is the
         // loss-after-N-steps fidelity figure
@@ -68,7 +71,11 @@ fn main() {
                  CompressionMode::TopK, CompressionMode::TopKInt8] {
         let mut c = cfg.clone();
         c.cluster.compression = CompressionConfig { mode, keep };
-        let r = train_distributed(&c, &data, "native", &opts)
+        let r = Session::from_config(c)
+            .engine("native")
+            .data(data.clone())
+            .run_options(opts.clone())
+            .train_distributed()
             .expect("compressed training run");
         let steps_sent: u64 =
             r.worker_stats.iter().map(|w| w.grads_sent).sum();

@@ -10,8 +10,9 @@
 //! Expected shape (paper §5.3): "increasing the number of machines
 //! consistently increases the convergence speed".
 
-use dmlps::cli::driver::{calibrate_for, sim_scaled, simulate_convergence,
-                         SimKnobs};
+use std::sync::Arc;
+
+use dmlps::session::{calibrate_for, sim_scaled, Session, SimKnobs};
 
 /// Era calibration: the paper's 2014 testbed retires the minibatch
 /// gradient ~10x slower than this box's single core (anchor: the paper
@@ -40,7 +41,8 @@ fn main() {
     for (title, preset, cpm, cores_list) in sweeps {
         let scaled = sim_scaled(preset);
         let cfg = &scaled.cfg;
-        let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+        let data =
+            Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
         let grad_scaled = calibrate_for(cfg);
         let grad_paper = grad_scaled * scaled.flop_ratio * ERA_SLOWDOWN;
         println!(
@@ -52,15 +54,16 @@ fn main() {
         let mut curves = Vec::new();
         for &cores in cores_list {
             let machines = (cores / cpm).max(1);
-            let r = simulate_convergence(
-                cfg, &data, machines, cpm.min(cores),
-                SimKnobs {
+            let r = Session::from_config(cfg.clone())
+                .data(data.clone())
+                .topology(machines, cpm.min(cores))
+                .sim_knobs(SimKnobs {
                     grad_seconds: grad_paper,
                     bytes_per_msg: Some(scaled.paper_bytes),
                     total_updates: updates,
-                },
-            )
-            .expect("simulated run");
+                })
+                .simulate()
+                .expect("simulated run");
             println!(
                 "  {cores:>4} cores: {:>9.1} sim-s to {updates} updates, \
                  staleness {:>6.1}, final f = {:.4}",

@@ -12,8 +12,9 @@
 //!   ImageNet-63K messages included) via the NullWorkload, reproducing
 //!   the paper's headline "3.6×/3.8× at 4 machines (256 cores)" shape.
 
-use dmlps::cli::driver::{calibrate_for, sim_scaled, simulate_convergence,
-                         SimKnobs};
+use std::sync::Arc;
+
+use dmlps::session::{calibrate_for, sim_scaled, Session, SimKnobs};
 
 /// Era calibration: the paper's 2014 testbed retires the minibatch
 /// gradient ~10x slower than this box's single core (anchor: the paper
@@ -42,21 +43,23 @@ fn main() {
     for (title, preset, cpm, cores_list) in sweeps {
         let scaled = sim_scaled(preset);
         let cfg = &scaled.cfg;
-        let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+        let data =
+            Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
         let grad_paper = calibrate_for(cfg) * scaled.flop_ratio * ERA_SLOWDOWN;
         // baseline run fixes the target objective p (§5.3 protocol)
         let mut curves = Vec::new();
         for &cores in cores_list {
             let machines = (cores / cpm).max(1);
-            let r = simulate_convergence(
-                cfg, &data, machines, cpm.min(cores),
-                SimKnobs {
+            let r = Session::from_config(cfg.clone())
+                .data(data.clone())
+                .topology(machines, cpm.min(cores))
+                .sim_knobs(SimKnobs {
                     grad_seconds: grad_paper,
                     bytes_per_msg: Some(scaled.paper_bytes),
                     total_updates: updates,
-                },
-            )
-            .expect("simulated run");
+                })
+                .simulate()
+                .expect("simulated run");
             curves.push((cores, r.curve));
         }
         let target = curves[0].1.final_objective().unwrap();

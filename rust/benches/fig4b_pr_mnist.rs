@@ -5,13 +5,15 @@
 //! fixed recall grid points, plus AP. Expected ordering (paper §5.4):
 //! ours > Xing2002 ≈ ITML > KISS, all > Euclidean.
 
+use std::sync::Arc;
+
 use dmlps::baselines::{Itml, ItmlConfig, Kiss, KissConfig, LearnedMetric,
                        Xing2002, Xing2002Config};
-use dmlps::cli::driver::train_single_thread;
 use dmlps::config::{ExperimentConfig, FeatureKind, Preset};
 use dmlps::data::ExperimentData;
 use dmlps::dml::NativeEngine;
 use dmlps::eval::{average_precision, pr_curve};
+use dmlps::session::Session;
 
 fn mnist_small_config() -> ExperimentConfig {
     // keep in sync with fig4a
@@ -59,15 +61,19 @@ fn main() -> anyhow::Result<()> {
         cfg.optim.steps = 500;
     }
     println!("# Fig 4(b): precision-recall curves on MNIST analog\n");
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
 
     let mut results: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::new();
 
     // ours
+    let run = Session::from_config(cfg.clone())
+        .data(data.clone())
+        .probe(10_000, (500, 500))
+        .train_sequential()?;
     let mut engine = NativeEngine::new();
-    let run = train_single_thread(&cfg, &data, &mut engine, 10_000)?;
     let (sim, dis) = dmlps::eval::score_pairs(
-        &mut engine, &run.l, &data.test, &data.test_pairs,
+        &mut engine, run.l()?, &data.test, &data.test_pairs,
     )?;
     results.push(("ours".into(), sim, dis));
 

@@ -7,12 +7,14 @@
 //! Expected shape: "with distance metric learning, the performance is
 //! greatly improved" — the learned curve dominates Euclidean everywhere.
 
-use dmlps::cli::driver::train_single_thread;
+use std::sync::Arc;
+
 use dmlps::config::Preset;
 use dmlps::data::ExperimentData;
 use dmlps::dml::NativeEngine;
 use dmlps::eval::{average_precision, pr_curve, score_pairs,
                   score_pairs_euclidean};
+use dmlps::session::Session;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
@@ -23,19 +25,24 @@ fn main() -> anyhow::Result<()> {
          LLC-like features)\n",
         cfg.dataset.dim, cfg.model.k
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
 
-    let mut engine = NativeEngine::new();
-    let run = train_single_thread(&cfg, &data, &mut engine, 50)?;
+    let steps = cfg.optim.steps;
+    let run = Session::from_config(cfg)
+        .data(data.clone())
+        .probe(50, (500, 500))
+        .train_sequential()?;
     println!(
         "trained {} steps in {:.1}s (objective {:.4} → {:.4})\n",
-        cfg.optim.steps, run.wall_s,
+        steps, run.wall_s,
         run.curve.points.first().unwrap().objective,
         run.curve.points.last().unwrap().objective
     );
 
+    let mut engine = NativeEngine::new();
     let (sim_l, dis_l) = score_pairs(
-        &mut engine, &run.l, &data.test, &data.test_pairs,
+        &mut engine, run.l()?, &data.test, &data.test_pairs,
     )?;
     let (sim_e, dis_e) =
         score_pairs_euclidean(&data.test, &data.test_pairs);

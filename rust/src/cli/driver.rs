@@ -1,68 +1,42 @@
-//! Shared run drivers used by the CLI, examples, and benches — one
-//! implementation of "train this config" / "simulate this cluster" so
-//! every entry point produces identical, comparable runs.
+//! Legacy run drivers, kept as thin compatibility shims.
+//!
+//! Every implementation here moved behind the
+//! [`Session`](crate::session::Session) builder — the one entry point
+//! the CLI, examples, and benches consume. What remains are the
+//! historical calling conventions, each delegating to exactly the code
+//! the session executors run (the `api_session` golden tests pin the
+//! shims bit-identical), plus re-exports so old import paths keep
+//! compiling:
+//!
+//! * [`train_single_thread`] (deprecated) →
+//!   [`Session::train_sequential`](crate::session::Session::train_sequential)
+//! * [`train_distributed`] →
+//!   [`Session::train_distributed`](crate::session::Session::train_distributed)
+//! * [`simulate_convergence`] →
+//!   [`Session::simulate`](crate::session::Session::simulate)
+//! * [`engine_factory`] → [`crate::dml::engine_factory`]
+//! * [`ap_of_l`] / [`ap_euclidean`] → [`crate::eval`]
+//! * [`SimKnobs`] / [`SimScaled`] / [`sim_scaled`] / [`calibrate_for`]
+//!   → [`crate::session`]
 
 use std::sync::Arc;
 
-use crate::baselines::{ApTrace, LearnedMetric};
+use crate::baselines::ApTrace;
 use crate::config::ExperimentConfig;
-use crate::data::{partition_pairs, ExperimentData};
-use crate::dml::{
-    native_factory, DmlProblem, Engine, EngineFactory, LrSchedule,
-    MinibatchRef, ObjectiveProbe,
-};
+use crate::data::ExperimentData;
+use crate::dml::Engine;
 use crate::linalg::Mat;
 use crate::metrics::{Curve, Stopwatch};
-use crate::ps::{run_training, RunOptions, TrainResult};
-use crate::simcluster::{
-    calibrate_grad_seconds, DmlWorkload, NetworkModel, SimConfig,
-    Simulator,
-};
-use crate::util::rng::Pcg32;
+use crate::ps::{RunOptions, TrainResult};
+use crate::session::clone_dataset;
+use crate::simcluster::SimResult;
 
-/// Resolve an engine factory by name: "native", "xla", or "auto"
-/// (xla when the runtime is compiled in and artifacts are present, else
-/// native). Per-worker compute width is applied by the worker itself:
-/// `run_training` copies `cluster.threads_per_worker` into
-/// `WorkerConfig::threads` and each worker calls `Engine::set_threads`.
-pub fn engine_factory(
-    name: &str,
-    cfg: &ExperimentConfig,
-) -> anyhow::Result<EngineFactory> {
-    match name {
-        "native" => Ok(native_factory()),
-        "xla" => {
-            anyhow::ensure!(
-                cfg!(feature = "xla"),
-                "this binary was built without the XLA/PJRT runtime \
-                 (rebuild with `--features xla`)"
-            );
-            let variant = cfg.artifact_variant.clone().ok_or_else(|| {
-                anyhow::anyhow!("config has no artifact variant for xla")
-            })?;
-            anyhow::ensure!(
-                crate::runtime::artifacts_available(),
-                "artifacts not built (run `make artifacts`)"
-            );
-            Ok(crate::runtime::xla_factory(&variant))
-        }
-        "auto" => {
-            if cfg!(feature = "xla")
-                && crate::runtime::artifacts_available()
-                && cfg.artifact_variant.is_some()
-            {
-                engine_factory("xla", cfg)
-            } else {
-                engine_factory("native", cfg)
-            }
-        }
-        other => anyhow::bail!("unknown engine '{other}' (native|xla|auto)"),
-    }
-}
+pub use crate::dml::engine_factory;
+pub use crate::eval::{ap_euclidean, ap_of_l};
+pub use crate::session::{calibrate_for, sim_scaled, SimKnobs, SimScaled};
 
-/// Single-threaded SGD training (the paper's §5.4 single-thread setting,
-/// used for the Fig 4a/4b method comparison). Records an objective curve
-/// and an AP-vs-time trace on held-out test pairs.
+/// Single-threaded training report (legacy shape; the session returns
+/// the unified [`Run`](crate::session::Run) instead).
 pub struct SingleThreadRun {
     pub l: Mat,
     pub curve: Curve,
@@ -70,89 +44,37 @@ pub struct SingleThreadRun {
     pub wall_s: f64,
 }
 
+/// Single-threaded SGD training (the paper's §5.4 single-thread setting,
+/// used for the Fig 4a/4b method comparison). Records an objective curve
+/// and an AP-vs-time trace on held-out test pairs.
+#[deprecated(
+    since = "0.2.0",
+    note = "use session::Session::from_config(cfg).train_sequential()"
+)]
 pub fn train_single_thread(
     cfg: &ExperimentConfig,
     data: &ExperimentData,
     engine: &mut dyn Engine,
     probe_every: usize,
 ) -> anyhow::Result<SingleThreadRun> {
-    let problem =
-        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
-    let mut l = problem.init_l(cfg.model.init_scale, cfg.seed);
-    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
-    let probe = ObjectiveProbe::new(
-        &data.train,
-        &data.pairs,
-        500.min(data.pairs.similar.len()),
-        500.min(data.pairs.dissimilar.len()),
-        cfg.seed ^ 0xB0B,
-    );
-    let (bs, bd, d) = (cfg.optim.batch_sim, cfg.optim.batch_dis,
-                       cfg.dataset.dim);
-    let mut rng = Pcg32::with_stream(cfg.seed, 0x51);
-    let mut ds_buf = vec![0.0f32; bs * d];
-    let mut dd_buf = vec![0.0f32; bd * d];
-    let mut curve = Curve::new("ours (single thread)");
-    let mut ap_trace = ApTrace::new();
-    let watch = Stopwatch::start();
-    curve.push(0.0, 0, probe.eval(engine, &l, cfg.optim.lambda) as f64);
-    for step in 0..cfg.optim.steps {
-        fill_batch(&data.train, &data.pairs, &mut rng, &mut ds_buf,
-                   &mut dd_buf, bs, bd);
-        let batch = MinibatchRef::new(&ds_buf, &dd_buf, bs, bd, d);
-        engine.step(&mut l, &batch, cfg.optim.lambda, lr.at(step))?;
-        if (step + 1) % probe_every == 0 || step + 1 == cfg.optim.steps {
-            let t = watch.elapsed_s();
-            curve.push(t, step + 1,
-                       probe.eval(engine, &l, cfg.optim.lambda) as f64);
-            ap_trace.push((t, ap_of_l(engine, &l, data)?));
-        }
-    }
-    Ok(SingleThreadRun { l, curve, ap_trace, wall_s: watch.elapsed_s() })
+    // same core Session::train_sequential runs; (500, 500) is the
+    // probe-subsample bound this entry point always used
+    let out = crate::session::run_sequential(
+        cfg, data, engine, probe_every, (500, 500), None,
+    )?;
+    Ok(SingleThreadRun {
+        l: out.l,
+        curve: out.curve,
+        ap_trace: out.ap_trace,
+        wall_s: out.wall_s,
+    })
 }
 
-/// AP of a learned L on the held-out test pairs (scores through the
-/// factored form; materializing M = LᵀL at d=780 would be wasteful).
-pub fn ap_of_l(
-    engine: &mut dyn Engine,
-    l: &Mat,
-    data: &ExperimentData,
-) -> anyhow::Result<f64> {
-    let (sim, dis) =
-        crate::eval::score_pairs(engine, l, &data.test, &data.test_pairs)?;
-    Ok(crate::eval::average_precision(&sim, &dis))
-}
-
-/// AP of the Euclidean baseline on the held-out test pairs.
-pub fn ap_euclidean(data: &ExperimentData) -> f64 {
-    let (sim, dis) =
-        crate::eval::score_pairs_euclidean(&data.test, &data.test_pairs);
-    crate::eval::average_precision(&sim, &dis)
-}
-
-fn fill_batch(
-    train: &crate::data::Dataset,
-    pairs: &crate::data::PairSet,
-    rng: &mut Pcg32,
-    ds_buf: &mut [f32],
-    dd_buf: &mut [f32],
-    bs: usize,
-    bd: usize,
-) {
-    let d = train.dim();
-    for r in 0..bs {
-        let p = pairs.similar[rng.index(pairs.similar.len())];
-        train.diff_into(p.i as usize, p.j as usize,
-                        &mut ds_buf[r * d..(r + 1) * d]);
-    }
-    for r in 0..bd {
-        let p = pairs.dissimilar[rng.index(pairs.dissimilar.len())];
-        train.diff_into(p.i as usize, p.j as usize,
-                        &mut dd_buf[r * d..(r + 1) * d]);
-    }
-}
-
-/// Run the real threaded parameter server on a config.
+/// Run the real threaded parameter server on a config (legacy calling
+/// convention; same executor core as
+/// [`Session::train_distributed`](crate::session::Session::train_distributed),
+/// borrowing the caller's pair set instead of copying it into a
+/// session).
 pub fn train_distributed(
     cfg: &ExperimentConfig,
     data: &ExperimentData,
@@ -160,138 +82,29 @@ pub fn train_distributed(
     opts: &RunOptions,
 ) -> anyhow::Result<TrainResult> {
     let engines = engine_factory(engine_name, cfg)?;
-    let dataset = Arc::new(clone_dataset(&data.train));
-    run_training(cfg, dataset, &data.pairs, engines, opts)
+    crate::session::run_distributed(
+        cfg,
+        Arc::new(clone_dataset(&data.train)),
+        &data.pairs,
+        engines,
+        opts,
+        None,
+    )
 }
 
-fn clone_dataset(ds: &crate::data::Dataset) -> crate::data::Dataset {
-    crate::data::Dataset {
-        x: ds.x.clone(),
-        labels: ds.labels.clone(),
-        n_classes: ds.n_classes,
-    }
-}
-
-/// Cost knobs for a simulated run; default derives everything from the
-/// config's own (scaled) shape. For paper-true clocking, override
-/// `grad_seconds` (FLOP-extrapolated) and `bytes_per_msg`.
-#[derive(Clone, Copy, Debug)]
-pub struct SimKnobs {
-    pub grad_seconds: f64,
-    pub bytes_per_msg: Option<f64>,
-    pub total_updates: u64,
-}
-
-/// One simulated-cluster convergence run at `machines × cores`.
-///
-/// `knobs.grad_seconds` should come from [`calibrate_for`] (possibly
-/// FLOP-extrapolated to the paper-true shape) so the simulated clock is
-/// anchored to real measured compute cost. Errors when the materialized
-/// pair sets cannot cover `machines` workers.
+/// One simulated-cluster convergence run at `machines × cores` (legacy
+/// calling convention; same executor core as
+/// [`Session::simulate`](crate::session::Session::simulate), borrowing
+/// the caller's data instead of copying it into a session).
 pub fn simulate_convergence(
     cfg: &ExperimentConfig,
     data: &ExperimentData,
     machines: usize,
     cores_per_machine: usize,
     knobs: SimKnobs,
-) -> anyhow::Result<crate::simcluster::SimResult> {
-    let problem =
-        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
-    let shards = partition_pairs(&data.pairs, machines, cfg.seed ^ 0xFA)?;
-    let dataset = Arc::new(clone_dataset(&data.train));
-    let mut workload = DmlWorkload::new(
-        problem,
-        cfg.model.init_scale,
-        dataset,
-        shards,
-        cfg.optim.batch_sim,
-        cfg.optim.batch_dis,
-        (500, 500),
-        cfg.seed,
-    );
-    let n_params = (cfg.model.k * cfg.dataset.dim) as f64;
-    let bytes = knobs.bytes_per_msg.unwrap_or(n_params * 4.0);
-    let sim_cfg = SimConfig {
-        machines,
-        cores_per_machine,
-        grad_seconds: knobs.grad_seconds,
-        // server-side apply: streaming axpy over the parameters at
-        // ~4 GB/s effective memory bandwidth (two passes of 4 bytes)
-        apply_seconds: bytes * 2.0 / 4.0e9,
-        bytes_per_msg: bytes,
-        network: NetworkModel::ten_gbe(),
-        jitter: 0.05,
-        total_updates: knobs.total_updates,
-        probe_every: (knobs.total_updates / 40).max(1),
-        broadcast_every: 1,
-        lr: LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay),
-        seed: cfg.seed,
-    };
-    Ok(Simulator::new(sim_cfg, &mut workload).run())
-}
-
-/// A dimension-scaled copy of a config for simulator numerics, plus the
-/// FLOP ratio to the paper-true shape.
-///
-/// The simulator runs *real* gradients serially on this box, so Fig 2/3
-/// sweeps use a scaled shape for the numerics while the simulated clock
-/// charges each gradient the *extrapolated paper-true* cost (FLOP-ratio
-/// scaling of the calibrated native step time). Convergence shape is
-/// preserved (same algorithm, same staleness structure); absolute
-/// objective values are those of the scaled problem — which is what we
-/// compare across core counts, never against the paper's absolute values.
-pub struct SimScaled {
-    pub cfg: ExperimentConfig,
-    /// paper-true FLOPs / scaled FLOPs per minibatch gradient.
-    pub flop_ratio: f64,
-    /// paper-true parameter bytes per message.
-    pub paper_bytes: f64,
-}
-
-pub fn sim_scaled(preset: crate::config::Preset) -> SimScaled {
-    use crate::config::{PaperShape, Preset, PAPER_SHAPES};
-    let mut cfg = preset.config();
-    let paper: &PaperShape = match preset {
-        Preset::Mnist | Preset::Tiny => &PAPER_SHAPES[0],
-        Preset::Imnet60kScaled => &PAPER_SHAPES[1],
-        Preset::Imnet1mScaled => &PAPER_SHAPES[2],
-    };
-    // Scale to ~10 ms/grad on this box: divide d, k, batch.
-    let (d, k, bs) = match preset {
-        Preset::Mnist => (260, 200, 160),
-        Preset::Imnet60kScaled => (512, 128, 25),
-        Preset::Imnet1mScaled => (512, 64, 125),
-        Preset::Tiny => (16, 8, 4),
-    };
-    cfg.dataset.dim = d;
-    cfg.model.k = k;
-    cfg.optim.batch_sim = bs;
-    cfg.optim.batch_dis = bs;
-    cfg.dataset.name = format!("{}_sim", cfg.dataset.name);
-    cfg.artifact_variant = None;
-    // keep data volume small enough for quick generation
-    cfg.dataset.n_train = cfg.dataset.n_train.min(20_000);
-    cfg.dataset.n_similar = cfg.dataset.n_similar.min(50_000);
-    cfg.dataset.n_dissimilar = cfg.dataset.n_dissimilar.min(50_000);
-    let scaled_flops = 4.0 * (2.0 * bs as f64) / 2.0 * k as f64
-        * d as f64 * 2.0;
-    let paper_flops = paper.step_flops();
-    SimScaled {
-        cfg,
-        flop_ratio: paper_flops / scaled_flops,
-        paper_bytes: paper.n_params() as f64 * 4.0,
-    }
-}
-
-/// Calibrate per-core gradient seconds for a config on this machine.
-pub fn calibrate_for(cfg: &ExperimentConfig) -> f64 {
-    let problem =
-        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
-    calibrate_grad_seconds(
-        &problem,
-        cfg.optim.batch_sim,
-        cfg.optim.batch_dis,
-        5,
+) -> anyhow::Result<SimResult> {
+    crate::session::run_simulated(
+        cfg, data, machines, cores_per_machine, knobs,
     )
 }
 
@@ -304,13 +117,15 @@ pub fn ap_traces_all_methods(
     xing_iters: usize,
     itml_sweeps: usize,
 ) -> anyhow::Result<Vec<(String, ApTrace)>> {
-    use crate::baselines::{Itml, ItmlConfig, Kiss, KissConfig, Xing2002,
-                           Xing2002Config};
+    use crate::baselines::{Itml, ItmlConfig, Kiss, KissConfig,
+                           LearnedMetric, Xing2002, Xing2002Config};
     let mut out = Vec::new();
 
     // ours (single-thread, native engine — MATLAB-comparable setting)
     let mut engine = crate::dml::NativeEngine::new();
-    let run = train_single_thread(cfg, data, &mut engine, probe_every)?;
+    let run = crate::session::run_sequential(
+        cfg, data, &mut engine, probe_every, (500, 500), None,
+    )?;
     out.push(("ours".to_string(), run.ap_trace));
 
     // Xing2002

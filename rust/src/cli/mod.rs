@@ -7,13 +7,24 @@
 //! dmlps gen-data --preset mnist
 //! dmlps inspect-artifacts
 //! ```
+//!
+//! Every subcommand is a thin adapter from parsed flags to the
+//! [`Session`](crate::session::Session) builder; training emits a
+//! versioned [`MetricModel`](crate::session::MetricModel) artifact that
+//! `eval` reloads and serves (legacy bare-`Mat` model files still load).
 
 pub mod driver;
+
+use std::sync::Arc;
 
 use crate::config::{
     CompressionMode, Consistency, ExperimentConfig, PairMode, Preset,
 };
 use crate::data::{DatasetStats, ExperimentData};
+use crate::session::{
+    DoneEvent, EventSink, MetricModel, ModelMeta, ProbeEvent, Session,
+    SimKnobs,
+};
 use crate::util::cli::ArgParser;
 
 pub fn main_entry() -> anyhow::Result<()> {
@@ -54,7 +65,30 @@ fn print_usage() {
     );
 }
 
-/// Build a config from --preset/--config plus common overrides.
+/// Live run reporting: probe points and worker completions, fed by the
+/// session's [`EventSink`] instead of peeking at internals.
+struct ProgressSink;
+
+impl EventSink for ProgressSink {
+    fn on_probe(&self, e: &ProbeEvent) {
+        println!(
+            "  probe @ {:>6} updates: f = {:.4}  (t = {:.2}s)",
+            e.step, e.objective, e.time_s
+        );
+    }
+
+    fn on_done(&self, e: &DoneEvent) {
+        println!(
+            "  worker {} finished: {} steps, last loss {:.4}, \
+             waited {:.2}s, max staleness {}",
+            e.worker, e.steps, e.last_loss, e.wait_s, e.max_staleness
+        );
+    }
+}
+
+/// Build a config from --preset/--config plus common overrides. Enum
+/// knobs route through their `FromStr` impls (one parse path for the
+/// CLI, the JSON loader, and tests).
 fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
     let mut cfg = if a.get("config").is_empty() {
         Preset::parse(a.get("preset"))?.config()
@@ -73,7 +107,7 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
     }
     let cons = a.get("consistency");
     if !cons.is_empty() {
-        cfg.cluster.consistency = Consistency::parse(cons)?;
+        cfg.cluster.consistency = cons.parse::<Consistency>()?;
     }
     if let Ok(seed) = a.get_u64("seed") {
         cfg.seed = seed;
@@ -90,7 +124,7 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
     }
     let pm = a.get("pairs-mode");
     if !pm.is_empty() {
-        cfg.cluster.pairs.mode = PairMode::parse(pm)?;
+        cfg.cluster.pairs.mode = pm.parse::<PairMode>()?;
     }
     // exactly -1 = keep the preset/config value; anything else must be
     // a valid knob value — never a silent fallback
@@ -113,7 +147,7 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
     }
     let cm = a.get("compression");
     if !cm.is_empty() {
-        cfg.cluster.compression.mode = CompressionMode::parse(cm)?;
+        cfg.cluster.compression.mode = cm.parse::<CompressionMode>()?;
     }
     let x = a.get_f64("keep")?;
     if x != -1.0 {
@@ -154,7 +188,7 @@ fn common_parser(cmd: &str, about: &str) -> ArgParser {
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let p = common_parser("dmlps train", "threaded async-PS training")
         .opt("engine", "auto", "native|xla|auto")
-        .opt("save-model", "", "write learned L to this path")
+        .opt("save-model", "", "write the learned metric model to this path")
         .opt("save-curve", "", "write convergence curve CSV to this path");
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
@@ -171,37 +205,38 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         },
         cfg.cluster.server_shards,
         cfg.optim.steps, a.get("engine"),
-        cfg.cluster.consistency.name(),
-        cfg.cluster.pairs.mode.name(),
-        cfg.cluster.compression.mode.name(),
+        cfg.cluster.consistency,
+        cfg.cluster.pairs.mode,
+        cfg.cluster.compression.mode,
         cfg.cluster.compression.keep
     );
     // streaming mode never materializes the train pair sets — the
     // startup cost and memory term the implicit sampler removes
-    let data = ExperimentData::generate_for(
+    let data = Arc::new(ExperimentData::generate_for(
         &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
-    );
-    let opts = crate::ps::RunOptions::default();
-    let result =
-        driver::train_distributed(&cfg, &data, a.get("engine"), &opts)?;
-    let first = result.curve.points.first().map(|p| p.objective)
+    ));
+    let run = Session::from_config(cfg)
+        .engine(a.get("engine"))
+        .data(data.clone())
+        .events(Arc::new(ProgressSink))
+        .train_distributed()?;
+    let first = run.curve.points.first().map(|p| p.objective)
         .unwrap_or(f64::NAN);
-    let last = result.curve.points.last().map(|p| p.objective)
+    let last = run.curve.points.last().map(|p| p.objective)
         .unwrap_or(f64::NAN);
     println!(
         "done in {:.2}s: {} updates applied ({} slice updates over {} \
          shards), {} broadcasts, objective {first:.4} -> {last:.4}, \
          last minibatch loss {:.4}",
-        result.wall_s, result.applied_updates, result.slice_updates,
-        result.server_shards, result.broadcasts, result.last_loss
+        run.wall_s, run.applied_updates, run.slice_updates,
+        run.server_shards, run.broadcasts, run.last_loss
     );
     println!(
         "wire: {} grad bytes folded, {} param bytes broadcast \
          ({} param msgs)",
-        result.grad_bytes_received, result.param_bytes_sent,
-        result.param_msgs
+        run.grad_bytes_received, run.param_bytes_sent, run.param_msgs
     );
-    for ws in &result.worker_stats {
+    for ws in &run.worker_stats {
         println!(
             "  worker {}: {} steps, {} grads sent ({} dropped, \
              {} grad bytes), {} params received ({} param bytes), \
@@ -213,16 +248,21 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             ws.pairs_drawn, ws.pair_bytes
         );
     }
+    let model = run.require_model()?;
     let mut eng = crate::dml::NativeEngine::new();
-    let ap = driver::ap_of_l(&mut eng, &result.l, &data)?;
+    let ap = crate::eval::ap_of_l(&mut eng, model.l(), &data)?;
     println!("test AP: {ap:.4} (Euclidean baseline {:.4})",
-             driver::ap_euclidean(&data));
+             crate::eval::ap_euclidean(&data));
     if !a.get("save-model").is_empty() {
-        result.l.save(std::path::Path::new(a.get("save-model")))?;
-        println!("model saved to {}", a.get("save-model"));
+        model.save(std::path::Path::new(a.get("save-model")))?;
+        println!(
+            "model saved to {} ({}x{}, seed {}, config digest {:016x})",
+            a.get("save-model"), model.k(), model.dim(),
+            model.meta().seed, model.meta().config_digest
+        );
     }
     if !a.get("save-curve").is_empty() {
-        std::fs::write(a.get("save-curve"), result.curve.to_csv())?;
+        std::fs::write(a.get("save-curve"), run.curve.to_csv())?;
         println!("curve saved to {}", a.get("save-curve"));
     }
     Ok(())
@@ -238,24 +278,22 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
     .opt("updates", "2000", "total applied updates per run");
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
-    // the simulator's workload consumes materialized pair shards; fail
-    // clearly rather than silently ignoring a streaming request
+    // Session::simulate enforces the same constraints, but only after
+    // data generation + calibration — check here so a bad flag fails in
+    // milliseconds, not after seconds of setup work.
     anyhow::ensure!(
         cfg.cluster.pairs.mode == PairMode::Materialized,
         "simulate supports only the materialized pair pipeline \
          (drop --pairs-mode streaming)"
     );
-    // the simulator's cost model charges dense f32 bytes per message;
-    // fail clearly rather than print dense-wire scalability numbers
-    // for a config that asked for a compressed wire
     anyhow::ensure!(
         cfg.cluster.compression.mode == CompressionMode::None,
         "simulate models the dense f32 wire only \
          (drop --compression {})",
-        cfg.cluster.compression.mode.name()
+        cfg.cluster.compression.mode
     );
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
-    let grad_s = driver::calibrate_for(&cfg);
+    let data = Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+    let grad_s = crate::session::calibrate_for(&cfg);
     println!(
         "simulate: dataset={} d={} k={} calibrated grad time \
          {:.4}s/core-minibatch",
@@ -266,14 +304,15 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
     let mut meas = Vec::new();
     for cores in a.get_usize_list("cores")? {
         let machines = (cores / cpm).max(1);
-        let r = driver::simulate_convergence(
-            &cfg, &data, machines, cpm.min(cores),
-            driver::SimKnobs {
+        let r = Session::from_config(cfg.clone())
+            .data(data.clone())
+            .topology(machines, cpm.min(cores))
+            .sim_knobs(SimKnobs {
                 grad_seconds: grad_s,
-                bytes_per_msg: None,
                 total_updates: updates,
-            },
-        )?;
+                ..SimKnobs::default()
+            })
+            .simulate()?;
         println!(
             "  {:>4} cores ({} machines): {:.2} sim-s for {} updates, \
              mean staleness {:.2}, final objective {:.4}",
@@ -295,7 +334,9 @@ fn cmd_simulate(args: &[String]) -> anyhow::Result<()> {
 
 fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
     let p = common_parser("dmlps eval", "evaluate a saved metric")
-        .req("model", "path to a saved L matrix (DMLPSMAT)");
+        .req("model",
+             "path to a saved metric model (DMLPSMM1, or legacy \
+              DMLPSMAT matrix)");
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
     // eval only touches the (always materialized) test pairs; honoring
@@ -303,18 +344,31 @@ fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
     let data = ExperimentData::generate_for(
         &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
     );
-    let l = crate::linalg::Mat::load(std::path::Path::new(a.get("model")))?;
+    let path = std::path::Path::new(a.get("model"));
+    let (model, legacy) = load_model(path)?;
     anyhow::ensure!(
-        l.cols == cfg.dataset.dim,
-        "model dim {} != dataset dim {}", l.cols, cfg.dataset.dim
+        model.dim() == cfg.dataset.dim,
+        "model dim {} != dataset dim {}", model.dim(), cfg.dataset.dim
     );
+    if legacy {
+        println!(
+            "model: {}x{} (legacy matrix file: no provenance header)",
+            model.k(), model.dim()
+        );
+    } else {
+        println!(
+            "model: {}x{} (seed {}, config digest {:016x})",
+            model.k(), model.dim(), model.meta().seed,
+            model.meta().config_digest
+        );
+    }
     let mut eng = crate::dml::NativeEngine::new();
     let (sim, dis) = crate::eval::score_pairs(
-        &mut eng, &l, &data.test, &data.test_pairs,
+        &mut eng, model.l(), &data.test, &data.test_pairs,
     )?;
     let ap = crate::eval::average_precision(&sim, &dis);
     println!("test AP: {ap:.4} (Euclidean {:.4})",
-             driver::ap_euclidean(&data));
+             crate::eval::ap_euclidean(&data));
     println!("PR curve (sampled):");
     let curve = crate::eval::pr_curve(&sim, &dis);
     let stride = (curve.len() / 20).max(1);
@@ -323,6 +377,36 @@ fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
         println!("  {:.4}  {:.4}", pt.recall, pt.precision);
     }
     Ok(())
+}
+
+/// Load a metric model: the versioned `DMLPSMM1` artifact, or (for
+/// files written before the artifact existed) a bare `DMLPSMAT` matrix
+/// wrapped with unknown provenance (returns `legacy = true`; version 0
+/// and zeroed seed/digest mean "no header", never a claim — real
+/// artifacts start at format version 1).
+fn load_model(
+    path: &std::path::Path,
+) -> anyhow::Result<(MetricModel, bool)> {
+    match MetricModel::load(path) {
+        Ok(m) => Ok((m, false)),
+        Err(model_err) => match crate::linalg::Mat::load(path) {
+            Ok(l) => {
+                let meta = ModelMeta {
+                    version: 0,
+                    k: l.rows as u64,
+                    d: l.cols as u64,
+                    seed: 0,
+                    config_digest: 0,
+                };
+                Ok((MetricModel::from_parts(l, meta), true))
+            }
+            Err(mat_err) => anyhow::bail!(
+                "cannot load '{}': not a metric model ({model_err}) \
+                 and not a legacy matrix ({mat_err})",
+                path.display()
+            ),
+        },
+    }
 }
 
 fn cmd_gen_data(args: &[String]) -> anyhow::Result<()> {

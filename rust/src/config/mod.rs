@@ -44,6 +44,20 @@ impl Consistency {
     }
 }
 
+impl std::str::FromStr for Consistency {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Consistency::parse(s)
+    }
+}
+
+impl std::fmt::Display for Consistency {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
 /// How workers obtain their pair constraints (the `pairs.mode` knob).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PairMode {
@@ -73,6 +87,20 @@ impl PairMode {
             PairMode::Materialized => "materialized",
             PairMode::Streaming => "streaming",
         }
+    }
+}
+
+impl std::str::FromStr for PairMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        PairMode::parse(s)
+    }
+}
+
+impl std::fmt::Display for PairMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -149,9 +177,29 @@ impl CompressionMode {
         matches!(self, CompressionMode::TopK | CompressionMode::TopKInt8)
     }
 
+    /// All modes, for sweeps and parse tests.
+    pub fn all() -> [CompressionMode; 4] {
+        [CompressionMode::None, CompressionMode::Int8,
+         CompressionMode::TopK, CompressionMode::TopKInt8]
+    }
+
     /// Whether values travel as int8 under this mode.
     pub fn quantizes(&self) -> bool {
         matches!(self, CompressionMode::Int8 | CompressionMode::TopKInt8)
+    }
+}
+
+impl std::str::FromStr for CompressionMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        CompressionMode::parse(s)
+    }
+}
+
+impl std::fmt::Display for CompressionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -195,6 +243,20 @@ impl FeatureKind {
             FeatureKind::Gaussian => "gaussian",
             FeatureKind::Llc => "llc",
         }
+    }
+}
+
+impl std::str::FromStr for FeatureKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        FeatureKind::parse(s)
+    }
+}
+
+impl std::fmt::Display for FeatureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -552,6 +614,27 @@ impl ExperimentConfig {
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        // A typo'd block name ("clustre") used to be silently ignored,
+        // leaving every knob under it at its default — reject instead,
+        // pointing at the nearest known key.
+        const KNOWN: [&str; 6] = [
+            "dataset", "model", "optim", "cluster", "seed",
+            "artifact_variant",
+        ];
+        if let Some(map) = j.as_obj() {
+            for key in map.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    let nearest = KNOWN
+                        .iter()
+                        .min_by_key(|k| edit_distance(k, key))
+                        .unwrap();
+                    anyhow::bail!(
+                        "unknown top-level config key '{key}' \
+                         (did you mean '{nearest}'?)"
+                    );
+                }
+            }
+        }
         fn us(j: &Json, k: &str) -> anyhow::Result<usize> {
             j.get(k)
                 .as_usize()
@@ -684,6 +767,24 @@ impl ExperimentConfig {
     pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
         Self::from_json(&Json::parse_file(path)?)
     }
+}
+
+/// Levenshtein edit distance — powers the "did you mean" suggestion in
+/// [`ExperimentConfig::from_json`]'s unknown-key error.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) =
+        (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -848,6 +949,61 @@ mod tests {
         assert_eq!(PAPER_SHAPES[0].n_params(), 468_000);
         assert_eq!(PAPER_SHAPES[1].n_params(), 215_040_000);
         assert_eq!(PAPER_SHAPES[2].n_params(), 21_504_000);
+    }
+
+    #[test]
+    fn typod_top_level_key_rejected_with_suggestion() {
+        // regression: a "clustre" block used to be silently ignored,
+        // running the experiment with every cluster knob defaulted
+        let mut j = Preset::Tiny.config().to_json();
+        if let Json::Obj(m) = &mut j {
+            let cluster = m.remove("cluster").unwrap();
+            m.insert("clustre".into(), cluster);
+        }
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("clustre"), "{msg}");
+        assert!(msg.contains("did you mean 'cluster'"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_top_level_key_rejected() {
+        let mut j = Preset::Tiny.config().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("bogus_block".into(), Json::Num(1.0));
+        }
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("bogus_block"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("cluster", "clustre"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("seed", "seed"), 0);
+        assert_eq!(edit_distance("optim", "optin"), 1);
+    }
+
+    #[test]
+    fn fromstr_display_roundtrip_all_enums() {
+        // the FromStr/Display pairs are backed by parse()/name(); the
+        // CLI and config loader route through them
+        for c in [Consistency::Asp, Consistency::Bsp,
+                  Consistency::Ssp { staleness: 2 }] {
+            assert_eq!(c.to_string().parse::<Consistency>().unwrap(), c);
+        }
+        for m in CompressionMode::all() {
+            assert_eq!(
+                m.to_string().parse::<CompressionMode>().unwrap(), m);
+        }
+        for m in [PairMode::Materialized, PairMode::Streaming] {
+            assert_eq!(m.to_string().parse::<PairMode>().unwrap(), m);
+        }
+        for k in [FeatureKind::Gaussian, FeatureKind::Llc] {
+            assert_eq!(k.to_string().parse::<FeatureKind>().unwrap(), k);
+        }
+        assert!("nope".parse::<Consistency>().is_err());
+        assert!("gzip".parse::<CompressionMode>().is_err());
     }
 
     #[test]

@@ -105,6 +105,46 @@ pub fn native_factory() -> EngineFactory {
     std::sync::Arc::new(|| Ok(Box::new(NativeEngine::new()) as Box<dyn Engine>))
 }
 
+/// Resolve an engine factory by name: "native", "xla", or "auto"
+/// (xla when the runtime is compiled in and artifacts are present, else
+/// native). Per-worker compute width is applied by the worker itself:
+/// the distributed executor copies `cluster.threads_per_worker` into
+/// `WorkerConfig::threads` and each worker calls [`Engine::set_threads`].
+pub fn engine_factory(
+    name: &str,
+    cfg: &crate::config::ExperimentConfig,
+) -> anyhow::Result<EngineFactory> {
+    match name {
+        "native" => Ok(native_factory()),
+        "xla" => {
+            anyhow::ensure!(
+                cfg!(feature = "xla"),
+                "this binary was built without the XLA/PJRT runtime \
+                 (rebuild with `--features xla`)"
+            );
+            let variant = cfg.artifact_variant.clone().ok_or_else(|| {
+                anyhow::anyhow!("config has no artifact variant for xla")
+            })?;
+            anyhow::ensure!(
+                crate::runtime::artifacts_available(),
+                "artifacts not built (run `make artifacts`)"
+            );
+            Ok(crate::runtime::xla_factory(&variant))
+        }
+        "auto" => {
+            if cfg!(feature = "xla")
+                && crate::runtime::artifacts_available()
+                && cfg.artifact_variant.is_some()
+            {
+                engine_factory("xla", cfg)
+            } else {
+                engine_factory("native", cfg)
+            }
+        }
+        other => anyhow::bail!("unknown engine '{other}' (native|xla|auto)"),
+    }
+}
+
 /// Gradient/step/eval backend for one problem shape.
 ///
 /// Not `Send`: the PJRT-backed implementation holds `Rc` handles. Use an

@@ -14,9 +14,26 @@ mod pr;
 
 pub use pr::{average_precision, pr_curve, PrPoint};
 
-use crate::data::{Dataset, PairSet};
+use crate::data::{Dataset, ExperimentData, PairSet};
 use crate::dml::Engine;
 use crate::linalg::Mat;
+
+/// AP of a learned L on the held-out test pairs (scores through the
+/// factored form; materializing M = LᵀL at d=780 would be wasteful).
+pub fn ap_of_l(
+    engine: &mut dyn Engine,
+    l: &Mat,
+    data: &ExperimentData,
+) -> anyhow::Result<f64> {
+    let (sim, dis) = score_pairs(engine, l, &data.test, &data.test_pairs)?;
+    Ok(average_precision(&sim, &dis))
+}
+
+/// AP of the Euclidean baseline on the held-out test pairs.
+pub fn ap_euclidean(data: &ExperimentData) -> f64 {
+    let (sim, dis) = score_pairs_euclidean(&data.test, &data.test_pairs);
+    average_precision(&sim, &dis)
+}
 
 /// Distances for all pairs of a [`PairSet`] under metric L.
 /// Returns (similar_dists, dissimilar_dists).
@@ -94,6 +111,45 @@ pub fn score_pairs_mahalanobis(
     (sim, dis)
 }
 
+/// The `k` rows of `gallery` nearest to `q` under squared Euclidean
+/// distance, as `(distance, row index)` ascending — ties broken toward
+/// the smaller index, so the result is fully deterministic. This is the
+/// one kNN scan kernel: [`knn_accuracy`] and
+/// [`MetricModel::knn`](crate::session::MetricModel::knn) both consume
+/// it, which is what makes the two provably equivalent.
+pub fn nearest_k(gallery: &Mat, q: &[f32], k: usize) -> Vec<(f32, usize)> {
+    assert_eq!(q.len(), gallery.cols, "query dim mismatch");
+    let mut best: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+    for j in 0..gallery.rows {
+        let dist: f32 = q
+            .iter()
+            .zip(gallery.row(j))
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        if best.len() < k {
+            best.push((dist, j));
+            best.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        } else if k > 0 && dist < best[k - 1].0 {
+            best[k - 1] = (dist, j);
+            best.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        }
+    }
+    best
+}
+
+/// Majority vote over neighbour labels, ties broken toward the smallest
+/// class id so the result is deterministic run-to-run.
+pub fn majority_label(votes: &[u32]) -> Option<u32> {
+    let mut counts = std::collections::HashMap::new();
+    for &c in votes {
+        *counts.entry(c).or_insert(0usize) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by_key(|&(c, n)| (n, std::cmp::Reverse(c)))
+        .map(|(c, _)| c)
+}
+
 /// k-nearest-neighbour classification accuracy of `test` against `train`
 /// under the metric L (L = None → Euclidean). The paper motivates DML
 /// through exactly this task (kNN/clustering accuracy).
@@ -121,45 +177,17 @@ pub fn knn_accuracy(
     let shards = pool.threads().min(n_test);
     let mut correct = vec![0usize; shards];
     pool.for_each_mut(&mut correct, |s, correct_s| {
-        let mut heap: Vec<(f32, u32)> = Vec::new();
         for i in crate::util::pool::balanced_range(n_test, shards, s) {
-            heap.clear();
-            let q = tr_row(&te, i);
-            for j in 0..train.n() {
-                let dist: f32 = q
-                    .iter()
-                    .zip(tr_row(&tr, j))
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
-                if heap.len() < k {
-                    heap.push((dist, train.labels[j]));
-                    heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                } else if dist < heap[k - 1].0 {
-                    heap[k - 1] = (dist, train.labels[j]);
-                    heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                }
-            }
-            // majority vote (ties broken toward the smallest class id so
-            // the result is deterministic run-to-run)
-            let mut counts = std::collections::HashMap::new();
-            for &(_, c) in heap.iter() {
-                *counts.entry(c).or_insert(0usize) += 1;
-            }
-            let pred = counts
+            let votes: Vec<u32> = nearest_k(&tr, te.row(i), k)
                 .into_iter()
-                .max_by_key(|&(c, n)| (n, std::cmp::Reverse(c)))
-                .map(|(c, _)| c)
-                .unwrap();
-            if pred == test.labels[i] {
+                .map(|(_, j)| train.labels[j])
+                .collect();
+            if majority_label(&votes) == Some(test.labels[i]) {
                 *correct_s += 1;
             }
         }
     });
     correct.iter().sum::<usize>() as f64 / n_test as f64
-}
-
-fn tr_row(m: &Mat, r: usize) -> &[f32] {
-    m.row(r)
 }
 
 #[cfg(test)]

@@ -29,16 +29,21 @@
 //!
 //! ## Quickstart
 //!
+//! The public entry point is the [`session`] module: a [`session::Session`]
+//! builder describes a run, the executors perform it, and the learned
+//! metric comes back as a durable [`session::MetricModel`] artifact.
+//!
 //! ```no_run
 //! use dmlps::config::Preset;
-//! use dmlps::data::SyntheticSpec;
-//! use dmlps::dml::{DmlProblem, NativeEngine, Engine};
+//! use dmlps::session::Session;
 //!
-//! let spec = SyntheticSpec::tiny();
-//! let data = spec.generate(42);
-//! let problem = DmlProblem::new(16, /*k=*/8, /*lambda=*/1.0);
-//! let engine = NativeEngine::new();
+//! # fn main() -> anyhow::Result<()> {
+//! let run = Session::from_config(Preset::Tiny.config())
+//!     .train_sequential()?;
+//! let model = run.into_model()?;
+//! model.save(std::path::Path::new("metric.bin"))?;
 //! // see examples/quickstart.rs for the full train/eval loop
+//! # Ok(()) }
 //! ```
 
 pub mod baselines;
@@ -51,5 +56,6 @@ pub mod linalg;
 pub mod metrics;
 pub mod ps;
 pub mod runtime;
+pub mod session;
 pub mod simcluster;
 pub mod util;

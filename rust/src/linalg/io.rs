@@ -1,7 +1,10 @@
 //! Binary matrix persistence (save/load learned metrics).
 //!
 //! Format: `DMLPSMAT` magic, u64 LE rows, u64 LE cols, then rows·cols
-//! f32 LE values. Used by `dmlps train --save-model` / `dmlps eval`.
+//! f32 LE values. Used by `dmlps train --save-model` / `dmlps eval`,
+//! and embedded as the payload codec inside
+//! [`MetricModel`](crate::session::MetricModel) artifacts via
+//! [`write_mat`] / [`read_mat`].
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -10,39 +13,49 @@ use super::Mat;
 
 const MAGIC: &[u8; 8] = b"DMLPSMAT";
 
+/// Write one matrix in the `DMLPSMAT` framing to any byte sink.
+pub fn write_mat<W: Write>(w: &mut W, m: &Mat) -> anyhow::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows as u64).to_le_bytes())?;
+    w.write_all(&(m.cols as u64).to_le_bytes())?;
+    for v in &m.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read one `DMLPSMAT`-framed matrix from any byte source.
+pub fn read_mat<R: Read>(r: &mut R) -> anyhow::Result<Mat> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a DMLPSMAT payload");
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let cols = u64::from_le_bytes(b8) as usize;
+    anyhow::ensure!(
+        rows.saturating_mul(cols) < (1 << 33),
+        "matrix too large ({rows}x{cols})"
+    );
+    let mut data = vec![0.0f32; rows * cols];
+    let mut b4 = [0u8; 4];
+    for v in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    Ok(Mat { rows, cols, data })
+}
+
 impl Mat {
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&(self.rows as u64).to_le_bytes())?;
-        f.write_all(&(self.cols as u64).to_le_bytes())?;
-        for v in &self.data {
-            f.write_all(&v.to_le_bytes())?;
-        }
-        Ok(())
+        write_mat(&mut f, self)
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Mat> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not a DMLPSMAT file");
-        let mut b8 = [0u8; 8];
-        f.read_exact(&mut b8)?;
-        let rows = u64::from_le_bytes(b8) as usize;
-        f.read_exact(&mut b8)?;
-        let cols = u64::from_le_bytes(b8) as usize;
-        anyhow::ensure!(
-            rows.saturating_mul(cols) < (1 << 33),
-            "matrix too large ({rows}x{cols})"
-        );
-        let mut data = vec![0.0f32; rows * cols];
-        let mut b4 = [0u8; 4];
-        for v in data.iter_mut() {
-            f.read_exact(&mut b4)?;
-            *v = f32::from_le_bytes(b4);
-        }
-        Ok(Mat { rows, cols, data })
+        read_mat(&mut f)
     }
 }
 
@@ -67,5 +80,17 @@ mod tests {
         let path = std::env::temp_dir().join("dmlps_mat_garbage.bin");
         std::fs::write(&path, b"not a matrix").unwrap();
         assert!(Mat::load(&path).is_err());
+    }
+
+    #[test]
+    fn stream_codec_roundtrips_in_memory() {
+        let mut rng = Pcg32::new(7);
+        let mut m = Mat::zeros(5, 9);
+        rng.fill_gaussian(&mut m.data, 0.0, 1.0);
+        let mut buf: Vec<u8> = Vec::new();
+        write_mat(&mut buf, &m).unwrap();
+        assert_eq!(buf.len(), 8 + 8 + 8 + 4 * 5 * 9);
+        let m2 = read_mat(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(m, m2);
     }
 }

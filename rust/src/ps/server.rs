@@ -64,6 +64,10 @@ pub struct ServerConfig {
     /// (any mode decodes — the wire format is self-describing) and
     /// encode parameter broadcasts per this mode.
     pub compression: CompressionConfig,
+    /// Optional run-event sink: shard update threads report every
+    /// parameter broadcast round through it (`None` = no reporting,
+    /// byte-identical to the historical protocol).
+    pub events: Option<Arc<dyn crate::session::EventSink>>,
 }
 
 /// What the server hands back after shutdown.
@@ -164,6 +168,7 @@ impl Server {
             let lr_scale = cfg.lr_scale;
             let compression = cfg.compression;
             let seed = cfg.seed;
+            let events = cfg.events.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ps-server-shard{s}"))
                 .spawn(move || {
@@ -177,6 +182,7 @@ impl Server {
                         probe_every,
                         compression,
                         seed,
+                        events,
                         &inbound_rx,
                         &outbound_tx,
                         &probe_tx,
@@ -447,6 +453,7 @@ fn run_shard(
     probe_every: u64,
     compression: CompressionConfig,
     seed: u64,
+    events: Option<Arc<dyn crate::session::EventSink>>,
     inbound_rx: &Receiver<ToServer>,
     outbound_tx: &Sender<ToWorker>,
     probe_tx: &SyncSender<ProbeMsg>,
@@ -530,19 +537,28 @@ fn run_shard(
                 clock
             };
             broadcasts += 1;
+            // encoded once per broadcast round, keyed by
+            // (shard, version) so reruns are reproducible
+            let data = encode_param(
+                compression.mode,
+                seed,
+                shard,
+                applied,
+                &slice,
+            );
+            if let Some(sink) = &events {
+                sink.on_broadcast(&crate::session::BroadcastEvent {
+                    shard,
+                    version: applied,
+                    clock,
+                    encoded_bytes: data.encoded_bytes(),
+                });
+            }
             let _ = outbound_tx.send(ToWorker::Param {
                 shard,
                 version: applied,
                 clock,
-                // encoded once per broadcast round, keyed by
-                // (shard, version) so reruns are reproducible
-                data: encode_param(
-                    compression.mode,
-                    seed,
-                    shard,
-                    applied,
-                    &slice,
-                ),
+                data,
             });
         }
         if finished.iter().all(|&f| f) {

@@ -50,6 +50,9 @@ pub struct WorkerConfig {
     /// server, parameter broadcasts). `mode = none` is the dense f32
     /// protocol bit for bit.
     pub compression: CompressionConfig,
+    /// Optional run-event sink: the computing thread reports its
+    /// completion through it (`None` = no reporting).
+    pub events: Option<Arc<dyn crate::session::EventSink>>,
 }
 
 /// Per-worker telemetry returned on join.
@@ -268,6 +271,15 @@ impl Worker {
                     stats.steps_done += 1;
                 }
                 stats.pairs_drawn = iter.pairs_drawn();
+                if let Some(sink) = &cfg.events {
+                    sink.on_done(&crate::session::DoneEvent {
+                        worker: id,
+                        steps: stats.steps_done,
+                        last_loss: stats.last_loss,
+                        wait_s: stats.wait_s,
+                        max_staleness: stats.max_staleness,
+                    });
+                }
                 let _ = outbound_tx.send(Outbound::Done);
                 stats
             })

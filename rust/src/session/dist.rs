@@ -1,0 +1,247 @@
+//! Distributed-training executor core.
+//!
+//! This is the orchestration that used to live in `ps::run_training`:
+//! build the shard plan, pair sources, and channels; spawn the server
+//! and workers; join and collect the [`TrainResult`]. It moved here so
+//! the [`Session`](super::Session) builder is the single entry point;
+//! the old `ps::run_training` survives as a deprecated shim that calls
+//! straight into this function (and is pinned bit-identical to it by
+//! the `api_session` golden tests).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, PairMode};
+use crate::data::{
+    partition_pairs, ClassIndex, Dataset, ImplicitPairSampler, PairSet,
+    WorkerPairs,
+};
+use crate::dml::{DmlProblem, EngineFactory, LrSchedule};
+use crate::linalg::Mat;
+use crate::metrics::Curve;
+use crate::ps::{
+    ProbeFn, RunOptions, Server, ServerConfig, ShardPlan, TrainResult,
+    Worker, WorkerConfig, WorkerStats,
+};
+
+use super::events::{EventSink, ProbeEvent};
+
+/// Run distributed DML training with the threaded parameter server.
+///
+/// * `engines` — factory each worker's computing thread uses.
+/// * `events` — optional sink fed by the probe thread, the server
+///   shards, and the workers; `None` is byte-for-byte the historical
+///   protocol.
+///
+/// The probe engine (objective recording on the server's probe thread)
+/// is always the native engine: probes are off the hot path and must
+/// not depend on artifacts being present.
+pub(crate) fn run_distributed(
+    cfg: &ExperimentConfig,
+    dataset: Arc<Dataset>,
+    pairs: &PairSet,
+    engines: EngineFactory,
+    opts: &RunOptions,
+    events: Option<Arc<dyn EventSink>>,
+) -> anyhow::Result<TrainResult> {
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    let l0 = problem.init_l(cfg.model.init_scale, cfg.seed);
+    let p = cfg.cluster.workers;
+    anyhow::ensure!(p > 0, "need at least one worker");
+    // BSP/SSP gates wait for server clocks that only advance when
+    // gradients arrive and parameter broadcasts land; with message drops
+    // and no retransmission the clock can stall below the gate forever.
+    // Fail fast instead of deadlocking the run.
+    anyhow::ensure!(
+        cfg.cluster.consistency == crate::config::Consistency::Asp
+            || (opts.faults.drop_grad_prob == 0.0
+                && opts.faults.drop_param_prob == 0.0),
+        "message drops require ASP consistency: BSP/SSP gates can \
+         deadlock on a dropped update (no retransmission layer)"
+    );
+
+    // ---- the shard plan both sides agree on (clamped to the row count;
+    //      server_shards = 0 is treated as 1 for configs predating the
+    //      knob) ----
+    let plan = ShardPlan::new(
+        cfg.model.k,
+        cfg.dataset.dim,
+        cfg.cluster.server_shards.max(1),
+    );
+    let server_shards = plan.shards();
+
+    // ---- pair sources: materialized shards (paper §4.1 clone-and-
+    //      shuffle) or implicit (seed, w, t) samplers whose index
+    //      spaces partition by worker ≡ w (mod P). The class index is
+    //      O(n) in dataset size and shared by all samplers (workers
+    //      and the probe alike). ----
+    let stream_index = match cfg.cluster.pairs.mode {
+        PairMode::Materialized => None,
+        PairMode::Streaming => Some(Arc::new(ClassIndex::build(
+            &dataset,
+            cfg.cluster.pairs.imbalance,
+        )?)),
+    };
+    let sources: Vec<WorkerPairs> = match &stream_index {
+        None => partition_pairs(pairs, p, cfg.seed ^ 0x5A4D)?
+            .into_iter()
+            .map(WorkerPairs::Materialized)
+            .collect(),
+        Some(index) => (0..p)
+            .map(|w| {
+                WorkerPairs::Streaming(ImplicitPairSampler::with_index(
+                    dataset.clone(),
+                    index.clone(),
+                    cfg.seed,
+                    w,
+                    p,
+                    cfg.cluster.pairs.label_noise,
+                ))
+            })
+            .collect(),
+    };
+
+    // ---- channels: workers → server (shared), server → each worker ----
+    let (to_server_tx, to_server_rx) = channel();
+    let mut to_worker_txs = Vec::with_capacity(p);
+    let mut to_worker_rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        to_worker_txs.push(tx);
+        to_worker_rxs.push(rx);
+    }
+
+    // ---- objective probe (runs on the server probe thread) ----
+    let probe = make_probe(
+        &dataset,
+        pairs,
+        cfg,
+        opts.probe_pairs,
+        stream_index,
+        events.clone(),
+    );
+
+    // ---- spawn server ----
+    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
+    let watch = crate::metrics::Stopwatch::start();
+    let server = Server::spawn(
+        ServerConfig {
+            workers: p,
+            server_batch: cfg.cluster.server_batch,
+            lr,
+            lr_scale: 1.0 / p as f32,
+            probe_every: opts.probe_every,
+            faults: opts.faults,
+            seed: cfg.seed ^ 0x5E2,
+            compression: cfg.cluster.compression,
+            events: events.clone(),
+        },
+        plan.clone(),
+        l0.clone(),
+        to_server_rx,
+        to_worker_txs,
+        probe,
+    );
+
+    // ---- spawn workers ----
+    let mut workers = Vec::with_capacity(p);
+    for (w, source) in sources.into_iter().enumerate() {
+        let wcfg = WorkerConfig {
+            id: w,
+            steps: cfg.optim.steps,
+            batch_sim: cfg.optim.batch_sim,
+            batch_dis: cfg.optim.batch_dis,
+            lambda: cfg.optim.lambda,
+            lr,
+            consistency: cfg.cluster.consistency,
+            faults: opts.faults,
+            seed: cfg.seed ^ ((w as u64 + 1) << 16),
+            threads: cfg.cluster.threads_per_worker,
+            compression: cfg.cluster.compression,
+            events: events.clone(),
+        };
+        workers.push(Worker::spawn(
+            wcfg,
+            plan.clone(),
+            l0.clone(),
+            dataset.clone(),
+            source,
+            to_server_tx.clone(),
+            to_worker_rxs.remove(0),
+            engines.clone(),
+        ));
+    }
+    drop(to_server_tx); // server sees disconnect when all workers finish
+
+    // ---- join ----
+    let worker_stats: Vec<WorkerStats> =
+        workers.into_iter().map(Worker::join).collect();
+    let sr = server.join();
+    Ok(TrainResult {
+        l: sr.l,
+        curve: sr.curve,
+        applied_updates: sr.applied_updates,
+        slice_updates: sr.slice_updates,
+        broadcasts: sr.broadcasts,
+        param_msgs: sr.param_msgs,
+        server_shards,
+        last_loss: sr.last_loss,
+        grad_bytes_received: sr.grad_bytes_received,
+        param_bytes_sent: sr.param_bytes_sent,
+        worker_stats,
+        wall_s: watch.elapsed_s(),
+    })
+}
+
+/// Build the server-side objective probe: materializes a fixed pair
+/// subsample (Send-safe buffers) and evaluates with a native engine
+/// constructed inside the probe thread. In streaming mode the
+/// subsample is drawn from a dedicated implicit sampler on a reserved
+/// seed (the materialized pair sets may be empty — that's the point),
+/// with the same scenario knobs the workers train under. Every probe
+/// point is mirrored to the event sink.
+fn make_probe(
+    dataset: &Arc<Dataset>,
+    pairs: &PairSet,
+    cfg: &ExperimentConfig,
+    probe_pairs: (usize, usize),
+    stream_index: Option<Arc<ClassIndex>>,
+    events: Option<Arc<dyn EventSink>>,
+) -> ProbeFn {
+    let lambda = cfg.optim.lambda;
+    let probe = match stream_index {
+        None => crate::dml::ObjectiveProbe::new(
+            dataset,
+            pairs,
+            probe_pairs.0,
+            probe_pairs.1,
+            cfg.seed ^ 0x0B5,
+        ),
+        Some(index) => {
+            let mut sampler = ImplicitPairSampler::with_index(
+                dataset.clone(),
+                index,
+                cfg.seed ^ 0x0B5E,
+                0,
+                1,
+                cfg.cluster.pairs.label_noise,
+            );
+            crate::dml::ObjectiveProbe::from_stream(
+                dataset,
+                &mut sampler,
+                probe_pairs.0,
+                probe_pairs.1,
+            )
+        }
+    };
+    let mut engine: Option<crate::dml::NativeEngine> = None;
+    Box::new(move |l: &Mat, step: u64, t: f64, curve: &mut Curve| {
+        let eng = engine.get_or_insert_with(crate::dml::NativeEngine::new);
+        let obj = probe.eval(eng, l, lambda) as f64;
+        curve.push(t, step as usize, obj);
+        if let Some(sink) = &events {
+            sink.on_probe(&ProbeEvent { step, time_s: t, objective: obj });
+        }
+    })
+}

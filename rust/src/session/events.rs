@@ -1,0 +1,73 @@
+//! Run-lifecycle event callbacks.
+//!
+//! An [`EventSink`] is the one sanctioned window into a running
+//! [`Session`](super::Session): the server's probe thread reports every
+//! objective probe, shard update threads report parameter broadcasts,
+//! and each worker reports its completion. Before this trait existed,
+//! the CLI and benches peeked at internals (or simply could not observe
+//! a run until it finished); now they install a sink instead.
+//!
+//! All methods default to no-ops, so a sink implements only what it
+//! cares about. Sinks are shared across threads (`Send + Sync`) and are
+//! called from hot-adjacent paths — implementations should be cheap or
+//! hand off to their own channel.
+
+/// One objective probe, as recorded on the server's probe thread (or by
+/// the sequential trainer's inline probe).
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeEvent {
+    /// Applied (logical) update count at probe time.
+    pub step: u64,
+    /// Seconds since run start (wall clock, or simulated time for
+    /// [`Session::simulate`](super::Session::simulate) runs).
+    pub time_s: f64,
+    /// Objective value at this probe.
+    pub objective: f64,
+}
+
+/// One parameter broadcast round, reported by the owning server shard's
+/// update thread when it publishes a fresh slice.
+#[derive(Clone, Copy, Debug)]
+pub struct BroadcastEvent {
+    /// Server shard that published the slice.
+    pub shard: usize,
+    /// Slice version (the shard's applied-update count).
+    pub version: u64,
+    /// The shard's SSP clock at publish time.
+    pub clock: u64,
+    /// Encoded payload bytes of the broadcast slice.
+    pub encoded_bytes: u64,
+}
+
+/// A worker's computing thread finished its step budget. Reported from
+/// inside the worker, so transport-side counters (grads sent/dropped)
+/// are not yet folded in — read those from
+/// [`Run::worker_stats`](super::Run::worker_stats) after the run.
+#[derive(Clone, Copy, Debug)]
+pub struct DoneEvent {
+    /// Worker id.
+    pub worker: usize,
+    /// Steps the computing thread completed.
+    pub steps: u64,
+    /// Last minibatch loss the worker observed.
+    pub last_loss: f32,
+    /// Seconds spent blocked on the consistency gate.
+    pub wait_s: f64,
+    /// Max observed staleness (own step − min-over-shards clock).
+    pub max_staleness: u64,
+}
+
+/// Callbacks fed by a running session. Install one with
+/// [`Session::events`](super::Session::events).
+pub trait EventSink: Send + Sync {
+    /// Called for every recorded objective-curve point.
+    fn on_probe(&self, _event: &ProbeEvent) {}
+
+    /// Called for every parameter broadcast round a server shard emits
+    /// (distributed runs only).
+    fn on_broadcast(&self, _event: &BroadcastEvent) {}
+
+    /// Called once per worker when its computing thread finishes
+    /// (distributed runs only).
+    fn on_done(&self, _event: &DoneEvent) {}
+}

@@ -1,0 +1,480 @@
+//! # The public run surface: `Session` → `Run` → `MetricModel`
+//!
+//! The paper's pipeline is train-once/use-everywhere: learn L on the
+//! parameter server, then serve the Mahalanobis metric for retrieval
+//! and kNN. This module is that pipeline as an API. One builder
+//! describes a run, three executors perform it, one report type comes
+//! back, and the learned metric leaves as a durable artifact:
+//!
+//! ```no_run
+//! use dmlps::config::Preset;
+//! use dmlps::session::Session;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let run = Session::from_config(Preset::Tiny.config())
+//!     .engine("native")
+//!     .probe(20, (200, 200))
+//!     .train_distributed()?;
+//! println!("objective {:?} after {} updates",
+//!          run.curve.final_objective(), run.applied_updates);
+//!
+//! // persist the learned metric, reload it, serve it — no retraining
+//! let model = run.into_model()?;
+//! model.save(std::path::Path::new("metric.bin"))?;
+//! let model = dmlps::session::MetricModel::load(
+//!     std::path::Path::new("metric.bin"))?;
+//! let _neighbours = model.knn(&model_gallery(), &query(), 5);
+//! # Ok(()) }
+//! # fn model_gallery() -> dmlps::data::Dataset { unimplemented!() }
+//! # fn query() -> Vec<f32> { unimplemented!() }
+//! ```
+//!
+//! ## Builder
+//!
+//! [`Session::from_config`] starts from an [`ExperimentConfig`] (preset,
+//! JSON file, or hand-built); chainable overrides refine it:
+//!
+//! * [`Session::engine`] / [`Session::engine_factory`] — compute backend
+//!   ("native" | "xla" | "auto", or an explicit [`EngineFactory`]).
+//! * [`Session::faults`] / [`Session::probe`] / [`Session::run_options`]
+//!   — transport fault injection and probe cadence.
+//! * [`Session::data`] — reuse generated [`ExperimentData`] across runs
+//!   (benches sweep many configs over one dataset); omitted, the
+//!   session generates data from the config.
+//! * [`Session::pair_source`] — explicit train dataset + pair set for
+//!   the distributed path (what the deprecated `ps::run_training`
+//!   shim feeds through).
+//! * [`Session::events`] — an [`EventSink`] fed live by the probe
+//!   thread, server shards, and workers.
+//! * [`Session::topology`] / [`Session::sim_knobs`] — simulated-cluster
+//!   shape and cost model.
+//!
+//! ## Executors
+//!
+//! * [`Session::train_distributed`] — the real threaded parameter
+//!   server (paper §4.2).
+//! * [`Session::train_sequential`] — single-thread SGD (paper §5.4's
+//!   comparison setting).
+//! * [`Session::simulate`] — the discrete-event cluster simulator
+//!   (paper Fig 2/3 scalability studies).
+//!
+//! All three return the unified [`Run`] report; the training executors
+//! additionally attach a [`MetricModel`] artifact.
+
+mod dist;
+mod events;
+mod model;
+mod seq;
+mod sim;
+
+pub use events::{BroadcastEvent, DoneEvent, EventSink, ProbeEvent};
+pub use model::{config_digest, MetricModel, ModelMeta};
+pub use sim::{calibrate_for, sim_scaled, SimKnobs, SimScaled};
+
+pub(crate) use dist::run_distributed;
+pub(crate) use seq::run_sequential;
+pub(crate) use sim::run_simulated;
+
+use std::sync::Arc;
+
+use crate::baselines::ApTrace;
+use crate::config::{CompressionMode, ExperimentConfig, PairMode};
+use crate::data::{Dataset, ExperimentData, PairSet};
+use crate::dml::EngineFactory;
+use crate::linalg::Mat;
+use crate::metrics::{Curve, Stopwatch};
+use crate::ps::{FaultSpec, RunOptions, TrainResult, WorkerStats};
+
+/// Which executor produced a [`Run`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunKind {
+    /// Real threaded parameter server ([`Session::train_distributed`]).
+    Distributed,
+    /// Single-thread SGD ([`Session::train_sequential`]).
+    Sequential,
+    /// Discrete-event cluster simulation ([`Session::simulate`]).
+    Simulated,
+}
+
+/// The unified run report every executor returns — the merge of the
+/// historical `TrainResult`, `SingleThreadRun`, and `SimResult` shapes.
+/// Fields an executor does not produce are zero/empty (e.g. a
+/// sequential run has no worker stats; a simulated run has no model).
+#[derive(Debug)]
+pub struct Run {
+    pub kind: RunKind,
+    /// The trained metric artifact (`None` for simulated runs, which
+    /// model time, not parameters worth serving).
+    pub model: Option<MetricModel>,
+    /// Objective-vs-time convergence curve.
+    pub curve: Curve,
+    /// Real wall-clock seconds this executor took.
+    pub wall_s: f64,
+    /// Logical full-gradient updates folded into the global L.
+    pub applied_updates: u64,
+    /// Per-shard slice applications summed over shards.
+    pub slice_updates: u64,
+    /// Broadcast rounds summed over shards.
+    pub broadcasts: u64,
+    /// Physical parameter slice messages shipped to workers.
+    pub param_msgs: u64,
+    /// Server shard count the run actually used.
+    pub server_shards: usize,
+    /// Mean worker-reported minibatch loss over the last window.
+    pub last_loss: f32,
+    /// Encoded gradient payload bytes the server folded.
+    pub grad_bytes_received: u64,
+    /// Encoded parameter payload bytes shipped to workers.
+    pub param_bytes_sent: u64,
+    /// Per-worker telemetry (distributed runs).
+    pub worker_stats: Vec<WorkerStats>,
+    /// AP-vs-time trace on held-out test pairs (sequential runs).
+    pub ap_trace: ApTrace,
+    /// Simulated seconds to the update budget (simulated runs).
+    pub sim_seconds: f64,
+    /// Mean update staleness (simulated runs).
+    pub mean_staleness: f64,
+}
+
+impl Run {
+    fn empty(kind: RunKind) -> Run {
+        Run {
+            kind,
+            model: None,
+            curve: Curve::default(),
+            wall_s: 0.0,
+            applied_updates: 0,
+            slice_updates: 0,
+            broadcasts: 0,
+            param_msgs: 0,
+            server_shards: 0,
+            last_loss: 0.0,
+            grad_bytes_received: 0,
+            param_bytes_sent: 0,
+            worker_stats: Vec::new(),
+            ap_trace: ApTrace::new(),
+            sim_seconds: 0.0,
+            mean_staleness: 0.0,
+        }
+    }
+
+    /// The learned projection L, for runs that trained one.
+    pub fn l(&self) -> anyhow::Result<&Mat> {
+        Ok(self.require_model()?.l())
+    }
+
+    /// The trained metric artifact, erroring for simulated runs.
+    pub fn require_model(&self) -> anyhow::Result<&MetricModel> {
+        self.model.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "this {:?} run produced no metric model", self.kind
+            )
+        })
+    }
+
+    /// Consume the run and keep only the metric artifact.
+    pub fn into_model(self) -> anyhow::Result<MetricModel> {
+        let kind = self.kind;
+        self.model.ok_or_else(|| {
+            anyhow::anyhow!("this {kind:?} run produced no metric model")
+        })
+    }
+
+    fn from_train_result(cfg: &ExperimentConfig, r: TrainResult) -> Run {
+        Run {
+            model: Some(MetricModel::new(r.l, cfg)),
+            curve: r.curve,
+            wall_s: r.wall_s,
+            applied_updates: r.applied_updates,
+            slice_updates: r.slice_updates,
+            broadcasts: r.broadcasts,
+            param_msgs: r.param_msgs,
+            server_shards: r.server_shards,
+            last_loss: r.last_loss,
+            grad_bytes_received: r.grad_bytes_received,
+            param_bytes_sent: r.param_bytes_sent,
+            worker_stats: r.worker_stats,
+            ..Run::empty(RunKind::Distributed)
+        }
+    }
+}
+
+/// How the session obtains engines (resolved at execute time, so a
+/// name like "auto" sees the artifacts that exist when the run starts).
+#[derive(Clone)]
+enum EngineSel {
+    Name(String),
+    Factory(EngineFactory),
+}
+
+/// Builder for one fully-described run. See the [module docs](self).
+#[derive(Clone)]
+pub struct Session {
+    cfg: ExperimentConfig,
+    opts: RunOptions,
+    engine: EngineSel,
+    data: Option<Arc<ExperimentData>>,
+    pair_source: Option<(Arc<Dataset>, Arc<PairSet>)>,
+    events: Option<Arc<dyn EventSink>>,
+    sim: SimKnobs,
+    machines: usize,
+    cores_per_machine: usize,
+}
+
+impl Session {
+    /// Start a session from a config (preset, loaded JSON, or
+    /// hand-built). Every knob the config carries — workers, shards,
+    /// consistency, pair pipeline, wire compression — is honored as-is;
+    /// the chainable overrides below cover what a config cannot say.
+    pub fn from_config(cfg: ExperimentConfig) -> Session {
+        Session {
+            cfg,
+            opts: RunOptions::default(),
+            engine: EngineSel::Name("native".into()),
+            data: None,
+            pair_source: None,
+            events: None,
+            sim: SimKnobs::default(),
+            machines: 1,
+            cores_per_machine: 16,
+        }
+    }
+
+    /// The config this session will run.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Transport fault injection (drops, latency) for distributed runs.
+    pub fn faults(mut self, faults: FaultSpec) -> Session {
+        self.opts.faults = faults;
+        self
+    }
+
+    /// Probe cadence (applied updates between curve points) and probe
+    /// subsample sizes (similar, dissimilar).
+    pub fn probe(mut self, every: u64, pairs: (usize, usize)) -> Session {
+        self.opts.probe_every = every;
+        self.opts.probe_pairs = pairs;
+        self
+    }
+
+    /// Replace the whole option block (faults + probe knobs) at once.
+    pub fn run_options(mut self, opts: RunOptions) -> Session {
+        self.opts = opts;
+        self
+    }
+
+    /// Select the engine by name: "native", "xla", or "auto".
+    pub fn engine(mut self, name: &str) -> Session {
+        self.engine = EngineSel::Name(name.into());
+        self
+    }
+
+    /// Supply an explicit engine factory (overrides [`Session::engine`]).
+    pub fn engine_factory(mut self, factory: EngineFactory) -> Session {
+        self.engine = EngineSel::Factory(factory);
+        self
+    }
+
+    /// Reuse already-generated experiment data instead of generating
+    /// from the config (benches sweep many configs over one dataset).
+    pub fn data(mut self, data: Arc<ExperimentData>) -> Session {
+        self.data = Some(data);
+        self
+    }
+
+    /// Explicit train dataset + pair set for the distributed executor
+    /// (the raw `ps::run_training` calling convention). Takes
+    /// precedence over [`Session::data`] for
+    /// [`Session::train_distributed`]. Accepts a bare [`PairSet`] or an
+    /// `Arc<PairSet>` (share, don't clone, when sweeping configs).
+    pub fn pair_source(
+        mut self,
+        dataset: Arc<Dataset>,
+        pairs: impl Into<Arc<PairSet>>,
+    ) -> Session {
+        self.pair_source = Some((dataset, pairs.into()));
+        self
+    }
+
+    /// Install an [`EventSink`] fed live by the run.
+    pub fn events(mut self, sink: Arc<dyn EventSink>) -> Session {
+        self.events = Some(sink);
+        self
+    }
+
+    /// Simulated-cluster shape for [`Session::simulate`].
+    pub fn topology(
+        mut self,
+        machines: usize,
+        cores_per_machine: usize,
+    ) -> Session {
+        self.machines = machines.max(1);
+        self.cores_per_machine = cores_per_machine.max(1);
+        self
+    }
+
+    /// Simulated-cluster cost knobs for [`Session::simulate`].
+    pub fn sim_knobs(mut self, knobs: SimKnobs) -> Session {
+        self.sim = knobs;
+        self
+    }
+
+    // ------------------------------------------------------------------
+    // executors
+    // ------------------------------------------------------------------
+
+    /// Train on the real threaded parameter server (paper §4.2): P
+    /// worker machines, S server shards, ASP/BSP/SSP consistency, the
+    /// configured pair pipeline and wire compression.
+    pub fn train_distributed(&self) -> anyhow::Result<Run> {
+        let engines = self.resolve_engines()?;
+        let result = match &self.pair_source {
+            Some((dataset, pairs)) => run_distributed(
+                &self.cfg,
+                dataset.clone(),
+                pairs,
+                engines,
+                &self.opts,
+                self.events.clone(),
+            )?,
+            None => {
+                let data = self.resolve_data(self.cfg.cluster.pairs.mode);
+                let dataset = Arc::new(clone_dataset(&data.train));
+                run_distributed(
+                    &self.cfg,
+                    dataset,
+                    &data.pairs,
+                    engines,
+                    &self.opts,
+                    self.events.clone(),
+                )?
+            }
+        };
+        Ok(Run::from_train_result(&self.cfg, result))
+    }
+
+    /// Train single-threaded (the paper's §5.4 setting): plain SGD on
+    /// one engine, with an AP-vs-time trace on held-out test pairs.
+    /// Needs held-out test pairs for the AP trace, so it consumes full
+    /// [`Session::data`] (never a bare [`Session::pair_source`]) and
+    /// only the materialized pair pipeline — both enforced, not
+    /// silently downgraded.
+    pub fn train_sequential(&self) -> anyhow::Result<Run> {
+        anyhow::ensure!(
+            self.pair_source.is_none(),
+            "train_sequential does not consume a pair_source override \
+             (it needs test pairs for the AP trace) — pass a full \
+             dataset via .data(..) instead"
+        );
+        anyhow::ensure!(
+            self.cfg.cluster.pairs.mode == PairMode::Materialized,
+            "train_sequential supports only the materialized pair \
+             pipeline (drop the streaming pairs mode)"
+        );
+        let mut engine = (self.resolve_engines()?)()?;
+        let data = self.resolve_data(PairMode::Materialized);
+        let outcome = run_sequential(
+            &self.cfg,
+            &data,
+            engine.as_mut(),
+            self.opts.probe_every as usize,
+            self.opts.probe_pairs,
+            self.events.as_ref(),
+        )?;
+        Ok(Run {
+            model: Some(MetricModel::new(outcome.l, &self.cfg)),
+            curve: outcome.curve,
+            wall_s: outcome.wall_s,
+            applied_updates: self.cfg.optim.steps as u64,
+            ap_trace: outcome.ap_trace,
+            ..Run::empty(RunKind::Sequential)
+        })
+    }
+
+    /// Run the discrete-event cluster simulator at the configured
+    /// [`Session::topology`] with the [`Session::sim_knobs`] cost
+    /// model — the paper's Fig 2/3 scalability instrument.
+    pub fn simulate(&self) -> anyhow::Result<Run> {
+        // the simulator's workload consumes materialized pair shards
+        // and charges dense f32 bytes per message; fail clearly rather
+        // than silently ignoring the config's pipeline/wire knobs
+        anyhow::ensure!(
+            self.cfg.cluster.pairs.mode == PairMode::Materialized,
+            "simulate supports only the materialized pair pipeline \
+             (drop the streaming pairs mode)"
+        );
+        anyhow::ensure!(
+            self.cfg.cluster.compression.mode == CompressionMode::None,
+            "simulate models the dense f32 wire only \
+             (drop the '{}' compression mode)",
+            self.cfg.cluster.compression.mode
+        );
+        let data = self.resolve_data(PairMode::Materialized);
+        let watch = Stopwatch::start();
+        let r = sim::run_simulated(
+            &self.cfg,
+            &data,
+            self.machines,
+            self.cores_per_machine,
+            self.sim,
+        )?;
+        if let Some(sink) = &self.events {
+            // the simulator records its own curve under simulated time;
+            // probes are replayed to the sink after the fact
+            for p in &r.curve.points {
+                sink.on_probe(&ProbeEvent {
+                    step: p.step as u64,
+                    time_s: p.time_s,
+                    objective: p.objective,
+                });
+            }
+        }
+        Ok(Run {
+            curve: r.curve,
+            wall_s: watch.elapsed_s(),
+            applied_updates: r.applied_updates,
+            broadcasts: r.broadcasts,
+            sim_seconds: r.sim_seconds,
+            mean_staleness: r.mean_staleness,
+            ..Run::empty(RunKind::Simulated)
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // plumbing
+    // ------------------------------------------------------------------
+
+    fn resolve_engines(&self) -> anyhow::Result<EngineFactory> {
+        match &self.engine {
+            EngineSel::Factory(f) => Ok(f.clone()),
+            EngineSel::Name(name) => {
+                crate::dml::engine_factory(name, &self.cfg)
+            }
+        }
+    }
+
+    /// The session's data: the override if one was supplied, else
+    /// generated from the config with the given pair mode.
+    fn resolve_data(&self, mode: PairMode) -> Arc<ExperimentData> {
+        match &self.data {
+            Some(d) => d.clone(),
+            None => Arc::new(ExperimentData::generate_for(
+                &self.cfg.dataset,
+                mode,
+                self.cfg.seed,
+            )),
+        }
+    }
+}
+
+/// Deep-copy a dataset into a fresh allocation (the worker threads
+/// share it behind an `Arc`).
+pub(crate) fn clone_dataset(ds: &Dataset) -> Dataset {
+    Dataset {
+        x: ds.x.clone(),
+        labels: ds.labels.clone(),
+        n_classes: ds.n_classes,
+    }
+}

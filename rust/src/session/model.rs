@@ -1,0 +1,249 @@
+//! The first-class trained-metric artifact.
+//!
+//! A [`MetricModel`] owns the learned projection L (k × d) plus the
+//! provenance header (shape, seed, config digest) and offers everything
+//! a serving path needs — project features, score pairs, run kNN
+//! retrieval — without retraining and without touching the training
+//! stack. It persists to a versioned binary format so a metric trained
+//! once can be reloaded and served anywhere (`dmlps train --save-model`
+//! / `dmlps eval --model`).
+//!
+//! On-disk format (all little-endian):
+//!
+//! ```text
+//! 8 B  magic  b"DMLPSMM1"
+//! 4 B  u32    header version (currently 1)
+//! 8 B  u64    k (rows of L)
+//! 8 B  u64    d (cols of L)
+//! 8 B  u64    training seed
+//! 8 B  u64    FNV-1a digest of the training config JSON
+//! ...         L payload via `linalg::io` (DMLPSMAT magic, dims, f32 rows)
+//! ```
+//!
+//! The payload reuses the `DMLPSMAT` matrix codec, so the bytes after
+//! the header are exactly what `Mat::save` writes — one matrix format
+//! across the whole crate.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
+use crate::linalg::io::{read_mat, write_mat};
+use crate::linalg::Mat;
+
+const MAGIC: &[u8; 8] = b"DMLPSMM1";
+const FORMAT_VERSION: u32 = 1;
+
+/// Provenance header carried by a [`MetricModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelMeta {
+    /// On-disk format version (see module docs). Real artifacts start
+    /// at 1; `0` marks a wrapped legacy bare-matrix file whose
+    /// provenance fields are unknown, not claims.
+    pub version: u32,
+    /// Rows of L.
+    pub k: u64,
+    /// Cols of L (the feature dimension).
+    pub d: u64,
+    /// Seed the metric was trained with.
+    pub seed: u64,
+    /// FNV-1a 64-bit digest of the training config's JSON rendering —
+    /// ties a model file back to the exact experiment that produced it.
+    pub config_digest: u64,
+}
+
+/// A trained Mahalanobis metric `M = LᵀL`, packaged for serving.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricModel {
+    l: Mat,
+    meta: ModelMeta,
+}
+
+impl MetricModel {
+    /// Package a learned L with provenance from the config that
+    /// produced it.
+    pub fn new(l: Mat, cfg: &ExperimentConfig) -> MetricModel {
+        let meta = ModelMeta {
+            version: FORMAT_VERSION,
+            k: l.rows as u64,
+            d: l.cols as u64,
+            seed: cfg.seed,
+            config_digest: config_digest(cfg),
+        };
+        MetricModel { l, meta }
+    }
+
+    /// Rehydrate from parts (e.g. a legacy bare-`Mat` model file whose
+    /// provenance is unknown).
+    pub fn from_parts(l: Mat, meta: ModelMeta) -> MetricModel {
+        MetricModel { l, meta }
+    }
+
+    /// The learned projection L (k × d).
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Consume the model and keep only L.
+    pub fn into_l(self) -> Mat {
+        self.l
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Feature dimension d the metric expects.
+    pub fn dim(&self) -> usize {
+        self.l.cols
+    }
+
+    /// Projected dimension k.
+    pub fn k(&self) -> usize {
+        self.l.rows
+    }
+
+    /// Project feature rows into the learned space: `x` (n × d) → n × k.
+    /// In the projected space the learned metric is plain Euclidean —
+    /// project once, then serve with any Euclidean index.
+    pub fn transform(&self, x: &Mat) -> Mat {
+        assert_eq!(
+            x.cols, self.l.cols,
+            "feature dim {} != model dim {}",
+            x.cols, self.l.cols
+        );
+        x.matmul_bt(&self.l)
+    }
+
+    /// Project a single feature vector. Routes through the same gemm
+    /// path as [`MetricModel::transform`], so a query projected alone
+    /// is bit-identical to the same row projected in a batch (and to
+    /// [`crate::eval::knn_accuracy`]'s projection — the kNN
+    /// equivalence the `api_session` tests pin).
+    pub fn transform_vec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.l.cols, "feature dim mismatch");
+        let mut m = Mat::zeros(1, self.l.cols);
+        m.row_mut(0).copy_from_slice(x);
+        self.transform(&m).data
+    }
+
+    /// Squared learned distance ‖L(a − b)‖² between two feature vectors.
+    pub fn pair_dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "pair dim mismatch");
+        let diff: Vec<f32> =
+            a.iter().zip(b).map(|(x, y)| x - y).collect();
+        self.transform_vec(&diff).iter().map(|v| v * v).sum()
+    }
+
+    /// Squared learned distances for difference rows (b × d), one per
+    /// row — the batch form of [`MetricModel::pair_dist`].
+    pub fn pair_dists(&self, diffs: &Mat) -> Vec<f32> {
+        let p = self.transform(diffs);
+        (0..p.rows)
+            .map(|r| p.row(r).iter().map(|v| v * v).sum())
+            .collect()
+    }
+
+    /// Project a gallery once for repeated [`MetricModel::knn_projected`]
+    /// queries (the serving pattern: amortize the gallery projection).
+    pub fn project_gallery(&self, gallery: &Dataset) -> Mat {
+        self.transform(&gallery.x)
+    }
+
+    /// k nearest gallery points to `query` under the learned metric.
+    /// Returns `(gallery index, squared distance)` ascending by
+    /// distance (ties broken toward the smaller index — the same
+    /// deterministic order [`crate::eval::knn_accuracy`] uses).
+    pub fn knn(
+        &self,
+        gallery: &Dataset,
+        query: &[f32],
+        k: usize,
+    ) -> Vec<(usize, f32)> {
+        self.knn_projected(&self.project_gallery(gallery), query, k)
+    }
+
+    /// [`MetricModel::knn`] against a pre-projected gallery.
+    pub fn knn_projected(
+        &self,
+        projected: &Mat,
+        query: &[f32],
+        k: usize,
+    ) -> Vec<(usize, f32)> {
+        let q = self.transform_vec(query);
+        crate::eval::nearest_k(projected, &q, k)
+            .into_iter()
+            .map(|(dist, idx)| (idx, dist))
+            .collect()
+    }
+
+    /// Write the versioned binary artifact (see module docs).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f =
+            std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&self.meta.version.to_le_bytes())?;
+        f.write_all(&self.meta.k.to_le_bytes())?;
+        f.write_all(&self.meta.d.to_le_bytes())?;
+        f.write_all(&self.meta.seed.to_le_bytes())?;
+        f.write_all(&self.meta.config_digest.to_le_bytes())?;
+        write_mat(&mut f, &self.l)?;
+        Ok(())
+    }
+
+    /// Load a model artifact written by [`MetricModel::save`].
+    pub fn load(path: &Path) -> anyhow::Result<MetricModel> {
+        let mut f =
+            std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(
+            &magic == MAGIC,
+            "not a DMLPSMM1 metric model file (bad magic)"
+        );
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported metric model format version {version} \
+             (this build reads version {FORMAT_VERSION})"
+        );
+        let mut b8 = [0u8; 8];
+        let mut next_u64 = |f: &mut dyn Read| -> anyhow::Result<u64> {
+            f.read_exact(&mut b8)?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let k = next_u64(&mut f)?;
+        let d = next_u64(&mut f)?;
+        let seed = next_u64(&mut f)?;
+        let config_digest = next_u64(&mut f)?;
+        let l = read_mat(&mut f)?;
+        anyhow::ensure!(
+            l.rows as u64 == k && l.cols as u64 == d,
+            "model header says {k}x{d} but payload is {}x{}",
+            l.rows,
+            l.cols
+        );
+        Ok(MetricModel {
+            l,
+            meta: ModelMeta { version, k, d, seed, config_digest },
+        })
+    }
+}
+
+/// FNV-1a 64-bit digest of the config's (stable, sorted-key) JSON
+/// rendering — the provenance fingerprint stored in model headers.
+pub fn config_digest(cfg: &ExperimentConfig) -> u64 {
+    fnv1a(cfg.to_json().to_string_pretty().as_bytes())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}

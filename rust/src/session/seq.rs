@@ -1,0 +1,116 @@
+//! Sequential-training executor core (the paper's §5.4 single-thread
+//! setting, used for the Fig 4a/4b method comparison).
+//!
+//! Moved here from `cli::driver::train_single_thread`, which survives
+//! as a deprecated shim over this function (pinned bit-identical by the
+//! `api_session` golden tests): same RNG streams, same probe seeds,
+//! same update order.
+
+use crate::baselines::ApTrace;
+use crate::config::ExperimentConfig;
+use crate::data::ExperimentData;
+use crate::dml::{
+    DmlProblem, Engine, LrSchedule, MinibatchRef, ObjectiveProbe,
+};
+use crate::linalg::Mat;
+use crate::metrics::{Curve, Stopwatch};
+use crate::util::rng::Pcg32;
+
+use super::events::{EventSink, ProbeEvent};
+
+/// What sequential training hands back (folded into [`super::Run`] by
+/// the session, or into the legacy `SingleThreadRun` by the shim).
+pub(crate) struct SeqOutcome {
+    pub l: Mat,
+    pub curve: Curve,
+    pub ap_trace: ApTrace,
+    pub wall_s: f64,
+}
+
+/// Single-threaded SGD training. Records an objective curve and an
+/// AP-vs-time trace on held-out test pairs. `probe_pairs` bounds the
+/// similar/dissimilar probe subsample (clamped to the materialized pair
+/// counts; the historical entry point used 500/500).
+pub(crate) fn run_sequential(
+    cfg: &ExperimentConfig,
+    data: &ExperimentData,
+    engine: &mut dyn Engine,
+    probe_every: usize,
+    probe_pairs: (usize, usize),
+    events: Option<&std::sync::Arc<dyn EventSink>>,
+) -> anyhow::Result<SeqOutcome> {
+    anyhow::ensure!(
+        !data.pairs.similar.is_empty()
+            && !data.pairs.dissimilar.is_empty(),
+        "sequential training needs materialized train pairs \
+         (generate data with the materialized pair mode)"
+    );
+    let probe_every = probe_every.max(1);
+    let problem =
+        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
+    let mut l = problem.init_l(cfg.model.init_scale, cfg.seed);
+    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
+    let probe = ObjectiveProbe::new(
+        &data.train,
+        &data.pairs,
+        probe_pairs.0.min(data.pairs.similar.len()),
+        probe_pairs.1.min(data.pairs.dissimilar.len()),
+        cfg.seed ^ 0xB0B,
+    );
+    let (bs, bd, d) =
+        (cfg.optim.batch_sim, cfg.optim.batch_dis, cfg.dataset.dim);
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x51);
+    let mut ds_buf = vec![0.0f32; bs * d];
+    let mut dd_buf = vec![0.0f32; bd * d];
+    let mut curve = Curve::new("ours (single thread)");
+    let mut ap_trace = ApTrace::new();
+    let watch = Stopwatch::start();
+    let record =
+        |curve: &mut Curve, step: usize, t: f64, obj: f64| {
+            curve.push(t, step, obj);
+            if let Some(sink) = events {
+                sink.on_probe(&ProbeEvent {
+                    step: step as u64,
+                    time_s: t,
+                    objective: obj,
+                });
+            }
+        };
+    let obj0 = probe.eval(engine, &l, cfg.optim.lambda) as f64;
+    record(&mut curve, 0, 0.0, obj0);
+    for step in 0..cfg.optim.steps {
+        fill_batch(&data.train, &data.pairs, &mut rng, &mut ds_buf,
+                   &mut dd_buf, bs, bd);
+        let batch = MinibatchRef::new(&ds_buf, &dd_buf, bs, bd, d);
+        engine.step(&mut l, &batch, cfg.optim.lambda, lr.at(step))?;
+        if (step + 1) % probe_every == 0 || step + 1 == cfg.optim.steps {
+            let t = watch.elapsed_s();
+            let obj = probe.eval(engine, &l, cfg.optim.lambda) as f64;
+            record(&mut curve, step + 1, t, obj);
+            ap_trace.push((t, crate::eval::ap_of_l(engine, &l, data)?));
+        }
+    }
+    Ok(SeqOutcome { l, curve, ap_trace, wall_s: watch.elapsed_s() })
+}
+
+fn fill_batch(
+    train: &crate::data::Dataset,
+    pairs: &crate::data::PairSet,
+    rng: &mut Pcg32,
+    ds_buf: &mut [f32],
+    dd_buf: &mut [f32],
+    bs: usize,
+    bd: usize,
+) {
+    let d = train.dim();
+    for r in 0..bs {
+        let p = pairs.similar[rng.index(pairs.similar.len())];
+        train.diff_into(p.i as usize, p.j as usize,
+                        &mut ds_buf[r * d..(r + 1) * d]);
+    }
+    for r in 0..bd {
+        let p = pairs.dissimilar[rng.index(pairs.dissimilar.len())];
+        train.diff_into(p.i as usize, p.j as usize,
+                        &mut dd_buf[r * d..(r + 1) * d]);
+    }
+}

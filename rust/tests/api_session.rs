@@ -1,0 +1,398 @@
+//! The public-API suite: `Session` builder golden tests (the deprecated
+//! shims must stay bit-identical to the session executors), the
+//! `MetricModel` artifact (versioned save/load, error paths, kNN
+//! equivalence with `eval::`), the unified `Run` report shape, and the
+//! `EventSink` feed. CI runs this file in release mode under a hard
+//! timeout (`api-tests`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use dmlps::config::{Consistency, ExperimentConfig, Preset};
+use dmlps::data::ExperimentData;
+use dmlps::dml::native_factory;
+use dmlps::eval::{knn_accuracy, majority_label};
+use dmlps::linalg::Mat;
+use dmlps::session::{
+    config_digest, BroadcastEvent, DoneEvent, EventSink, MetricModel,
+    ProbeEvent, RunKind, Session,
+};
+use dmlps::util::rng::Pcg32;
+
+fn tiny_cfg(steps: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = steps;
+    cfg.cluster.workers = workers;
+    cfg
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+// ---------------------------------------------------------------------
+// Golden: the deprecated shims are pinned bit-identical to the session
+// ---------------------------------------------------------------------
+
+#[test]
+fn sequential_session_matches_deprecated_shim_bit_for_bit() {
+    let cfg = tiny_cfg(60, 1);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+
+    #[allow(deprecated)]
+    let old = {
+        let mut eng = dmlps::dml::NativeEngine::new();
+        dmlps::cli::driver::train_single_thread(&cfg, &data, &mut eng, 20)
+            .unwrap()
+    };
+    let new = Session::from_config(cfg)
+        .data(data)
+        .probe(20, (500, 500))
+        .train_sequential()
+        .unwrap();
+
+    let model = new.require_model().unwrap();
+    assert_eq!(
+        old.l.data, model.l().data,
+        "Session::train_sequential must reproduce the pre-refactor \
+         train_single_thread L bit for bit"
+    );
+    // probes are deterministic too (times are wall-clock and excluded)
+    assert_eq!(old.curve.points.len(), new.curve.points.len());
+    for (a, b) in old.curve.points.iter().zip(&new.curve.points) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.objective, b.objective);
+    }
+    assert_eq!(old.ap_trace.len(), new.ap_trace.len());
+    for (a, b) in old.ap_trace.iter().zip(&new.ap_trace) {
+        assert_eq!(a.1, b.1, "AP trace values must match exactly");
+    }
+}
+
+#[test]
+fn distributed_session_matches_deprecated_run_training_bit_for_bit() {
+    // 1 worker / 1 shard / BSP / mode=none is the deterministic anchor
+    // (integration_ps pins the same setting to hand-rolled sequential
+    // SGD); here the deprecated ps::run_training shim and the Session
+    // executor must agree bit for bit.
+    let mut cfg = tiny_cfg(40, 1);
+    cfg.cluster.consistency = Consistency::Bsp;
+    cfg.cluster.server_shards = 1;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let dataset = Arc::new(dmlps::data::Dataset {
+        x: data.train.x.clone(),
+        labels: data.train.labels.clone(),
+        n_classes: data.train.n_classes,
+    });
+
+    #[allow(deprecated)]
+    let old = dmlps::ps::run_training(
+        &cfg,
+        dataset.clone(),
+        &data.pairs,
+        native_factory(),
+        &dmlps::ps::RunOptions::default(),
+    )
+    .unwrap();
+    let new = Session::from_config(cfg)
+        .engine_factory(native_factory())
+        .pair_source(dataset, data.pairs.clone())
+        .train_distributed()
+        .unwrap();
+
+    assert_eq!(
+        old.l.data,
+        new.require_model().unwrap().l().data,
+        "Session::train_distributed must reproduce the pre-refactor \
+         run_training L bit for bit"
+    );
+    assert_eq!(old.applied_updates, new.applied_updates);
+    assert_eq!(old.slice_updates, new.slice_updates);
+    assert_eq!(old.server_shards, new.server_shards);
+    assert_eq!(old.grad_bytes_received, new.grad_bytes_received);
+}
+
+// ---------------------------------------------------------------------
+// MetricModel: versioned artifact round-trip + error paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn metric_model_save_load_transform_roundtrip_exact() {
+    let cfg = Preset::Tiny.config();
+    let mut l = Mat::zeros(cfg.model.k, cfg.dataset.dim);
+    Pcg32::new(11).fill_gaussian(&mut l.data, 0.0, 0.5);
+    let model = MetricModel::new(l, &cfg);
+
+    let p1 = tmp("dmlps_api_model_1.bin");
+    let p2 = tmp("dmlps_api_model_2.bin");
+    model.save(&p1).unwrap();
+    model.save(&p2).unwrap();
+    // golden: the byte stream is a pure function of the model
+    let (b1, b2) =
+        (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    assert_eq!(b1, b2, "save must be byte-stable across runs");
+    // header = 8 magic + 4 version + 4×8 meta; payload = DMLPSMAT
+    assert_eq!(
+        b1.len(),
+        8 + 4 + 32 + (8 + 16 + 4 * cfg.model.k * cfg.dataset.dim),
+    );
+    assert_eq!(&b1[..8], b"DMLPSMM1");
+
+    let loaded = MetricModel::load(&p1).unwrap();
+    assert_eq!(loaded, model, "load must invert save exactly");
+    assert_eq!(loaded.meta().seed, cfg.seed);
+    assert_eq!(loaded.meta().config_digest, config_digest(&cfg));
+
+    // transform through the reloaded model is bit-identical
+    let mut x = Mat::zeros(7, cfg.dataset.dim);
+    Pcg32::new(5).fill_gaussian(&mut x.data, 0.0, 1.0);
+    assert_eq!(model.transform(&x).data, loaded.transform(&x).data);
+}
+
+#[test]
+fn metric_model_rejects_truncated_and_wrong_magic() {
+    let cfg = Preset::Tiny.config();
+    let mut l = Mat::zeros(4, cfg.dataset.dim);
+    Pcg32::new(3).fill_gaussian(&mut l.data, 0.0, 0.5);
+    let mut cfg4 = cfg.clone();
+    cfg4.model.k = 4;
+    let model = MetricModel::new(l, &cfg4);
+    let path = tmp("dmlps_api_model_err.bin");
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // truncation anywhere — header, meta, payload — must error cleanly
+    for cut in [0, 4, 11, 43, 60, bytes.len() - 1] {
+        let p = tmp("dmlps_api_model_cut.bin");
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(
+            MetricModel::load(&p).is_err(),
+            "truncated at {cut} bytes must not load"
+        );
+    }
+
+    // wrong magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    let p = tmp("dmlps_api_model_magic.bin");
+    std::fs::write(&p, &bad).unwrap();
+    let err = MetricModel::load(&p).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // unsupported format version
+    let mut bad = bytes;
+    bad[8] = 99;
+    let p = tmp("dmlps_api_model_ver.bin");
+    std::fs::write(&p, &bad).unwrap();
+    let err = MetricModel::load(&p).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn metric_model_knn_matches_eval_retrieval() {
+    // the model's knn + majority vote must reproduce eval::knn_accuracy
+    // exactly — same scan kernel, same tie-breaking
+    let cfg = Preset::Tiny.config();
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let mut l = Mat::zeros(cfg.model.k, cfg.dataset.dim);
+    Pcg32::new(21).fill_gaussian(&mut l.data, 0.0, 0.4);
+    let model = MetricModel::new(l.clone(), &cfg);
+
+    for k in [1usize, 3, 5] {
+        let max_test = 60;
+        let n = data.test.n().min(max_test);
+        let gallery = model.project_gallery(&data.train);
+        let mut correct = 0usize;
+        for i in 0..n {
+            let votes: Vec<u32> = model
+                .knn_projected(&gallery, data.test.feature(i), k)
+                .into_iter()
+                .map(|(j, _)| data.train.labels[j])
+                .collect();
+            if majority_label(&votes) == Some(data.test.labels[i]) {
+                correct += 1;
+            }
+        }
+        let via_model = correct as f64 / n as f64;
+        let via_eval =
+            knn_accuracy(Some(&l), &data.train, &data.test, k, max_test);
+        assert_eq!(via_model, via_eval, "k={k}");
+    }
+}
+
+#[test]
+fn metric_model_pair_dist_matches_transform() {
+    let cfg = Preset::Tiny.config();
+    let mut l = Mat::zeros(cfg.model.k, cfg.dataset.dim);
+    Pcg32::new(9).fill_gaussian(&mut l.data, 0.0, 0.4);
+    let model = MetricModel::new(l, &cfg);
+    let d = cfg.dataset.dim;
+    let mut rng = Pcg32::new(2);
+    let mut a = vec![0.0f32; d];
+    let mut b = vec![0.0f32; d];
+    rng.fill_gaussian(&mut a, 0.0, 1.0);
+    rng.fill_gaussian(&mut b, 0.0, 1.0);
+    let dist = model.pair_dist(&a, &b);
+    // against the batch path
+    let mut diffs = Mat::zeros(1, d);
+    for (o, (x, y)) in diffs.data.iter_mut().zip(a.iter().zip(&b)) {
+        *o = x - y;
+    }
+    assert_eq!(model.pair_dists(&diffs), vec![dist]);
+    assert!(dist >= 0.0 && dist.is_finite());
+}
+
+// ---------------------------------------------------------------------
+// Unified Run report + builder ergonomics
+// ---------------------------------------------------------------------
+
+#[test]
+fn run_report_is_unified_across_executors() {
+    let cfg = tiny_cfg(30, 2);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+
+    let dist = Session::from_config(cfg.clone())
+        .data(data.clone())
+        .train_distributed()
+        .unwrap();
+    assert_eq!(dist.kind, RunKind::Distributed);
+    assert_eq!(dist.applied_updates, 60);
+    assert_eq!(dist.worker_stats.len(), 2);
+    assert!(dist.model.is_some());
+    assert!(dist.curve.points.len() >= 2);
+
+    let seq = Session::from_config(cfg.clone())
+        .data(data.clone())
+        .probe(10, (200, 200))
+        .train_sequential()
+        .unwrap();
+    assert_eq!(seq.kind, RunKind::Sequential);
+    assert!(seq.model.is_some());
+    assert!(!seq.ap_trace.is_empty());
+    assert!(seq.worker_stats.is_empty());
+
+    let sim = Session::from_config(cfg)
+        .data(data)
+        .topology(2, 4)
+        .sim_knobs(dmlps::session::SimKnobs {
+            grad_seconds: 0.01,
+            total_updates: 100,
+            ..Default::default()
+        })
+        .simulate()
+        .unwrap();
+    assert_eq!(sim.kind, RunKind::Simulated);
+    assert!(sim.model.is_none());
+    assert!(sim.require_model().is_err());
+    assert!(sim.sim_seconds > 0.0);
+    assert!(sim.applied_updates >= 100, "{}", sim.applied_updates);
+}
+
+#[test]
+fn session_generates_data_when_none_supplied() {
+    let run = Session::from_config(tiny_cfg(20, 2))
+        .train_distributed()
+        .unwrap();
+    assert_eq!(run.applied_updates, 40);
+}
+
+#[test]
+fn simulate_rejects_streaming_and_compressed_configs() {
+    let mut cfg = tiny_cfg(10, 1);
+    cfg.cluster.pairs.mode = dmlps::config::PairMode::Streaming;
+    let err = Session::from_config(cfg).simulate().unwrap_err();
+    assert!(err.to_string().contains("materialized"), "{err}");
+
+    let mut cfg = tiny_cfg(10, 1);
+    cfg.cluster.compression.mode = dmlps::config::CompressionMode::Int8;
+    let err = Session::from_config(cfg).simulate().unwrap_err();
+    assert!(err.to_string().contains("dense"), "{err}");
+}
+
+#[test]
+fn config_digest_tracks_the_config() {
+    let a = Preset::Tiny.config();
+    let mut b = a.clone();
+    assert_eq!(config_digest(&a), config_digest(&b));
+    b.seed = 77;
+    assert_ne!(config_digest(&a), config_digest(&b));
+}
+
+// ---------------------------------------------------------------------
+// EventSink: the sanctioned window into a running session
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct CountingSink {
+    probes: AtomicU64,
+    broadcasts: AtomicU64,
+    dones: AtomicU64,
+}
+
+impl EventSink for CountingSink {
+    fn on_probe(&self, e: &ProbeEvent) {
+        assert!(e.objective.is_finite());
+        self.probes.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_broadcast(&self, e: &BroadcastEvent) {
+        assert!(e.encoded_bytes > 0);
+        self.broadcasts.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_done(&self, e: &DoneEvent) {
+        assert!(e.steps > 0);
+        self.dones.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[test]
+fn event_sink_fed_by_distributed_run() {
+    let sink = Arc::new(CountingSink::default());
+    let run = Session::from_config(tiny_cfg(40, 2))
+        .events(sink.clone())
+        .train_distributed()
+        .unwrap();
+    // every curve point was mirrored to the sink
+    assert_eq!(
+        sink.probes.load(Ordering::SeqCst),
+        run.curve.points.len() as u64
+    );
+    // every broadcast round a shard emitted was reported
+    assert_eq!(sink.broadcasts.load(Ordering::SeqCst), run.broadcasts);
+    // each worker reported completion
+    assert_eq!(sink.dones.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn event_sink_fed_by_sequential_and_simulated_runs() {
+    let sink = Arc::new(CountingSink::default());
+    let run = Session::from_config(tiny_cfg(30, 1))
+        .events(sink.clone())
+        .probe(10, (200, 200))
+        .train_sequential()
+        .unwrap();
+    assert_eq!(
+        sink.probes.load(Ordering::SeqCst),
+        run.curve.points.len() as u64
+    );
+    assert_eq!(sink.dones.load(Ordering::SeqCst), 0);
+
+    let sink = Arc::new(CountingSink::default());
+    let run = Session::from_config(tiny_cfg(10, 1))
+        .events(sink.clone())
+        .topology(1, 2)
+        .sim_knobs(dmlps::session::SimKnobs {
+            grad_seconds: 0.01,
+            total_updates: 50,
+            ..Default::default()
+        })
+        .simulate()
+        .unwrap();
+    assert_eq!(
+        sink.probes.load(Ordering::SeqCst),
+        run.curve.points.len() as u64
+    );
+}

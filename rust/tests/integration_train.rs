@@ -1,26 +1,36 @@
 //! Integration: full train→save→load→eval round trip through the public
-//! API (what `dmlps train --save-model` + `dmlps eval` do).
+//! API (what `dmlps train --save-model` + `dmlps eval` do), on the
+//! `Session` → `MetricModel` surface.
 
-use dmlps::cli::driver::{ap_euclidean, ap_of_l, train_single_thread};
+use std::sync::Arc;
+
 use dmlps::config::Preset;
 use dmlps::data::ExperimentData;
 use dmlps::dml::NativeEngine;
+use dmlps::eval::{ap_euclidean, ap_of_l};
+use dmlps::session::{MetricModel, Session};
 
 #[test]
 fn train_save_load_eval_roundtrip() {
     let mut cfg = Preset::Tiny.config();
     cfg.optim.steps = 600;
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+    let run = Session::from_config(cfg)
+        .data(data.clone())
+        .probe(600, (500, 500))
+        .train_sequential()
+        .unwrap();
+    let model = run.into_model().unwrap();
     let mut eng = NativeEngine::new();
-    let run = train_single_thread(&cfg, &data, &mut eng, 600).unwrap();
-    let ap1 = ap_of_l(&mut eng, &run.l, &data).unwrap();
+    let ap1 = ap_of_l(&mut eng, model.l(), &data).unwrap();
     assert!(ap1 > ap_euclidean(&data), "must beat Euclidean");
 
     let path = std::env::temp_dir().join("dmlps_it_model.bin");
-    run.l.save(&path).unwrap();
-    let l2 = dmlps::linalg::Mat::load(&path).unwrap();
-    assert_eq!(run.l, l2);
-    let ap2 = ap_of_l(&mut eng, &l2, &data).unwrap();
+    model.save(&path).unwrap();
+    let served = MetricModel::load(&path).unwrap();
+    assert_eq!(model, served);
+    let ap2 = ap_of_l(&mut eng, served.l(), &data).unwrap();
     assert_eq!(ap1, ap2);
 }
 
@@ -28,9 +38,10 @@ fn train_save_load_eval_roundtrip() {
 fn curves_are_monotone_in_time_and_steps() {
     let mut cfg = Preset::Tiny.config();
     cfg.optim.steps = 200;
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
-    let mut eng = NativeEngine::new();
-    let run = train_single_thread(&cfg, &data, &mut eng, 40).unwrap();
+    let run = Session::from_config(cfg)
+        .probe(40, (500, 500))
+        .train_sequential()
+        .unwrap();
     for w in run.curve.points.windows(2) {
         assert!(w[1].time_s >= w[0].time_s);
         assert!(w[1].step >= w[0].step);
@@ -42,10 +53,15 @@ fn curves_are_monotone_in_time_and_steps() {
 fn deterministic_given_seed() {
     let mut cfg = Preset::Tiny.config();
     cfg.optim.steps = 100;
-    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
-    let mut e1 = NativeEngine::new();
-    let r1 = train_single_thread(&cfg, &data, &mut e1, 100).unwrap();
-    let mut e2 = NativeEngine::new();
-    let r2 = train_single_thread(&cfg, &data, &mut e2, 100).unwrap();
-    assert_eq!(r1.l, r2.l);
+    let data =
+        Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+    let session = Session::from_config(cfg)
+        .data(data)
+        .probe(100, (500, 500));
+    let r1 = session.train_sequential().unwrap();
+    let r2 = session.train_sequential().unwrap();
+    assert_eq!(
+        r1.require_model().unwrap().l(),
+        r2.require_model().unwrap().l()
+    );
 }
