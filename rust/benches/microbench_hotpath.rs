@@ -1,14 +1,26 @@
 //! Microbenchmarks of the L3 hot-path components: the packed GEMM
-//! kernels behind the native engine, the full sharded `loss_grad` across
-//! thread counts, message-queue throughput, and parameter-copy cost —
-//! the quantities the §Perf optimization loop tracks.
+//! kernels behind the native engine, the full sharded `loss_grad`, the
+//! pair-distance and kNN scan kernels, message-queue throughput, and
+//! parameter-copy cost — the quantities the §Perf optimization loop
+//! tracks.
 //!
-//! Besides the human-readable tables, this bench writes a
-//! machine-readable `BENCH_hotpath.json` (override the path with
-//! `DMLPS_BENCH_OUT`) so future PRs have a standing perf baseline:
-//! GFLOP/s per kernel, per thread count, at the paper's MNIST shapes.
+//! The kernel-bound sections sweep **backend × threads**: every
+//! compiled backend (the bit-exact scalar reference, plus the AVX2+FMA
+//! path when `--features simd` is on and the CPU supports it) is forced
+//! in turn via `linalg::simd::force_backend`, so `BENCH_hotpath.json`
+//! records scalar and SIMD GFLOP/s (and scan GB/s) side by side plus
+//! the dispatch decision `auto` would have made.
+//!
+//! Silent-garbage guard: every measured kernel's output is checked for
+//! NaN/Inf after its timing loop; if any check fails the bench prints
+//! the offending kernels and exits nonzero **without** writing
+//! `BENCH_hotpath.json` — a corrupted baseline is worse than none.
+//!
+//! Besides the human-readable tables, this writes a machine-readable
+//! `BENCH_hotpath.json` (override the path with `DMLPS_BENCH_OUT`).
 
 use dmlps::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
+use dmlps::linalg::simd::{self, KernelBackend};
 use dmlps::linalg::{self, Mat};
 use dmlps::util::bench::Bench;
 use dmlps::util::json::Json;
@@ -16,67 +28,54 @@ use dmlps::util::pool;
 use dmlps::util::rng::Pcg32;
 use std::time::Duration;
 
+/// Record `name` as non-finite if any value in `data` is NaN/Inf.
+fn check_finite(name: &str, data: &[f32], bad: &mut Vec<String>) {
+    if data.iter().any(|v| !v.is_finite()) {
+        bad.push(name.to_string());
+    }
+}
+
 fn main() {
     let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
     let target = Duration::from_millis(if quick { 300 } else { 1500 });
     let mut rng = Pcg32::new(3);
     let mut groups: Vec<Json> = Vec::new();
+    let mut bad: Vec<String> = Vec::new();
 
     // MNIST shapes (paper Table 1 row 1): d=780, k=600, minibatch 500+500
     let d = 780;
     let k = 600;
     let bsz = 500;
+    let gallery_rows = if quick { 1000 } else { 4000 };
 
-    // ---- dot / matmul kernels at mnist shapes ----
-    let mut b = Bench::new("linalg kernels (mnist shapes)")
-        .with_target_time(target);
+    let auto_report = simd::report();
+    println!("kernel dispatch (auto): {auto_report}");
+    let mut backends = vec![KernelBackend::Scalar];
+    if auto_report.compiled_simd && auto_report.cpu_supported {
+        backends.push(KernelBackend::Simd);
+    }
+
     let mut l = Mat::zeros(k, d);
     rng.fill_gaussian(&mut l.data, 0.0, 0.1);
     let mut diffs = Mat::zeros(bsz, d);
     rng.fill_gaussian(&mut diffs.data, 0.0, 1.0);
-
     let va: Vec<f32> = (0..d).map(|i| i as f32 * 0.01).collect();
     let vb: Vec<f32> = (0..d).map(|i| 1.0 - i as f32 * 0.001).collect();
-    b.bench_with_work("dot(780)", Some(2.0 * d as f64), || {
-        std::hint::black_box(linalg::dot(&va, &vb));
-    });
 
-    let z_flops = 2.0 * bsz as f64 * k as f64 * d as f64;
-    b.bench_with_work(
-        &format!(
-            "project Z = D·Lᵀ (500×780 · 780×600, {} threads)",
-            pool::global().threads()
-        ),
-        Some(z_flops),
-        || {
-            std::hint::black_box(diffs.matmul_bt(&l));
-        },
-    );
+    // projected-space gallery + query for the kNN scan (k-dim rows: the
+    // serving layout MetricModel::knn_projected scans)
+    let mut gallery = Mat::zeros(gallery_rows, k);
+    rng.fill_gaussian(&mut gallery.data, 0.0, 1.0);
+    let mut query = vec![0.0f32; k];
+    rng.fill_gaussian(&mut query, 0.0, 1.0);
 
-    let z = diffs.matmul_bt(&l);
-    let mut g = Mat::zeros(k, d);
-    b.bench_with_work(
-        &format!(
-            "outer G = Zᵀ·D (600×500 · 500×780, {} threads)",
-            pool::global().threads()
-        ),
-        Some(z_flops),
-        || {
-            linalg::matmul_at_into(&z, &diffs, &mut g, 0.0);
-        },
-    );
-    b.report();
-    groups.push(b.to_json());
-
-    // ---- full engine step: sharded loss_grad across thread counts ----
-    let mut b = Bench::new("native engine, mnist minibatch")
-        .with_target_time(target);
     let problem = DmlProblem::new(d, k, 1.0);
     let mut dsb = vec![0.0f32; bsz * d];
     let mut ddb = vec![0.0f32; bsz * d];
     rng.fill_gaussian(&mut dsb, 0.0, 1.0);
     rng.fill_gaussian(&mut ddb, 0.0, 1.0);
     let step_flops = problem.step_flops(bsz, bsz);
+    let z_flops = 2.0 * bsz as f64 * k as f64 * d as f64;
 
     // the acceptance-tracked sweep: 1 vs 4 threads (plus the machine
     // default when it differs)
@@ -85,39 +84,162 @@ fn main() {
     if !sweep.contains(&auto) {
         sweep.push(auto);
     }
-    let mut gflops_by_threads: Vec<(String, Json)> = Vec::new();
-    for &threads in &sweep {
-        let mut eng = NativeEngine::with_threads(threads);
+
+    // per-backend metric maps for the machine-readable baseline
+    let mut gflops_by_backend: Vec<(String, Json)> = Vec::new();
+    let mut knn_gbps_by_backend: Vec<(String, Json)> = Vec::new();
+    let mut pair_gflops_by_backend: Vec<(String, Json)> = Vec::new();
+    let mut auto_gflops_by_threads: Vec<(String, Json)> = Vec::new();
+
+    for &be in &backends {
+        simd::force_backend(Some(be));
+        let active = simd::report();
+        assert_eq!(
+            active.backend, be,
+            "forced backend did not take effect"
+        );
+
+        // ---- dot / matmul kernels at mnist shapes ----
+        let mut b = Bench::new(&format!(
+            "linalg kernels (mnist shapes, {be} backend)"
+        ))
+        .with_target_time(target);
+        b.bench_with_work("dot(780)", Some(2.0 * d as f64), || {
+            std::hint::black_box(linalg::simd::dot(&va, &vb));
+        });
+        check_finite(
+            &format!("dot[{be}]"),
+            &[linalg::simd::dot(&va, &vb)],
+            &mut bad,
+        );
+        b.bench_with_work(
+            &format!(
+                "project Z = D·Lᵀ (500×780 · 780×600, {} threads)",
+                pool::global().threads()
+            ),
+            Some(z_flops),
+            || {
+                std::hint::black_box(diffs.matmul_bt(&l));
+            },
+        );
+        let z = diffs.matmul_bt(&l);
+        check_finite(&format!("project[{be}]"), &z.data, &mut bad);
         let mut g = Mat::zeros(k, d);
-        let m = b.bench_with_work(
-            &format!("loss_grad (4 GEMMs + hinge, {threads} threads)"),
+        b.bench_with_work(
+            &format!(
+                "outer G = Zᵀ·D (600×500 · 500×780, {} threads)",
+                pool::global().threads()
+            ),
+            Some(z_flops),
+            || {
+                linalg::matmul_at_into(&z, &diffs, &mut g, 0.0);
+            },
+        );
+        check_finite(&format!("outer[{be}]"), &g.data, &mut bad);
+        b.report();
+        groups.push(b.to_json());
+
+        // ---- full engine step: sharded loss_grad across threads ----
+        let mut b = Bench::new(&format!(
+            "native engine, mnist minibatch ({be} backend)"
+        ))
+        .with_target_time(target);
+        let mut gflops_by_threads: Vec<(String, Json)> = Vec::new();
+        for &threads in &sweep {
+            let mut eng = NativeEngine::with_threads(threads);
+            let mut g = Mat::zeros(k, d);
+            let m = b.bench_with_work(
+                &format!("loss_grad (4 GEMMs + hinge, {threads} threads)"),
+                Some(step_flops),
+                || {
+                    let batch =
+                        MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
+                    eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+                },
+            );
+            gflops_by_threads.push((
+                threads.to_string(),
+                Json::Num(m.throughput().unwrap_or(0.0) / 1e9),
+            ));
+            check_finite(
+                &format!("loss_grad[{be},{threads}t]"),
+                &g.data,
+                &mut bad,
+            );
+        }
+        if be == auto_report.backend {
+            auto_gflops_by_threads = gflops_by_threads.clone();
+        }
+        let mut eng = NativeEngine::new();
+        let mut l2 = l.clone();
+        b.bench_with_work(
+            &format!("step (loss_grad + axpy, {} threads)", eng.threads()),
             Some(step_flops),
             || {
                 let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
-                eng.loss_grad(&l, &batch, 1.0, &mut g).unwrap();
+                eng.step(&mut l2, &batch, 1.0, 1e-7).unwrap();
             },
         );
-        gflops_by_threads.push((
-            threads.to_string(),
+        check_finite(&format!("step[{be}]"), &l2.data, &mut bad);
+        b.report();
+        groups.push(b.to_json());
+        gflops_by_backend.push((
+            be.name().to_string(),
+            Json::Obj(gflops_by_threads.into_iter().collect()),
+        ));
+
+        // ---- scan kernels: pair-distance + blocked kNN ----
+        let mut b = Bench::new(&format!(
+            "scan kernels ({be} backend)"
+        ))
+        .with_target_time(target);
+        let pair_flops = 2.0 * bsz as f64 * k as f64 * d as f64;
+        let mut eng = NativeEngine::new();
+        let m = b.bench_with_work(
+            &format!("pair_dist ({bsz} pairs × k={k} dots, d={d})"),
+            Some(pair_flops),
+            || {
+                std::hint::black_box(
+                    eng.pair_dist(&l, &diffs).unwrap(),
+                );
+            },
+        );
+        pair_gflops_by_backend.push((
+            be.name().to_string(),
             Json::Num(m.throughput().unwrap_or(0.0) / 1e9),
         ));
+        check_finite(
+            &format!("pair_dist[{be}]"),
+            &eng.pair_dist(&l, &diffs).unwrap(),
+            &mut bad,
+        );
+        let scan_bytes = (gallery_rows * k * 4) as f64;
+        let m = b.bench_with_work(
+            &format!(
+                "nearest_k scan ({gallery_rows}×{k} gallery, k=10)"
+            ),
+            Some(scan_bytes),
+            || {
+                std::hint::black_box(dmlps::eval::nearest_k(
+                    &gallery, &query, 10,
+                ));
+            },
+        );
+        knn_gbps_by_backend.push((
+            be.name().to_string(),
+            Json::Num(m.throughput().unwrap_or(0.0) / 1e9),
+        ));
+        let knn_dists: Vec<f32> = dmlps::eval::nearest_k(
+            &gallery, &query, 10,
+        )
+        .into_iter()
+        .map(|(dist, _)| dist)
+        .collect();
+        check_finite(&format!("nearest_k[{be}]"), &knn_dists, &mut bad);
+        b.report();
+        groups.push(b.to_json());
     }
-
-    let mut eng = NativeEngine::new();
-    let mut l2 = l.clone();
-    b.bench_with_work(
-        &format!(
-            "step (loss_grad + axpy, {} threads)",
-            eng.threads()
-        ),
-        Some(step_flops),
-        || {
-            let batch = MinibatchRef::new(&dsb, &ddb, bsz, bsz, d);
-            eng.step(&mut l2, &batch, 1.0, 1e-7).unwrap();
-        },
-    );
-    b.report();
-    groups.push(b.to_json());
+    simd::force_backend(None);
 
     // ---- PS plumbing: queue throughput & parameter copies ----
     let mut b = Bench::new("parameter-server plumbing")
@@ -169,19 +291,53 @@ fn main() {
     b.report();
     groups.push(b.to_json());
 
+    // ---- silent-garbage guard: refuse to write a poisoned baseline ----
+    if !bad.is_empty() {
+        eprintln!(
+            "ERROR: non-finite kernel output in: {} — refusing to \
+             write BENCH_hotpath.json",
+            bad.join(", ")
+        );
+        std::process::exit(1);
+    }
+
     // ---- machine-readable perf baseline ----
     let out = Json::obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("quick", Json::Bool(quick)),
         ("default_threads", Json::Num(auto as f64)),
+        // the backend `auto` dispatch resolves to on this machine/build
+        ("backend", Json::Str(auto_report.backend.name().into())),
+        ("kernel_dispatch", Json::obj(vec![
+            ("backend", Json::Str(auto_report.backend.name().into())),
+            ("lanes", Json::Num(auto_report.lanes as f64)),
+            ("compiled_simd", Json::Bool(auto_report.compiled_simd)),
+            ("cpu_supported", Json::Bool(auto_report.cpu_supported)),
+            ("decision",
+             Json::Str(auto_report.decision.name().into())),
+        ])),
+        ("backends_measured", Json::Arr(
+            backends.iter()
+                .map(|b| Json::Str(b.name().into()))
+                .collect(),
+        )),
         ("shapes", Json::obj(vec![
             ("k", Json::Num(k as f64)),
             ("d", Json::Num(d as f64)),
             ("batch_sim", Json::Num(bsz as f64)),
             ("batch_dis", Json::Num(bsz as f64)),
+            ("knn_gallery_rows", Json::Num(gallery_rows as f64)),
         ])),
+        // auto-backend numbers under the legacy key (perf continuity),
+        // full backend × threads matrix alongside
         ("loss_grad_gflops_by_threads",
-         Json::Obj(gflops_by_threads.into_iter().collect())),
+         Json::Obj(auto_gflops_by_threads.into_iter().collect())),
+        ("loss_grad_gflops_by_backend",
+         Json::Obj(gflops_by_backend.into_iter().collect())),
+        ("pair_dist_gflops_by_backend",
+         Json::Obj(pair_gflops_by_backend.into_iter().collect())),
+        ("knn_scan_gbps_by_backend",
+         Json::Obj(knn_gbps_by_backend.into_iter().collect())),
         ("groups", Json::Arr(groups)),
     ]);
     let path = std::env::var("DMLPS_BENCH_OUT")

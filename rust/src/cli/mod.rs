@@ -236,6 +236,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
          ({} param msgs)",
         run.grad_bytes_received, run.param_bytes_sent, run.param_msgs
     );
+    println!("kernel backend: {}", run.kernel);
     for ws in &run.worker_stats {
         println!(
             "  worker {}: {} steps, {} grads sent ({} dropped, \

@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use super::{Engine, MinibatchRef};
 use crate::linalg::gemm::{gemm_into, KMajor};
-use crate::linalg::{self, Mat};
+use crate::linalg::{simd, Mat};
 use crate::util::pool::{balanced_range, ThreadPool};
 
 /// Per-shard scratch: projections for this shard's row block, a private
@@ -190,12 +190,14 @@ impl Engine for NativeEngine {
                 None,
             );
 
-            // 2) hinge + loss partials, scaling rows in place
+            // 2) hinge + loss partials, scaling rows in place. The
+            // per-row squared distances dispatch through the SIMD
+            // layer; the scalar path is bit-identical to the historical
+            // inline loops (see linalg::simd's determinism contract).
             sh.loss_sim = 0.0;
             for r in 0..nrs {
                 let zrow = &mut sh.zs.data[r * k..(r + 1) * k];
-                sh.loss_sim +=
-                    zrow.iter().map(|z| (z * z) as f64).sum::<f64>();
+                sh.loss_sim += simd::sqnorm_f64(zrow);
                 for v in zrow.iter_mut() {
                     *v *= s_sim;
                 }
@@ -203,7 +205,7 @@ impl Engine for NativeEngine {
             sh.loss_dis = 0.0;
             for r in 0..nrd {
                 let zrow = &mut sh.zd.data[r * k..(r + 1) * k];
-                let dist: f32 = zrow.iter().map(|z| z * z).sum();
+                let dist: f32 = simd::sqnorm(zrow);
                 let hinge = (1.0 - dist).max(0.0);
                 sh.loss_dis += hinge as f64;
                 let w = if dist < 1.0 { s_dis } else { 0.0 };
@@ -253,7 +255,10 @@ impl Engine for NativeEngine {
                 let drow = diffs.row(start + idx);
                 let mut acc = 0.0f32;
                 for j in 0..k {
-                    let z = linalg::dot(drow, l.row(j));
+                    // dispatches to the 8-lane FMA dot when SIMD is
+                    // active; the scalar path is linalg::dot, exactly
+                    // what this loop always called
+                    let z = simd::dot(drow, l.row(j));
                     acc += z * z;
                 }
                 *ov = acc;

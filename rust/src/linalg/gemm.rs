@@ -13,11 +13,19 @@
 //! The kernel follows the BLIS decomposition: the K dimension is split
 //! into panels of [`KC`]; per panel, B̂ is packed once into contiguous
 //! [`NR`]-wide strips and Â is packed on the fly into [`MR`]-wide strips;
-//! an MR×NR register-tile microkernel (8-wide inner loop, LLVM
-//! autovectorizes it to FMA lanes) accumulates each C tile. Output row
+//! an MR×NR register-tile microkernel accumulates each C tile. Output row
 //! strips are distributed over the thread pool; every C element is
 //! written by exactly one strip task with a fixed K-order, so results
 //! are **bit-identical across thread counts**.
+//!
+//! Two register-tile microkernels exist behind one dispatch point
+//! ([`linalg::simd`](crate::linalg::simd)): the scalar reference below
+//! (8-wide inner loop LLVM autovectorizes; bit-exact with the pre-SIMD
+//! kernel, so goldens stay pinned to it) and an explicit AVX2+FMA
+//! 8-lane tile. The backend is resolved **once per `gemm_into` call**
+//! and threaded to every strip task, so one product never mixes
+//! backends — results stay bit-identical across thread counts on
+//! either path.
 //!
 //! Packing buffers are thread-locals reused across calls (take/put, so
 //! nested/helping execution can never observe a borrowed buffer): the
@@ -119,7 +127,9 @@ fn pack_b(b: &KMajor<'_>, p0: usize, p1: usize, out: &mut [f32]) {
     }
 }
 
-/// The register tile: MR×NR accumulators, 8-wide FMA-friendly inner loop.
+/// The scalar register tile: MR×NR accumulators, 8-wide FMA-friendly
+/// inner loop. This is the bit-exact reference the golden tests pin —
+/// its float order must never change.
 #[inline(always)]
 fn microkernel(kc: usize, apack: &[f32], bstrip: &[f32], acc: &mut [[f32; NR]; MR]) {
     for q in 0..kc {
@@ -131,6 +141,24 @@ fn microkernel(kc: usize, apack: &[f32], bstrip: &[f32], acc: &mut [[f32; NR]; M
                 acc[r][c] += ar * b[c];
             }
         }
+    }
+}
+
+/// One register tile through the backend chosen for this `gemm_into`
+/// call: the explicit 8-lane tile when `simd`, else the scalar
+/// reference above.
+#[inline(always)]
+fn microkernel_dispatch(
+    simd: bool,
+    kc: usize,
+    apack: &[f32],
+    bstrip: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    if !crate::linalg::simd::gemm_microkernel_simd(
+        simd, kc, apack, bstrip, acc,
+    ) {
+        microkernel(kc, apack, bstrip, acc);
     }
 }
 
@@ -193,6 +221,7 @@ fn run_strips(
     n: usize,
     p0: usize,
     p1: usize,
+    simd: bool,
     strips: Range<usize>,
 ) {
     let kc = p1 - p0;
@@ -207,7 +236,7 @@ fn run_strips(
                 let w = (n - j0).min(NR);
                 let bstrip = &bpack[sb * kc * NR..(sb + 1) * kc * NR];
                 let mut acc = [[0.0f32; NR]; MR];
-                microkernel(kc, apack, bstrip, &mut acc);
+                microkernel_dispatch(simd, kc, apack, bstrip, &mut acc);
                 // SAFETY: strip `s` owns C rows [i0, i0+h) exclusively.
                 unsafe { store_tile(&acc, cptr, n, i0, h, j0, w) };
             }
@@ -246,6 +275,9 @@ pub fn gemm_into(
     }
     let pool =
         pool.filter(|p| p.threads() > 1 && m * n * kk >= PAR_MIN_MACS);
+    // resolve the microkernel backend once: every strip task of this
+    // product uses the same tile, on any thread
+    let simd = crate::linalg::simd::simd_active();
     let a_strips = m.div_ceil(MR);
     let b_strips = n.div_ceil(NR);
     let cptr = CPtr(c.as_mut_ptr());
@@ -261,11 +293,11 @@ pub fn gemm_into(
             let aref = &a;
             match pool {
                 Some(p) => p.for_each_range(a_strips, |r| {
-                    run_strips(aref, bp, cptr, m, n, p0, p1, r)
+                    run_strips(aref, bp, cptr, m, n, p0, p1, simd, r)
                 }),
-                None => {
-                    run_strips(aref, bp, cptr, m, n, p0, p1, 0..a_strips)
-                }
+                None => run_strips(
+                    aref, bp, cptr, m, n, p0, p1, simd, 0..a_strips,
+                ),
             }
             p0 = p1;
         }

@@ -11,6 +11,7 @@ pub mod eigen;
 pub mod gemm;
 pub mod io;
 pub mod pca;
+pub mod simd;
 
 use self::gemm::KMajor;
 use crate::util::pool;

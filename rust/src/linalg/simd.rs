@@ -1,0 +1,545 @@
+//! Explicit-SIMD kernel layer: the vectorized backend behind the three
+//! hot paths (packed GEMM microkernel, pair-distance scan, kNN gallery
+//! scan), with runtime CPU-feature dispatch and a scalar reference that
+//! stays **bit-identical** to the pre-SIMD code.
+//!
+//! ## Dispatch rules (in priority order)
+//!
+//! 1. Compile time: without the `simd` cargo feature (or off x86_64)
+//!    only the scalar path exists — the vector code is not even built.
+//! 2. Programmatic force ([`force_backend`]) — what the backend-sweep
+//!    benches and the `prop_simd` property suite use.
+//! 3. The `DMLPS_KERNEL` env var: `scalar` | `simd` | `auto` (default).
+//! 4. Runtime CPU detection: `auto` (and `simd`) resolve to the vector
+//!    path only when the CPU reports AVX2 + FMA; anything else falls
+//!    back to scalar. A forced/env `simd` request on an unsupported CPU
+//!    degrades to scalar and says so in the [`KernelReport`].
+//!
+//! ## Determinism contract
+//!
+//! * The **scalar** path is the reference: its code is byte-for-byte
+//!   the pre-SIMD implementation, so every golden test pinned before
+//!   this layer existed still holds with the feature off, on a non-AVX2
+//!   CPU, or under `DMLPS_KERNEL=scalar`.
+//! * The **SIMD** path is ε-tolerant: FMA contraction and 8-lane
+//!   reassociation change float rounding, bounded by the `prop_simd`
+//!   suite (≤ 4 ULP on monotone inputs at the tested shapes). Within
+//!   one backend, results remain bit-reproducible run-to-run and across
+//!   thread counts — lane order and reduction shape are fixed.
+//! * Comparative golden tests (shim ≡ session, distributed ≡
+//!   sequential, save/save byte equality) compare two code paths inside
+//!   one process, which always resolve to the same backend, so they
+//!   pass under either.
+//!
+//! The 8-lane width is [`LANES`]; the vector type is a thin wrapper
+//! over `core::arch` AVX intrinsics (`__m256`), compiled only under
+//! `--features simd` on x86_64.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Vector width of the SIMD path (f32 lanes per register).
+pub const LANES: usize = 8;
+
+/// Which kernel implementation actually runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Bit-exact reference path (the pre-SIMD code, unchanged).
+    Scalar,
+    /// 8-lane AVX2+FMA path (ε-tolerant vs scalar).
+    Simd,
+}
+
+impl KernelBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How the active backend was decided — surfaced through [`KernelReport`]
+/// so benches and `Run` telemetry record *why* a path ran, not just which.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchDecision {
+    /// Crate built without the `simd` feature (or not on x86_64):
+    /// scalar is the only compiled path.
+    NotCompiled,
+    /// [`force_backend`] override (benches / property tests).
+    Forced,
+    /// `DMLPS_KERNEL` env var picked the backend.
+    Env,
+    /// `auto`: runtime CPU detection picked the best compiled path.
+    Auto,
+    /// SIMD was requested (env or force) but the CPU lacks AVX2+FMA;
+    /// degraded to scalar.
+    UnsupportedCpu,
+}
+
+impl DispatchDecision {
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchDecision::NotCompiled => "not-compiled",
+            DispatchDecision::Forced => "forced",
+            DispatchDecision::Env => "env",
+            DispatchDecision::Auto => "auto",
+            DispatchDecision::UnsupportedCpu => "unsupported-cpu",
+        }
+    }
+}
+
+/// Snapshot of the kernel dispatch state: which backend runs, how wide
+/// it is, and why it was chosen. Attached to every
+/// [`Run`](crate::session::Run) and written into `BENCH_hotpath.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelReport {
+    /// The backend kernel calls dispatch to right now.
+    pub backend: KernelBackend,
+    /// f32 lanes per vector op (8 on the SIMD path, 1 scalar).
+    pub lanes: usize,
+    /// Whether the vector path was compiled in (`simd` feature, x86_64).
+    pub compiled_simd: bool,
+    /// Whether the CPU reports AVX2 + FMA (always false when not
+    /// compiled — detection is skipped).
+    pub cpu_supported: bool,
+    /// Why this backend was selected.
+    pub decision: DispatchDecision,
+}
+
+impl std::fmt::Display for KernelReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({} lane{}, {})",
+            self.backend,
+            self.lanes,
+            if self.lanes == 1 { "" } else { "s" },
+            self.decision.name()
+        )
+    }
+}
+
+/// Whether the vector path exists in this build at all.
+#[inline]
+pub const fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+fn cpu_supported() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        static OK: OnceLock<bool> = OnceLock::new();
+        return *OK.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        });
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    false
+}
+
+/// Backend requested by `DMLPS_KERNEL` (`None` = auto / unset /
+/// unrecognized — unknown values fall back to auto rather than abort).
+fn env_request() -> Option<KernelBackend> {
+    static ENV: OnceLock<Option<KernelBackend>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("DMLPS_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("scalar") => {
+            Some(KernelBackend::Scalar)
+        }
+        Ok(v) if v.eq_ignore_ascii_case("simd") => Some(KernelBackend::Simd),
+        _ => None,
+    })
+}
+
+/// Programmatic override slot: 0 = none (env/auto), 1 = scalar, 2 = simd.
+static FORCE: AtomicU8 = AtomicU8::new(0);
+
+/// Force a backend for the current process (pass `None` to return to
+/// env/auto resolution). Overrides the `DMLPS_KERNEL` env var.
+///
+/// Intended for benches sweeping backends and for the `prop_simd`
+/// property suite; the override is process-global, so concurrent tests
+/// that force different backends must serialize around it (a forced
+/// `Simd` on an unsupported CPU still degrades to scalar).
+pub fn force_backend(backend: Option<KernelBackend>) {
+    let v = match backend {
+        None => 0,
+        Some(KernelBackend::Scalar) => 1,
+        Some(KernelBackend::Simd) => 2,
+    };
+    FORCE.store(v, Ordering::Release);
+}
+
+/// The backend kernel calls dispatch to right now (cheap: one atomic
+/// load on the no-override path).
+#[inline]
+pub fn active_backend() -> KernelBackend {
+    report().backend
+}
+
+/// Full dispatch snapshot — see [`KernelReport`].
+pub fn report() -> KernelReport {
+    let compiled = simd_compiled();
+    let cpu = cpu_supported();
+    let (requested, how) = match FORCE.load(Ordering::Acquire) {
+        1 => (Some(KernelBackend::Scalar), DispatchDecision::Forced),
+        2 => (Some(KernelBackend::Simd), DispatchDecision::Forced),
+        _ => match env_request() {
+            Some(b) => (Some(b), DispatchDecision::Env),
+            None => (None, DispatchDecision::Auto),
+        },
+    };
+    let (backend, decision) = match requested {
+        Some(KernelBackend::Scalar) => (KernelBackend::Scalar, how),
+        Some(KernelBackend::Simd) if !compiled => {
+            (KernelBackend::Scalar, DispatchDecision::NotCompiled)
+        }
+        Some(KernelBackend::Simd) if !cpu => {
+            (KernelBackend::Scalar, DispatchDecision::UnsupportedCpu)
+        }
+        Some(KernelBackend::Simd) => (KernelBackend::Simd, how),
+        None if compiled && cpu => {
+            (KernelBackend::Simd, DispatchDecision::Auto)
+        }
+        None if compiled => (KernelBackend::Scalar, DispatchDecision::Auto),
+        None => (KernelBackend::Scalar, DispatchDecision::NotCompiled),
+    };
+    KernelReport {
+        backend,
+        lanes: if backend == KernelBackend::Simd { LANES } else { 1 },
+        compiled_simd: compiled,
+        cpu_supported: cpu,
+        decision,
+    }
+}
+
+/// `true` iff kernel calls should take the vector path right now.
+#[inline]
+pub fn simd_active() -> bool {
+    // fast path: no force, no env request, detection cached
+    active_backend() == KernelBackend::Simd
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference kernels — byte-for-byte the pre-SIMD implementations
+// (goldens are pinned to these; do not "improve" their float order).
+// ---------------------------------------------------------------------
+
+/// Squared Euclidean distance Σ (a−b)², sequential f32 accumulation —
+/// exactly the historical `eval::nearest_k` inner loop.
+#[inline]
+pub fn sqdist_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Squared norm Σ x², sequential f32 accumulation — exactly the
+/// historical hinge-pass `zrow.iter().map(|z| z * z).sum()`.
+#[inline]
+pub fn sqnorm_scalar(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum()
+}
+
+/// Squared norm with per-element f64 accumulation — exactly the
+/// historical similar-pair loss accumulation.
+#[inline]
+pub fn sqnorm_f64_scalar(x: &[f32]) -> f64 {
+    x.iter().map(|v| (v * v) as f64).sum()
+}
+
+// ---------------------------------------------------------------------
+// Dispatching primitives: scalar path bit-exact, SIMD path ε-tolerant.
+// ---------------------------------------------------------------------
+
+/// Dot product. Scalar path is [`crate::linalg::dot`] (the historical
+/// 4-accumulator kernel `NativeEngine::pair_dist` always used).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: dispatch verified AVX2+FMA before selecting this path.
+        return unsafe { avx::dot(a, b) };
+    }
+    crate::linalg::dot(a, b)
+}
+
+/// Squared Euclidean distance Σ (a−b)².
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: dispatch verified AVX2+FMA before selecting this path.
+        return unsafe { avx::sqdist(a, b) };
+    }
+    sqdist_scalar(a, b)
+}
+
+/// Squared norm Σ x² in f32.
+#[inline]
+pub fn sqnorm(x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: dispatch verified AVX2+FMA before selecting this path.
+        return unsafe { avx::sqnorm(x) };
+    }
+    sqnorm_scalar(x)
+}
+
+/// Squared norm accumulated toward f64 (the loss-curve accumulator).
+/// The SIMD path sums 8 f32 lanes then widens once; the scalar path
+/// widens per element exactly as the historical code did.
+#[inline]
+pub fn sqnorm_f64(x: &[f32]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd_active() {
+        // SAFETY: dispatch verified AVX2+FMA before selecting this path.
+        return unsafe { avx::sqnorm(x) } as f64;
+    }
+    sqnorm_f64_scalar(x)
+}
+
+/// The vectorized GEMM register tile: `acc[r][c] += Σ_q apack[q·MR+r] ·
+/// bstrip[q·NR+c]` with NR = [`LANES`]. Returns `false` when the vector
+/// path is unavailable or inactive (caller then runs the scalar
+/// microkernel, keeping that code byte-identical to the reference).
+#[inline(always)]
+#[allow(unused_variables)]
+pub(crate) fn gemm_microkernel_simd(
+    simd: bool,
+    kc: usize,
+    apack: &[f32],
+    bstrip: &[f32],
+    acc: &mut [[f32; crate::linalg::gemm::NR]; crate::linalg::gemm::MR],
+) -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd {
+        // SAFETY: `simd` is only true after dispatch verified AVX2+FMA.
+        unsafe { avx::gemm_microkernel(kc, apack, bstrip, acc) };
+        return true;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// AVX2 + FMA implementations (compiled only with `--features simd` on
+// x86_64; entered only after runtime detection).
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    use crate::linalg::gemm::{MR, NR};
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of 8 lanes with a fixed tree shape:
+    /// (0+4, 1+5, 2+6, 3+7) → ((0+4)+(2+6), (1+5)+(3+7)) → total.
+    #[inline(always)]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// 8-lane FMA dot product: two independent vector accumulators
+    /// (breaking the FMA latency chain), scalar remainder tail.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 2 * NR <= n {
+            s0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+                s0,
+            );
+            s1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + NR)),
+                _mm256_loadu_ps(pb.add(i + NR)),
+                s1,
+            );
+            i += 2 * NR;
+        }
+        if i + NR <= n {
+            s0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+                s0,
+            );
+            i += NR;
+        }
+        let mut acc = hsum(_mm256_add_ps(s0, s1));
+        while i < n {
+            acc += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        acc
+    }
+
+    /// 8-lane squared distance: d = a − b, acc = fma(d, d, acc).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 2 * NR <= n {
+            let d0 = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+            );
+            let d1 = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i + NR)),
+                _mm256_loadu_ps(pb.add(i + NR)),
+            );
+            s0 = _mm256_fmadd_ps(d0, d0, s0);
+            s1 = _mm256_fmadd_ps(d1, d1, s1);
+            i += 2 * NR;
+        }
+        if i + NR <= n {
+            let d = _mm256_sub_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+            );
+            s0 = _mm256_fmadd_ps(d, d, s0);
+            i += NR;
+        }
+        let mut acc = hsum(_mm256_add_ps(s0, s1));
+        while i < n {
+            let d = *pa.add(i) - *pb.add(i);
+            acc += d * d;
+            i += 1;
+        }
+        acc
+    }
+
+    /// 8-lane squared norm: acc = fma(x, x, acc).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sqnorm(x: &[f32]) -> f32 {
+        let n = x.len();
+        let p = x.as_ptr();
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 2 * NR <= n {
+            let v0 = _mm256_loadu_ps(p.add(i));
+            let v1 = _mm256_loadu_ps(p.add(i + NR));
+            s0 = _mm256_fmadd_ps(v0, v0, s0);
+            s1 = _mm256_fmadd_ps(v1, v1, s1);
+            i += 2 * NR;
+        }
+        if i + NR <= n {
+            let v = _mm256_loadu_ps(p.add(i));
+            s0 = _mm256_fmadd_ps(v, v, s0);
+            i += NR;
+        }
+        let mut acc = hsum(_mm256_add_ps(s0, s1));
+        while i < n {
+            acc += *p.add(i) * *p.add(i);
+            i += 1;
+        }
+        acc
+    }
+
+    /// The MR×NR register tile on 8-lane FMA: one B vector load per
+    /// depth step, MR broadcast-FMAs into MR vector accumulators. Same
+    /// tile contract as the scalar microkernel (accumulates into `acc`,
+    /// zero-padded edges included), different rounding (FMA).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_microkernel(
+        kc: usize,
+        apack: &[f32],
+        bstrip: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(apack.len() >= kc * MR);
+        debug_assert!(bstrip.len() >= kc * NR);
+        let (pa, pb) = (apack.as_ptr(), bstrip.as_ptr());
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        for q in 0..kc {
+            let b = _mm256_loadu_ps(pb.add(q * NR));
+            c0 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(q * MR)), b, c0);
+            c1 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(q * MR + 1)), b, c1);
+            c2 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(q * MR + 2)), b, c2);
+            c3 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(q * MR + 3)), b, c3);
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+
+    // The tile kernel above hard-codes 4 accumulator registers.
+    const _: () = assert!(MR == 4 && NR == 8);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_primitives_match_inline_loops_bitwise() {
+        let x: Vec<f32> = (0..103).map(|i| (i as f32).sin()).collect();
+        let y: Vec<f32> = (0..103).map(|i| (i as f32).cos()).collect();
+        let want_sqd: f32 =
+            x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert_eq!(sqdist_scalar(&x, &y).to_bits(), want_sqd.to_bits());
+        let want_sqn: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(sqnorm_scalar(&x).to_bits(), want_sqn.to_bits());
+        let want_sqn64: f64 = x.iter().map(|v| (v * v) as f64).sum();
+        assert_eq!(
+            sqnorm_f64_scalar(&x).to_bits(),
+            want_sqn64.to_bits()
+        );
+    }
+
+    #[test]
+    fn report_is_internally_consistent() {
+        let r = report();
+        assert_eq!(r.compiled_simd, simd_compiled());
+        match r.backend {
+            KernelBackend::Simd => {
+                assert_eq!(r.lanes, LANES);
+                assert!(r.compiled_simd && r.cpu_supported);
+            }
+            KernelBackend::Scalar => assert_eq!(r.lanes, 1),
+        }
+        if !r.compiled_simd {
+            assert!(!r.cpu_supported);
+            assert_eq!(r.backend, KernelBackend::Scalar);
+        }
+    }
+
+    #[test]
+    fn display_formats() {
+        let r = KernelReport {
+            backend: KernelBackend::Scalar,
+            lanes: 1,
+            compiled_simd: false,
+            cpu_supported: false,
+            decision: DispatchDecision::NotCompiled,
+        };
+        assert_eq!(r.to_string(), "scalar (1 lane, not-compiled)");
+    }
+}

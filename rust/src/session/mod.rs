@@ -71,6 +71,8 @@ pub use events::{BroadcastEvent, DoneEvent, EventSink, ProbeEvent};
 pub use model::{config_digest, MetricModel, ModelMeta};
 pub use sim::{calibrate_for, sim_scaled, SimKnobs, SimScaled};
 
+pub use crate::linalg::simd::{KernelBackend, KernelReport};
+
 pub(crate) use dist::run_distributed;
 pub(crate) use seq::run_sequential;
 pub(crate) use sim::run_simulated;
@@ -134,6 +136,9 @@ pub struct Run {
     pub sim_seconds: f64,
     /// Mean update staleness (simulated runs).
     pub mean_staleness: f64,
+    /// Which compute-kernel backend (scalar reference vs explicit SIMD)
+    /// served this run's GEMM/scan hot paths, and why dispatch chose it.
+    pub kernel: KernelReport,
 }
 
 impl Run {
@@ -155,6 +160,7 @@ impl Run {
             ap_trace: ApTrace::new(),
             sim_seconds: 0.0,
             mean_staleness: 0.0,
+            kernel: crate::linalg::simd::report(),
         }
     }
 
