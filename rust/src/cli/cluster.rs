@@ -1,0 +1,405 @@
+//! Process-mode subcommands: `dmlps cluster` (the manager) and
+//! `dmlps node` (one server or worker role).
+//!
+//! The manager resolves the experiment config once, writes it to a run
+//! directory, then spawns `current_exe() node --role ...` for the
+//! server and each worker — secretsharing-testbed style: one binary,
+//! the manager mode orchestrates, the node mode executes a role. Nodes
+//! do not receive datasets over the wire; each regenerates dataset /
+//! initial L / pair partition deterministically from the shared config
+//! + seed (see `session::dist`), so the only cross-process traffic is
+//! the PS protocol itself on the socket transport (`ps::net`).
+//!
+//! Each node writes a JSON report; the manager collects them, checks
+//! the per-worker `grads_sent + grads_dropped == steps` accounting
+//! identity, and writes a combined `cluster.json`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ExperimentConfig, NetConfig};
+use crate::data::ExperimentData;
+use crate::ps::net::{NetAddr, NetServer, NetWorkerTransport, RetryPolicy};
+use crate::ps::{RunOptions, Transport, TransportStats};
+use crate::session::{
+    plan_for, run_server_node, run_worker_node, MetricModel,
+};
+use crate::util::cli::{ArgParser, Args};
+use crate::util::json::Json;
+
+use super::{common_parser, load_config, ProgressSink};
+
+// ---------------------------------------------------------------------
+// shared flag plumbing
+// ---------------------------------------------------------------------
+
+/// Socket flags shared by `cluster` and `node`. Defaults come from
+/// [`NetConfig::default`] so the knobs have one source of truth.
+fn with_net_opts(p: ArgParser, default_addr: &str) -> ArgParser {
+    let nd = NetConfig::default();
+    p.opt("addr", default_addr,
+          "server address: host:port (port 0 = auto-pick) or unix:/path")
+        .opt("connect-attempts", &nd.connect_attempts.to_string(),
+             "worker connect attempts before giving up")
+        .opt("backoff-ms", &nd.backoff_ms.to_string(),
+             "first connect-retry backoff in ms (doubles per attempt)")
+        .opt("max-backoff-ms", &nd.max_backoff_ms.to_string(),
+             "connect-retry backoff ceiling in ms")
+}
+
+fn net_from_args(a: &Args) -> anyhow::Result<NetConfig> {
+    let net = NetConfig {
+        addr: a.get("addr").to_string(),
+        connect_attempts: a.get_u64("connect-attempts")? as u32,
+        backoff_ms: a.get_u64("backoff-ms")?,
+        max_backoff_ms: a.get_u64("max-backoff-ms")?,
+    };
+    anyhow::ensure!(net.connect_attempts > 0,
+                    "--connect-attempts must be >= 1");
+    Ok(net)
+}
+
+fn retry_policy(net: &NetConfig) -> RetryPolicy {
+    RetryPolicy {
+        attempts: net.connect_attempts,
+        initial_backoff: Duration::from_millis(net.backoff_ms),
+        max_backoff: Duration::from_millis(net.max_backoff_ms),
+    }
+}
+
+fn stats_json(s: &TransportStats) -> Json {
+    Json::obj(vec![
+        ("frames_sent", Json::Num(s.frames_sent as f64)),
+        ("frames_received", Json::Num(s.frames_received as f64)),
+        ("bytes_sent", Json::Num(s.bytes_sent as f64)),
+        ("bytes_received", Json::Num(s.bytes_received as f64)),
+        ("rejected_frames", Json::Num(s.rejected_frames as f64)),
+    ])
+}
+
+fn write_report(path: &str, j: &Json) -> anyhow::Result<()> {
+    if !path.is_empty() {
+        std::fs::write(path, j.to_string_pretty())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// `dmlps node` — one role of a process-mode run
+// ---------------------------------------------------------------------
+
+pub fn cmd_node(args: &[String]) -> anyhow::Result<()> {
+    let p = with_net_opts(
+        common_parser("dmlps node",
+                      "one server/worker role over the socket transport"),
+        &NetConfig::default().addr,
+    )
+    .req("role", "server|worker")
+    .opt("worker-id", "0", "this node's worker slot (worker role)")
+    .opt("engine", "auto", "native|xla|auto (worker role)")
+    .opt("report", "", "write this role's JSON report to this path")
+    .opt("save-model", "",
+         "write the learned metric model here (server role)");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+    let net = net_from_args(&a)?;
+    let addr = NetAddr::parse(&net.addr)?;
+    match a.get("role") {
+        "server" => node_server(&a, &cfg, &addr),
+        "worker" => node_worker(&a, &cfg, &addr, retry_policy(&net)),
+        other => anyhow::bail!("--role must be server|worker, got '{other}'"),
+    }
+}
+
+fn node_server(
+    a: &Args,
+    cfg: &ExperimentConfig,
+    addr: &NetAddr,
+) -> anyhow::Result<()> {
+    let plan = plan_for(cfg);
+    let server = NetServer::bind(addr)?;
+    println!(
+        "node server: listening on {} ({} workers, {} shards, {})",
+        server.local_addr()?, cfg.cluster.workers, plan.shards(),
+        cfg.cluster.consistency,
+    );
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
+    let ExperimentData { train, pairs, .. } = data;
+    let mut transport = server.accept_workers(&plan, cfg.cluster.workers)?;
+    let opts = RunOptions::default();
+    let r = run_server_node(
+        cfg,
+        Arc::new(train),
+        &pairs,
+        &opts,
+        Some(Arc::new(ProgressSink)),
+        &mut transport,
+    )?;
+    let stats = transport.finish();
+    println!(
+        "node server done in {:.2}s: {} updates applied, last loss \
+         {:.4}, {} misroutes, {} rejected frames",
+        r.wall_s, r.applied_updates, r.last_loss, r.misroutes,
+        stats.rejected_frames,
+    );
+    if !a.get("save-model").is_empty() {
+        let model = MetricModel::new(r.l.clone(), cfg);
+        model.save(Path::new(a.get("save-model")))?;
+        println!("model saved to {}", a.get("save-model"));
+    }
+    write_report(a.get("report"), &Json::obj(vec![
+        ("role", Json::Str("server".into())),
+        ("applied_updates", Json::Num(r.applied_updates as f64)),
+        ("slice_updates", Json::Num(r.slice_updates as f64)),
+        ("broadcasts", Json::Num(r.broadcasts as f64)),
+        ("param_msgs", Json::Num(r.param_msgs as f64)),
+        ("server_shards", Json::Num(r.server_shards as f64)),
+        ("last_loss", Json::Num(r.last_loss as f64)),
+        ("grad_bytes_received",
+         Json::Num(r.grad_bytes_received as f64)),
+        ("param_bytes_sent", Json::Num(r.param_bytes_sent as f64)),
+        ("misroutes", Json::Num(r.misroutes as f64)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("final_objective",
+         Json::Num(r.curve.final_objective().unwrap_or(f64::NAN))),
+        ("transport", stats_json(&stats)),
+    ]))?;
+    Ok(())
+}
+
+fn node_worker(
+    a: &Args,
+    cfg: &ExperimentConfig,
+    addr: &NetAddr,
+    policy: RetryPolicy,
+) -> anyhow::Result<()> {
+    let w = a.get_usize("worker-id")?;
+    let plan = plan_for(cfg);
+    println!(
+        "node worker {w}: connecting to {addr} ({} steps, engine {})",
+        cfg.optim.steps, a.get("engine"),
+    );
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
+    let ExperimentData { train, pairs, .. } = data;
+    let engines = crate::dml::engine_factory(a.get("engine"), cfg)?;
+    let mut transport =
+        NetWorkerTransport::connect(addr, w, &plan, policy)?;
+    let opts = RunOptions::default();
+    let ws = run_worker_node(
+        cfg,
+        w,
+        Arc::new(train),
+        &pairs,
+        engines,
+        &opts,
+        Some(Arc::new(ProgressSink)),
+        &mut transport,
+    )?;
+    let stats = transport.finish();
+    println!(
+        "node worker {w} done: {} steps, {} grads sent ({} dropped), \
+         waited {:.2}s",
+        ws.steps_done, ws.grads_sent, ws.grads_dropped, ws.wait_s,
+    );
+    write_report(a.get("report"), &Json::obj(vec![
+        ("role", Json::Str("worker".into())),
+        ("worker", Json::Num(w as f64)),
+        ("steps_done", Json::Num(ws.steps_done as f64)),
+        ("grads_sent", Json::Num(ws.grads_sent as f64)),
+        ("grads_dropped", Json::Num(ws.grads_dropped as f64)),
+        ("params_received", Json::Num(ws.params_received as f64)),
+        ("wait_s", Json::Num(ws.wait_s)),
+        ("max_staleness", Json::Num(ws.max_staleness as f64)),
+        ("last_loss", Json::Num(ws.last_loss as f64)),
+        ("grad_bytes_sent", Json::Num(ws.grad_bytes_sent as f64)),
+        ("param_bytes_received",
+         Json::Num(ws.param_bytes_received as f64)),
+        ("transport", stats_json(&stats)),
+    ]))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// `dmlps cluster` — the manager
+// ---------------------------------------------------------------------
+
+pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
+    let p = with_net_opts(
+        common_parser("dmlps cluster",
+                      "spawn a server + worker process cluster and \
+                       drive one run"),
+        "127.0.0.1:0",
+    )
+    .opt("engine", "auto", "worker engine: native|xla|auto")
+    .opt("run-dir", "",
+         "directory for config + report files (default: a fresh \
+          temp dir)")
+    .opt("timeout-s", "600", "kill the run after this many seconds")
+    .opt("save-model", "",
+         "have the server write the learned metric model here");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+    let net = net_from_args(&a)?;
+    let addr = resolve_addr(&net.addr)?;
+    let p_workers = cfg.cluster.workers;
+
+    let run_dir = if a.get("run-dir").is_empty() {
+        std::env::temp_dir()
+            .join(format!("dmlps-cluster-{}", std::process::id()))
+    } else {
+        PathBuf::from(a.get("run-dir"))
+    };
+    std::fs::create_dir_all(&run_dir)?;
+    let cfg_path = run_dir.join("config.json");
+    cfg.save(&cfg_path)?;
+    println!(
+        "cluster: {} workers + 1 server on {addr}, run dir {}",
+        p_workers, run_dir.display(),
+    );
+
+    let exe = std::env::current_exe()?;
+    let mut children: Vec<(String, Child)> = Vec::new();
+    let server_report = run_dir.join("server.json");
+    let mut sc = node_command(&exe, "server", &cfg, &cfg_path, &addr, &a);
+    sc.arg("--report").arg(&server_report);
+    if !a.get("save-model").is_empty() {
+        sc.arg("--save-model").arg(a.get("save-model"));
+    }
+    children.push(("server".into(), sc.spawn()?));
+    let mut worker_reports = Vec::new();
+    for w in 0..p_workers {
+        let report = run_dir.join(format!("worker{w}.json"));
+        let mut wc =
+            node_command(&exe, "worker", &cfg, &cfg_path, &addr, &a);
+        wc.arg("--worker-id").arg(w.to_string())
+            .arg("--engine").arg(a.get("engine"))
+            .arg("--report").arg(&report);
+        worker_reports.push(report);
+        children.push((format!("worker {w}"), wc.spawn()?));
+    }
+
+    wait_all(&mut children, a.get_u64("timeout-s")?)?;
+
+    // ---- collect reports, check the accounting identity ----
+    let server = Json::parse_file(&server_report)?;
+    println!(
+        "cluster done: {} updates applied, final objective {:.4}, \
+         {} misroutes",
+        server.get("applied_updates").as_f64().unwrap_or(f64::NAN),
+        server.get("final_objective").as_f64().unwrap_or(f64::NAN),
+        server.get("misroutes").as_f64().unwrap_or(f64::NAN),
+    );
+    let steps = cfg.optim.steps as f64;
+    let mut workers = Vec::new();
+    for (w, path) in worker_reports.iter().enumerate() {
+        let r = Json::parse_file(path)?;
+        let sent = r.get("grads_sent").as_f64().unwrap_or(f64::NAN);
+        let dropped = r.get("grads_dropped").as_f64().unwrap_or(f64::NAN);
+        println!(
+            "  worker {w}: sent {sent} + dropped {dropped} \
+             (= {steps} steps: {})",
+            if sent + dropped == steps { "ok" } else { "MISMATCH" },
+        );
+        anyhow::ensure!(
+            sent + dropped == steps,
+            "worker {w} accounting identity broken: \
+             {sent} sent + {dropped} dropped != {steps} steps"
+        );
+        workers.push(r);
+    }
+    let combined = Json::obj(vec![
+        ("addr", Json::Str(addr.clone())),
+        ("config", Json::Str(cfg_path.display().to_string())),
+        ("server", server),
+        ("workers", Json::Arr(workers)),
+    ]);
+    let combined_path = run_dir.join("cluster.json");
+    std::fs::write(&combined_path, combined.to_string_pretty())?;
+    println!("combined report: {}", combined_path.display());
+    Ok(())
+}
+
+/// Resolve `host:0` to a concrete kernel-chosen port by briefly binding
+/// it. The listener is dropped before the server node rebinds; on
+/// localhost the window for another process to steal the port is
+/// negligible, and a steal fails loudly at the server's bind.
+fn resolve_addr(requested: &str) -> anyhow::Result<String> {
+    if requested.starts_with("unix:") || !requested.ends_with(":0") {
+        return Ok(requested.to_string());
+    }
+    let l = std::net::TcpListener::bind(requested)?;
+    Ok(l.local_addr()?.to_string())
+}
+
+/// Base `dmlps node` invocation. `--seed` travels explicitly because
+/// `load_config` applies the CLI seed unconditionally (its default
+/// would otherwise clobber the config file's seed in the child).
+fn node_command(
+    exe: &Path,
+    role: &str,
+    cfg: &ExperimentConfig,
+    cfg_path: &Path,
+    addr: &str,
+    a: &Args,
+) -> Command {
+    let mut c = Command::new(exe);
+    c.arg("node")
+        .arg("--role").arg(role)
+        .arg("--config").arg(cfg_path)
+        .arg("--seed").arg(cfg.seed.to_string())
+        .arg("--addr").arg(addr)
+        .arg("--connect-attempts").arg(a.get("connect-attempts"))
+        .arg("--backoff-ms").arg(a.get("backoff-ms"))
+        .arg("--max-backoff-ms").arg(a.get("max-backoff-ms"));
+    c
+}
+
+/// Poll every child until all exit cleanly; kill the whole run on the
+/// first failure or on timeout so no node is orphaned.
+fn wait_all(
+    children: &mut Vec<(String, Child)>,
+    timeout_s: u64,
+) -> anyhow::Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(timeout_s.max(1));
+    let mut done = vec![false; children.len()];
+    let mut failure: Option<String> = None;
+    while !done.iter().all(|&d| d) {
+        if Instant::now() > deadline {
+            failure = Some(format!(
+                "cluster run exceeded --timeout-s {timeout_s}"
+            ));
+            break;
+        }
+        for (i, (name, child)) in children.iter_mut().enumerate() {
+            if done[i] {
+                continue;
+            }
+            match child.try_wait()? {
+                Some(status) if status.success() => done[i] = true,
+                Some(status) => {
+                    failure = Some(format!("{name} exited with {status}"));
+                    break;
+                }
+                None => {}
+            }
+        }
+        if failure.is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if let Some(why) = failure {
+        for (_, child) in children.iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        anyhow::bail!("{why} (all nodes killed)");
+    }
+    Ok(())
+}

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! dmlps train    --preset mnist --workers 2 --engine auto [--save-model f]
+//! dmlps cluster  --preset tiny --workers 2 [--addr 127.0.0.1:0]
+//! dmlps node     --role server|worker --config f.json --addr host:port
 //! dmlps simulate --preset mnist --cores 16,32,64,128,256
 //! dmlps eval     --preset mnist --model f.bin
 //! dmlps gen-data --preset mnist
@@ -13,6 +15,7 @@
 //! versioned [`MetricModel`](crate::session::MetricModel) artifact that
 //! `eval` reloads and serves (legacy bare-`Mat` model files still load).
 
+pub mod cluster;
 pub mod driver;
 
 use std::sync::Arc;
@@ -36,6 +39,8 @@ pub fn main_entry() -> anyhow::Result<()> {
     let sub = args.remove(0);
     match sub.as_str() {
         "train" => cmd_train(&args),
+        "cluster" => cluster::cmd_cluster(&args),
+        "node" => cluster::cmd_node(&args),
         "simulate" => cmd_simulate(&args),
         "eval" => cmd_eval(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -57,6 +62,8 @@ fn print_usage() {
          (reproduction of Xie & Xing, 2014)\n\n\
          subcommands:\n\
          \x20 train              run the threaded async parameter server\n\
+         \x20 cluster            spawn a server + worker process cluster\n\
+         \x20 node               run one server/worker role over sockets\n\
          \x20 simulate           discrete-event cluster scalability study\n\
          \x20 eval               evaluate a saved metric (PR curve, AP)\n\
          \x20 gen-data           print dataset statistics (Table 1)\n\

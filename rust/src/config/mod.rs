@@ -219,6 +219,39 @@ impl Default for CompressionConfig {
     }
 }
 
+/// Socket-transport knobs for process-mode runs (`dmlps cluster` /
+/// `dmlps node`).
+///
+/// Deliberately **not** part of [`ExperimentConfig`] or its JSON: the
+/// transport never changes the learning problem, and the config digest
+/// embedded in model artifacts must stay identical whether the same
+/// experiment runs over in-memory channels or sockets. These knobs
+/// travel as CLI flags instead.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    /// Address the server binds and workers dial: `host:port` for TCP
+    /// or `unix:/path` for a Unix domain socket.
+    pub addr: String,
+    /// Connection attempts a worker makes before giving up (the server
+    /// may bind after workers start; see `RetryPolicy` in `ps::net`).
+    pub connect_attempts: u32,
+    /// First retry backoff in milliseconds (doubles per attempt).
+    pub backoff_ms: u64,
+    /// Ceiling on the doubled backoff, in milliseconds.
+    pub max_backoff_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:7600".into(),
+            connect_attempts: 30,
+            backoff_ms: 20,
+            max_backoff_ms: 1000,
+        }
+    }
+}
+
 /// Synthetic dataset family (see `data` module for generators).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FeatureKind {
@@ -1004,6 +1037,20 @@ mod tests {
         }
         assert!("nope".parse::<Consistency>().is_err());
         assert!("gzip".parse::<CompressionMode>().is_err());
+    }
+
+    #[test]
+    fn net_config_stays_out_of_experiment_json() {
+        // NetConfig is CLI-flag plumbing; if it ever leaks into the
+        // experiment JSON the config digests pinned by api_session's
+        // goldens would shift between channel and socket runs.
+        let j = Preset::Tiny.config().to_json();
+        let map = j.as_obj().unwrap();
+        assert!(!map.contains_key("net"));
+        assert!(!map.contains_key("transport"));
+        let d = NetConfig::default();
+        assert!(d.connect_attempts > 0 && d.backoff_ms > 0);
+        assert!(d.max_backoff_ms >= d.backoff_ms);
     }
 
     #[test]

@@ -1,0 +1,771 @@
+//! Binary framing for the PS wire protocol.
+//!
+//! Every message crossing a socket is one length-prefixed frame:
+//!
+//! ```text
+//! u32le body_len | u8 kind | header fields | payload
+//! ```
+//!
+//! Header fields are fixed-width little-endian; the payload is the
+//! [`SliceEncoding`] serialized *exactly* as
+//! [`SliceEncoding::encoded_bytes`] accounts it (Dense = 4·n, Int8 =
+//! 4 + n, TopK = gaps + 4·nnz, TopKInt8 = 4 + gaps + nnz), so the wire
+//! telemetry the in-memory transport already reports is byte-true on a
+//! real socket with no new math. The self-describing length fields
+//! (`u8` tag + `u32` counts) that let the receiver size its buffers are
+//! *framing overhead*, counted by [`encoding_overhead`] and excluded
+//! from payload accounting — mirroring how in-memory telemetry excludes
+//! header fields.
+//!
+//! Decoding is split in two layers, and the split matters once frames
+//! arrive off a network instead of a typed channel:
+//!
+//! * **structural** ([`decode_frame`]) — unknown kind/tag, truncated or
+//!   trailing bytes, oversized lengths. A structural error means the
+//!   stream can no longer be trusted to be in sync, so callers drop the
+//!   connection.
+//! * **semantic** ([`validate_to_server`] / [`validate_to_worker`]) —
+//!   shard id in range, slice length matching the [`ShardPlan`], gap
+//!   coordinates strictly increasing and in range. A semantic error
+//!   rejects the one message (the frame boundary is still sound).
+//!   Validation runs *before* the message reaches the fold/splice
+//!   machinery, whose `decode_into` is entitled to panic on bad input.
+
+use super::messages::{ShardPlan, SliceEncoding, ToServer, ToWorker};
+
+/// Wire protocol version, checked in the Hello/HelloAck handshake.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Hard cap on one frame's body. Far above any real slice (the paper's
+/// largest shard is ~860 MB of f32 across *all* shards); a length field
+/// beyond this is treated as a corrupt stream, not an allocation order.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// Frame kind bytes (worker→server: 0x0_, server→worker: 0x1_,
+/// handshake: 0x2_).
+pub const KIND_GRAD: u8 = 0x01;
+pub const KIND_DONE: u8 = 0x02;
+pub const KIND_PARAM: u8 = 0x11;
+pub const KIND_HELLO: u8 = 0x21;
+pub const KIND_HELLO_ACK: u8 = 0x22;
+
+const TAG_DENSE: u8 = 0;
+const TAG_INT8: u8 = 1;
+const TAG_TOPK: u8 = 2;
+const TAG_TOPK_INT8: u8 = 3;
+
+/// A decoded frame body.
+#[derive(Debug)]
+pub enum Frame {
+    ToServer(ToServer),
+    ToWorker(ToWorker),
+    /// Worker → server handshake: identity plus the topology the worker
+    /// was configured with, so a mis-deployed node fails loudly at
+    /// connect time instead of corrupting a run.
+    Hello { protocol: u16, worker: u32, shards: u32, k: u32, d: u32 },
+    /// Server → worker handshake reply (echoes the server's topology).
+    HelloAck { protocol: u16, shards: u32, k: u32, d: u32 },
+}
+
+/// Why a frame was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Structural: the byte stream is not a well-formed frame. The
+    /// connection carrying it can no longer be trusted to be in sync.
+    Malformed(String),
+    /// Semantic: well-formed frame whose content contradicts the shard
+    /// plan (bad shard id, wrong slice length, out-of-range coordinate).
+    /// The stream is still framed correctly; only this message is bad.
+    Invalid(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            FrameError::Invalid(m) => write!(f, "invalid message: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn malformed(msg: impl Into<String>) -> FrameError {
+    FrameError::Malformed(msg.into())
+}
+
+fn invalid(msg: impl Into<String>) -> FrameError {
+    FrameError::Invalid(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// little-endian primitives
+// ---------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(malformed(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, FrameError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), FrameError> {
+        if self.pos != self.buf.len() {
+            return Err(malformed(format!(
+                "{} trailing bytes after frame body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+
+    /// A count field used to size an allocation: bounded by the frame
+    /// cap so corrupt lengths fail cleanly instead of aborting on OOM.
+    fn count(&mut self, what: &str) -> Result<usize, FrameError> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME_BYTES {
+            return Err(malformed(format!("{what} count {n} exceeds cap")));
+        }
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SliceEncoding serialization
+// ---------------------------------------------------------------------
+
+/// Append the wire form of an encoding: a `u8` tag, self-describing
+/// `u32` length fields, then the payload bytes exactly as
+/// [`SliceEncoding::encoded_bytes`] accounts them.
+pub fn encode_encoding(enc: &SliceEncoding, out: &mut Vec<u8>) {
+    match enc {
+        SliceEncoding::Dense(v) => {
+            out.push(TAG_DENSE);
+            put_u32(out, v.len() as u32);
+            for &x in v {
+                put_f32(out, x);
+            }
+        }
+        SliceEncoding::Int8 { scale, q } => {
+            out.push(TAG_INT8);
+            put_u32(out, q.len() as u32);
+            put_f32(out, *scale);
+            out.extend(q.iter().map(|&b| b as u8));
+        }
+        SliceEncoding::TopK { gaps, vals } => {
+            out.push(TAG_TOPK);
+            put_u32(out, vals.len() as u32);
+            put_u32(out, gaps.len() as u32);
+            out.extend_from_slice(gaps);
+            for &x in vals {
+                put_f32(out, x);
+            }
+        }
+        SliceEncoding::TopKInt8 { scale, gaps, vals } => {
+            out.push(TAG_TOPK_INT8);
+            put_u32(out, vals.len() as u32);
+            put_u32(out, gaps.len() as u32);
+            put_f32(out, *scale);
+            out.extend_from_slice(gaps);
+            out.extend(vals.iter().map(|&b| b as u8));
+        }
+    }
+}
+
+/// Framing overhead [`encode_encoding`] adds beyond the payload: the tag
+/// byte plus the `u32` length fields. `wire size == overhead +
+/// encoded_bytes()`, which the frame goldens assert per variant.
+pub fn encoding_overhead(enc: &SliceEncoding) -> u64 {
+    match enc {
+        SliceEncoding::Dense(_) | SliceEncoding::Int8 { .. } => 1 + 4,
+        SliceEncoding::TopK { .. } | SliceEncoding::TopKInt8 { .. } => {
+            1 + 4 + 4
+        }
+    }
+}
+
+fn decode_encoding(r: &mut Reader<'_>) -> Result<SliceEncoding, FrameError> {
+    match r.u8()? {
+        TAG_DENSE => {
+            let n = r.count("dense")?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.f32()?);
+            }
+            Ok(SliceEncoding::Dense(v))
+        }
+        TAG_INT8 => {
+            let n = r.count("int8")?;
+            let scale = r.f32()?;
+            let q = r.take(n)?.iter().map(|&b| b as i8).collect();
+            Ok(SliceEncoding::Int8 { scale, q })
+        }
+        TAG_TOPK => {
+            let nnz = r.count("topk vals")?;
+            let glen = r.count("topk gaps")?;
+            let gaps = r.take(glen)?.to_vec();
+            let mut vals = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                vals.push(r.f32()?);
+            }
+            Ok(SliceEncoding::TopK { gaps, vals })
+        }
+        TAG_TOPK_INT8 => {
+            let nnz = r.count("topk_int8 vals")?;
+            let glen = r.count("topk_int8 gaps")?;
+            let scale = r.f32()?;
+            let gaps = r.take(glen)?.to_vec();
+            let vals = r.take(nnz)?.iter().map(|&b| b as i8).collect();
+            Ok(SliceEncoding::TopKInt8 { scale, gaps, vals })
+        }
+        t => Err(malformed(format!("unknown encoding tag 0x{t:02x}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------
+
+/// Append one length-prefixed frame for a worker→server message.
+pub fn encode_to_server(msg: &ToServer, out: &mut Vec<u8>) {
+    with_length_prefix(out, |body| match msg {
+        ToServer::Grad { worker, shard, step, grad, loss } => {
+            body.push(KIND_GRAD);
+            put_u32(body, *worker as u32);
+            put_u32(body, *shard as u32);
+            put_u64(body, *step);
+            put_f32(body, *loss);
+            encode_encoding(grad, body);
+        }
+        ToServer::Done { worker } => {
+            body.push(KIND_DONE);
+            put_u32(body, *worker as u32);
+        }
+    });
+}
+
+/// Append one length-prefixed frame for a server→worker message.
+pub fn encode_to_worker(msg: &ToWorker, out: &mut Vec<u8>) {
+    with_length_prefix(out, |body| match msg {
+        ToWorker::Param { shard, version, clock, data } => {
+            body.push(KIND_PARAM);
+            put_u32(body, *shard as u32);
+            put_u64(body, *version);
+            put_u64(body, *clock);
+            encode_encoding(data, body);
+        }
+    });
+}
+
+/// Append one length-prefixed handshake frame.
+pub fn encode_handshake(f: &Frame, out: &mut Vec<u8>) {
+    with_length_prefix(out, |body| match f {
+        Frame::Hello { protocol, worker, shards, k, d } => {
+            body.push(KIND_HELLO);
+            put_u16(body, *protocol);
+            put_u32(body, *worker);
+            put_u32(body, *shards);
+            put_u32(body, *k);
+            put_u32(body, *d);
+        }
+        Frame::HelloAck { protocol, shards, k, d } => {
+            body.push(KIND_HELLO_ACK);
+            put_u16(body, *protocol);
+            put_u32(body, *shards);
+            put_u32(body, *k);
+            put_u32(body, *d);
+        }
+        _ => unreachable!("encode_handshake takes handshake frames only"),
+    });
+}
+
+/// Reserve a `u32` length slot, fill the body, patch the length.
+fn with_length_prefix(out: &mut Vec<u8>, fill: impl FnOnce(&mut Vec<u8>)) {
+    let at = out.len();
+    put_u32(out, 0);
+    fill(out);
+    let body_len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
+/// Decode one frame *body* (the bytes after the `u32` length prefix).
+/// Structural errors only; run the semantic validators before handing
+/// the message to the fold/splice machinery.
+pub fn decode_frame(body: &[u8]) -> Result<Frame, FrameError> {
+    let mut r = Reader::new(body);
+    let frame = match r.u8()? {
+        KIND_GRAD => {
+            let worker = r.u32()? as usize;
+            let shard = r.u32()? as usize;
+            let step = r.u64()?;
+            let loss = r.f32()?;
+            let grad = decode_encoding(&mut r)?;
+            Frame::ToServer(ToServer::Grad { worker, shard, step, grad, loss })
+        }
+        KIND_DONE => {
+            Frame::ToServer(ToServer::Done { worker: r.u32()? as usize })
+        }
+        KIND_PARAM => {
+            let shard = r.u32()? as usize;
+            let version = r.u64()?;
+            let clock = r.u64()?;
+            let data = decode_encoding(&mut r)?;
+            Frame::ToWorker(ToWorker::Param { shard, version, clock, data })
+        }
+        KIND_HELLO => Frame::Hello {
+            protocol: r.u16()?,
+            worker: r.u32()?,
+            shards: r.u32()?,
+            k: r.u32()?,
+            d: r.u32()?,
+        },
+        KIND_HELLO_ACK => Frame::HelloAck {
+            protocol: r.u16()?,
+            shards: r.u32()?,
+            k: r.u32()?,
+            d: r.u32()?,
+        },
+        kind => return Err(malformed(format!("unknown kind 0x{kind:02x}"))),
+    };
+    r.done()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------
+// semantic validation against the shard plan
+// ---------------------------------------------------------------------
+
+/// Checked LEB128 walk of a gap stream: returns the decoded coordinate
+/// count, requiring strictly increasing indices below `limit` and no
+/// trailing/overlong bytes.
+fn walk_gaps(gaps: &[u8], limit: usize) -> Result<usize, FrameError> {
+    let mut pos = 0usize;
+    let mut idx: u64 = 0;
+    let mut count = 0usize;
+    while pos < gaps.len() {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = *gaps
+                .get(pos)
+                .ok_or_else(|| invalid("truncated varint in gap stream"))?;
+            pos += 1;
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+            if shift >= 32 {
+                return Err(invalid("overlong varint in gap stream"));
+            }
+        }
+        if count == 0 {
+            idx = v;
+        } else {
+            if v == 0 {
+                return Err(invalid("zero gap (indices must increase)"));
+            }
+            idx += v;
+        }
+        if idx >= limit as u64 {
+            return Err(invalid(format!(
+                "coordinate {idx} out of range (slice len {limit})"
+            )));
+        }
+        count += 1;
+    }
+    Ok(count)
+}
+
+/// Validate an encoding against the slice length shard `s` owns.
+fn validate_encoding(
+    plan: &ShardPlan,
+    shard: usize,
+    enc: &SliceEncoding,
+) -> Result<(), FrameError> {
+    let want = plan.len(shard);
+    match enc {
+        SliceEncoding::Dense(v) => {
+            if v.len() != want {
+                return Err(invalid(format!(
+                    "dense slice len {} != shard {shard} len {want}",
+                    v.len()
+                )));
+            }
+        }
+        SliceEncoding::Int8 { q, .. } => {
+            if q.len() != want {
+                return Err(invalid(format!(
+                    "int8 slice len {} != shard {shard} len {want}",
+                    q.len()
+                )));
+            }
+        }
+        SliceEncoding::TopK { gaps, vals } => {
+            let n = walk_gaps(gaps, want)?;
+            if n != vals.len() {
+                return Err(invalid(format!(
+                    "topk coordinate count {n} != value count {}",
+                    vals.len()
+                )));
+            }
+        }
+        SliceEncoding::TopKInt8 { gaps, vals, .. } => {
+            let n = walk_gaps(gaps, want)?;
+            if n != vals.len() {
+                return Err(invalid(format!(
+                    "topk_int8 coordinate count {n} != value count {}",
+                    vals.len()
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate a worker→server message against the topology. Rejecting
+/// here keeps a corrupt shard id or mis-sized slice out of the fold
+/// path entirely (the in-memory path's `route()` misroute counter is
+/// the second line of defense).
+pub fn validate_to_server(
+    plan: &ShardPlan,
+    workers: usize,
+    msg: &ToServer,
+) -> Result<(), FrameError> {
+    match msg {
+        ToServer::Grad { worker, shard, grad, .. } => {
+            if *worker >= workers {
+                return Err(invalid(format!(
+                    "worker id {worker} out of range ({workers} workers)"
+                )));
+            }
+            if *shard >= plan.shards() {
+                return Err(invalid(format!(
+                    "shard id {shard} out of range ({} shards)",
+                    plan.shards()
+                )));
+            }
+            validate_encoding(plan, *shard, grad)
+        }
+        ToServer::Done { worker } => {
+            if *worker >= workers {
+                return Err(invalid(format!(
+                    "worker id {worker} out of range ({workers} workers)"
+                )));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Validate a server→worker message against the topology.
+pub fn validate_to_worker(
+    plan: &ShardPlan,
+    msg: &ToWorker,
+) -> Result<(), FrameError> {
+    match msg {
+        ToWorker::Param { shard, data, .. } => {
+            if *shard >= plan.shards() {
+                return Err(invalid(format!(
+                    "shard id {shard} out of range ({} shards)",
+                    plan.shards()
+                )));
+            }
+            validate_encoding(plan, *shard, data)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_prefix(buf: &[u8]) -> &[u8] {
+        let len =
+            u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4, "length prefix covers the body");
+        &buf[4..]
+    }
+
+    #[test]
+    fn grad_frame_roundtrips_bitwise() {
+        let msg = ToServer::Grad {
+            worker: 3,
+            shard: 1,
+            step: 77,
+            grad: SliceEncoding::Dense(vec![1.5, -2.25, 0.0, f32::MIN]),
+            loss: 0.625,
+        };
+        let mut buf = Vec::new();
+        encode_to_server(&msg, &mut buf);
+        match decode_frame(strip_prefix(&buf)).unwrap() {
+            Frame::ToServer(ToServer::Grad {
+                worker, shard, step, grad, loss,
+            }) => {
+                assert_eq!((worker, shard, step), (3, 1, 77));
+                assert_eq!(loss.to_bits(), 0.625f32.to_bits());
+                match grad {
+                    SliceEncoding::Dense(v) => {
+                        let bits: Vec<u32> =
+                            v.iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(bits, vec![
+                            1.5f32.to_bits(),
+                            (-2.25f32).to_bits(),
+                            0.0f32.to_bits(),
+                            f32::MIN.to_bits(),
+                        ]);
+                    }
+                    other => panic!("wrong encoding: {other:?}"),
+                }
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_length_equals_encoded_bytes_every_variant() {
+        let variants = [
+            SliceEncoding::Dense(vec![1.0, 2.0, 3.0]),
+            SliceEncoding::Int8 { scale: 0.5, q: vec![1, -2, 3, -4] },
+            SliceEncoding::TopK {
+                gaps: vec![0, 2, 1],
+                vals: vec![5.0, -6.0, 7.0],
+            },
+            SliceEncoding::TopKInt8 {
+                scale: 0.25,
+                gaps: vec![1, 1],
+                vals: vec![9, -9],
+            },
+        ];
+        for enc in &variants {
+            let mut buf = Vec::new();
+            encode_encoding(enc, &mut buf);
+            assert_eq!(
+                buf.len() as u64,
+                encoding_overhead(enc) + enc.encoded_bytes(),
+                "wire bytes must be overhead + encoded_bytes: {enc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn handshake_roundtrips() {
+        let hello = Frame::Hello {
+            protocol: PROTOCOL_VERSION,
+            worker: 2,
+            shards: 4,
+            k: 8,
+            d: 16,
+        };
+        let mut buf = Vec::new();
+        encode_handshake(&hello, &mut buf);
+        match decode_frame(strip_prefix(&buf)).unwrap() {
+            Frame::Hello { protocol, worker, shards, k, d } => {
+                assert_eq!(
+                    (protocol, worker, shards, k, d),
+                    (PROTOCOL_VERSION, 2, 4, 8, 16)
+                );
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_kind_and_trailing_bytes_are_malformed() {
+        assert!(matches!(
+            decode_frame(&[0x7F]),
+            Err(FrameError::Malformed(_))
+        ));
+        let msg = ToServer::Done { worker: 0 };
+        let mut buf = Vec::new();
+        encode_to_server(&msg, &mut buf);
+        let mut body = strip_prefix(&buf).to_vec();
+        body.push(0xAA);
+        assert!(matches!(
+            decode_frame(&body),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_frame_is_malformed() {
+        let msg = ToServer::Grad {
+            worker: 0,
+            shard: 0,
+            step: 1,
+            grad: SliceEncoding::Dense(vec![1.0, 2.0]),
+            loss: 0.0,
+        };
+        let mut buf = Vec::new();
+        encode_to_server(&msg, &mut buf);
+        let body = strip_prefix(&buf);
+        for cut in 1..body.len() {
+            assert!(
+                matches!(
+                    decode_frame(&body[..cut]),
+                    Err(FrameError::Malformed(_))
+                ),
+                "cut at {cut} must be malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_shard_and_length() {
+        let plan = ShardPlan::new(8, 4, 2); // shard len = 16 elements
+        let bad_shard = ToServer::Grad {
+            worker: 0,
+            shard: 9,
+            step: 0,
+            grad: SliceEncoding::Dense(vec![0.0; 16]),
+            loss: 0.0,
+        };
+        assert!(matches!(
+            validate_to_server(&plan, 2, &bad_shard),
+            Err(FrameError::Invalid(_))
+        ));
+        let bad_len = ToServer::Grad {
+            worker: 0,
+            shard: 0,
+            step: 0,
+            grad: SliceEncoding::Dense(vec![0.0; 15]),
+            loss: 0.0,
+        };
+        assert!(matches!(
+            validate_to_server(&plan, 2, &bad_len),
+            Err(FrameError::Invalid(_))
+        ));
+        let ok = ToServer::Grad {
+            worker: 1,
+            shard: 1,
+            step: 0,
+            grad: SliceEncoding::Dense(vec![0.0; 16]),
+            loss: 0.0,
+        };
+        assert!(validate_to_server(&plan, 2, &ok).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_coordinates() {
+        let plan = ShardPlan::new(4, 4, 2); // shard len = 8
+        let enc = SliceEncoding::TopK {
+            gaps: vec![7, 1], // indices 7, 8 — 8 is out of range
+            vals: vec![1.0, 2.0],
+        };
+        let msg = ToServer::Grad {
+            worker: 0,
+            shard: 0,
+            step: 0,
+            grad: enc,
+            loss: 0.0,
+        };
+        assert!(matches!(
+            validate_to_server(&plan, 1, &msg),
+            Err(FrameError::Invalid(_))
+        ));
+        let ok = ToServer::Grad {
+            worker: 0,
+            shard: 0,
+            step: 0,
+            grad: SliceEncoding::TopK {
+                gaps: vec![6, 1], // indices 6, 7 — in range
+                vals: vec![1.0, 2.0],
+            },
+            loss: 0.0,
+        };
+        assert!(validate_to_server(&plan, 1, &ok).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_zero_gap() {
+        let plan = ShardPlan::new(4, 4, 1);
+        let msg = ToServer::Grad {
+            worker: 0,
+            shard: 0,
+            step: 0,
+            grad: SliceEncoding::TopK {
+                gaps: vec![3, 0], // duplicate index — gaps must be >= 1
+                vals: vec![1.0, 2.0],
+            },
+            loss: 0.0,
+        };
+        assert!(matches!(
+            validate_to_server(&plan, 1, &msg),
+            Err(FrameError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn param_validation_mirrors_grad_validation() {
+        let plan = ShardPlan::new(8, 4, 2);
+        let ok = ToWorker::Param {
+            shard: 0,
+            version: 1,
+            clock: 1,
+            data: SliceEncoding::Dense(vec![0.0; 16]),
+        };
+        assert!(validate_to_worker(&plan, &ok).is_ok());
+        let bad = ToWorker::Param {
+            shard: 5,
+            version: 1,
+            clock: 1,
+            data: SliceEncoding::Dense(vec![0.0; 16]),
+        };
+        assert!(matches!(
+            validate_to_worker(&plan, &bad),
+            Err(FrameError::Invalid(_))
+        ));
+    }
+}

@@ -65,6 +65,13 @@ impl ShardPlan {
         (self.bounds[s + 1] - self.bounds[s]) * self.d
     }
 
+    /// Whether shard `s` owns no elements. Always false for plans built
+    /// by [`ShardPlan::new`] (shard count is clamped to `[1, k]`), but
+    /// paired with [`ShardPlan::len`] for a complete API.
+    pub fn is_empty(&self, s: usize) -> bool {
+        self.len(s) == 0
+    }
+
     /// Shard `s`'s slice of a row-major k×d buffer.
     pub fn slice<'a>(&self, data: &'a [f32], s: usize) -> &'a [f32] {
         &data[self.offset(s)..self.offset(s) + self.len(s)]

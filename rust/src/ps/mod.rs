@@ -17,7 +17,9 @@
 //! [`run_training`] remains as a deprecated shim over it.
 
 mod compress;
+pub mod frame;
 mod messages;
+pub mod net;
 mod server;
 mod transport;
 mod worker;
@@ -25,7 +27,10 @@ mod worker;
 pub use compress::{decode_into, encode_param, keep_count, Compressor};
 pub use messages::{ShardPlan, SliceEncoding, ToServer, ToWorker};
 pub use server::{ProbeFn, Server, ServerConfig, ServerResult};
-pub use transport::{drain, FaultSpec, FaultySender};
+pub use transport::{
+    drain, Drained, FaultSpec, FaultySender, MemoryTransport, Transport,
+    TransportStats,
+};
 pub use worker::{Worker, WorkerConfig, WorkerStats};
 
 use std::sync::Arc;
@@ -61,6 +66,10 @@ pub struct TrainResult {
     pub grad_bytes_received: u64,
     /// Encoded payload bytes of parameter slices shipped to workers.
     pub param_bytes_sent: u64,
+    /// Gradient messages the server's router skipped for naming a shard
+    /// outside the plan (see [`ServerResult::misroutes`]). Zero on every
+    /// healthy run.
+    pub misroutes: u64,
     pub worker_stats: Vec<WorkerStats>,
     pub wall_s: f64,
 }

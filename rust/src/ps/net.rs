@@ -1,0 +1,1060 @@
+//! Socket transport: the PS wire protocol on real TCP / Unix sockets.
+//!
+//! Design rule: **endpoints stay mpsc channel halves.** The server and
+//! worker machinery (and `FaultySender`, whose `sent + dropped == steps`
+//! identity must hold on every backend) are written against
+//! `Sender`/`Receiver`; this module bridges those channels to sockets
+//! with one reader + one writer thread per connection, so not a line of
+//! the fold/gate/fault logic changes between in-memory and socket runs.
+//!
+//! Per connection:
+//!
+//! * the **writer** thread drains its channel, encodes frames
+//!   ([`super::frame`]) into a buffered stream, and flushes whenever the
+//!   channel runs empty. When the channel disconnects (the machinery
+//!   dropped its sender — i.e. the run is over) it performs the linger
+//!   flush: drain every queued message, flush the buffer, then
+//!   `shutdown(Write)` so the peer sees a clean EOF after the last
+//!   frame. mpsc guarantees queued messages survive sender drop, so no
+//!   tail frame is lost.
+//! * the **reader** thread length-decodes frames, runs the structural
+//!   *and* semantic validators, and forwards good messages into its
+//!   channel. A structural error (stream out of sync) drops the
+//!   connection; a semantic error (corrupt shard id, mis-sized slice)
+//!   rejects that one message and keeps reading. Either way the bad
+//!   bytes never reach `decode_into`, which is entitled to panic on
+//!   hostile input. Rejections are counted in [`TransportStats`].
+//!
+//! Connection setup is a bounded retry-with-backoff ([`connect_retry`])
+//! followed by a `Hello`/`HelloAck` handshake that cross-checks
+//! protocol version and `(shards, k, d)` topology, so a mis-deployed
+//! node fails at connect time with a message naming both sides.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{
+    decode_frame, encode_handshake, encode_to_server, encode_to_worker,
+    validate_to_server, validate_to_worker, Frame, FrameError,
+    MAX_FRAME_BYTES, PROTOCOL_VERSION,
+};
+use super::messages::{ShardPlan, ToServer, ToWorker};
+use super::transport::{Transport, TransportStats};
+
+// ---------------------------------------------------------------------
+// addresses, streams, listeners
+// ---------------------------------------------------------------------
+
+/// A transport address: `host:port` for TCP, `unix:/path` for a Unix
+/// domain socket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetAddr {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl NetAddr {
+    pub fn parse(s: &str) -> Result<NetAddr> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                return Ok(NetAddr::Unix(std::path::PathBuf::from(path)));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                bail!("unix: addresses are not supported on this platform");
+            }
+        }
+        if !s.contains(':') {
+            bail!("TCP address {s:?} must be host:port");
+        }
+        Ok(NetAddr::Tcp(s.to_string()))
+    }
+}
+
+impl std::fmt::Display for NetAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetAddr::Tcp(s) => write!(f, "{s}"),
+            #[cfg(unix)]
+            NetAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A connected stream over either socket family.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => {
+                Stream::Tcp(s.try_clone().context("clone tcp stream")?)
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                Stream::Unix(s.try_clone().context("clone unix stream")?)
+            }
+        })
+    }
+
+    fn shutdown_write(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(Shutdown::Write),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.shutdown(Shutdown::Write),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listener over either socket family.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    pub fn bind(addr: &NetAddr) -> Result<Listener> {
+        Ok(match addr {
+            NetAddr::Tcp(a) => Listener::Tcp(
+                TcpListener::bind(a).with_context(|| format!("bind {a}"))?,
+            ),
+            #[cfg(unix)]
+            NetAddr::Unix(p) => {
+                // A previous run's socket file would make bind fail with
+                // AddrInUse even though nobody is listening.
+                let _ = std::fs::remove_file(p);
+                Listener::Unix(
+                    UnixListener::bind(p)
+                        .with_context(|| format!("bind unix:{}", p.display()))?,
+                )
+            }
+        })
+    }
+
+    /// The actual bound address — resolves port 0 to the kernel-chosen
+    /// port, which is how tests get collision-free listeners.
+    pub fn local_addr(&self) -> Result<NetAddr> {
+        Ok(match self {
+            Listener::Tcp(l) => {
+                NetAddr::Tcp(l.local_addr().context("local_addr")?.to_string())
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let a = l.local_addr().context("local_addr")?;
+                let p = a
+                    .as_pathname()
+                    .context("unix listener has no pathname")?;
+                NetAddr::Unix(p.to_path_buf())
+            }
+        })
+    }
+
+    fn accept(&self) -> Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept().context("accept")?;
+                s.set_nodelay(true).ok();
+                Stream::Tcp(s)
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept().context("accept")?;
+                Stream::Unix(s)
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// bounded connect retry
+// ---------------------------------------------------------------------
+
+/// Bounded retry-with-backoff for connection setup. Workers race the
+/// server to start; a refused connection within the window is normal,
+/// not fatal — but the bound keeps a dead server from hanging a node
+/// forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total connect attempts before giving up (>= 1).
+    pub attempts: u32,
+    /// Sleep before the second attempt; doubles per retry.
+    pub initial_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        // 30 attempts × 20 ms doubling capped at 1 s ≈ 25 s window:
+        // generous for a slow-starting server process, bounded enough
+        // that a misconfigured address fails within the minute.
+        RetryPolicy {
+            attempts: 30,
+            initial_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Connect with bounded exponential backoff.
+pub fn connect_retry(addr: &NetAddr, policy: RetryPolicy) -> Result<Stream> {
+    let attempts = policy.attempts.max(1);
+    let mut backoff = policy.initial_backoff;
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            thread::sleep(backoff);
+            backoff = (backoff * 2).min(policy.max_backoff);
+        }
+        match addr {
+            NetAddr::Tcp(a) => match TcpStream::connect(a) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    return Ok(Stream::Tcp(s));
+                }
+                Err(e) => last_err = Some(e),
+            },
+            #[cfg(unix)]
+            NetAddr::Unix(p) => match UnixStream::connect(p) {
+                Ok(s) => return Ok(Stream::Unix(s)),
+                Err(e) => last_err = Some(e),
+            },
+        }
+    }
+    Err(anyhow::Error::new(last_err.expect("attempts >= 1")).context(
+        format!("connect to {addr} failed after {attempts} attempts"),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// framed stream I/O
+// ---------------------------------------------------------------------
+
+/// Read one length-prefixed frame body. `Ok(None)` is a clean EOF at a
+/// frame boundary; EOF mid-frame is an error.
+fn read_frame(r: &mut impl Read, body: &mut Vec<u8>) -> Result<Option<()>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e).context("read frame length"),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds cap {MAX_FRAME_BYTES}");
+    }
+    body.resize(len, 0);
+    r.read_exact(body).context("read frame body")?;
+    Ok(Some(()))
+}
+
+fn write_all_counted(
+    w: &mut impl Write,
+    buf: &[u8],
+    stats: &Counters,
+) -> std::io::Result<()> {
+    w.write_all(buf)?;
+    stats.bytes_sent.fetch_add(buf.len() as u64, Ordering::Relaxed);
+    stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Shared wire counters, read out as [`TransportStats`] on join.
+/// Bytes include the 4-byte length prefixes and frame headers — these
+/// are wire-level totals, distinct from the payload-exact
+/// `encoded_bytes()` telemetry the PS machinery reports.
+#[derive(Default)]
+struct Counters {
+    frames_sent: AtomicU64,
+    frames_received: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+    rejected_frames: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> TransportStats {
+        TransportStats {
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_received: self.frames_received.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: self.bytes_received.load(Ordering::Relaxed),
+            rejected_frames: self.rejected_frames.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn read_handshake_frame(stream: &mut Stream) -> Result<Frame> {
+    let mut body = Vec::new();
+    match read_frame(stream, &mut body)? {
+        Some(()) => decode_frame(&body).map_err(anyhow::Error::new),
+        None => bail!("peer closed connection during handshake"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// server side
+// ---------------------------------------------------------------------
+
+/// A bound, not-yet-accepting server endpoint. Two-phase so callers can
+/// learn the kernel-chosen port (`local_addr`) before workers connect.
+pub struct NetServer {
+    listener: Listener,
+}
+
+impl NetServer {
+    pub fn bind(addr: &NetAddr) -> Result<NetServer> {
+        Ok(NetServer { listener: Listener::bind(addr)? })
+    }
+
+    pub fn local_addr(&self) -> Result<NetAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept and handshake exactly `workers` connections, then bridge
+    /// each to channel endpoints. Blocks until every worker has said
+    /// `Hello`; duplicate or out-of-range worker ids and topology
+    /// mismatches abort with context (the manager surfaces the error
+    /// and kills the run rather than training on a wrong topology).
+    pub fn accept_workers(
+        self,
+        plan: &ShardPlan,
+        workers: usize,
+    ) -> Result<NetServerTransport> {
+        let counters = Arc::new(Counters::default());
+        let (from_workers_tx, from_workers_rx) = channel::<ToServer>();
+        let mut to_worker_txs: Vec<Option<Sender<ToWorker>>> =
+            (0..workers).map(|_| None).collect();
+        let mut handles = Vec::new();
+
+        for _ in 0..workers {
+            let mut stream = self.listener.accept()?;
+            let worker = match read_handshake_frame(&mut stream)? {
+                Frame::Hello { protocol, worker, shards, k, d } => {
+                    if protocol != PROTOCOL_VERSION {
+                        bail!(
+                            "protocol mismatch: worker {worker} speaks v{protocol}, server v{PROTOCOL_VERSION}"
+                        );
+                    }
+                    let (ps, pk, pd) =
+                        (plan.shards() as u32, plan.k as u32, plan.d as u32);
+                    if (shards, k, d) != (ps, pk, pd) {
+                        bail!(
+                            "topology mismatch: worker {worker} configured (shards={shards}, k={k}, d={d}), server (shards={ps}, k={pk}, d={pd})"
+                        );
+                    }
+                    worker as usize
+                }
+                other => bail!("expected Hello, got {other:?}"),
+            };
+            if worker >= workers {
+                bail!("worker id {worker} out of range ({workers} workers)");
+            }
+            if to_worker_txs[worker].is_some() {
+                bail!("worker id {worker} connected twice");
+            }
+
+            let mut ack = Vec::new();
+            encode_handshake(
+                &Frame::HelloAck {
+                    protocol: PROTOCOL_VERSION,
+                    shards: plan.shards() as u32,
+                    k: plan.k as u32,
+                    d: plan.d as u32,
+                },
+                &mut ack,
+            );
+            stream.write_all(&ack).context("send HelloAck")?;
+            stream.flush().context("flush HelloAck")?;
+
+            let (tx, rx) = channel::<ToWorker>();
+            to_worker_txs[worker] = Some(tx);
+            let read_half = stream.try_clone()?;
+            handles.push(spawn_reader_to_server(
+                read_half,
+                from_workers_tx.clone(),
+                plan.clone(),
+                workers,
+                worker,
+                Arc::clone(&counters),
+            ));
+            handles.push(spawn_writer_to_worker(
+                stream,
+                rx,
+                Arc::clone(&counters),
+            ));
+        }
+        // The reader threads hold the live clones; dropping the master
+        // sender means the server sees disconnect once all workers EOF,
+        // exactly like the in-memory run dropping its `to_server_tx`.
+        drop(from_workers_tx);
+
+        Ok(NetServerTransport {
+            endpoints: Some((
+                from_workers_rx,
+                to_worker_txs
+                    .into_iter()
+                    .map(|t| t.expect("every worker slot filled"))
+                    .collect(),
+            )),
+            handles,
+            counters,
+        })
+    }
+}
+
+/// Server-side [`Transport`]: hands the bridged channel endpoints to
+/// `Server::spawn`, joins the socket threads on `finish`.
+pub struct NetServerTransport {
+    endpoints: Option<(Receiver<ToServer>, Vec<Sender<ToWorker>>)>,
+    handles: Vec<JoinHandle<()>>,
+    counters: Arc<Counters>,
+}
+
+impl Transport for NetServerTransport {
+    fn name(&self) -> &'static str {
+        "socket-server"
+    }
+
+    fn server_endpoints(
+        &mut self,
+    ) -> Result<(Receiver<ToServer>, Vec<Sender<ToWorker>>)> {
+        self.endpoints
+            .take()
+            .context("server endpoints already taken")
+    }
+
+    fn worker_endpoints(
+        &mut self,
+        worker: usize,
+    ) -> Result<(Sender<ToServer>, Receiver<ToWorker>)> {
+        bail!("socket server transport has no local worker {worker} endpoints")
+    }
+
+    fn finish(&mut self) -> TransportStats {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.counters.snapshot()
+    }
+}
+
+fn spawn_reader_to_server(
+    mut stream: Stream,
+    tx: Sender<ToServer>,
+    plan: ShardPlan,
+    workers: usize,
+    worker: usize,
+    counters: Arc<Counters>,
+) -> JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("net-read-w{worker}"))
+        .spawn(move || {
+            let mut body = Vec::new();
+            loop {
+                match read_frame(&mut stream, &mut body) {
+                    Ok(Some(())) => {}
+                    Ok(None) => break, // clean EOF: worker done
+                    Err(e) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[net] worker {worker} stream broken: {e:#}");
+                        break;
+                    }
+                }
+                counters
+                    .bytes_received
+                    .fetch_add(4 + body.len() as u64, Ordering::Relaxed);
+                let msg = match decode_frame(&body) {
+                    Ok(Frame::ToServer(m)) => m,
+                    Ok(other) => {
+                        // Structurally valid but nonsensical direction:
+                        // the stream is out of protocol, drop it.
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[net] worker {worker} sent unexpected frame {other:?}; closing"
+                        );
+                        break;
+                    }
+                    Err(e @ FrameError::Malformed(_)) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[net] worker {worker} stream corrupt: {e}; closing"
+                        );
+                        break;
+                    }
+                    Err(e) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[net] worker {worker}: {e}; closing");
+                        break;
+                    }
+                };
+                if let Err(e) = validate_to_server(&plan, workers, &msg) {
+                    // Framing is still sound — reject the message, keep
+                    // the connection. Never let it reach decode_into.
+                    counters
+                        .rejected_frames
+                        .fetch_add(1, Ordering::Relaxed);
+                    eprintln!("[net] worker {worker}: rejected message: {e}");
+                    continue;
+                }
+                counters.frames_received.fetch_add(1, Ordering::Relaxed);
+                if tx.send(msg).is_err() {
+                    break; // server machinery gone
+                }
+            }
+        })
+        .expect("spawn net reader")
+}
+
+fn spawn_writer_to_worker(
+    stream: Stream,
+    rx: Receiver<ToWorker>,
+    counters: Arc<Counters>,
+) -> JoinHandle<()> {
+    thread::Builder::new()
+        .name("net-write-param".to_string())
+        .spawn(move || {
+            let shutdown_handle =
+                stream.try_clone().expect("clone for shutdown");
+            let mut w = std::io::BufWriter::new(stream);
+            let mut buf = Vec::new();
+            // recv() drains messages queued before the sender dropped,
+            // so the Disconnected arm *is* the linger flush.
+            while let Ok(msg) = rx.recv() {
+                buf.clear();
+                encode_to_worker(&msg, &mut buf);
+                if write_all_counted(&mut w, &buf, &counters).is_err() {
+                    return; // worker hung up; nothing to flush to
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(m) => {
+                            buf.clear();
+                            encode_to_worker(&m, &mut buf);
+                            if write_all_counted(&mut w, &buf, &counters)
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                        Err(TryRecvError::Empty) => {
+                            let _ = w.flush();
+                            break;
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            let _ = w.flush();
+                            shutdown_handle.shutdown_write();
+                            return;
+                        }
+                    }
+                }
+            }
+            let _ = w.flush();
+            shutdown_handle.shutdown_write();
+        })
+        .expect("spawn net writer")
+}
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+/// Worker-side [`Transport`]: connects (with retry), handshakes, and
+/// bridges the socket to the channel endpoints `Worker::spawn` expects.
+pub struct NetWorkerTransport {
+    worker: usize,
+    endpoints: Option<(Sender<ToServer>, Receiver<ToWorker>)>,
+    handles: Vec<JoinHandle<()>>,
+    counters: Arc<Counters>,
+}
+
+impl NetWorkerTransport {
+    pub fn connect(
+        addr: &NetAddr,
+        worker: usize,
+        plan: &ShardPlan,
+        policy: RetryPolicy,
+    ) -> Result<NetWorkerTransport> {
+        let mut stream = connect_retry(addr, policy)?;
+
+        let mut hello = Vec::new();
+        encode_handshake(
+            &Frame::Hello {
+                protocol: PROTOCOL_VERSION,
+                worker: worker as u32,
+                shards: plan.shards() as u32,
+                k: plan.k as u32,
+                d: plan.d as u32,
+            },
+            &mut hello,
+        );
+        stream.write_all(&hello).context("send Hello")?;
+        stream.flush().context("flush Hello")?;
+        match read_handshake_frame(&mut stream)? {
+            Frame::HelloAck { protocol, shards, k, d } => {
+                if protocol != PROTOCOL_VERSION {
+                    bail!(
+                        "protocol mismatch: server speaks v{protocol}, worker v{PROTOCOL_VERSION}"
+                    );
+                }
+                let (ps, pk, pd) =
+                    (plan.shards() as u32, plan.k as u32, plan.d as u32);
+                if (shards, k, d) != (ps, pk, pd) {
+                    bail!(
+                        "topology mismatch: server (shards={shards}, k={k}, d={d}), worker configured (shards={ps}, k={pk}, d={pd})"
+                    );
+                }
+            }
+            other => bail!("expected HelloAck, got {other:?}"),
+        }
+
+        let counters = Arc::new(Counters::default());
+        let (to_server_tx, to_server_rx) = channel::<ToServer>();
+        let (from_server_tx, from_server_rx) = channel::<ToWorker>();
+        let read_half = stream.try_clone()?;
+        let handles = vec![
+            spawn_writer_to_server(
+                stream,
+                to_server_rx,
+                Arc::clone(&counters),
+            ),
+            spawn_reader_to_worker(
+                read_half,
+                from_server_tx,
+                plan.clone(),
+                worker,
+                Arc::clone(&counters),
+            ),
+        ];
+        Ok(NetWorkerTransport {
+            worker,
+            endpoints: Some((to_server_tx, from_server_rx)),
+            handles,
+            counters,
+        })
+    }
+}
+
+impl Transport for NetWorkerTransport {
+    fn name(&self) -> &'static str {
+        "socket-worker"
+    }
+
+    fn server_endpoints(
+        &mut self,
+    ) -> Result<(Receiver<ToServer>, Vec<Sender<ToWorker>>)> {
+        bail!("socket worker transport has no server endpoints")
+    }
+
+    fn worker_endpoints(
+        &mut self,
+        worker: usize,
+    ) -> Result<(Sender<ToServer>, Receiver<ToWorker>)> {
+        if worker != self.worker {
+            bail!(
+                "this node is worker {}, asked for endpoints of worker {worker}",
+                self.worker
+            );
+        }
+        self.endpoints.take().context("worker endpoints already taken")
+    }
+
+    fn finish(&mut self) -> TransportStats {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.counters.snapshot()
+    }
+}
+
+fn spawn_writer_to_server(
+    stream: Stream,
+    rx: Receiver<ToServer>,
+    counters: Arc<Counters>,
+) -> JoinHandle<()> {
+    thread::Builder::new()
+        .name("net-write-grad".to_string())
+        .spawn(move || {
+            let shutdown_handle =
+                stream.try_clone().expect("clone for shutdown");
+            let mut w = std::io::BufWriter::new(stream);
+            let mut buf = Vec::new();
+            while let Ok(msg) = rx.recv() {
+                buf.clear();
+                encode_to_server(&msg, &mut buf);
+                if write_all_counted(&mut w, &buf, &counters).is_err() {
+                    return;
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(m) => {
+                            buf.clear();
+                            encode_to_server(&m, &mut buf);
+                            if write_all_counted(&mut w, &buf, &counters)
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                        Err(TryRecvError::Empty) => {
+                            let _ = w.flush();
+                            break;
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            // Linger flush: the comm thread is done and
+                            // dropped its FaultySender; everything it
+                            // queued (including Done) is already drained
+                            // by the recv loop above.
+                            let _ = w.flush();
+                            shutdown_handle.shutdown_write();
+                            return;
+                        }
+                    }
+                }
+            }
+            let _ = w.flush();
+            shutdown_handle.shutdown_write();
+        })
+        .expect("spawn net writer")
+}
+
+fn spawn_reader_to_worker(
+    mut stream: Stream,
+    tx: Sender<ToWorker>,
+    plan: ShardPlan,
+    worker: usize,
+    counters: Arc<Counters>,
+) -> JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("net-read-param-w{worker}"))
+        .spawn(move || {
+            let mut body = Vec::new();
+            loop {
+                match read_frame(&mut stream, &mut body) {
+                    Ok(Some(())) => {}
+                    Ok(None) => break, // clean EOF: server done
+                    Err(e) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[net] server stream broken: {e:#}");
+                        break;
+                    }
+                }
+                counters
+                    .bytes_received
+                    .fetch_add(4 + body.len() as u64, Ordering::Relaxed);
+                let msg = match decode_frame(&body) {
+                    Ok(Frame::ToWorker(m)) => m,
+                    Ok(other) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[net] server sent unexpected frame {other:?}; closing"
+                        );
+                        break;
+                    }
+                    Err(e @ FrameError::Malformed(_)) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[net] server stream corrupt: {e}; closing");
+                        break;
+                    }
+                    Err(e) => {
+                        counters
+                            .rejected_frames
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[net] server frame: {e}; closing");
+                        break;
+                    }
+                };
+                if let Err(e) = validate_to_worker(&plan, &msg) {
+                    counters
+                        .rejected_frames
+                        .fetch_add(1, Ordering::Relaxed);
+                    eprintln!("[net] rejected param message: {e}");
+                    continue;
+                }
+                counters.frames_received.fetch_add(1, Ordering::Relaxed);
+                if tx.send(msg).is_err() {
+                    break; // worker machinery gone
+                }
+            }
+        })
+        .expect("spawn net reader")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::messages::SliceEncoding;
+
+    fn loopback() -> NetAddr {
+        NetAddr::Tcp("127.0.0.1:0".to_string())
+    }
+
+    #[test]
+    fn addr_parse_forms() {
+        assert_eq!(
+            NetAddr::parse("127.0.0.1:4000").unwrap(),
+            NetAddr::Tcp("127.0.0.1:4000".to_string())
+        );
+        assert!(NetAddr::parse("no-port").is_err());
+        #[cfg(unix)]
+        assert_eq!(
+            NetAddr::parse("unix:/tmp/x.sock").unwrap(),
+            NetAddr::Unix(std::path::PathBuf::from("/tmp/x.sock"))
+        );
+    }
+
+    /// A full socket bridge: grads flow worker→server, params flow
+    /// back, Done tears everything down, and both sides join cleanly.
+    #[test]
+    fn bridge_round_trip_over_tcp() {
+        let plan = ShardPlan::new(4, 4, 2);
+        let server = NetServer::bind(&loopback()).unwrap();
+        let addr = server.local_addr().unwrap();
+
+        let wplan = plan.clone();
+        let worker = thread::spawn(move || {
+            let mut t = NetWorkerTransport::connect(
+                &addr,
+                0,
+                &wplan,
+                RetryPolicy::default(),
+            )
+            .unwrap();
+            let (tx, rx) = t.worker_endpoints(0).unwrap();
+            tx.send(ToServer::Grad {
+                worker: 0,
+                shard: 1,
+                step: 0,
+                grad: SliceEncoding::Dense(vec![1.0; wplan.len(1)]),
+                loss: 0.5,
+            })
+            .unwrap();
+            let param = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            match &param {
+                ToWorker::Param { shard, version, .. } => {
+                    assert_eq!((*shard, *version), (1, 7));
+                }
+            }
+            tx.send(ToServer::Done { worker: 0 }).unwrap();
+            drop(tx);
+            t.finish()
+        });
+
+        let mut t = server.accept_workers(&plan, 1).unwrap();
+        let (from_workers, to_workers) = t.server_endpoints().unwrap();
+        match from_workers.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToServer::Grad { worker, shard, step, loss, grad } => {
+                assert_eq!((worker, shard, step), (0, 1, 0));
+                assert_eq!(loss, 0.5);
+                assert_eq!(grad.encoded_bytes(), 4 * plan.len(1) as u64);
+            }
+            other => panic!("expected grad, got {other:?}"),
+        }
+        to_workers[0]
+            .send(ToWorker::Param {
+                shard: 1,
+                version: 7,
+                clock: 7,
+                data: SliceEncoding::Dense(vec![2.0; plan.len(1)]),
+            })
+            .unwrap();
+        match from_workers.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToServer::Done { worker } => assert_eq!(worker, 0),
+            other => panic!("expected done, got {other:?}"),
+        }
+        drop(to_workers);
+        let wstats = worker.join().unwrap();
+        let sstats = t.finish();
+        assert_eq!(wstats.frames_sent, 2); // grad + done
+        assert_eq!(wstats.frames_received, 1); // param
+        assert_eq!(sstats.frames_received, 2);
+        assert_eq!(sstats.frames_sent, 1);
+        assert_eq!(wstats.rejected_frames, 0);
+        assert_eq!(sstats.rejected_frames, 0);
+    }
+
+    /// Corrupt shard id in an otherwise well-framed message: the server
+    /// bridge must reject it (never forwarding to the fold path) and
+    /// keep the connection alive for subsequent good frames.
+    #[test]
+    fn corrupt_shard_id_is_rejected_not_forwarded() {
+        let plan = ShardPlan::new(4, 4, 2);
+        let server = NetServer::bind(&loopback()).unwrap();
+        let addr = server.local_addr().unwrap();
+
+        let wplan = plan.clone();
+        let client = thread::spawn(move || {
+            let mut stream =
+                connect_retry(&addr, RetryPolicy::default()).unwrap();
+            let mut hello = Vec::new();
+            encode_handshake(
+                &Frame::Hello {
+                    protocol: PROTOCOL_VERSION,
+                    worker: 0,
+                    shards: wplan.shards() as u32,
+                    k: wplan.k as u32,
+                    d: wplan.d as u32,
+                },
+                &mut hello,
+            );
+            stream.write_all(&hello).unwrap();
+            read_handshake_frame(&mut stream).unwrap();
+            // shard 9 of 2: well-framed, semantically corrupt
+            let mut buf = Vec::new();
+            encode_to_server(
+                &ToServer::Grad {
+                    worker: 0,
+                    shard: 9,
+                    step: 0,
+                    grad: SliceEncoding::Dense(vec![0.0; 8]),
+                    loss: 0.0,
+                },
+                &mut buf,
+            );
+            encode_to_server(&ToServer::Done { worker: 0 }, &mut buf);
+            stream.write_all(&buf).unwrap();
+            stream.flush().unwrap();
+            stream.shutdown_write();
+            // drain until server closes
+            let mut sink = Vec::new();
+            let _ = stream.read_to_end(&mut sink);
+        });
+
+        let mut t = server.accept_workers(&plan, 1).unwrap();
+        let (from_workers, to_workers) = t.server_endpoints().unwrap();
+        // Only Done arrives: the corrupt grad was rejected at the edge.
+        match from_workers.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToServer::Done { worker } => assert_eq!(worker, 0),
+            other => panic!("corrupt frame leaked through: {other:?}"),
+        }
+        assert!(from_workers.recv_timeout(Duration::from_millis(200)).is_err());
+        drop(to_workers);
+        client.join().unwrap();
+        let stats = t.finish();
+        assert_eq!(stats.rejected_frames, 1);
+        assert_eq!(stats.frames_received, 1);
+    }
+
+    /// A structurally corrupt stream (garbage length prefix) drops the
+    /// connection rather than wedging the reader.
+    #[test]
+    fn oversized_length_prefix_drops_connection() {
+        let plan = ShardPlan::new(4, 4, 1);
+        let server = NetServer::bind(&loopback()).unwrap();
+        let addr = server.local_addr().unwrap();
+
+        let wplan = plan.clone();
+        let client = thread::spawn(move || {
+            let mut stream =
+                connect_retry(&addr, RetryPolicy::default()).unwrap();
+            let mut hello = Vec::new();
+            encode_handshake(
+                &Frame::Hello {
+                    protocol: PROTOCOL_VERSION,
+                    worker: 0,
+                    shards: 1,
+                    k: wplan.k as u32,
+                    d: wplan.d as u32,
+                },
+                &mut hello,
+            );
+            stream.write_all(&hello).unwrap();
+            read_handshake_frame(&mut stream).unwrap();
+            stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            stream.flush().unwrap();
+            let mut sink = Vec::new();
+            let _ = stream.read_to_end(&mut sink);
+        });
+
+        let mut t = server.accept_workers(&plan, 1).unwrap();
+        let (from_workers, to_workers) = t.server_endpoints().unwrap();
+        // Reader drops the stream; channel reports disconnect.
+        assert!(from_workers.recv_timeout(Duration::from_secs(5)).is_err());
+        drop(to_workers);
+        client.join().unwrap();
+        let stats = t.finish();
+        assert_eq!(stats.rejected_frames, 1);
+    }
+
+    #[test]
+    fn topology_mismatch_fails_handshake() {
+        let plan = ShardPlan::new(4, 4, 2);
+        let server = NetServer::bind(&loopback()).unwrap();
+        let addr = server.local_addr().unwrap();
+        let wrong = ShardPlan::new(4, 4, 3); // 3 shards vs server's 2
+        let client = thread::spawn(move || {
+            NetWorkerTransport::connect(
+                &addr,
+                0,
+                &wrong,
+                RetryPolicy::default(),
+            )
+        });
+        assert!(server.accept_workers(&plan, 1).is_err());
+        // The worker either sees the topology error from HelloAck (if
+        // the server's bail happened after the ack — impossible here) or
+        // a closed connection; both are Err.
+        assert!(client.join().unwrap().is_err());
+    }
+}

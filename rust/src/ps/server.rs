@@ -97,6 +97,12 @@ pub struct ServerResult {
     /// Encoded payload bytes of the parameter slices actually shipped
     /// to workers (post drop-gate; pairs with `param_msgs`).
     pub param_bytes_sent: u64,
+    /// Gradient messages naming a shard outside the plan, counted and
+    /// skipped by the comm thread's `route()`. Always zero with
+    /// well-behaved workers; non-zero means a corrupt or mis-built
+    /// message got past the transport edge, and the per-worker
+    /// accounting identity may no longer balance against folds.
+    pub misroutes: u64,
 }
 
 /// What one shard's update thread hands back.
@@ -119,8 +125,9 @@ enum ProbeMsg {
 pub struct Server {
     shard_handles: Vec<std::thread::JoinHandle<ShardOutcome>>,
     probe_handle: std::thread::JoinHandle<Curve>,
-    /// Returns (param slice messages shipped, encoded param bytes).
-    comm_handle: std::thread::JoinHandle<(u64, u64)>,
+    /// Returns (param slice messages shipped, encoded param bytes,
+    /// misrouted gradient messages).
+    comm_handle: std::thread::JoinHandle<(u64, u64, u64)>,
     plan: ShardPlan,
 }
 
@@ -252,7 +259,7 @@ impl Server {
         let seed = cfg.seed;
         let comm_handle = std::thread::Builder::new()
             .name("ps-server-comm".into())
-            .spawn(move || -> (u64, u64) {
+            .spawn(move || -> (u64, u64, u64) {
                 let mut senders: Vec<FaultySender<ToWorker>> = to_workers
                     .into_iter()
                     .enumerate()
@@ -261,10 +268,15 @@ impl Server {
                             tx,
                             faults.drop_param_prob,
                             faults.latency,
-                            seed ^ (w as u64) << 8,
+                            // `<<` binds tighter than `^`, so these
+                            // parens are what the expression always
+                            // computed — written out for clippy's
+                            // `precedence` lint.
+                            seed ^ ((w as u64) << 8),
                         )
                     })
                     .collect();
+                let mut misroutes = 0u64;
                 // reused across iterations: freshest pending Param per
                 // shard (no steady-state allocation in the poll loop)
                 let mut latest: Vec<Option<ToWorker>> =
@@ -277,10 +289,14 @@ impl Server {
                     match from_workers.recv_timeout(Duration::from_millis(1))
                     {
                         Ok(msg) => {
-                            route(&inbound_txs, msg);
+                            route(&inbound_txs, msg, &mut misroutes);
                             for _ in 0..256 {
                                 match from_workers.try_recv() {
-                                    Ok(m) => route(&inbound_txs, m),
+                                    Ok(m) => route(
+                                        &inbound_txs,
+                                        m,
+                                        &mut misroutes,
+                                    ),
                                     Err(_) => break,
                                 }
                             }
@@ -305,7 +321,7 @@ impl Server {
                         // messages, ship final Param slices queued since
                         // this iteration's drain, flush in-flight, leave
                         while let Ok(msg) = from_workers.try_recv() {
-                            route(&inbound_txs, msg);
+                            route(&inbound_txs, msg, &mut misroutes);
                         }
                         broadcast_freshest(
                             &outbound_rx,
@@ -324,6 +340,7 @@ impl Server {
                 (
                     senders.iter().map(|s| s.stats().0).sum(),
                     senders.iter().map(|s| s.bytes_sent()).sum(),
+                    misroutes,
                 )
             })
             .expect("spawn server comm thread");
@@ -338,7 +355,7 @@ impl Server {
             .into_iter()
             .map(|h| h.join().expect("server shard panicked"))
             .collect();
-        let (param_msgs, param_bytes_sent) =
+        let (param_msgs, param_bytes_sent, misroutes) =
             self.comm_handle.join().expect("server comm panicked");
         let curve = self.probe_handle.join().expect("server probe panicked");
 
@@ -369,6 +386,7 @@ impl Server {
             last_loss,
             grad_bytes_received,
             param_bytes_sent,
+            misroutes,
         }
     }
 }
@@ -413,10 +431,22 @@ fn broadcast_freshest(
     }
 }
 
+/// How many misroutes are logged individually before the log throttles
+/// to every 1024th (a corrupt peer could otherwise flood stderr).
+const MISROUTE_LOG_HEAD: u64 = 8;
+
 /// Route one worker message to the owning shard (`Done` fans out to all).
 /// Send errors mean the shard already exited, which only happens after it
 /// saw every worker finish — safe to ignore.
-fn route(inbound: &[Sender<ToServer>], msg: ToServer) {
+///
+/// A `Grad` naming a shard outside the plan is counted in `misroutes`
+/// and skipped — never folded, never silently vanished. The socket
+/// backend already rejects such frames at decode time, so this firing
+/// means either an in-process caller built a bad message or a corrupt
+/// one slipped an edge; the count surfaces in `ServerResult::misroutes`
+/// so the accounting-identity checks can tell "dropped by fault model"
+/// from "lost to misrouting".
+fn route(inbound: &[Sender<ToServer>], msg: ToServer, misroutes: &mut u64) {
     let target = match &msg {
         ToServer::Grad { shard, .. } => Some(*shard),
         ToServer::Done { .. } => None,
@@ -426,7 +456,16 @@ fn route(inbound: &[Sender<ToServer>], msg: ToServer) {
             let _ = inbound[s].send(msg);
         }
         Some(s) => {
-            debug_assert!(false, "grad for unknown shard {s}");
+            *misroutes += 1;
+            if *misroutes <= MISROUTE_LOG_HEAD || *misroutes % 1024 == 0 {
+                if let ToServer::Grad { worker, step, .. } = &msg {
+                    eprintln!(
+                        "[ps-server] misroute #{}: grad from worker {worker} step {step} names shard {s} of {}; skipped",
+                        *misroutes,
+                        inbound.len()
+                    );
+                }
+            }
         }
         None => {
             if let ToServer::Done { worker } = msg {
@@ -472,22 +511,18 @@ fn run_shard(
     // folds the exact bits the worker computed)
     let mut dec = vec![0.0f32; slice.len()];
     loop {
-        let batch = match drain(
-            inbound_rx,
-            server_batch,
-            Duration::from_millis(20),
-        ) {
-            Ok(b) => b,
-            Err(_) => break, // comm thread gone
-        };
-        if batch.is_empty() {
-            if finished.iter().all(|&f| f) {
+        let drained =
+            drain(inbound_rx, server_batch, Duration::from_millis(20));
+        if drained.msgs.is_empty() {
+            // disconnect surfaces immediately now (the old shape hid it
+            // behind a partial batch for one extra timeout round)
+            if drained.disconnected || finished.iter().all(|&f| f) {
                 break;
             }
             continue;
         }
         let mut applied_this_round = false;
-        for msg in batch {
+        for msg in drained.msgs {
             match msg {
                 ToServer::Grad { worker, grad, loss, .. } => {
                     grad_bytes += grad.encoded_bytes();
@@ -561,7 +596,10 @@ fn run_shard(
                 data,
             });
         }
-        if finished.iter().all(|&f| f) {
+        // process the batch first, *then* act on a disconnect: any
+        // messages the comm thread routed before dying were folded and
+        // broadcast above, bit-identical to the pre-fix ordering.
+        if drained.disconnected || finished.iter().all(|&f| f) {
             break;
         }
     }

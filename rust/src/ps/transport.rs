@@ -1,9 +1,17 @@
-//! In-process transport between workers and the server.
+//! Transport between workers and the server.
 //!
-//! On the paper's cluster this is the network; here it is `std::sync::mpsc`
-//! channels wrapped with an optional fault model (message drops, injected
-//! latency) so tests can exercise the protocol under degraded conditions
-//! and benches can study sensitivity to communication cost.
+//! The server and worker machinery speak `std::sync::mpsc` endpoints on
+//! every backend; the [`Transport`] trait only decides what those
+//! endpoints are wired to. [`MemoryTransport`] connects them directly
+//! (the fast/test path — threads in one process, bit-identical to the
+//! pre-socket tree), while [`super::net`] bridges them to TCP or Unix
+//! sockets for real multi-process runs. Because the endpoints are the
+//! same type either way, [`FaultySender`] wraps both unchanged and the
+//! `sent + dropped == steps` accounting identity holds on both.
+//!
+//! The optional fault model (message drops, injected latency) lets
+//! tests exercise the protocol under degraded conditions and benches
+//! study sensitivity to communication cost.
 //!
 //! Latency is injected at *delivery* time, not send time: a delayed
 //! message parks in a per-sender in-flight queue and is handed to the
@@ -14,10 +22,139 @@
 //! shards' traffic through one nap.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
+use anyhow::{Context, Result};
+
+use super::messages::{ToServer, ToWorker};
 use crate::util::rng::Pcg32;
+
+/// Wire-level counters a [`Transport`] reports on [`Transport::finish`].
+/// All zero for the in-memory backend (there is no wire); for the
+/// socket backend, bytes include length prefixes and frame headers —
+/// deliberately distinct from the payload-exact `encoded_bytes()`
+/// telemetry the PS machinery itself reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+    /// Frames refused at the edge: structurally corrupt streams or
+    /// semantically invalid messages (bad shard id, mis-sized slice).
+    pub rejected_frames: u64,
+}
+
+/// What connects the PS endpoints. Implementations hand out mpsc
+/// channel halves — `Server::spawn` takes the server side, each
+/// `Worker::spawn` a worker side — and own whatever machinery moves
+/// messages between them.
+///
+/// Each endpoint set can be taken once; taking a side this node does
+/// not host (e.g. server endpoints from a worker-node transport) is an
+/// error, not a panic, so a mis-wired deployment fails with context.
+pub trait Transport {
+    /// Backend name for logs and run telemetry.
+    fn name(&self) -> &'static str;
+
+    /// The server's endpoints: the shared worker→server receiver plus
+    /// one parameter-broadcast sender per worker.
+    fn server_endpoints(
+        &mut self,
+    ) -> Result<(Receiver<ToServer>, Vec<Sender<ToWorker>>)>;
+
+    /// Worker `w`'s endpoints: its gradient sender and parameter
+    /// receiver.
+    fn worker_endpoints(
+        &mut self,
+        worker: usize,
+    ) -> Result<(Sender<ToServer>, Receiver<ToWorker>)>;
+
+    /// Tear down after both sides have joined; returns wire telemetry.
+    fn finish(&mut self) -> TransportStats;
+}
+
+/// The in-memory backend: endpoints are directly-connected channels,
+/// exactly the wiring the pre-socket tree hard-coded in
+/// `run_distributed`. Hosts both sides in one process.
+pub struct MemoryTransport {
+    to_server_tx: Option<Sender<ToServer>>,
+    to_server_rx: Option<Receiver<ToServer>>,
+    to_worker_txs: Option<Vec<Sender<ToWorker>>>,
+    to_worker_rxs: Vec<Option<Receiver<ToWorker>>>,
+}
+
+impl MemoryTransport {
+    pub fn new(workers: usize) -> MemoryTransport {
+        let (to_server_tx, to_server_rx) = channel();
+        let mut txs = Vec::with_capacity(workers);
+        let mut rxs = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        MemoryTransport {
+            to_server_tx: Some(to_server_tx),
+            to_server_rx: Some(to_server_rx),
+            to_worker_txs: Some(txs),
+            to_worker_rxs: rxs,
+        }
+    }
+
+    /// Drop the master worker→server sender. Call after every worker
+    /// has taken its endpoints: from then on the server sees disconnect
+    /// exactly when the last worker's sender drops (the shutdown signal
+    /// the comm loop's hung-up fallback relies on).
+    pub fn seal(&mut self) {
+        self.to_server_tx = None;
+    }
+}
+
+impl Transport for MemoryTransport {
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+
+    fn server_endpoints(
+        &mut self,
+    ) -> Result<(Receiver<ToServer>, Vec<Sender<ToWorker>>)> {
+        let rx = self
+            .to_server_rx
+            .take()
+            .context("server endpoints already taken")?;
+        let txs = self
+            .to_worker_txs
+            .take()
+            .context("server endpoints already taken")?;
+        Ok((rx, txs))
+    }
+
+    fn worker_endpoints(
+        &mut self,
+        worker: usize,
+    ) -> Result<(Sender<ToServer>, Receiver<ToWorker>)> {
+        let tx = self
+            .to_server_tx
+            .as_ref()
+            .context("transport already sealed")?
+            .clone();
+        let rx = self
+            .to_worker_rxs
+            .get_mut(worker)
+            .with_context(|| format!("no worker {worker} in transport"))?
+            .take()
+            .with_context(|| {
+                format!("worker {worker} endpoints already taken")
+            })?;
+        Ok((tx, rx))
+    }
+
+    fn finish(&mut self) -> TransportStats {
+        TransportStats::default()
+    }
+}
 
 /// Fault/latency injection parameters (all zero = perfect transport).
 #[derive(Clone, Copy, Debug, Default)]
@@ -207,26 +344,43 @@ impl<T> FaultySender<T> {
     }
 }
 
+/// One [`drain`] result: the batch plus whether the channel's senders
+/// are gone. Disconnect travels *with* the batch it interrupted — the
+/// old `Result<Vec<T>, _>` shape could only signal disconnect on an
+/// empty read, so a partial batch silently swallowed it and the caller
+/// burned one more full timeout before noticing.
+#[derive(Debug)]
+pub struct Drained<T> {
+    pub msgs: Vec<T>,
+    /// True once every sender has hung up. Any messages queued before
+    /// the last sender dropped are still in `msgs` (mpsc delivers them
+    /// first), so process the batch, then react to the flag.
+    pub disconnected: bool,
+}
+
 /// Drain up to `max` pending messages without blocking; first waits up to
 /// `timeout` for one message. The shard update threads' dequeue pattern.
-pub fn drain<T>(
-    rx: &Receiver<T>,
-    max: usize,
-    timeout: Duration,
-) -> Result<Vec<T>, RecvTimeoutError> {
+pub fn drain<T>(rx: &Receiver<T>, max: usize, timeout: Duration) -> Drained<T> {
     let mut out = Vec::new();
     match rx.recv_timeout(timeout) {
         Ok(m) => out.push(m),
-        Err(RecvTimeoutError::Timeout) => return Ok(out),
-        Err(e) => return Err(e),
+        Err(RecvTimeoutError::Timeout) => {
+            return Drained { msgs: out, disconnected: false }
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            return Drained { msgs: out, disconnected: true }
+        }
     }
     while out.len() < max {
         match rx.try_recv() {
             Ok(m) => out.push(m),
-            Err(_) => break,
+            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                return Drained { msgs: out, disconnected: true }
+            }
         }
     }
-    Ok(out)
+    Drained { msgs: out, disconnected: false }
 }
 
 #[cfg(test)]
@@ -371,23 +525,106 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let batch = drain(&rx, 4, Duration::from_millis(10)).unwrap();
-        assert_eq!(batch, vec![0, 1, 2, 3]);
-        let batch = drain(&rx, 100, Duration::from_millis(10)).unwrap();
-        assert_eq!(batch.len(), 6);
+        let d = drain(&rx, 4, Duration::from_millis(10));
+        assert_eq!(d.msgs, vec![0, 1, 2, 3]);
+        assert!(!d.disconnected, "live sender reported as gone");
+        let d = drain(&rx, 100, Duration::from_millis(10));
+        assert_eq!(d.msgs.len(), 6);
+        assert!(!d.disconnected);
     }
 
     #[test]
     fn drain_times_out_empty() {
         let (_tx, rx) = channel::<i32>();
-        let batch = drain(&rx, 4, Duration::from_millis(5)).unwrap();
-        assert!(batch.is_empty());
+        let d = drain(&rx, 4, Duration::from_millis(5));
+        assert!(d.msgs.is_empty());
+        assert!(!d.disconnected, "timeout is not disconnect");
     }
 
     #[test]
-    fn drain_detects_disconnect() {
+    fn drain_detects_disconnect_when_empty() {
         let (tx, rx) = channel::<i32>();
         drop(tx);
-        assert!(drain(&rx, 4, Duration::from_millis(5)).is_err());
+        let d = drain(&rx, 4, Duration::from_millis(5));
+        assert!(d.msgs.is_empty());
+        assert!(d.disconnected);
+    }
+
+    /// The bug this shape fixes: messages queued before the sender
+    /// dropped must arrive in the same call that reports the
+    /// disconnect, not mask it for another 20 ms timeout round.
+    #[test]
+    fn drain_surfaces_disconnect_with_partial_batch() {
+        let (tx, rx) = channel::<i32>();
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let d = drain(&rx, 10, Duration::from_millis(5));
+        assert_eq!(d.msgs, vec![0, 1, 2], "queued messages not lost");
+        assert!(
+            d.disconnected,
+            "disconnect masked by the partial batch (the old Err(_)=>break bug)"
+        );
+    }
+
+    /// A batch cut short by `max` (channel still has messages) must NOT
+    /// claim disconnect even if the sender is already gone — the
+    /// remaining messages still need draining first; the next call
+    /// reports it.
+    #[test]
+    fn drain_full_batch_defers_disconnect_to_next_call() {
+        let (tx, rx) = channel::<i32>();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let d = drain(&rx, 3, Duration::from_millis(5));
+        assert_eq!(d.msgs, vec![0, 1, 2]);
+        assert!(!d.disconnected, "max-limited batch must not skip messages");
+        let d = drain(&rx, 3, Duration::from_millis(5));
+        assert_eq!(d.msgs, vec![3, 4]);
+        assert!(d.disconnected);
+    }
+
+    #[test]
+    fn memory_transport_wires_both_sides() {
+        let mut t = MemoryTransport::new(2);
+        assert_eq!(t.name(), "memory");
+        let (from_workers, to_workers) = t.server_endpoints().unwrap();
+        assert!(t.server_endpoints().is_err(), "server side taken twice");
+        let (tx0, rx0) = t.worker_endpoints(0).unwrap();
+        let (tx1, _rx1) = t.worker_endpoints(1).unwrap();
+        assert!(t.worker_endpoints(1).is_err(), "worker side taken twice");
+        assert!(t.worker_endpoints(9).is_err(), "out-of-range worker");
+        t.seal();
+        assert!(t.worker_endpoints(0).is_err(), "sealed transport");
+
+        tx0.send(ToServer::Done { worker: 0 }).unwrap();
+        tx1.send(ToServer::Done { worker: 1 }).unwrap();
+        let mut seen: Vec<usize> = (0..2)
+            .map(|_| match from_workers.recv().unwrap() {
+                ToServer::Done { worker } => worker,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+
+        to_workers[0]
+            .send(ToWorker::Param {
+                shard: 0,
+                version: 1,
+                clock: 1,
+                data: super::super::messages::SliceEncoding::Dense(vec![0.0]),
+            })
+            .unwrap();
+        assert!(rx0.recv().is_ok());
+        // after seal + all worker senders dropped, server sees disconnect
+        drop(tx0);
+        drop(tx1);
+        let d = drain(&from_workers, 4, Duration::from_millis(5));
+        assert!(d.disconnected);
+        assert_eq!(t.finish(), TransportStats::default());
     }
 }

@@ -324,6 +324,15 @@ impl Worker {
                                             .slice_mut(&mut l.data, shard),
                                     );
                                 }
+                                // The store+notify must happen under
+                                // cv_m: the gate checks min_clock() and
+                                // parks while holding that lock, so a
+                                // notify from outside it can land in
+                                // the check→park window and be lost —
+                                // the gate then burns a full 50 ms
+                                // wait_timeout per lost wakeup.
+                                let _g =
+                                    r_shared.cv_m.lock().unwrap();
                                 r_shared.versions[shard]
                                     .store(version, Ordering::SeqCst);
                                 r_shared.clocks[shard]
@@ -428,8 +437,7 @@ impl Worker {
     /// Join the compute thread, then stop and join the service threads.
     pub fn join(self) -> WorkerStats {
         let mut stats = self.compute.join().expect("compute panicked");
-        self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        Self::signal_stop(&self.shared);
         let (sent, dropped, grad_bytes) =
             self.comm.join().expect("comm panicked");
         self.remote_update.join().expect("remote-update panicked");
@@ -445,8 +453,17 @@ impl Worker {
 
     /// Signal the worker to stop early (used by failure-injection tests).
     pub fn stop(&self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        Self::signal_stop(&self.shared);
+    }
+
+    /// Set the stop flag and wake the gate — under `cv_m`, for the same
+    /// lost-wakeup reason as the remote-update thread's notify: a stop
+    /// raised in the gate's check→park window must not strand it for a
+    /// wait_timeout round.
+    fn signal_stop(shared: &Shared) {
+        let _g = shared.cv_m.lock().unwrap();
+        shared.stop.store(true, Ordering::SeqCst);
+        shared.cv.notify_all();
     }
 }
 

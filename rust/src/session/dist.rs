@@ -1,14 +1,31 @@
 //! Distributed-training executor core.
 //!
 //! This is the orchestration that used to live in `ps::run_training`:
-//! build the shard plan, pair sources, and channels; spawn the server
-//! and workers; join and collect the [`TrainResult`]. It moved here so
-//! the [`Session`](super::Session) builder is the single entry point;
-//! the old `ps::run_training` survives as a deprecated shim that calls
-//! straight into this function (and is pinned bit-identical to it by
-//! the `api_session` golden tests).
+//! build the shard plan, pair sources, and transport endpoints; spawn
+//! the server and workers; join and collect the [`TrainResult`]. It
+//! moved here so the [`Session`](super::Session) builder is the single
+//! entry point; the old `ps::run_training` survives as a deprecated
+//! shim that calls straight into this function (and is pinned
+//! bit-identical to it by the `api_session` golden tests).
+//!
+//! Three entry points share the same parameterization helpers, so a
+//! role runs with the *same* seeds and configs no matter which one
+//! spawns it:
+//!
+//! * [`run_distributed`] — both sides in one process over
+//!   [`MemoryTransport`] (the historical fast/test path, bit-identical
+//!   to the pre-transport-trait tree).
+//! * [`run_server_node`] — the server side only, over any
+//!   [`Transport`]; used by `dmlps node --role server`.
+//! * [`run_worker_node`] — one worker, over any [`Transport`]; used by
+//!   `dmlps node --role worker`.
+//!
+//! Node processes do not ship datasets over the wire: every node
+//! regenerates the dataset, initial L, pair partition, and shard plan
+//! deterministically from the shared config + seed, exactly as the
+//! in-process path builds them. The only cross-process traffic is the
+//! PS protocol itself.
 
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use crate::config::{ExperimentConfig, PairMode};
@@ -20,39 +37,18 @@ use crate::dml::{DmlProblem, EngineFactory, LrSchedule};
 use crate::linalg::Mat;
 use crate::metrics::Curve;
 use crate::ps::{
-    ProbeFn, RunOptions, Server, ServerConfig, ShardPlan, TrainResult,
-    Worker, WorkerConfig, WorkerStats,
+    MemoryTransport, ProbeFn, RunOptions, Server, ServerConfig, ShardPlan,
+    TrainResult, Transport, Worker, WorkerConfig, WorkerStats,
 };
 
 use super::events::{EventSink, ProbeEvent};
 
-/// Run distributed DML training with the threaded parameter server.
-///
-/// * `engines` — factory each worker's computing thread uses.
-/// * `events` — optional sink fed by the probe thread, the server
-///   shards, and the workers; `None` is byte-for-byte the historical
-///   protocol.
-///
-/// The probe engine (objective recording on the server's probe thread)
-/// is always the native engine: probes are off the hot path and must
-/// not depend on artifacts being present.
-pub(crate) fn run_distributed(
-    cfg: &ExperimentConfig,
-    dataset: Arc<Dataset>,
-    pairs: &PairSet,
-    engines: EngineFactory,
-    opts: &RunOptions,
-    events: Option<Arc<dyn EventSink>>,
-) -> anyhow::Result<TrainResult> {
-    let problem =
-        DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda);
-    let l0 = problem.init_l(cfg.model.init_scale, cfg.seed);
-    let p = cfg.cluster.workers;
-    anyhow::ensure!(p > 0, "need at least one worker");
-    // BSP/SSP gates wait for server clocks that only advance when
-    // gradients arrive and parameter broadcasts land; with message drops
-    // and no retransmission the clock can stall below the gate forever.
-    // Fail fast instead of deadlocking the run.
+/// Guards shared by every entry point: a worker exists, and lossy
+/// transports only combine with ASP (BSP/SSP gates wait on clocks that
+/// a dropped, unretransmitted update can stall forever — fail fast
+/// instead of deadlocking).
+fn validate(cfg: &ExperimentConfig, opts: &RunOptions) -> anyhow::Result<()> {
+    anyhow::ensure!(cfg.cluster.workers > 0, "need at least one worker");
     anyhow::ensure!(
         cfg.cluster.consistency == crate::config::Consistency::Asp
             || (opts.faults.drop_grad_prob == 0.0
@@ -60,26 +56,38 @@ pub(crate) fn run_distributed(
         "message drops require ASP consistency: BSP/SSP gates can \
          deadlock on a dropped update (no retransmission layer)"
     );
+    Ok(())
+}
 
-    // ---- the shard plan both sides agree on (clamped to the row count;
-    //      server_shards = 0 is treated as 1 for configs predating the
-    //      knob) ----
-    let plan = ShardPlan::new(
+/// The shard plan both sides agree on (clamped to the row count;
+/// `server_shards = 0` is treated as 1 for configs predating the knob).
+pub fn plan_for(cfg: &ExperimentConfig) -> ShardPlan {
+    ShardPlan::new(
         cfg.model.k,
         cfg.dataset.dim,
         cfg.cluster.server_shards.max(1),
-    );
-    let server_shards = plan.shards();
+    )
+}
 
-    // ---- pair sources: materialized shards (paper §4.1 clone-and-
-    //      shuffle) or implicit (seed, w, t) samplers whose index
-    //      spaces partition by worker ≡ w (mod P). The class index is
-    //      O(n) in dataset size and shared by all samplers (workers
-    //      and the probe alike). ----
+/// The deterministic initial L every role starts from.
+fn init_l(cfg: &ExperimentConfig) -> Mat {
+    DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda)
+        .init_l(cfg.model.init_scale, cfg.seed)
+}
+
+/// Pair sources for all P workers (and the shared class index in
+/// streaming mode). Deterministic in (cfg, seed): a worker node builds
+/// the same partition the in-process run builds and takes its slot.
+fn build_sources(
+    cfg: &ExperimentConfig,
+    dataset: &Arc<Dataset>,
+    pairs: &PairSet,
+) -> anyhow::Result<(Vec<WorkerPairs>, Option<Arc<ClassIndex>>)> {
+    let p = cfg.cluster.workers;
     let stream_index = match cfg.cluster.pairs.mode {
         PairMode::Materialized => None,
         PairMode::Streaming => Some(Arc::new(ClassIndex::build(
-            &dataset,
+            dataset,
             cfg.cluster.pairs.imbalance,
         )?)),
     };
@@ -101,16 +109,102 @@ pub(crate) fn run_distributed(
             })
             .collect(),
     };
+    Ok((sources, stream_index))
+}
 
-    // ---- channels: workers → server (shared), server → each worker ----
-    let (to_server_tx, to_server_rx) = channel();
-    let mut to_worker_txs = Vec::with_capacity(p);
-    let mut to_worker_rxs = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = channel();
-        to_worker_txs.push(tx);
-        to_worker_rxs.push(rx);
+fn server_cfg(
+    cfg: &ExperimentConfig,
+    opts: &RunOptions,
+    events: Option<Arc<dyn EventSink>>,
+) -> ServerConfig {
+    let p = cfg.cluster.workers;
+    ServerConfig {
+        workers: p,
+        server_batch: cfg.cluster.server_batch,
+        lr: LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay),
+        lr_scale: 1.0 / p as f32,
+        probe_every: opts.probe_every,
+        faults: opts.faults,
+        seed: cfg.seed ^ 0x5E2,
+        compression: cfg.cluster.compression,
+        events,
     }
+}
+
+fn worker_cfg(
+    cfg: &ExperimentConfig,
+    w: usize,
+    opts: &RunOptions,
+    events: Option<Arc<dyn EventSink>>,
+) -> WorkerConfig {
+    WorkerConfig {
+        id: w,
+        steps: cfg.optim.steps,
+        batch_sim: cfg.optim.batch_sim,
+        batch_dis: cfg.optim.batch_dis,
+        lambda: cfg.optim.lambda,
+        lr: LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay),
+        consistency: cfg.cluster.consistency,
+        faults: opts.faults,
+        seed: cfg.seed ^ ((w as u64 + 1) << 16),
+        threads: cfg.cluster.threads_per_worker,
+        compression: cfg.cluster.compression,
+        events,
+    }
+}
+
+fn train_result_from_server(
+    sr: crate::ps::ServerResult,
+    server_shards: usize,
+    worker_stats: Vec<WorkerStats>,
+    wall_s: f64,
+) -> TrainResult {
+    TrainResult {
+        l: sr.l,
+        curve: sr.curve,
+        applied_updates: sr.applied_updates,
+        slice_updates: sr.slice_updates,
+        broadcasts: sr.broadcasts,
+        param_msgs: sr.param_msgs,
+        server_shards,
+        last_loss: sr.last_loss,
+        grad_bytes_received: sr.grad_bytes_received,
+        param_bytes_sent: sr.param_bytes_sent,
+        misroutes: sr.misroutes,
+        worker_stats,
+        wall_s,
+    }
+}
+
+/// Run distributed DML training with the threaded parameter server.
+///
+/// * `engines` — factory each worker's computing thread uses.
+/// * `events` — optional sink fed by the probe thread, the server
+///   shards, and the workers; `None` is byte-for-byte the historical
+///   protocol.
+///
+/// The probe engine (objective recording on the server's probe thread)
+/// is always the native engine: probes are off the hot path and must
+/// not depend on artifacts being present.
+pub(crate) fn run_distributed(
+    cfg: &ExperimentConfig,
+    dataset: Arc<Dataset>,
+    pairs: &PairSet,
+    engines: EngineFactory,
+    opts: &RunOptions,
+    events: Option<Arc<dyn EventSink>>,
+) -> anyhow::Result<TrainResult> {
+    validate(cfg, opts)?;
+    let l0 = init_l(cfg);
+    let p = cfg.cluster.workers;
+    let plan = plan_for(cfg);
+    let server_shards = plan.shards();
+
+    let (sources, stream_index) = build_sources(cfg, &dataset, pairs)?;
+
+    // ---- transport: directly-wired channels, both sides local ----
+    let mut transport = MemoryTransport::new(p);
+    let (to_server_rx, to_worker_txs) = transport.server_endpoints()?;
 
     // ---- objective probe (runs on the server probe thread) ----
     let probe = make_probe(
@@ -123,20 +217,9 @@ pub(crate) fn run_distributed(
     );
 
     // ---- spawn server ----
-    let lr = LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay);
     let watch = crate::metrics::Stopwatch::start();
     let server = Server::spawn(
-        ServerConfig {
-            workers: p,
-            server_batch: cfg.cluster.server_batch,
-            lr,
-            lr_scale: 1.0 / p as f32,
-            probe_every: opts.probe_every,
-            faults: opts.faults,
-            seed: cfg.seed ^ 0x5E2,
-            compression: cfg.cluster.compression,
-            events: events.clone(),
-        },
+        server_cfg(cfg, opts, events.clone()),
         plan.clone(),
         l0.clone(),
         to_server_rx,
@@ -147,51 +230,126 @@ pub(crate) fn run_distributed(
     // ---- spawn workers ----
     let mut workers = Vec::with_capacity(p);
     for (w, source) in sources.into_iter().enumerate() {
-        let wcfg = WorkerConfig {
-            id: w,
-            steps: cfg.optim.steps,
-            batch_sim: cfg.optim.batch_sim,
-            batch_dis: cfg.optim.batch_dis,
-            lambda: cfg.optim.lambda,
-            lr,
-            consistency: cfg.cluster.consistency,
-            faults: opts.faults,
-            seed: cfg.seed ^ ((w as u64 + 1) << 16),
-            threads: cfg.cluster.threads_per_worker,
-            compression: cfg.cluster.compression,
-            events: events.clone(),
-        };
+        let (to_server_tx, from_server_rx) = transport.worker_endpoints(w)?;
         workers.push(Worker::spawn(
-            wcfg,
+            worker_cfg(cfg, w, opts, events.clone()),
             plan.clone(),
             l0.clone(),
             dataset.clone(),
             source,
-            to_server_tx.clone(),
-            to_worker_rxs.remove(0),
+            to_server_tx,
+            from_server_rx,
             engines.clone(),
         ));
     }
-    drop(to_server_tx); // server sees disconnect when all workers finish
+    // server sees disconnect when all workers finish
+    transport.seal();
 
     // ---- join ----
     let worker_stats: Vec<WorkerStats> =
         workers.into_iter().map(Worker::join).collect();
     let sr = server.join();
-    Ok(TrainResult {
-        l: sr.l,
-        curve: sr.curve,
-        applied_updates: sr.applied_updates,
-        slice_updates: sr.slice_updates,
-        broadcasts: sr.broadcasts,
-        param_msgs: sr.param_msgs,
+    transport.finish();
+    Ok(train_result_from_server(
+        sr,
         server_shards,
-        last_loss: sr.last_loss,
-        grad_bytes_received: sr.grad_bytes_received,
-        param_bytes_sent: sr.param_bytes_sent,
         worker_stats,
-        wall_s: watch.elapsed_s(),
-    })
+        watch.elapsed_s(),
+    ))
+}
+
+/// Run the server role of a multi-node deployment over `transport`
+/// (socket-bridged endpoints in process mode; [`MemoryTransport`] works
+/// too and is how the loopback tests drive this path in threads).
+///
+/// Returns a [`TrainResult`] with an empty `worker_stats` — worker
+/// telemetry lives in the worker processes; the manager merges their
+/// reports. Same seeds, same configs, same fold behavior as
+/// [`run_distributed`], so a 1-worker BSP `mode=none` run is
+/// bit-identical across entry points.
+pub fn run_server_node(
+    cfg: &ExperimentConfig,
+    dataset: Arc<Dataset>,
+    pairs: &PairSet,
+    opts: &RunOptions,
+    events: Option<Arc<dyn EventSink>>,
+    transport: &mut dyn Transport,
+) -> anyhow::Result<TrainResult> {
+    validate(cfg, opts)?;
+    let l0 = init_l(cfg);
+    let plan = plan_for(cfg);
+    let server_shards = plan.shards();
+    // only the probe's pair subsample is needed server-side
+    let stream_index = match cfg.cluster.pairs.mode {
+        PairMode::Materialized => None,
+        PairMode::Streaming => Some(Arc::new(ClassIndex::build(
+            &dataset,
+            cfg.cluster.pairs.imbalance,
+        )?)),
+    };
+    let probe = make_probe(
+        &dataset,
+        pairs,
+        cfg,
+        opts.probe_pairs,
+        stream_index,
+        events.clone(),
+    );
+    let (from_workers, to_workers) = transport.server_endpoints()?;
+    let watch = crate::metrics::Stopwatch::start();
+    let server = Server::spawn(
+        server_cfg(cfg, opts, events),
+        plan,
+        l0,
+        from_workers,
+        to_workers,
+        probe,
+    );
+    let sr = server.join();
+    Ok(train_result_from_server(
+        sr,
+        server_shards,
+        Vec::new(),
+        watch.elapsed_s(),
+    ))
+}
+
+/// Run worker `w` of a multi-node deployment over `transport`. Builds
+/// the full P-way pair partition deterministically and takes slot `w`,
+/// so the pairs this worker trains on are exactly the ones
+/// [`run_distributed`] would hand it.
+pub fn run_worker_node(
+    cfg: &ExperimentConfig,
+    w: usize,
+    dataset: Arc<Dataset>,
+    pairs: &PairSet,
+    engines: EngineFactory,
+    opts: &RunOptions,
+    events: Option<Arc<dyn EventSink>>,
+    transport: &mut dyn Transport,
+) -> anyhow::Result<WorkerStats> {
+    validate(cfg, opts)?;
+    anyhow::ensure!(
+        w < cfg.cluster.workers,
+        "worker id {w} out of range ({} workers)",
+        cfg.cluster.workers
+    );
+    let l0 = init_l(cfg);
+    let plan = plan_for(cfg);
+    let (mut sources, _) = build_sources(cfg, &dataset, pairs)?;
+    let source = sources.swap_remove(w);
+    let (to_server_tx, from_server_rx) = transport.worker_endpoints(w)?;
+    let worker = Worker::spawn(
+        worker_cfg(cfg, w, opts, events),
+        plan,
+        l0,
+        dataset,
+        source,
+        to_server_tx,
+        from_server_rx,
+        engines,
+    );
+    Ok(worker.join())
 }
 
 /// Build the server-side objective probe: materializes a fixed pair

@@ -67,6 +67,7 @@ mod model;
 mod seq;
 mod sim;
 
+pub use dist::{plan_for, run_server_node, run_worker_node};
 pub use events::{BroadcastEvent, DoneEvent, EventSink, ProbeEvent};
 pub use model::{config_digest, MetricModel, ModelMeta};
 pub use sim::{calibrate_for, sim_scaled, SimKnobs, SimScaled};
@@ -128,6 +129,9 @@ pub struct Run {
     pub grad_bytes_received: u64,
     /// Encoded parameter payload bytes shipped to workers.
     pub param_bytes_sent: u64,
+    /// Gradient messages the server router skipped for naming a shard
+    /// outside the plan. Zero on every healthy run.
+    pub misroutes: u64,
     /// Per-worker telemetry (distributed runs).
     pub worker_stats: Vec<WorkerStats>,
     /// AP-vs-time trace on held-out test pairs (sequential runs).
@@ -156,6 +160,7 @@ impl Run {
             last_loss: 0.0,
             grad_bytes_received: 0,
             param_bytes_sent: 0,
+            misroutes: 0,
             worker_stats: Vec::new(),
             ap_trace: ApTrace::new(),
             sim_seconds: 0.0,
@@ -199,6 +204,7 @@ impl Run {
             last_loss: r.last_loss,
             grad_bytes_received: r.grad_bytes_received,
             param_bytes_sent: r.param_bytes_sent,
+            misroutes: r.misroutes,
             worker_stats: r.worker_stats,
             ..Run::empty(RunKind::Distributed)
         }

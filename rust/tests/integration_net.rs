@@ -1,0 +1,433 @@
+//! Integration: the socket transport end to end — framing goldens, the
+//! TCP backend against the in-memory golden at the same seed, connect
+//! retry against a late listener, misroute accounting, and the `dmlps
+//! cluster` manager binary driving a real multi-process run.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use dmlps::config::{
+    CompressionConfig, Consistency, ExperimentConfig, Preset,
+};
+use dmlps::data::ExperimentData;
+use dmlps::dml::LrSchedule;
+use dmlps::linalg::Mat;
+use dmlps::metrics::Curve;
+use dmlps::ps::frame::{
+    decode_frame, encode_encoding, encode_to_server, encode_to_worker,
+    encoding_overhead, Frame,
+};
+use dmlps::ps::net::{
+    connect_retry, NetAddr, NetServer, NetWorkerTransport, RetryPolicy,
+};
+use dmlps::ps::{
+    FaultSpec, RunOptions, Server, ServerConfig, ShardPlan, SliceEncoding,
+    ToServer, ToWorker, TrainResult, Transport, WorkerStats,
+};
+use dmlps::session::{
+    plan_for, run_server_node, run_worker_node, MetricModel,
+};
+use dmlps::util::json::Json;
+
+/// Tiny sharded BSP config — small enough to finish in seconds, sharded
+/// enough (2 shards) to exercise slice routing on the wire.
+fn net_cfg(steps: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = steps;
+    cfg.cluster.workers = workers;
+    cfg.cluster.server_shards = 2;
+    cfg.cluster.consistency = Consistency::Bsp;
+    cfg
+}
+
+/// Run one full training round over real TCP sockets, every role an
+/// in-process thread: bind, accept, connect with retry, train, and join
+/// all roles. Each role regenerates the dataset from the config + seed,
+/// exactly like `dmlps node` processes do.
+fn run_tcp(cfg: &ExperimentConfig) -> (TrainResult, Vec<WorkerStats>) {
+    let plan = plan_for(cfg);
+    let server =
+        NetServer::bind(&NetAddr::parse("127.0.0.1:0").unwrap()).unwrap();
+    let addr = server.local_addr().unwrap();
+    let workers = cfg.cluster.workers;
+
+    let scfg = cfg.clone();
+    let splan = plan.clone();
+    let server_h = thread::spawn(move || {
+        let data = ExperimentData::generate_for(
+            &scfg.dataset, scfg.cluster.pairs.mode, scfg.seed,
+        );
+        let ExperimentData { train, pairs, .. } = data;
+        let mut t =
+            server.accept_workers(&splan, scfg.cluster.workers).unwrap();
+        let r = run_server_node(
+            &scfg, Arc::new(train), &pairs, &RunOptions::default(), None,
+            &mut t,
+        )
+        .unwrap();
+        t.finish();
+        r
+    });
+
+    let mut worker_hs = Vec::new();
+    for w in 0..workers {
+        let wcfg = cfg.clone();
+        let wplan = plan.clone();
+        let waddr = addr.clone();
+        worker_hs.push(thread::spawn(move || {
+            let data = ExperimentData::generate_for(
+                &wcfg.dataset, wcfg.cluster.pairs.mode, wcfg.seed,
+            );
+            let ExperimentData { train, pairs, .. } = data;
+            let engines =
+                dmlps::dml::engine_factory("native", &wcfg).unwrap();
+            let mut t = NetWorkerTransport::connect(
+                &waddr, w, &wplan, RetryPolicy::default(),
+            )
+            .unwrap();
+            let ws = run_worker_node(
+                &wcfg, w, Arc::new(train), &pairs, engines,
+                &RunOptions::default(), None, &mut t,
+            )
+            .unwrap();
+            t.finish();
+            ws
+        }));
+    }
+
+    let r = server_h.join().unwrap();
+    let stats: Vec<WorkerStats> =
+        worker_hs.into_iter().map(|h| h.join().unwrap()).collect();
+    (r, stats)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+// ---------------------------------------------------------------------
+// framing goldens
+// ---------------------------------------------------------------------
+
+/// The frame layer's byte accounting is the contract telemetry relies
+/// on: for every encoding variant, the serialized payload must be
+/// exactly `encoding_overhead + encoded_bytes`.
+#[test]
+fn frame_payload_length_matches_byte_accounting() {
+    let encs = [
+        SliceEncoding::Dense(vec![1.0, -2.5, 3.25]),
+        SliceEncoding::Int8 { scale: 0.5, q: vec![1i8, -3, 7, 0, 2] },
+        SliceEncoding::TopK {
+            gaps: vec![0, 3, 4],
+            vals: vec![1.5, -2.0, 0.25],
+        },
+        SliceEncoding::TopKInt8 {
+            scale: 0.25,
+            gaps: vec![2, 1],
+            vals: vec![5i8, -9],
+        },
+    ];
+    for enc in &encs {
+        let mut buf = Vec::new();
+        encode_encoding(enc, &mut buf);
+        assert_eq!(
+            buf.len() as u64,
+            encoding_overhead(enc) + enc.encoded_bytes(),
+            "{enc:?}"
+        );
+    }
+}
+
+/// Encode → decode → re-encode must reproduce the wire bytes exactly,
+/// in both directions (gradient push and parameter broadcast).
+#[test]
+fn frames_roundtrip_bitwise() {
+    let grad = ToServer::Grad {
+        worker: 1,
+        shard: 0,
+        step: 7,
+        grad: SliceEncoding::Dense(vec![
+            0.5,
+            f32::MIN_POSITIVE,
+            -0.0,
+            3.75,
+        ]),
+        loss: 0.125,
+    };
+    let mut wire = Vec::new();
+    encode_to_server(&grad, &mut wire);
+    // decode_frame takes the body after the u32 length prefix
+    let Frame::ToServer(decoded) = decode_frame(&wire[4..]).unwrap()
+    else {
+        panic!("grad decoded to the wrong frame kind")
+    };
+    let mut wire2 = Vec::new();
+    encode_to_server(&decoded, &mut wire2);
+    assert_eq!(wire, wire2, "grad frame not byte-stable");
+
+    let param = ToWorker::Param {
+        shard: 1,
+        version: 42,
+        clock: 41,
+        data: SliceEncoding::Int8 { scale: 0.03125, q: vec![0i8, -128, 127] },
+    };
+    let mut wire = Vec::new();
+    encode_to_worker(&param, &mut wire);
+    let Frame::ToWorker(decoded) = decode_frame(&wire[4..]).unwrap()
+    else {
+        panic!("param decoded to the wrong frame kind")
+    };
+    let mut wire2 = Vec::new();
+    encode_to_worker(&decoded, &mut wire2);
+    assert_eq!(wire, wire2, "param frame not byte-stable");
+}
+
+// ---------------------------------------------------------------------
+// TCP backend vs the in-memory golden
+// ---------------------------------------------------------------------
+
+/// With one worker under BSP the fold order is fully deterministic, so
+/// the socket transport must produce the *bit-identical* final L the
+/// in-memory channels produce at the same seed — dense f32 payloads
+/// roundtrip through the wire via to_bits/from_bits exactly.
+#[test]
+fn tcp_one_worker_bsp_is_bit_identical_to_memory() {
+    let cfg = net_cfg(40, 1);
+    let (r, stats) = run_tcp(&cfg);
+    assert_eq!(stats[0].steps_done, 40);
+    assert_eq!(stats[0].grads_sent + stats[0].grads_dropped, 40);
+    assert_eq!(r.misroutes, 0);
+
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
+    let m = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(
+        r.l.data, m.l.data,
+        "socket transport diverged from in-memory at 1 worker BSP"
+    );
+}
+
+/// With two workers the per-round fold *order* is scheduling-dependent
+/// (f32 addition is not associative), so cross-transport agreement is
+/// within a small tolerance rather than bitwise. The accounting
+/// identity `sent + dropped == steps` must hold exactly per worker.
+#[test]
+fn tcp_two_workers_bsp_matches_memory_within_tolerance() {
+    let cfg = net_cfg(40, 2);
+    let (r, stats) = run_tcp(&cfg);
+    assert_eq!(stats.len(), 2);
+    for ws in &stats {
+        assert_eq!(ws.steps_done, 40, "worker {}", ws.id);
+        assert_eq!(
+            ws.grads_sent + ws.grads_dropped, 40,
+            "worker {} accounting identity broken", ws.id
+        );
+        assert_eq!(ws.grads_dropped, 0, "perfect link dropped grads");
+    }
+    assert_eq!(r.misroutes, 0);
+    assert_eq!(r.applied_updates, 80);
+
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
+    let m = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap();
+    let diff = max_abs_diff(&r.l.data, &m.l.data);
+    assert!(
+        diff < 1e-2,
+        "TCP vs in-memory max abs diff {diff} exceeds f32 \
+         fold-order tolerance"
+    );
+}
+
+// ---------------------------------------------------------------------
+// connect retry
+// ---------------------------------------------------------------------
+
+/// Workers may come up before the server: connect_retry must keep
+/// trying (with backoff) until the listener appears.
+#[test]
+fn connect_retry_waits_for_late_listener() {
+    // reserve a kernel-chosen port, free it, and bind it late
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+
+    let listen_addr = addr.clone();
+    let listener = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(150));
+        let l = std::net::TcpListener::bind(&listen_addr).unwrap();
+        let _ = l.accept();
+    });
+
+    let policy = RetryPolicy {
+        attempts: 100,
+        initial_backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(50),
+    };
+    let stream = connect_retry(&NetAddr::parse(&addr).unwrap(), policy);
+    assert!(
+        stream.is_ok(),
+        "late listener should be reachable: {:?}",
+        stream.err()
+    );
+    drop(stream);
+    listener.join().unwrap();
+}
+
+/// With nothing ever listening the retry budget is bounded: a small
+/// attempt count must fail fast instead of hanging the node.
+#[test]
+fn connect_retry_gives_up_after_bounded_attempts() {
+    let start = Instant::now();
+    let policy = RetryPolicy {
+        attempts: 3,
+        initial_backoff: Duration::from_millis(5),
+        max_backoff: Duration::from_millis(10),
+    };
+    // port 1 is privileged and unbound: connects are refused immediately
+    let r = connect_retry(&NetAddr::parse("127.0.0.1:1").unwrap(), policy);
+    assert!(r.is_err(), "connect to an unbound port must fail");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "bounded retry took {:?}",
+        start.elapsed()
+    );
+}
+
+// ---------------------------------------------------------------------
+// misroute accounting
+// ---------------------------------------------------------------------
+
+/// A gradient naming a shard outside the plan must be counted and
+/// skipped by the server router — never folded, never a panic, and the
+/// valid messages around it still apply.
+#[test]
+fn server_counts_and_skips_misrouted_gradients() {
+    let plan = ShardPlan::new(8, 4, 1);
+    let slice_len = plan.len(0);
+    let l0 = Mat::zeros(8, 4);
+    let (tx, rx) = channel::<ToServer>();
+    let (wtx, _wrx) = channel::<ToWorker>();
+    let cfg = ServerConfig {
+        workers: 1,
+        server_batch: 8,
+        lr: LrSchedule::new(0.1, 0.0),
+        lr_scale: 1.0,
+        probe_every: 1_000,
+        faults: FaultSpec::perfect(),
+        seed: 1,
+        compression: CompressionConfig::default(),
+        events: None,
+    };
+    let server = Server::spawn(
+        cfg,
+        plan,
+        l0,
+        rx,
+        vec![wtx],
+        Box::new(|_l: &Mat, _u: u64, _t: f64, _c: &mut Curve| {}),
+    );
+    tx.send(ToServer::Grad {
+        worker: 0,
+        shard: 0,
+        step: 0,
+        grad: SliceEncoding::Dense(vec![0.25; slice_len]),
+        loss: 0.5,
+    })
+    .unwrap();
+    tx.send(ToServer::Grad {
+        worker: 0,
+        shard: 5, // outside the 1-shard plan
+        step: 1,
+        grad: SliceEncoding::Dense(vec![0.25; slice_len]),
+        loss: 0.5,
+    })
+    .unwrap();
+    tx.send(ToServer::Done { worker: 0 }).unwrap();
+    drop(tx);
+    let r = server.join();
+    assert_eq!(r.misroutes, 1, "misrouted grad not counted");
+    assert_eq!(r.applied_updates, 1, "valid grad around it must apply");
+}
+
+// ---------------------------------------------------------------------
+// manager binary end to end
+// ---------------------------------------------------------------------
+
+/// `dmlps cluster` spawns a real server process and two worker
+/// processes over TCP, enforces the accounting identity, and saves a
+/// model whose L matches an in-memory run at the same seed.
+#[test]
+fn manager_cluster_run_matches_memory() {
+    let dir = std::env::temp_dir()
+        .join(format!("dmlps-net-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.bin");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_dmlps"))
+        .args([
+            "cluster",
+            "--preset", "tiny",
+            "--workers", "2",
+            "--server-shards", "2",
+            "--steps", "30",
+            "--consistency", "bsp",
+            "--engine", "native",
+            "--timeout-s", "120",
+        ])
+        .arg("--run-dir")
+        .arg(&dir)
+        .arg("--save-model")
+        .arg(&model_path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "cluster run failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+
+    let model = MetricModel::load(&model_path).unwrap();
+
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = 30;
+    cfg.cluster.workers = 2;
+    cfg.cluster.server_shards = 2;
+    cfg.cluster.consistency = Consistency::Bsp;
+    let data = ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    );
+    let m = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(model.l().rows, m.l.rows);
+    assert_eq!(model.l().cols, m.l.cols);
+    let diff = max_abs_diff(&model.l().data, &m.l.data);
+    assert!(
+        diff < 1e-2,
+        "cluster vs in-memory max abs diff {diff} exceeds f32 \
+         fold-order tolerance"
+    );
+
+    // combined report: no misroutes, no rejected frames on a clean run
+    let combined = Json::parse_file(&dir.join("cluster.json")).unwrap();
+    assert_eq!(
+        combined.get("server").get("misroutes").as_f64(),
+        Some(0.0),
+        "healthy run must not misroute"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

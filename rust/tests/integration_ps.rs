@@ -620,3 +620,32 @@ fn sharded_consistency_models_all_complete() {
         assert_eq!(r.slice_updates, 600, "{consistency:?}");
     }
 }
+
+/// Regression for the SSP-gate lost wakeup: shard clocks must be stored
+/// and the condvar notified *under* the gate mutex. When they are not,
+/// a BSP worker checking the gate between the store and the notify
+/// misses the wakeup and falls back on the 50 ms recheck timeout —
+/// inflating `wait_s` by up to ~50 ms per barrier round. With prompt
+/// wakeups, total barrier wait at tiny scale stays far below the bound.
+#[test]
+fn bsp_barrier_wakeups_are_prompt() {
+    let steps = 150;
+    let mut cfg = tiny_cfg(steps, 2);
+    cfg.cluster.consistency = Consistency::Bsp;
+    let data = ExperimentData::generate(&cfg.dataset, cfg.seed);
+    let r = dmlps::cli::driver::train_distributed(
+        &cfg, &data, "native", &RunOptions::default()).unwrap();
+    // generous bound: 25 ms/step of legitimate wait is an order of
+    // magnitude above healthy tiny-preset barriers, and half the 50 ms
+    // per-round cost the lost-wakeup bug reintroduces
+    let bound = steps as f64 * 0.025;
+    for ws in &r.worker_stats {
+        assert_eq!(ws.steps_done, steps as u64, "worker {}", ws.id);
+        assert!(
+            ws.wait_s < bound,
+            "worker {} waited {:.3}s over {steps} BSP steps \
+             (bound {bound:.2}s) — lost-wakeup regression",
+            ws.id, ws.wait_s
+        );
+    }
+}
