@@ -1,0 +1,137 @@
+//! Elasticity — convergence vs disruption.
+//!
+//! One mid-run cluster death is injected into the simulated-cluster
+//! protocol (the same real-numerics machinery as fig2) under different
+//! checkpoint cadences, against an undisturbed baseline. The curves
+//! quantify what the checkpoint/restore layer buys: with a tight
+//! cadence the restart costs little more than the restart delay; with
+//! no checkpoints the run falls back to the initial parameters and
+//! re-pays everything.
+//!
+//! Writes **`BENCH_elastic.json`** (override the path with
+//! `DMLPS_BENCH_OUT`): per-scenario convergence curves (sim time ×
+//! applied updates × objective), updates re-done after the rollback,
+//! and time-to-target against the undisturbed baseline's final
+//! objective. `DMLPS_BENCH_QUICK=1` shrinks the sweep for CI.
+
+use std::sync::Arc;
+
+use dmlps::config::Preset;
+use dmlps::data::ExperimentData;
+use dmlps::metrics::Curve;
+use dmlps::session::{calibrate_for, sim_scaled, Session, SimKnobs};
+use dmlps::simcluster::Disruption;
+use dmlps::util::json::Json;
+
+fn curve_json(c: &Curve) -> Json {
+    Json::Arr(
+        c.points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("time_s", Json::Num(p.time_s)),
+                    ("updates", Json::Num(p.step as f64)),
+                    ("objective", Json::Num(p.objective)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let updates: u64 = if quick { 300 } else { 1_500 };
+    let kill_at = updates / 2;
+    let restart_delay_s = 5.0;
+
+    let scaled = sim_scaled(Preset::Mnist);
+    let cfg = &scaled.cfg;
+    let data = Arc::new(ExperimentData::generate(&cfg.dataset, cfg.seed));
+    let grad_seconds = calibrate_for(cfg);
+
+    let disrupt = |every: u64| {
+        Some(Disruption {
+            kill_at_update: kill_at,
+            restart_delay_s,
+            ckpt_every_updates: every,
+        })
+    };
+    let scenarios: Vec<(&str, Option<Disruption>)> = vec![
+        ("undisturbed", None),
+        ("kill_ckpt_every_25", disrupt(25)),
+        ("kill_ckpt_every_100", disrupt(100)),
+        ("kill_no_checkpoint", disrupt(0)),
+    ];
+
+    println!(
+        "# Elastic recovery: kill at update {kill_at} of {updates}, \
+         restart after {restart_delay_s} sim-s\n"
+    );
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for (name, disruption) in &scenarios {
+        let r = Session::from_config(cfg.clone())
+            .data(data.clone())
+            .topology(2, 4)
+            .sim_knobs(SimKnobs {
+                grad_seconds,
+                bytes_per_msg: None,
+                total_updates: updates,
+                disruption: *disruption,
+            })
+            .simulate()
+            .expect("simulated run");
+        println!(
+            "  {name:<22} {:>8.1} sim-s, {} restarts, {:>4} updates \
+             re-done, final f = {:.4}",
+            r.sim_seconds, r.restarts, r.redone_updates,
+            r.curve.final_objective().unwrap_or(f64::NAN),
+        );
+        results.push((*name, r));
+    }
+
+    // time-to-target: the undisturbed run's final objective (§5.3 style)
+    let target = results[0].1.curve.final_objective().unwrap();
+    println!("\n| scenario | time-to-target (sim-s) | overhead |");
+    println!("|---|---|---|");
+    let base_t = results[0].1.curve.time_to_reach(target);
+    for (name, r) in &results {
+        let t = r.curve.time_to_reach(target);
+        let overhead = match (base_t, t) {
+            (Some(b), Some(t)) if b > 0.0 => {
+                format!("{:+.1}%", (t / b - 1.0) * 100.0)
+            }
+            _ => "n/a".into(),
+        };
+        println!(
+            "| {name} | {} | {overhead} |",
+            t.map_or("never".into(), |t| format!("{t:.1}")),
+        );
+        rows.push(Json::obj(vec![
+            ("scenario", Json::Str((*name).to_string())),
+            ("sim_seconds", Json::Num(r.sim_seconds)),
+            ("restarts", Json::Num(r.restarts as f64)),
+            ("redone_updates", Json::Num(r.redone_updates as f64)),
+            ("final_objective",
+             Json::Num(r.curve.final_objective().unwrap_or(f64::NAN))),
+            ("time_to_target_s",
+             Json::Num(t.unwrap_or(f64::NAN))),
+            ("curve", curve_json(&r.curve)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("elastic_recovery".into())),
+        ("quick", Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("total_updates", Json::Num(updates as f64)),
+        ("kill_at_update", Json::Num(kill_at as f64)),
+        ("restart_delay_s", Json::Num(restart_delay_s)),
+        ("target_objective", Json::Num(target)),
+        ("scenarios", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("DMLPS_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_elastic.json".into());
+    std::fs::write(&path, out.to_string_pretty())
+        .expect("write bench json");
+    println!("\nwrote machine-readable baseline to {path}");
+}

@@ -61,6 +61,7 @@ fn main() {
                     grad_seconds: grad_paper,
                     bytes_per_msg: Some(scaled.paper_bytes),
                     total_updates: updates,
+                    ..SimKnobs::default()
                 })
                 .simulate()
                 .expect("simulated run");

@@ -57,6 +57,7 @@ fn main() {
                     grad_seconds: grad_paper,
                     bytes_per_msg: Some(scaled.paper_bytes),
                     total_updates: updates,
+                    ..SimKnobs::default()
                 })
                 .simulate()
                 .expect("simulated run");
@@ -112,6 +113,7 @@ fn main() {
                 broadcast_every: 1,
                 lr: LrSchedule::constant(0.01),
                 seed: 7,
+                disruption: None,
             };
             let mut w = NullWorkload;
             let r = Simulator::new(cfg, &mut w).run();

@@ -11,18 +11,28 @@
 //! the PS protocol itself on the socket transport (`ps::net`).
 //!
 //! Each node writes a JSON report; the manager collects them, checks
-//! the per-worker `grads_sent + grads_dropped == steps` accounting
-//! identity, and writes a combined `cluster.json`.
+//! the per-worker `start_step + grads_sent + grads_dropped == steps`
+//! accounting identity, and writes a combined `cluster.json`.
+//!
+//! Elasticity: with `--ckpt-every-steps`/`--ckpt-every-secs` the server
+//! node checkpoints its sharded state into `--ckpt-dir`, and
+//! `--restart-policy cluster` makes the manager respawn the whole
+//! cluster with `--resume` when any node dies — the respawned roles
+//! re-enter the protocol at the newest consistent generation.
+//! `--chaos-kill` SIGKILLs a chosen role mid-run (at a wall-clock
+//! offset or once the first checkpoint generation lands), which is how
+//! the kill/restart integration tests drive real process death.
 
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::config::{ExperimentConfig, NetConfig};
+use crate::config::{CheckpointConfig, ExperimentConfig, NetConfig};
 use crate::data::ExperimentData;
+use crate::linalg::io::atomic_write;
 use crate::ps::net::{NetAddr, NetServer, NetWorkerTransport, RetryPolicy};
-use crate::ps::{RunOptions, Transport, TransportStats};
+use crate::ps::{CheckpointSpec, RunOptions, Transport, TransportStats};
 use crate::session::{
     plan_for, run_server_node, run_worker_node, MetricModel,
 };
@@ -81,9 +91,53 @@ fn stats_json(s: &TransportStats) -> Json {
 
 fn write_report(path: &str, j: &Json) -> anyhow::Result<()> {
     if !path.is_empty() {
-        std::fs::write(path, j.to_string_pretty())?;
+        // crash-atomic: the manager may be polling this path while a
+        // chaos kill lands mid-write
+        atomic_write(Path::new(path), |w| {
+            use std::io::Write;
+            w.write_all(j.to_string_pretty().as_bytes())?;
+            Ok(())
+        })?;
     }
     Ok(())
+}
+
+/// Checkpoint/resume flags shared by both roles of `dmlps node` (and
+/// forwarded by the manager).
+fn with_ckpt_opts(p: ArgParser) -> ArgParser {
+    p.opt("ckpt-dir", "",
+          "checkpoint run directory (server role writes, both roles \
+           resume from it)")
+        .opt("ckpt-every-steps", "0",
+             "checkpoint every N applied slice updates per shard \
+              (0 = off)")
+        .opt("ckpt-every-secs", "0",
+             "checkpoint at least every S seconds per shard (0 = off)")
+        .opt("resume", "",
+             "resume from the newest consistent checkpoint in this \
+              directory (empty/never-written directory = fresh start)")
+}
+
+/// Build the node's [`RunOptions`] from the checkpoint/resume flags.
+fn run_opts_from_args(a: &Args) -> anyhow::Result<RunOptions> {
+    let mut opts = RunOptions::default();
+    let cadence = CheckpointConfig {
+        every_steps: a.get_u64("ckpt-every-steps")?,
+        every_secs: a.get_f64("ckpt-every-secs")?,
+    };
+    if cadence.enabled() {
+        let dir = a.get("ckpt-dir");
+        anyhow::ensure!(
+            !dir.is_empty(),
+            "--ckpt-every-steps/--ckpt-every-secs need --ckpt-dir"
+        );
+        opts.checkpoint =
+            Some(CheckpointSpec { dir: PathBuf::from(dir), cadence });
+    }
+    if !a.get("resume").is_empty() {
+        opts.resume_from = Some(PathBuf::from(a.get("resume")));
+    }
+    Ok(opts)
 }
 
 // ---------------------------------------------------------------------
@@ -91,15 +145,19 @@ fn write_report(path: &str, j: &Json) -> anyhow::Result<()> {
 // ---------------------------------------------------------------------
 
 pub fn cmd_node(args: &[String]) -> anyhow::Result<()> {
-    let p = with_net_opts(
+    let p = with_ckpt_opts(with_net_opts(
         common_parser("dmlps node",
                       "one server/worker role over the socket transport"),
         &NetConfig::default().addr,
-    )
+    ))
     .req("role", "server|worker")
     .opt("worker-id", "0", "this node's worker slot (worker role)")
     .opt("engine", "auto", "native|xla|auto (worker role)")
     .opt("report", "", "write this role's JSON report to this path")
+    .opt("addr-file", "",
+         "write the actually-bound server address here once listening \
+          (server role; lets the manager hand workers a :0-picked port \
+          without ever binding it itself)")
     .opt("save-model", "",
          "write the learned metric model here (server role)");
     let a = p.parse(args)?;
@@ -119,18 +177,28 @@ fn node_server(
     addr: &NetAddr,
 ) -> anyhow::Result<()> {
     let plan = plan_for(cfg);
+    // the server binds its own listener (`:0` = kernel-picked port) and
+    // *then* publishes the concrete address — no resolve-then-rebind
+    // window for another process to steal the port
     let server = NetServer::bind(addr)?;
+    let bound = server.local_addr()?;
     println!(
-        "node server: listening on {} ({} workers, {} shards, {})",
-        server.local_addr()?, cfg.cluster.workers, plan.shards(),
-        cfg.cluster.consistency,
+        "node server: listening on {bound} ({} workers, {} shards, {})",
+        cfg.cluster.workers, plan.shards(), cfg.cluster.consistency,
     );
+    if !a.get("addr-file").is_empty() {
+        atomic_write(Path::new(a.get("addr-file")), |w| {
+            use std::io::Write;
+            w.write_all(bound.to_string().as_bytes())?;
+            Ok(())
+        })?;
+    }
     let data = ExperimentData::generate_for(
         &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
     );
     let ExperimentData { train, pairs, .. } = data;
     let mut transport = server.accept_workers(&plan, cfg.cluster.workers)?;
-    let opts = RunOptions::default();
+    let opts = run_opts_from_args(a)?;
     let r = run_server_node(
         cfg,
         Arc::new(train),
@@ -190,7 +258,7 @@ fn node_worker(
     let engines = crate::dml::engine_factory(a.get("engine"), cfg)?;
     let mut transport =
         NetWorkerTransport::connect(addr, w, &plan, policy)?;
-    let opts = RunOptions::default();
+    let opts = run_opts_from_args(a)?;
     let ws = run_worker_node(
         cfg,
         w,
@@ -203,13 +271,15 @@ fn node_worker(
     )?;
     let stats = transport.finish();
     println!(
-        "node worker {w} done: {} steps, {} grads sent ({} dropped), \
-         waited {:.2}s",
-        ws.steps_done, ws.grads_sent, ws.grads_dropped, ws.wait_s,
+        "node worker {w} done: {} steps (resumed at {}), {} grads sent \
+         ({} dropped), waited {:.2}s",
+        ws.steps_done, ws.start_step, ws.grads_sent, ws.grads_dropped,
+        ws.wait_s,
     );
     write_report(a.get("report"), &Json::obj(vec![
         ("role", Json::Str("worker".into())),
         ("worker", Json::Num(w as f64)),
+        ("start_step", Json::Num(ws.start_step as f64)),
         ("steps_done", Json::Num(ws.steps_done as f64)),
         ("grads_sent", Json::Num(ws.grads_sent as f64)),
         ("grads_dropped", Json::Num(ws.grads_dropped as f64)),
@@ -229,24 +299,95 @@ fn node_worker(
 // `dmlps cluster` — the manager
 // ---------------------------------------------------------------------
 
+/// Which role a `--chaos-kill` directive targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ChaosTarget {
+    Server,
+    Worker(usize),
+}
+
+/// When the chaos kill fires: at a wall-clock offset into the attempt,
+/// or as soon as the first checkpoint generation is on disk (the
+/// deterministic "mid-run, state exists" trigger the kill/restart tests
+/// use).
+#[derive(Clone, Copy, Debug)]
+enum ChaosWhen {
+    Secs(f64),
+    Ckpt,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ChaosKill {
+    target: ChaosTarget,
+    when: ChaosWhen,
+}
+
+/// Parse `--chaos-kill` (`server@1.5`, `worker0@ckpt`, ...).
+fn parse_chaos(s: &str) -> anyhow::Result<Option<ChaosKill>> {
+    if s.is_empty() {
+        return Ok(None);
+    }
+    let (role, when) = s.split_once('@').ok_or_else(|| {
+        anyhow::anyhow!(
+            "--chaos-kill wants <role>@<secs|ckpt>, got '{s}'"
+        )
+    })?;
+    let target = if role == "server" {
+        ChaosTarget::Server
+    } else if let Some(idx) = role.strip_prefix("worker") {
+        ChaosTarget::Worker(idx.parse().map_err(|_| {
+            anyhow::anyhow!("bad --chaos-kill worker index '{idx}'")
+        })?)
+    } else {
+        anyhow::bail!(
+            "--chaos-kill role must be server|worker<N>, got '{role}'"
+        );
+    };
+    let when = if when == "ckpt" {
+        ChaosWhen::Ckpt
+    } else {
+        ChaosWhen::Secs(when.parse().map_err(|_| {
+            anyhow::anyhow!("bad --chaos-kill time '{when}'")
+        })?)
+    };
+    Ok(Some(ChaosKill { target, when }))
+}
+
+/// One cluster attempt's verdict from the supervisor.
+enum Attempt {
+    /// Every node exited 0.
+    Done,
+    /// A node died (or was chaos-killed); the rest were killed too.
+    /// Restartable under `--restart-policy cluster`.
+    Crashed(String),
+}
+
 pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
-    let p = with_net_opts(
+    let p = with_ckpt_opts(with_net_opts(
         common_parser("dmlps cluster",
                       "spawn a server + worker process cluster and \
                        drive one run"),
         "127.0.0.1:0",
-    )
+    ))
     .opt("engine", "auto", "worker engine: native|xla|auto")
     .opt("run-dir", "",
          "directory for config + report files (default: a fresh \
           temp dir)")
     .opt("timeout-s", "600", "kill the run after this many seconds")
+    .opt("restart-policy", "none",
+         "none = any node death fails the run; cluster = respawn the \
+          whole cluster with --resume on a node death")
+    .opt("max-restarts", "2",
+         "restart budget under --restart-policy cluster")
+    .opt("chaos-kill", "",
+         "SIGKILL one role mid-run: <role>@<secs|ckpt> where role is \
+          server or worker<N>, and ckpt fires once the first \
+          checkpoint generation is on disk")
     .opt("save-model", "",
          "have the server write the learned metric model here");
     let a = p.parse(args)?;
     let cfg = load_config(&a)?;
     let net = net_from_args(&a)?;
-    let addr = resolve_addr(&net.addr)?;
     let p_workers = cfg.cluster.workers;
 
     let run_dir = if a.get("run-dir").is_empty() {
@@ -258,33 +399,96 @@ pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
     std::fs::create_dir_all(&run_dir)?;
     let cfg_path = run_dir.join("config.json");
     cfg.save(&cfg_path)?;
+
+    let cadence = CheckpointConfig {
+        every_steps: a.get_u64("ckpt-every-steps")?,
+        every_secs: a.get_f64("ckpt-every-secs")?,
+    };
+    // the manager owns the default checkpoint location so `--resume`
+    // plumbing needs no extra flags on restart
+    let ckpt_dir = if a.get("ckpt-dir").is_empty() {
+        run_dir.join("ckpt")
+    } else {
+        PathBuf::from(a.get("ckpt-dir"))
+    };
+    let mut chaos = parse_chaos(a.get("chaos-kill"))?;
+    if let Some(ChaosKill { when: ChaosWhen::Ckpt, .. }) = chaos {
+        anyhow::ensure!(
+            cadence.enabled(),
+            "--chaos-kill ...@ckpt needs checkpointing on \
+             (--ckpt-every-steps or --ckpt-every-secs)"
+        );
+    }
+    if let Some(ChaosKill { target: ChaosTarget::Worker(w), .. }) = chaos {
+        anyhow::ensure!(
+            w < p_workers,
+            "--chaos-kill worker{w} out of range ({p_workers} workers)"
+        );
+    }
+    let restart_policy = a.get("restart-policy").to_string();
+    anyhow::ensure!(
+        restart_policy == "none" || restart_policy == "cluster",
+        "--restart-policy must be none|cluster, got '{restart_policy}'"
+    );
+    let max_restarts = a.get_u64("max-restarts")?;
+
     println!(
-        "cluster: {} workers + 1 server on {addr}, run dir {}",
-        p_workers, run_dir.display(),
+        "cluster: {} workers + 1 server on {}, run dir {}",
+        p_workers, net.addr, run_dir.display(),
     );
 
     let exe = std::env::current_exe()?;
-    let mut children: Vec<(String, Child)> = Vec::new();
     let server_report = run_dir.join("server.json");
-    let mut sc = node_command(&exe, "server", &cfg, &cfg_path, &addr, &a);
-    sc.arg("--report").arg(&server_report);
-    if !a.get("save-model").is_empty() {
-        sc.arg("--save-model").arg(a.get("save-model"));
-    }
-    children.push(("server".into(), sc.spawn()?));
-    let mut worker_reports = Vec::new();
-    for w in 0..p_workers {
-        let report = run_dir.join(format!("worker{w}.json"));
-        let mut wc =
-            node_command(&exe, "worker", &cfg, &cfg_path, &addr, &a);
-        wc.arg("--worker-id").arg(w.to_string())
-            .arg("--engine").arg(a.get("engine"))
-            .arg("--report").arg(&report);
-        worker_reports.push(report);
-        children.push((format!("worker {w}"), wc.spawn()?));
-    }
+    let worker_reports: Vec<PathBuf> = (0..p_workers)
+        .map(|w| run_dir.join(format!("worker{w}.json")))
+        .collect();
+    let addr_file = run_dir.join("server.addr");
+    let timeout_s = a.get_u64("timeout-s")?;
+    let deadline = Instant::now() + Duration::from_secs(timeout_s.max(1));
 
-    wait_all(&mut children, a.get_u64("timeout-s")?)?;
+    let mut attempt = 0u64;
+    let bound_addr = loop {
+        attempt += 1;
+        // resume only on respawn: a fresh run must not silently pick up
+        // generations left in a reused run directory
+        let resume = attempt > 1;
+        let outcome = run_attempt(RunAttempt {
+            exe: &exe,
+            cfg: &cfg,
+            cfg_path: &cfg_path,
+            a: &a,
+            requested_addr: &net.addr,
+            addr_file: &addr_file,
+            server_report: &server_report,
+            worker_reports: &worker_reports,
+            cadence,
+            ckpt_dir: &ckpt_dir,
+            resume,
+            chaos: &mut chaos,
+            deadline,
+        })?;
+        match outcome {
+            (Attempt::Done, addr) => break addr,
+            (Attempt::Crashed(why), _) => {
+                let restarts_used = attempt - 1;
+                anyhow::ensure!(
+                    restart_policy == "cluster",
+                    "{why} (all nodes killed)"
+                );
+                anyhow::ensure!(
+                    restarts_used < max_restarts,
+                    "{why}; restart budget exhausted \
+                     ({max_restarts} restarts)"
+                );
+                println!(
+                    "cluster: {why}; respawning all roles with --resume \
+                     {} (restart {}/{max_restarts})",
+                    ckpt_dir.display(),
+                    restarts_used + 1,
+                );
+            }
+        }
+    };
 
     // ---- collect reports, check the accounting identity ----
     let server = Json::parse_file(&server_report)?;
@@ -299,23 +503,25 @@ pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
     let mut workers = Vec::new();
     for (w, path) in worker_reports.iter().enumerate() {
         let r = Json::parse_file(path)?;
+        let start = r.get("start_step").as_f64().unwrap_or(f64::NAN);
         let sent = r.get("grads_sent").as_f64().unwrap_or(f64::NAN);
         let dropped = r.get("grads_dropped").as_f64().unwrap_or(f64::NAN);
         println!(
-            "  worker {w}: sent {sent} + dropped {dropped} \
-             (= {steps} steps: {})",
-            if sent + dropped == steps { "ok" } else { "MISMATCH" },
+            "  worker {w}: resumed {start} + sent {sent} + dropped \
+             {dropped} (= {steps} steps: {})",
+            if start + sent + dropped == steps { "ok" } else { "MISMATCH" },
         );
         anyhow::ensure!(
-            sent + dropped == steps,
-            "worker {w} accounting identity broken: \
+            start + sent + dropped == steps,
+            "worker {w} accounting identity broken: {start} resumed + \
              {sent} sent + {dropped} dropped != {steps} steps"
         );
         workers.push(r);
     }
     let combined = Json::obj(vec![
-        ("addr", Json::Str(addr.clone())),
+        ("addr", Json::Str(bound_addr)),
         ("config", Json::Str(cfg_path.display().to_string())),
+        ("attempts", Json::Num(attempt as f64)),
         ("server", server),
         ("workers", Json::Arr(workers)),
     ]);
@@ -325,16 +531,117 @@ pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Resolve `host:0` to a concrete kernel-chosen port by briefly binding
-/// it. The listener is dropped before the server node rebinds; on
-/// localhost the window for another process to steal the port is
-/// negligible, and a steal fails loudly at the server's bind.
-fn resolve_addr(requested: &str) -> anyhow::Result<String> {
-    if requested.starts_with("unix:") || !requested.ends_with(":0") {
-        return Ok(requested.to_string());
+/// Everything one spawn-and-supervise round needs.
+struct RunAttempt<'a> {
+    exe: &'a Path,
+    cfg: &'a ExperimentConfig,
+    cfg_path: &'a Path,
+    a: &'a Args,
+    requested_addr: &'a str,
+    addr_file: &'a Path,
+    server_report: &'a Path,
+    worker_reports: &'a [PathBuf],
+    cadence: CheckpointConfig,
+    ckpt_dir: &'a Path,
+    resume: bool,
+    chaos: &'a mut Option<ChaosKill>,
+    deadline: Instant,
+}
+
+/// Spawn the server, learn its bound address, spawn the workers, then
+/// supervise until everyone exits or something dies. Returns the
+/// attempt verdict plus the address the server actually bound.
+fn run_attempt(r: RunAttempt<'_>) -> anyhow::Result<(Attempt, String)> {
+    // stale addr file from a previous attempt must not be readable
+    // before the new server publishes its (new) port
+    let _ = std::fs::remove_file(r.addr_file);
+
+    let mut children: Vec<(ChaosTarget, String, Child)> = Vec::new();
+    let mut sc = node_command(
+        r.exe, "server", r.cfg, r.cfg_path, r.requested_addr, r.a,
+    );
+    sc.arg("--report").arg(r.server_report)
+        .arg("--addr-file").arg(r.addr_file);
+    if r.cadence.enabled() {
+        sc.arg("--ckpt-dir").arg(r.ckpt_dir)
+            .arg("--ckpt-every-steps")
+            .arg(r.cadence.every_steps.to_string())
+            .arg("--ckpt-every-secs")
+            .arg(r.cadence.every_secs.to_string());
     }
-    let l = std::net::TcpListener::bind(requested)?;
-    Ok(l.local_addr()?.to_string())
+    if r.resume {
+        sc.arg("--resume").arg(r.ckpt_dir);
+    }
+    if !r.a.get("save-model").is_empty() {
+        sc.arg("--save-model").arg(r.a.get("save-model"));
+    }
+    children.push((ChaosTarget::Server, "server".into(), sc.spawn()?));
+
+    // the server writes the addr file only after its listener is up;
+    // waiting on it (instead of pre-binding the port in the manager)
+    // closes the old resolve-then-rebind race
+    let addr = match wait_addr_file(r.addr_file, &mut children[0], r.deadline)
+    {
+        Ok(addr) => addr,
+        Err(e) => {
+            kill_all(&mut children);
+            return Ok((Attempt::Crashed(e.to_string()), String::new()));
+        }
+    };
+
+    for (w, report) in r.worker_reports.iter().enumerate() {
+        let mut wc = node_command(
+            r.exe, "worker", r.cfg, r.cfg_path, &addr, r.a,
+        );
+        wc.arg("--worker-id").arg(w.to_string())
+            .arg("--engine").arg(r.a.get("engine"))
+            .arg("--report").arg(report);
+        if r.resume {
+            wc.arg("--resume").arg(r.ckpt_dir);
+        }
+        children.push((
+            ChaosTarget::Worker(w),
+            format!("worker {w}"),
+            wc.spawn()?,
+        ));
+    }
+
+    let verdict = supervise(
+        &mut children,
+        r.deadline,
+        r.chaos,
+        r.ckpt_dir,
+    )?;
+    Ok((verdict, addr))
+}
+
+/// Poll for the server's addr file while checking the server child is
+/// still alive (a bind failure must surface, not hang the manager).
+fn wait_addr_file(
+    path: &Path,
+    server: &mut (ChaosTarget, String, Child),
+    deadline: Instant,
+) -> anyhow::Result<String> {
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let s = s.trim().to_string();
+            if !s.is_empty() {
+                return Ok(s);
+            }
+        }
+        if let Some(status) = server.2.try_wait()? {
+            anyhow::bail!(
+                "server exited with {status} before publishing its \
+                 address"
+            );
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "timed out waiting for the server address file {}",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
 }
 
 /// Base `dmlps node` invocation. `--seed` travels explicitly because
@@ -360,23 +667,60 @@ fn node_command(
     c
 }
 
-/// Poll every child until all exit cleanly; kill the whole run on the
-/// first failure or on timeout so no node is orphaned.
-fn wait_all(
-    children: &mut Vec<(String, Child)>,
-    timeout_s: u64,
-) -> anyhow::Result<()> {
-    let deadline = Instant::now() + Duration::from_secs(timeout_s.max(1));
+fn kill_all(children: &mut [(ChaosTarget, String, Child)]) {
+    for (_, _, child) in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+/// Whether a pending chaos kill should fire now.
+fn chaos_due(
+    chaos: &Option<ChaosKill>,
+    started: Instant,
+    ckpt_dir: &Path,
+) -> bool {
+    match chaos {
+        None => false,
+        Some(ChaosKill { when: ChaosWhen::Secs(s), .. }) => {
+            started.elapsed().as_secs_f64() >= *s
+        }
+        // MANIFEST.json only appears once a full generation is durable,
+        // so firing on it kills the process with real restorable state
+        Some(ChaosKill { when: ChaosWhen::Ckpt, .. }) => {
+            ckpt_dir.join("MANIFEST.json").exists()
+        }
+    }
+}
+
+/// Poll every child until all exit cleanly. A node death (including a
+/// chaos kill) downs the whole cluster and reports `Crashed` so the
+/// restart policy can respawn it; only the manager-wide deadline is a
+/// hard error.
+fn supervise(
+    children: &mut [(ChaosTarget, String, Child)],
+    deadline: Instant,
+    chaos: &mut Option<ChaosKill>,
+    ckpt_dir: &Path,
+) -> anyhow::Result<Attempt> {
+    let started = Instant::now();
     let mut done = vec![false; children.len()];
     let mut failure: Option<String> = None;
     while !done.iter().all(|&d| d) {
         if Instant::now() > deadline {
-            failure = Some(format!(
-                "cluster run exceeded --timeout-s {timeout_s}"
-            ));
-            break;
+            kill_all(children);
+            anyhow::bail!("cluster run exceeded --timeout-s");
         }
-        for (i, (name, child)) in children.iter_mut().enumerate() {
+        if chaos_due(chaos, started, ckpt_dir) {
+            let target = chaos.take().expect("chaos checked Some").target;
+            for (who, name, child) in children.iter_mut() {
+                if *who == target {
+                    println!("cluster: chaos kill -> SIGKILL {name}");
+                    let _ = child.kill();
+                }
+            }
+        }
+        for (i, (_, name, child)) in children.iter_mut().enumerate() {
             if done[i] {
                 continue;
             }
@@ -392,14 +736,13 @@ fn wait_all(
         if failure.is_some() {
             break;
         }
-        std::thread::sleep(Duration::from_millis(50));
+        std::thread::sleep(Duration::from_millis(10));
     }
-    if let Some(why) = failure {
-        for (_, child) in children.iter_mut() {
-            let _ = child.kill();
-            let _ = child.wait();
+    match failure {
+        Some(why) => {
+            kill_all(children);
+            Ok(Attempt::Crashed(why))
         }
-        anyhow::bail!("{why} (all nodes killed)");
+        None => Ok(Attempt::Done),
     }
-    Ok(())
 }

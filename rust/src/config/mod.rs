@@ -252,6 +252,32 @@ impl Default for NetConfig {
     }
 }
 
+/// Checkpoint cadence for process-mode runs (`dmlps cluster` /
+/// `dmlps node`): how often each server shard snapshots its parameter
+/// slice, clocks, and telemetry into the `DMLPSCKPT` run directory.
+///
+/// Like [`NetConfig`], deliberately **not** part of
+/// [`ExperimentConfig`] or its JSON: checkpointing never changes the
+/// learning problem, and the config digest embedded in model artifacts
+/// must stay identical whether a run checkpoints or not (and across a
+/// kill/resume). These knobs travel as CLI flags instead.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CheckpointConfig {
+    /// Snapshot every N applied slice updates per shard (0 = no
+    /// step-based cadence; the all-zero default disables checkpointing).
+    pub every_steps: u64,
+    /// Snapshot when this many seconds elapsed since a shard's last
+    /// snapshot (0 = no time-based cadence).
+    pub every_secs: f64,
+}
+
+impl CheckpointConfig {
+    /// Whether either cadence is active.
+    pub fn enabled(&self) -> bool {
+        self.every_steps > 0 || self.every_secs > 0.0
+    }
+}
+
 /// Synthetic dataset family (see `data` module for generators).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FeatureKind {
@@ -793,8 +819,14 @@ impl ExperimentConfig {
     }
 
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_json().to_string_pretty())?;
-        Ok(())
+        // crash-atomic like every other persisted artifact: a manager
+        // killed mid-save must not leave a torn config.json for a
+        // resumed node to half-parse
+        crate::linalg::io::atomic_write(path, |w| {
+            use std::io::Write;
+            w.write_all(self.to_json().to_string_pretty().as_bytes())?;
+            Ok(())
+        })
     }
 
     pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
@@ -1051,6 +1083,25 @@ mod tests {
         let d = NetConfig::default();
         assert!(d.connect_attempts > 0 && d.backoff_ms > 0);
         assert!(d.max_backoff_ms >= d.backoff_ms);
+    }
+
+    #[test]
+    fn checkpoint_config_stays_out_of_experiment_json() {
+        // same contract as NetConfig: checkpoint cadence is CLI-flag
+        // plumbing. If it leaked into the experiment JSON, the config
+        // digest a resumed run embeds in its model artifact would
+        // differ from the original run's — breaking provenance across
+        // a kill/restart.
+        let j = Preset::Tiny.config().to_json();
+        let map = j.as_obj().unwrap();
+        assert!(!map.contains_key("checkpoint"));
+        assert!(!map.contains_key("ckpt"));
+        let d = CheckpointConfig::default();
+        assert!(!d.enabled(), "checkpointing must default off");
+        assert!(CheckpointConfig { every_steps: 5, every_secs: 0.0 }
+            .enabled());
+        assert!(CheckpointConfig { every_steps: 0, every_secs: 1.5 }
+            .enabled());
     }
 
     #[test]

@@ -7,11 +7,74 @@
 //! [`write_mat`] / [`read_mat`].
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::Mat;
 
 const MAGIC: &[u8; 8] = b"DMLPSMAT";
+
+/// Element cap a `DMLPSMAT` header may claim: 2^28 f32s (1 GiB of
+/// payload). Far above any artifact this crate produces (the paper's
+/// largest shape is k=600 × d=21504 ≈ 1.3e7 elements), low enough that
+/// a corrupt 24-byte header can never demand a multi-GB allocation.
+const MAX_ELEMS: u64 = 1 << 28;
+
+/// Elements decoded per allocation step in [`read_mat`]: reading grows
+/// the buffer in 256 KiB chunks as payload bytes actually arrive, so a
+/// truncated file fails at EOF having allocated at most one chunk
+/// beyond the bytes that exist — never the header-claimed size up
+/// front.
+const CHUNK_ELEMS: usize = 1 << 16;
+
+/// Crash-atomically replace `path` with whatever `write` produces.
+///
+/// The contract every persisted artifact in this crate relies on
+/// (models, matrices, checkpoints, manifests): a reader never observes
+/// a torn file. The bytes go to a uniquely-named temp file *in the
+/// target directory* (same filesystem, so the rename cannot cross
+/// devices), are flushed and fsynced, and only then renamed over
+/// `path` — a process killed at any instant leaves either the old
+/// complete file or the new complete file, plus at worst one orphaned
+/// `.tmp` sibling. On any error the temp file is removed and `path`
+/// is untouched.
+pub fn atomic_write<F>(path: &Path, write: F) -> anyhow::Result<()>
+where
+    F: FnOnce(
+        &mut std::io::BufWriter<std::fs::File>,
+    ) -> anyhow::Result<()>,
+{
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let name = path.file_name().ok_or_else(|| {
+        anyhow::anyhow!("atomic_write: no file name in {}", path.display())
+    })?;
+    let dir: PathBuf = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let tmp = dir.join(format!(
+        ".{}.{}.{}.tmp",
+        name.to_string_lossy(),
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let result = (|| -> anyhow::Result<()> {
+        let f = std::fs::File::create(&tmp)?;
+        let mut w = std::io::BufWriter::new(f);
+        write(&mut w)?;
+        let f = w.into_inner().map_err(|e| e.into_error())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        // make the rename itself durable where directory fsync is
+        // supported; best-effort elsewhere
+        let _ = std::fs::File::open(&dir).and_then(|d| d.sync_all());
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
 
 /// Write one matrix in the `DMLPSMAT` framing to any byte sink.
 pub fn write_mat<W: Write>(w: &mut W, m: &Mat) -> anyhow::Result<()> {
@@ -34,23 +97,31 @@ pub fn read_mat<R: Read>(r: &mut R) -> anyhow::Result<Mat> {
     let rows = u64::from_le_bytes(b8) as usize;
     r.read_exact(&mut b8)?;
     let cols = u64::from_le_bytes(b8) as usize;
+    let claimed = (rows as u64).checked_mul(cols as u64);
     anyhow::ensure!(
-        rows.saturating_mul(cols) < (1 << 33),
-        "matrix too large ({rows}x{cols})"
+        claimed.is_some_and(|n| n <= MAX_ELEMS),
+        "matrix too large ({rows}x{cols}, cap {MAX_ELEMS} elements)"
     );
-    let mut data = vec![0.0f32; rows * cols];
-    let mut b4 = [0u8; 4];
-    for v in data.iter_mut() {
-        r.read_exact(&mut b4)?;
-        *v = f32::from_le_bytes(b4);
+    let total = rows * cols;
+    let mut data: Vec<f32> = Vec::new();
+    let mut bytes = vec![0u8; 4 * CHUNK_ELEMS.min(total.max(1))];
+    while data.len() < total {
+        let n = CHUNK_ELEMS.min(total - data.len());
+        let b = &mut bytes[..4 * n];
+        r.read_exact(b)?;
+        data.reserve(n);
+        for c in b.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
     }
     Ok(Mat { rows, cols, data })
 }
 
 impl Mat {
+    /// Crash-atomic save (see [`atomic_write`]): a kill mid-save never
+    /// leaves a torn file where a complete one stood.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        write_mat(&mut f, self)
+        atomic_write(path, |f| write_mat(f, self))
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Mat> {
@@ -80,6 +151,85 @@ mod tests {
         let path = std::env::temp_dir().join("dmlps_mat_garbage.bin");
         std::fs::write(&path, b"not a matrix").unwrap();
         assert!(Mat::load(&path).is_err());
+    }
+
+    /// A corrupt header claiming absurd dims must fail the cap check
+    /// up front — never attempt the multi-GB allocation the old
+    /// `1<<33` cap allowed.
+    #[test]
+    fn rejects_corrupt_header_without_allocating() {
+        for (rows, cols) in [
+            (u64::MAX, u64::MAX),         // overflow bait
+            (1u64 << 40, 1),              // huge rows
+            (1, (1u64 << 28) + 1),        // one past the cap
+            (1u64 << 20, 1u64 << 20),     // 4 TiB claim
+        ] {
+            let mut buf: Vec<u8> = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&rows.to_le_bytes());
+            buf.extend_from_slice(&cols.to_le_bytes());
+            let err = read_mat(&mut std::io::Cursor::new(buf))
+                .expect_err("corrupt header must be rejected");
+            assert!(
+                err.to_string().contains("too large"),
+                "unexpected error: {err}"
+            );
+        }
+    }
+
+    /// A header whose claimed size passes the cap but whose payload is
+    /// truncated must fail at EOF, having allocated at most one chunk
+    /// beyond the bytes that exist.
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1000u64.to_le_bytes());
+        buf.extend_from_slice(&1000u64.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]); // 16 of 1e6 values
+        assert!(read_mat(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    /// The crash-safety contract behind every persisted artifact: a
+    /// torn file (what an in-place writer killed mid-save leaves) must
+    /// fail to load cleanly, and an atomic save over it must restore a
+    /// loadable file without littering temp files.
+    #[test]
+    fn atomic_save_replaces_torn_file_and_leaves_no_temp() {
+        let dir =
+            std::env::temp_dir().join("dmlps_atomic_save_testdir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metric.bin");
+
+        let mut rng = Pcg32::new(3);
+        let mut m = Mat::zeros(11, 7);
+        rng.fill_gaussian(&mut m.data, 0.0, 1.0);
+        let mut full: Vec<u8> = Vec::new();
+        write_mat(&mut full, &m).unwrap();
+
+        // simulate a kill mid-save: only a prefix reached disk
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(Mat::load(&path).is_err(), "torn file must not parse");
+
+        // atomic save replaces the torn file wholesale
+        m.save(&path).unwrap();
+        assert_eq!(Mat::load(&path).unwrap(), m);
+
+        // and leaves no temp-file litter behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp litter: {leftovers:?}");
+
+        // a failed write must leave the previous complete file intact
+        let err = atomic_write(&path, |_w| {
+            anyhow::bail!("simulated mid-write failure")
+        });
+        assert!(err.is_err());
+        assert_eq!(Mat::load(&path).unwrap(), m);
     }
 
     #[test]

@@ -1,0 +1,707 @@
+//! `DMLPSCKPT`: periodic sharded checkpoints of parameter-server state,
+//! and restart-from-checkpoint — the elasticity layer.
+//!
+//! The paper's 15-hour, 256-core runs only make sense if a run survives
+//! losing a process. Each server shard periodically snapshots its
+//! parameter slice *plus* the protocol state needed to re-enter the run
+//! (lr clock, per-worker applied counts, finished flags, telemetry
+//! counters); a dedicated writer thread — the same off-hot-path pattern
+//! as the probe thread — assembles per-shard snapshots into numbered
+//! *generations* on disk:
+//!
+//! ```text
+//! <ckpt-dir>/
+//!   MANIFEST.json            { version, latest_gen, shards, workers, k, d }
+//!   gen00000003/shard0.ckpt  versioned DMLPSCKPT codec (below)
+//!   gen00000003/shard1.ckpt
+//! ```
+//!
+//! Every file is written crash-atomically
+//! ([`crate::linalg::io::atomic_write`]: temp in target dir + fsync +
+//! rename), and `MANIFEST.json` is only updated *after* every shard file
+//! of a generation is durable — so "newest consistent checkpoint" is
+//! simply whatever the manifest names, no matter when the process died.
+//!
+//! Per-shard file layout (all little-endian):
+//!
+//! ```text
+//! 9 B  magic    b"DMLPSCKPT"
+//! 4 B  u32      codec version (currently 1)
+//! 8 B  u64      shard index
+//! 8 B  u64      shard count
+//! 8 B  u64      k (rows of L)
+//! 8 B  u64      d (cols of L)
+//! 8 B  u64      worker count
+//! 8 B  u64      applied (this shard's lr clock: slice updates folded)
+//! 8 B  u64      broadcasts
+//! 8 B  u64      grad_bytes (encoded gradient payload bytes folded)
+//! 4 B  f32      last_loss
+//! 1 B  u8       saw_loss
+//! 8 B ×workers  per-worker applied-slice counts (SSP clock inputs)
+//! 1 B ×workers  per-worker finished flags
+//! ...           the shard's row-slice via `linalg::io::write_mat`
+//!               (`DMLPSMAT` framing, shard_rows × d)
+//! ```
+//!
+//! On the restore side, [`load_latest`] returns the newest consistent
+//! [`Checkpoint`]; the server re-enters the protocol at each shard's
+//! recorded clock, and worker `w` resumes at step
+//! `min over shards of counts[s][w]` — the largest step every shard has
+//! fully absorbed. Shards ahead of that step simply re-fold the few
+//! replayed gradients (at-least-once semantics; the counts stay
+//! monotone, so SSP clocks and the accounting identity remain intact).
+//! Because pair `t` of worker `w` is a pure function of `(seed, w, t)`,
+//! re-deriving the pair stream position is plain replay arithmetic.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Receiver;
+
+use super::messages::ShardPlan;
+use crate::config::CheckpointConfig;
+use crate::linalg::io::{atomic_write, read_mat, write_mat};
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+const CKPT_MAGIC: &[u8; 9] = b"DMLPSCKPT";
+const CKPT_VERSION: u32 = 1;
+/// Sanity caps on header-claimed topology, so a corrupt checkpoint
+/// header cannot demand absurd allocations (the slice payload is
+/// separately capped by `read_mat`).
+const MAX_TOPOLOGY: u64 = 1 << 20;
+
+/// Where and how often the server checkpoints.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Run directory the generations and manifest live in.
+    pub dir: PathBuf,
+    /// Cadence knobs (CLI-flag plumbing; see
+    /// [`CheckpointConfig`]'s rationale for staying out of the
+    /// experiment JSON).
+    pub cadence: CheckpointConfig,
+}
+
+/// One shard's complete state at a checkpoint instant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    /// This shard's lr clock: slice updates folded so far.
+    pub applied: u64,
+    /// Per-worker applied-slice counts (the SSP clock inputs).
+    pub counts: Vec<u64>,
+    /// Per-worker finished flags (`Done` seen).
+    pub finished: Vec<bool>,
+    pub broadcasts: u64,
+    pub grad_bytes: u64,
+    pub last_loss: f32,
+    pub saw_loss: bool,
+    /// Raw f32 row-slice of L this shard owns (`plan.len(shard)`).
+    pub data: Vec<f32>,
+}
+
+impl ShardSnapshot {
+    /// This shard's SSP clock at the snapshot: min over unfinished
+    /// workers' counts (the same formula the update loop broadcasts).
+    pub fn clock(&self) -> u64 {
+        let clock = self
+            .counts
+            .iter()
+            .zip(&self.finished)
+            .map(|(&c, &f)| if f { u64::MAX } else { c })
+            .min()
+            .unwrap_or(0);
+        if clock == u64::MAX {
+            *self.counts.iter().max().unwrap_or(&0)
+        } else {
+            clock
+        }
+    }
+}
+
+/// Everything a resumed worker needs to re-enter the protocol.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerResume {
+    /// First local step to execute (earlier steps are replayed through
+    /// the pair stream and discarded — pure `(seed, w, t)` arithmetic).
+    pub start_step: u64,
+    /// Initial per-shard server clocks, so the SSP gate starts from the
+    /// checkpointed clocks instead of waiting for progress the server
+    /// already made.
+    pub clocks: Vec<u64>,
+    /// Initial per-shard parameter versions (freshest-wins splicing).
+    pub versions: Vec<u64>,
+}
+
+/// A fully loaded consistent checkpoint generation.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub gen: u64,
+    pub k: usize,
+    pub d: usize,
+    pub workers: usize,
+    /// One snapshot per shard, in shard order.
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl Checkpoint {
+    /// Fail loudly if this checkpoint was taken under a different
+    /// topology than the run being resumed.
+    pub fn validate_for(
+        &self,
+        plan: &ShardPlan,
+        workers: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.k == plan.k
+                && self.d == plan.d
+                && self.shards.len() == plan.shards(),
+            "checkpoint topology {}x{} / {} shards does not match \
+             run topology {}x{} / {} shards",
+            self.k,
+            self.d,
+            self.shards.len(),
+            plan.k,
+            plan.d,
+            plan.shards()
+        );
+        anyhow::ensure!(
+            self.workers == workers,
+            "checkpoint was taken with {} workers, run has {workers}",
+            self.workers
+        );
+        for (s, snap) in self.shards.iter().enumerate() {
+            anyhow::ensure!(
+                snap.data.len() == plan.len(s),
+                "shard {s} slice has {} elements, plan owns {}",
+                snap.data.len(),
+                plan.len(s)
+            );
+        }
+        Ok(())
+    }
+
+    /// Reassemble the full L from the per-shard slices.
+    pub fn l(&self, plan: &ShardPlan) -> Mat {
+        let mut l = Mat::zeros(plan.k, plan.d);
+        for (s, snap) in self.shards.iter().enumerate() {
+            plan.slice_mut(&mut l.data, s).copy_from_slice(&snap.data);
+        }
+        l
+    }
+
+    /// The step worker `w` resumes at: the largest step every shard has
+    /// fully absorbed. Shards that counted further simply re-fold the
+    /// replayed steps (counts stay monotone).
+    pub fn resume_step(&self, w: usize) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.counts.get(w).copied().unwrap_or(0))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// The resume bundle for worker `w`.
+    pub fn worker_resume(&self, w: usize) -> WorkerResume {
+        WorkerResume {
+            start_step: self.resume_step(w),
+            clocks: self.shards.iter().map(ShardSnapshot::clock).collect(),
+            versions: self.shards.iter().map(|s| s.applied).collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// codec
+// ---------------------------------------------------------------------
+
+fn put_u64<W: Write>(w: &mut W, v: u64) -> anyhow::Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Write one shard snapshot in the `DMLPSCKPT` framing.
+pub fn write_shard<W: Write>(
+    w: &mut W,
+    plan: &ShardPlan,
+    workers: usize,
+    snap: &ShardSnapshot,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        snap.counts.len() == workers && snap.finished.len() == workers,
+        "snapshot worker vectors sized {}/{}, expected {workers}",
+        snap.counts.len(),
+        snap.finished.len()
+    );
+    anyhow::ensure!(
+        snap.data.len() == plan.len(snap.shard),
+        "snapshot slice has {} elements, shard {} owns {}",
+        snap.data.len(),
+        snap.shard,
+        plan.len(snap.shard)
+    );
+    w.write_all(CKPT_MAGIC)?;
+    w.write_all(&CKPT_VERSION.to_le_bytes())?;
+    put_u64(w, snap.shard as u64)?;
+    put_u64(w, plan.shards() as u64)?;
+    put_u64(w, plan.k as u64)?;
+    put_u64(w, plan.d as u64)?;
+    put_u64(w, workers as u64)?;
+    put_u64(w, snap.applied)?;
+    put_u64(w, snap.broadcasts)?;
+    put_u64(w, snap.grad_bytes)?;
+    w.write_all(&snap.last_loss.to_le_bytes())?;
+    w.write_all(&[u8::from(snap.saw_loss)])?;
+    for &c in &snap.counts {
+        put_u64(w, c)?;
+    }
+    for &f in &snap.finished {
+        w.write_all(&[u8::from(f)])?;
+    }
+    // the slice payload rides the DMLPSMAT codec — one matrix format
+    // across the whole crate, sharing read_mat's corrupt-header caps
+    let m = Mat {
+        rows: plan.shard_rows(snap.shard),
+        cols: plan.d,
+        data: snap.data.clone(),
+    };
+    write_mat(w, &m)
+}
+
+/// A parsed shard file: the snapshot plus the topology header it claims.
+pub struct ShardFile {
+    pub shards: usize,
+    pub k: usize,
+    pub d: usize,
+    pub workers: usize,
+    pub snap: ShardSnapshot,
+}
+
+/// Read one `DMLPSCKPT`-framed shard snapshot.
+pub fn read_shard<R: Read>(r: &mut R) -> anyhow::Result<ShardFile> {
+    let mut magic = [0u8; 9];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == CKPT_MAGIC, "not a DMLPSCKPT shard file");
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    anyhow::ensure!(
+        version == CKPT_VERSION,
+        "unsupported checkpoint version {version} \
+         (this build reads version {CKPT_VERSION})"
+    );
+    let mut b8 = [0u8; 8];
+    let mut u64f = |r: &mut R| -> anyhow::Result<u64> {
+        r.read_exact(&mut b8)?;
+        Ok(u64::from_le_bytes(b8))
+    };
+    let shard = u64f(r)?;
+    let shards = u64f(r)?;
+    let k = u64f(r)?;
+    let d = u64f(r)?;
+    let workers = u64f(r)?;
+    anyhow::ensure!(
+        shards > 0
+            && shards <= MAX_TOPOLOGY
+            && workers > 0
+            && workers <= MAX_TOPOLOGY
+            && shard < shards,
+        "corrupt checkpoint topology header \
+         (shard {shard} of {shards}, {workers} workers)"
+    );
+    let applied = u64f(r)?;
+    let broadcasts = u64f(r)?;
+    let grad_bytes = u64f(r)?;
+    r.read_exact(&mut b4)?;
+    let last_loss = f32::from_le_bytes(b4);
+    let mut b1 = [0u8; 1];
+    r.read_exact(&mut b1)?;
+    let saw_loss = b1[0] != 0;
+    let mut counts = Vec::with_capacity(workers as usize);
+    for _ in 0..workers {
+        counts.push(u64f(r)?);
+    }
+    let mut finished = Vec::with_capacity(workers as usize);
+    for _ in 0..workers {
+        r.read_exact(&mut b1)?;
+        finished.push(b1[0] != 0);
+    }
+    let m = read_mat(r)?;
+    anyhow::ensure!(
+        m.cols == d as usize,
+        "shard slice payload is {}x{}, header says d={d}",
+        m.rows,
+        m.cols
+    );
+    Ok(ShardFile {
+        shards: shards as usize,
+        k: k as usize,
+        d: d as usize,
+        workers: workers as usize,
+        snap: ShardSnapshot {
+            shard: shard as usize,
+            applied,
+            counts,
+            finished,
+            broadcasts,
+            grad_bytes,
+            last_loss,
+            saw_loss,
+            data: m.data,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------
+// run directory: generations + manifest
+// ---------------------------------------------------------------------
+
+fn gen_dir(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("gen{gen:08}"))
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("MANIFEST.json")
+}
+
+/// Write one complete generation: every shard file first (each
+/// crash-atomic), then the manifest naming it — so the manifest never
+/// points at a partially written generation. Prunes generations older
+/// than the previous one afterwards.
+pub fn write_generation(
+    dir: &Path,
+    plan: &ShardPlan,
+    workers: usize,
+    gen: u64,
+    snaps: &[&ShardSnapshot],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        snaps.len() == plan.shards(),
+        "generation needs {} shard snapshots, got {}",
+        plan.shards(),
+        snaps.len()
+    );
+    let gdir = gen_dir(dir, gen);
+    std::fs::create_dir_all(&gdir)?;
+    for (s, snap) in snaps.iter().enumerate() {
+        anyhow::ensure!(
+            snap.shard == s,
+            "snapshot {} out of order at slot {s}",
+            snap.shard
+        );
+        atomic_write(&gdir.join(format!("shard{s}.ckpt")), |w| {
+            write_shard(w, plan, workers, snap)
+        })?;
+    }
+    let manifest = Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("latest_gen", Json::Num(gen as f64)),
+        ("shards", Json::Num(plan.shards() as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("k", Json::Num(plan.k as f64)),
+        ("d", Json::Num(plan.d as f64)),
+    ]);
+    atomic_write(&manifest_path(dir), |w| {
+        w.write_all(manifest.to_string_pretty().as_bytes())?;
+        Ok(())
+    })?;
+    prune_old(dir, gen);
+    Ok(())
+}
+
+/// Best-effort removal of generation directories older than `gen - 1`
+/// (the current and previous generations are kept, so a reader of the
+/// old manifest never races a delete).
+fn prune_old(dir: &Path, gen: u64) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(g) = name
+            .strip_prefix("gen")
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            if g + 1 < gen {
+                let _ = std::fs::remove_dir_all(e.path());
+            }
+        }
+    }
+}
+
+/// Load the newest consistent checkpoint from a run directory.
+///
+/// `Ok(None)` means nothing was checkpointed yet (no manifest) — the
+/// caller starts fresh; that is what lets `--resume` be passed
+/// unconditionally on a restart. A manifest naming a generation whose
+/// shard files are missing or corrupt is an error: the state existed
+/// and cannot be trusted, so failing loudly beats silently retraining.
+pub fn load_latest(dir: &Path) -> anyhow::Result<Option<Checkpoint>> {
+    let mpath = manifest_path(dir);
+    if !mpath.exists() {
+        return Ok(None);
+    }
+    let j = Json::parse_file(&mpath)?;
+    let version = j.get("version").as_usize().unwrap_or(0);
+    anyhow::ensure!(
+        version == 1,
+        "unsupported checkpoint manifest version {version}"
+    );
+    let need = |k: &str| -> anyhow::Result<usize> {
+        j.get(k).as_usize().ok_or_else(|| {
+            anyhow::anyhow!("checkpoint manifest missing '{k}'")
+        })
+    };
+    let gen = need("latest_gen")? as u64;
+    let shards = need("shards")?;
+    let workers = need("workers")?;
+    let k = need("k")?;
+    let d = need("d")?;
+    anyhow::ensure!(
+        shards > 0 && shards as u64 <= MAX_TOPOLOGY,
+        "corrupt manifest shard count {shards}"
+    );
+    let gdir = gen_dir(dir, gen);
+    let mut snaps = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let path = gdir.join(format!("shard{s}.ckpt"));
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path).map_err(|e| {
+                anyhow::anyhow!(
+                    "checkpoint gen {gen} shard file {} unreadable: {e}",
+                    path.display()
+                )
+            })?,
+        );
+        let sf = read_shard(&mut f)?;
+        anyhow::ensure!(
+            sf.shards == shards
+                && sf.workers == workers
+                && sf.k == k
+                && sf.d == d
+                && sf.snap.shard == s,
+            "shard file {} disagrees with manifest topology",
+            path.display()
+        );
+        snaps.push(sf.snap);
+    }
+    Ok(Some(Checkpoint { gen, k, d, workers, shards: snaps }))
+}
+
+// ---------------------------------------------------------------------
+// writer thread (the probe-thread pattern, for durability)
+// ---------------------------------------------------------------------
+
+/// Messages from shard update threads to the checkpoint writer thread.
+/// Snapshots are best-effort (`try_send` on a bounded channel): a
+/// lagging writer loses a checkpoint opportunity, never stalls a fold.
+pub enum CkptMsg {
+    Snapshot(ShardSnapshot),
+    ShardDone { shard: usize },
+}
+
+/// The checkpoint writer loop (runs on its own `ps-server-ckpt`
+/// thread). Collects the freshest snapshot per shard and writes a new
+/// generation whenever every live shard has advanced past what the last
+/// generation recorded — one complete, consistent-by-construction
+/// generation per cadence boundary. Returns the last generation written.
+pub(crate) fn run_writer(
+    spec: CheckpointSpec,
+    plan: ShardPlan,
+    workers: usize,
+    start_gen: u64,
+    rx: Receiver<CkptMsg>,
+) -> u64 {
+    let shards = plan.shards();
+    let mut latest: Vec<Option<ShardSnapshot>> =
+        (0..shards).map(|_| None).collect();
+    // applied count each shard had in the last written generation
+    let mut written: Vec<Option<u64>> = vec![None; shards];
+    let mut done = vec![false; shards];
+    let mut gen = start_gen;
+    loop {
+        match rx.recv() {
+            Ok(CkptMsg::Snapshot(s)) => {
+                let i = s.shard;
+                if i < shards {
+                    latest[i] = Some(s);
+                }
+            }
+            Ok(CkptMsg::ShardDone { shard }) => {
+                if shard < shards {
+                    done[shard] = true;
+                }
+            }
+            Err(_) => break, // all shards hung up
+        }
+        let ready = latest.iter().all(|o| o.is_some());
+        // at least one shard moved past the last written generation…
+        let any_new = latest.iter().zip(&written).any(|(o, w)| match (o, w)
+        {
+            (Some(s), Some(a)) => s.applied > *a,
+            (Some(_), None) => true,
+            _ => false,
+        });
+        // …and every shard still running has too (done shards are
+        // frozen at their final snapshot and exempt)
+        let all_fresh = latest.iter().zip(&written).zip(&done).all(
+            |((o, w), &dn)| {
+                dn || match (o, w) {
+                    (Some(s), Some(a)) => s.applied > *a,
+                    (Some(_), None) => true,
+                    _ => false,
+                }
+            },
+        );
+        if ready && any_new && all_fresh {
+            let snaps: Vec<&ShardSnapshot> =
+                latest.iter().map(|o| o.as_ref().unwrap()).collect();
+            match write_generation(&spec.dir, &plan, workers, gen + 1, &snaps)
+            {
+                Ok(()) => {
+                    gen += 1;
+                    for (w, o) in written.iter_mut().zip(&latest) {
+                        *w = Some(o.as_ref().unwrap().applied);
+                    }
+                }
+                Err(e) => {
+                    // checkpointing is best-effort durability: log and
+                    // keep training rather than killing the run
+                    eprintln!("[ps-ckpt] generation write failed: {e:#}");
+                }
+            }
+        }
+        if done.iter().all(|&f| f) {
+            break;
+        }
+    }
+    gen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(shard: usize, plan: &ShardPlan, applied: u64) -> ShardSnapshot {
+        ShardSnapshot {
+            shard,
+            applied,
+            counts: vec![applied / 2, applied - applied / 2],
+            finished: vec![false, false],
+            broadcasts: applied / 3,
+            grad_bytes: 64 * applied,
+            last_loss: 0.5,
+            saw_loss: applied > 0,
+            data: (0..plan.len(shard))
+                .map(|i| (i as f32) + applied as f32)
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn shard_codec_roundtrips() {
+        let plan = ShardPlan::new(8, 4, 2);
+        let s = snap(1, &plan, 17);
+        let mut buf: Vec<u8> = Vec::new();
+        write_shard(&mut buf, &plan, 2, &s).unwrap();
+        let sf = read_shard(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(sf.shards, 2);
+        assert_eq!((sf.k, sf.d, sf.workers), (8, 4, 2));
+        assert_eq!(sf.snap, s);
+    }
+
+    #[test]
+    fn shard_codec_rejects_garbage_and_truncation() {
+        let plan = ShardPlan::new(8, 4, 2);
+        let s = snap(0, &plan, 5);
+        let mut buf: Vec<u8> = Vec::new();
+        write_shard(&mut buf, &plan, 2, &s).unwrap();
+        assert!(read_shard(&mut std::io::Cursor::new(b"nope".to_vec()))
+            .is_err());
+        for cut in [1, 9, 13, 40, buf.len() - 1] {
+            assert!(
+                read_shard(&mut std::io::Cursor::new(buf[..cut].to_vec()))
+                    .is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn generation_roundtrip_and_resume_math() {
+        let dir = std::env::temp_dir().join("dmlps_ckpt_gen_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan = ShardPlan::new(8, 4, 2);
+        let mut s0 = snap(0, &plan, 10);
+        let mut s1 = snap(1, &plan, 12);
+        // shard 0 absorbed steps (4, 6); shard 1 absorbed (5, 7)
+        s0.counts = vec![4, 6];
+        s1.counts = vec![5, 7];
+        write_generation(&dir, &plan, 2, 3, &[&s0, &s1]).unwrap();
+        let c = load_latest(&dir).unwrap().expect("manifest written");
+        assert_eq!(c.gen, 3);
+        c.validate_for(&plan, 2).unwrap();
+        // worker resumes at the min over shards of its counts
+        assert_eq!(c.resume_step(0), 4);
+        assert_eq!(c.resume_step(1), 6);
+        let r = c.worker_resume(0);
+        assert_eq!(r.start_step, 4);
+        assert_eq!(r.versions, vec![10, 12]);
+        // shard clocks: min over unfinished counts
+        assert_eq!(r.clocks, vec![4, 5]);
+        // reassembled L carries each shard's slice
+        let l = c.l(&plan);
+        assert_eq!(plan.slice(&l.data, 0), &s0.data[..]);
+        assert_eq!(plan.slice(&l.data, 1), &s1.data[..]);
+        // topology mismatches fail loudly
+        assert!(c.validate_for(&plan, 3).is_err());
+        assert!(c
+            .validate_for(&ShardPlan::new(8, 4, 4), 2)
+            .is_err());
+    }
+
+    #[test]
+    fn empty_dir_resumes_fresh_and_corrupt_manifest_errors() {
+        let dir = std::env::temp_dir().join("dmlps_ckpt_empty_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // no manifest → nothing to resume, start fresh
+        assert!(load_latest(&dir).unwrap().is_none());
+        // manifest naming a generation without shard files → loud error
+        std::fs::write(
+            manifest_path(&dir),
+            r#"{"version": 1, "latest_gen": 9, "shards": 1,
+                "workers": 1, "k": 8, "d": 4}"#,
+        )
+        .unwrap();
+        assert!(load_latest(&dir).is_err());
+    }
+
+    #[test]
+    fn finished_workers_do_not_hold_the_clock() {
+        let plan = ShardPlan::new(8, 4, 1);
+        let mut s = snap(0, &plan, 20);
+        s.counts = vec![3, 17];
+        s.finished = vec![true, false];
+        assert_eq!(s.clock(), 17);
+        s.finished = vec![true, true];
+        assert_eq!(s.clock(), 17.max(3));
+    }
+
+    #[test]
+    fn pruning_keeps_current_and_previous_generation() {
+        let dir = std::env::temp_dir().join("dmlps_ckpt_prune_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan = ShardPlan::new(4, 4, 1);
+        for gen in 1..=4 {
+            let s = snap(0, &plan, 10 * gen);
+            write_generation(&dir, &plan, 2, gen, &[&s]).unwrap();
+        }
+        assert!(!gen_dir(&dir, 1).exists());
+        assert!(!gen_dir(&dir, 2).exists());
+        assert!(gen_dir(&dir, 3).exists());
+        assert!(gen_dir(&dir, 4).exists());
+        let c = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(c.gen, 4);
+        assert_eq!(c.shards[0].applied, 40);
+    }
+}

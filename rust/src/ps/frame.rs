@@ -171,12 +171,28 @@ impl<'a> Reader<'a> {
         Ok(())
     }
 
-    /// A count field used to size an allocation: bounded by the frame
-    /// cap so corrupt lengths fail cleanly instead of aborting on OOM.
-    fn count(&mut self, what: &str) -> Result<usize, FrameError> {
+    /// A count field used to size an allocation of `elem_size`-byte
+    /// elements. Checked against the bytes *actually remaining in this
+    /// frame*, not just the global frame cap: `Vec::with_capacity`
+    /// allocates eagerly, so without the remaining-bytes check a 5-byte
+    /// malformed Dense frame could claim 2^28 elements and demand a
+    /// 1 GiB allocation before the first truncation error fired.
+    fn count(
+        &mut self,
+        what: &str,
+        elem_size: usize,
+    ) -> Result<usize, FrameError> {
         let n = self.u32()? as usize;
         if n > MAX_FRAME_BYTES {
             return Err(malformed(format!("{what} count {n} exceeds cap")));
+        }
+        let need = n.saturating_mul(elem_size);
+        let remaining = self.buf.len() - self.pos;
+        if need > remaining {
+            return Err(malformed(format!(
+                "{what} count {n} needs {need} bytes, \
+                 {remaining} remain in frame"
+            )));
         }
         Ok(n)
     }
@@ -239,7 +255,7 @@ pub fn encoding_overhead(enc: &SliceEncoding) -> u64 {
 fn decode_encoding(r: &mut Reader<'_>) -> Result<SliceEncoding, FrameError> {
     match r.u8()? {
         TAG_DENSE => {
-            let n = r.count("dense")?;
+            let n = r.count("dense", 4)?;
             let mut v = Vec::with_capacity(n);
             for _ in 0..n {
                 v.push(r.f32()?);
@@ -247,14 +263,14 @@ fn decode_encoding(r: &mut Reader<'_>) -> Result<SliceEncoding, FrameError> {
             Ok(SliceEncoding::Dense(v))
         }
         TAG_INT8 => {
-            let n = r.count("int8")?;
+            let n = r.count("int8", 1)?;
             let scale = r.f32()?;
             let q = r.take(n)?.iter().map(|&b| b as i8).collect();
             Ok(SliceEncoding::Int8 { scale, q })
         }
         TAG_TOPK => {
-            let nnz = r.count("topk vals")?;
-            let glen = r.count("topk gaps")?;
+            let nnz = r.count("topk vals", 4)?;
+            let glen = r.count("topk gaps", 1)?;
             let gaps = r.take(glen)?.to_vec();
             let mut vals = Vec::with_capacity(nnz);
             for _ in 0..nnz {
@@ -263,8 +279,8 @@ fn decode_encoding(r: &mut Reader<'_>) -> Result<SliceEncoding, FrameError> {
             Ok(SliceEncoding::TopK { gaps, vals })
         }
         TAG_TOPK_INT8 => {
-            let nnz = r.count("topk_int8 vals")?;
-            let glen = r.count("topk_int8 gaps")?;
+            let nnz = r.count("topk_int8 vals", 1)?;
+            let glen = r.count("topk_int8 gaps", 1)?;
             let scale = r.f32()?;
             let gaps = r.take(glen)?.to_vec();
             let vals = r.take(nnz)?.iter().map(|&b| b as i8).collect();
@@ -660,6 +676,41 @@ mod tests {
                 "cut at {cut} must be malformed"
             );
         }
+    }
+
+    /// The allocation-bomb regression, per tag: a tiny frame whose
+    /// count field claims (just under) the 2^28 cap must be rejected as
+    /// malformed by the remaining-bytes check *before* any
+    /// `Vec::with_capacity` — not die trying to allocate gigabytes.
+    #[test]
+    fn huge_count_in_tiny_frame_is_malformed_per_tag() {
+        let mut head = vec![KIND_GRAD];
+        put_u32(&mut head, 0); // worker
+        put_u32(&mut head, 0); // shard
+        put_u64(&mut head, 0); // step
+        put_f32(&mut head, 0.0); // loss
+        let huge = (MAX_FRAME_BYTES - 1) as u32; // passes the cap check
+        for tag in [TAG_DENSE, TAG_INT8, TAG_TOPK, TAG_TOPK_INT8] {
+            let mut body = head.clone();
+            body.push(tag);
+            put_u32(&mut body, huge);
+            let err = decode_frame(&body)
+                .expect_err("huge count in tiny frame must fail");
+            assert!(
+                matches!(&err, FrameError::Malformed(m)
+                    if m.contains("remain in frame")),
+                "tag {tag}: want remaining-bytes malformed, got {err:?}"
+            );
+        }
+        // the second count field (gap stream length) is guarded too
+        let mut body = head.clone();
+        body.push(TAG_TOPK);
+        put_u32(&mut body, 0); // nnz = 0, passes
+        put_u32(&mut body, huge); // glen huge
+        assert!(matches!(
+            decode_frame(&body),
+            Err(FrameError::Malformed(_))
+        ));
     }
 
     #[test]

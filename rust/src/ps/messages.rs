@@ -65,6 +65,12 @@ impl ShardPlan {
         (self.bounds[s + 1] - self.bounds[s]) * self.d
     }
 
+    /// Row count owned by shard `s` (the checkpoint codec writes each
+    /// slice as a `shard_rows(s) × d` matrix).
+    pub fn shard_rows(&self, s: usize) -> usize {
+        self.bounds[s + 1] - self.bounds[s]
+    }
+
     /// Whether shard `s` owns no elements. Always false for plans built
     /// by [`ShardPlan::new`] (shard count is clamped to `[1, k]`), but
     /// paired with [`ShardPlan::len`] for a complete API.
@@ -311,6 +317,7 @@ mod tests {
         for s in 0..plan.shards() {
             assert_eq!(plan.offset(s) % plan.d, 0);
             assert_eq!(plan.offset(s), plan.rows(s).start * plan.d);
+            assert_eq!(plan.shard_rows(s), plan.rows(s).len());
             assert_eq!(plan.len(s), (plan.rows(s).len()) * plan.d);
         }
     }

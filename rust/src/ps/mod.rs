@@ -16,6 +16,7 @@
 //! [`Session::train_distributed`](crate::session::Session::train_distributed);
 //! [`run_training`] remains as a deprecated shim over it.
 
+pub mod checkpoint;
 mod compress;
 pub mod frame;
 mod messages;
@@ -24,6 +25,7 @@ mod server;
 mod transport;
 mod worker;
 
+pub use checkpoint::{Checkpoint, CheckpointSpec, WorkerResume};
 pub use compress::{decode_into, encode_param, keep_count, Compressor};
 pub use messages::{ShardPlan, SliceEncoding, ToServer, ToWorker};
 pub use server::{ProbeFn, Server, ServerConfig, ServerResult};
@@ -74,7 +76,10 @@ pub struct TrainResult {
     pub wall_s: f64,
 }
 
-/// Options beyond the experiment config (fault injection, probe cadence).
+/// Options beyond the experiment config (fault injection, probe cadence,
+/// checkpointing). Like [`crate::config::NetConfig`], these describe how
+/// a particular run is supervised, not what is learned — they stay out
+/// of the experiment JSON and its digest.
 #[derive(Clone)]
 pub struct RunOptions {
     pub faults: FaultSpec,
@@ -82,6 +87,12 @@ pub struct RunOptions {
     pub probe_every: u64,
     /// Probe sample sizes (similar, dissimilar).
     pub probe_pairs: (usize, usize),
+    /// Periodic sharded checkpointing of server state (None = off).
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Resume from the newest consistent checkpoint in this run
+    /// directory. An empty/never-written directory means a fresh start,
+    /// so restart supervisors can pass it unconditionally.
+    pub resume_from: Option<std::path::PathBuf>,
 }
 
 impl Default for RunOptions {
@@ -90,6 +101,8 @@ impl Default for RunOptions {
             faults: FaultSpec::perfect(),
             probe_every: 20,
             probe_pairs: (200, 200),
+            checkpoint: None,
+            resume_from: None,
         }
     }
 }

@@ -32,10 +32,11 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::checkpoint::{Checkpoint, CheckpointSpec, CkptMsg, ShardSnapshot};
 use super::compress::{decode_into, encode_param};
 use super::messages::{ShardPlan, ToServer, ToWorker};
 use super::transport::{drain, FaultSpec, FaultySender};
-use crate::config::CompressionConfig;
+use crate::config::{CheckpointConfig, CompressionConfig};
 use crate::dml::LrSchedule;
 use crate::linalg::Mat;
 use crate::metrics::{Curve, Stopwatch};
@@ -68,6 +69,14 @@ pub struct ServerConfig {
     /// parameter broadcast round through it (`None` = no reporting,
     /// byte-identical to the historical protocol).
     pub events: Option<Arc<dyn crate::session::EventSink>>,
+    /// Periodic sharded checkpointing: shard threads snapshot through a
+    /// dedicated writer thread at this cadence (None = off, zero work on
+    /// the update path).
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Re-enter the protocol from a loaded checkpoint: per-shard clocks,
+    /// per-worker counts, and telemetry counters resume where the
+    /// snapshot left them (the slices in it also overwrite `l0`).
+    pub resume: Option<Arc<Checkpoint>>,
 }
 
 /// What the server hands back after shutdown.
@@ -128,6 +137,9 @@ pub struct Server {
     /// Returns (param slice messages shipped, encoded param bytes,
     /// misrouted gradient messages).
     comm_handle: std::thread::JoinHandle<(u64, u64, u64)>,
+    /// Checkpoint writer (when checkpointing is on); returns the last
+    /// generation written.
+    ckpt_handle: Option<std::thread::JoinHandle<u64>>,
     plan: ShardPlan,
 }
 
@@ -138,7 +150,7 @@ impl Server {
     pub fn spawn(
         cfg: ServerConfig,
         plan: ShardPlan,
-        l0: Mat,
+        mut l0: Mat,
         from_workers: Receiver<ToServer>,
         to_workers: Vec<Sender<ToWorker>>,
         mut probe: ProbeFn,
@@ -148,6 +160,46 @@ impl Server {
         let server_batch = cfg.server_batch.max(1);
         let probe_every = cfg.probe_every.max(1);
         let shards_done = Arc::new(AtomicUsize::new(0));
+
+        // Resuming: the checkpointed slices are the parameters, whatever
+        // the caller passed as l0 (they normally match — callers build
+        // l0 from the same checkpoint — but the snapshot is the truth).
+        if let Some(c) = &cfg.resume {
+            for s in 0..shard_count {
+                plan.slice_mut(&mut l0.data, s)
+                    .copy_from_slice(&c.shards[s].data);
+            }
+        }
+
+        // Checkpoint writer thread: same off-hot-path shape as the probe
+        // thread — bounded channel, best-effort snapshots, a dedicated
+        // thread doing the disk work.
+        let (ckpt_tx, ckpt_handle) = match cfg.checkpoint.clone() {
+            Some(spec) => {
+                let (tx, rx) =
+                    sync_channel::<CkptMsg>(4 * shard_count + 8);
+                let wplan = plan.clone();
+                // resumed runs number new generations after the one
+                // they loaded, so a restart never rewrites history
+                let start_gen =
+                    cfg.resume.as_ref().map_or(0, |c| c.gen);
+                let handle = std::thread::Builder::new()
+                    .name("ps-server-ckpt".into())
+                    .spawn(move || {
+                        super::checkpoint::run_writer(
+                            spec, wplan, workers, start_gen, rx,
+                        )
+                    })
+                    .expect("spawn checkpoint writer thread");
+                (Some(tx), Some(handle))
+            }
+            None => (None, None),
+        };
+        let cadence = cfg
+            .checkpoint
+            .as_ref()
+            .map(|s| s.cadence)
+            .unwrap_or_default();
 
         // Queues: one inbound per shard, one shared outbound, one probe.
         let mut inbound_txs = Vec::with_capacity(shard_count);
@@ -170,12 +222,14 @@ impl Server {
             let slice0 = plan.slice(&l0.data, s).to_vec();
             let outbound_tx = outbound_tx.clone();
             let probe_tx = probe_tx.clone();
+            let ckpt_tx = ckpt_tx.clone();
             let shards_done = shards_done.clone();
             let lr = cfg.lr;
             let lr_scale = cfg.lr_scale;
             let compression = cfg.compression;
             let seed = cfg.seed;
             let events = cfg.events.clone();
+            let init = cfg.resume.as_ref().map(|c| c.shards[s].clone());
             let handle = std::thread::Builder::new()
                 .name(format!("ps-server-shard{s}"))
                 .spawn(move || {
@@ -190,6 +244,8 @@ impl Server {
                         compression,
                         seed,
                         events,
+                        init,
+                        ckpt_tx.map(|tx| (tx, cadence)),
                         &inbound_rx,
                         &outbound_tx,
                         &probe_tx,
@@ -202,6 +258,7 @@ impl Server {
         }
         drop(outbound_tx); // comm sees disconnect once all shards exit
         drop(probe_tx); // probe sees disconnect once all shards exit
+        drop(ckpt_tx); // writer sees disconnect once all shards exit
 
         // -------------------------- probe thread --------------------------
         let probe_plan = plan.clone();
@@ -345,7 +402,13 @@ impl Server {
             })
             .expect("spawn server comm thread");
 
-        Server { shard_handles, probe_handle, comm_handle, plan }
+        Server {
+            shard_handles,
+            probe_handle,
+            comm_handle,
+            ckpt_handle,
+            plan,
+        }
     }
 
     /// Join all threads and return the final state.
@@ -357,6 +420,11 @@ impl Server {
             .collect();
         let (param_msgs, param_bytes_sent, misroutes) =
             self.comm_handle.join().expect("server comm panicked");
+        // writer drains the final snapshots, so the run-end generation
+        // is on disk before join() returns
+        if let Some(h) = self.ckpt_handle {
+            let _ = h.join();
+        }
         let curve = self.probe_handle.join().expect("server probe panicked");
 
         let mut l = Mat::zeros(self.plan.k, self.plan.d);
@@ -493,19 +561,39 @@ fn run_shard(
     compression: CompressionConfig,
     seed: u64,
     events: Option<Arc<dyn crate::session::EventSink>>,
+    init: Option<ShardSnapshot>,
+    ckpt: Option<(SyncSender<CkptMsg>, CheckpointConfig)>,
     inbound_rx: &Receiver<ToServer>,
     outbound_tx: &Sender<ToWorker>,
     probe_tx: &SyncSender<ProbeMsg>,
 ) -> ShardOutcome {
-    let mut counts = vec![0u64; workers];
-    let mut finished = vec![false; workers];
-    let mut applied = 0u64;
-    let mut broadcasts = 0u64;
-    let mut grad_bytes = 0u64;
+    // Resuming re-enters the protocol exactly where the snapshot left
+    // it: the lr clock keeps its schedule position, per-worker counts
+    // keep the SSP clock monotone, and the telemetry counters keep the
+    // whole-run totals honest across the restart.
+    let (
+        mut counts,
+        mut finished,
+        mut applied,
+        mut broadcasts,
+        mut grad_bytes,
+        mut last_loss,
+        mut saw_loss,
+    ) = match init {
+        Some(s) => (
+            s.counts,
+            s.finished,
+            s.applied,
+            s.broadcasts,
+            s.grad_bytes,
+            s.last_loss,
+            s.saw_loss,
+        ),
+        None => (vec![0u64; workers], vec![false; workers], 0, 0, 0, 0.0, false),
+    };
     let mut loss_acc = 0.0f64;
     let mut loss_n = 0u64;
-    let mut last_loss = 0.0f32;
-    let mut saw_loss = false;
+    let mut ckpt_last = std::time::Instant::now();
     // reused decode scratch: every wire encoding lands here as dense
     // f32 before folding (the Dense arm is a plain copy, so mode=none
     // folds the exact bits the worker computed)
@@ -550,6 +638,31 @@ fn run_shard(
                         saw_loss = true;
                         loss_acc = 0.0;
                         loss_n = 0;
+                    }
+                    if let Some((tx, cad)) = &ckpt {
+                        let step_due = cad.every_steps > 0
+                            && applied % cad.every_steps == 0;
+                        let time_due = cad.every_secs > 0.0
+                            && ckpt_last.elapsed().as_secs_f64()
+                                >= cad.every_secs;
+                        if step_due || time_due {
+                            // best-effort like the probe: a lagging
+                            // writer delays a checkpoint, never a fold
+                            let _ = tx.try_send(CkptMsg::Snapshot(
+                                ShardSnapshot {
+                                    shard,
+                                    applied,
+                                    counts: counts.clone(),
+                                    finished: finished.clone(),
+                                    broadcasts,
+                                    grad_bytes,
+                                    last_loss,
+                                    saw_loss,
+                                    data: slice.clone(),
+                                },
+                            ));
+                            ckpt_last = std::time::Instant::now();
+                        }
                     }
                 }
                 ToServer::Done { worker } => {
@@ -615,6 +728,22 @@ fn run_shard(
         data: slice.clone(),
     });
     let _ = probe_tx.send(ProbeMsg::ShardDone { shard });
+    // final checkpoint snapshot is blocking (like the probe's): the
+    // run-end generation must not be lost to a busy writer
+    if let Some((tx, _)) = &ckpt {
+        let _ = tx.send(CkptMsg::Snapshot(ShardSnapshot {
+            shard,
+            applied,
+            counts: counts.clone(),
+            finished: finished.clone(),
+            broadcasts,
+            grad_bytes,
+            last_loss,
+            saw_loss,
+            data: slice.clone(),
+        }));
+        let _ = tx.send(CkptMsg::ShardDone { shard });
+    }
     ShardOutcome {
         slice,
         applied,

@@ -53,6 +53,11 @@ pub struct WorkerConfig {
     /// Optional run-event sink: the computing thread reports its
     /// completion through it (`None` = no reporting).
     pub events: Option<Arc<dyn crate::session::EventSink>>,
+    /// Resume after a restart: skip to `start_step` (replaying the pair
+    /// stream, which is pure in `(seed, w, t)`) and seed the shard
+    /// clocks/versions from the checkpoint so the SSP gate starts from
+    /// the server's recorded progress instead of zero.
+    pub resume: Option<super::checkpoint::WorkerResume>,
 }
 
 /// Per-worker telemetry returned on join.
@@ -84,6 +89,12 @@ pub struct WorkerStats {
     pub grad_bytes_sent: u64,
     /// Encoded payload bytes of parameter slices received.
     pub param_bytes_received: u64,
+    /// First step this worker actually executed (non-zero only when
+    /// resumed from a checkpoint). The per-worker accounting identity
+    /// across a restart is `start_step + grads_sent + grads_dropped ==
+    /// steps`: the steps before `start_step` were accounted by the
+    /// incarnation the checkpoint captured.
+    pub start_step: u64,
 }
 
 /// Worker-internal outbound queue entries (computing → comm thread).
@@ -149,10 +160,31 @@ impl Worker {
         engines: EngineFactory,
     ) -> Worker {
         let shard_count = plan.shards();
+        let resume = cfg.resume.clone();
         let shared = Arc::new(Shared {
             l: Mutex::new(l0),
-            clocks: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
-            versions: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
+            clocks: (0..shard_count)
+                .map(|s| {
+                    AtomicU64::new(
+                        resume
+                            .as_ref()
+                            .and_then(|r| r.clocks.get(s))
+                            .copied()
+                            .unwrap_or(0),
+                    )
+                })
+                .collect(),
+            versions: (0..shard_count)
+                .map(|s| {
+                    AtomicU64::new(
+                        resume
+                            .as_ref()
+                            .and_then(|r| r.versions.get(s))
+                            .copied()
+                            .unwrap_or(0),
+                    )
+                })
+                .collect(),
             cv: Condvar::new(),
             cv_m: Mutex::new(()),
             stop: AtomicBool::new(false),
@@ -198,12 +230,28 @@ impl Worker {
                 };
                 let mut l_snap = Mat::zeros(k, d);
                 let mut g = Mat::zeros(k, d);
+                // Resume: re-derive the pair stream position by drawing
+                // (and discarding) the minibatches the previous
+                // incarnation consumed — pair t of worker w is pure in
+                // (seed, w, t), so this replay is exact in both the
+                // materialized and streaming modes. Replayed pairs do
+                // count in `pairs_drawn` (it meters stream positions,
+                // not fresh work).
+                let start = cfg
+                    .resume
+                    .as_ref()
+                    .map_or(0, |r| r.start_step)
+                    .min(cfg.steps as u64);
+                for _ in 0..start {
+                    iter.next_batch();
+                }
                 let mut stats = WorkerStats {
                     id,
                     pair_bytes: iter.pair_bytes(),
+                    start_step: start,
                     ..Default::default()
                 };
-                for step in 0..cfg.steps as u64 {
+                for step in start..cfg.steps as u64 {
                     // ---- consistency gate (SSP inequality over the
                     //      min-over-shards clock) ----
                     if staleness != u64::MAX && step > staleness {

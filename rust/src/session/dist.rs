@@ -37,8 +37,9 @@ use crate::dml::{DmlProblem, EngineFactory, LrSchedule};
 use crate::linalg::Mat;
 use crate::metrics::Curve;
 use crate::ps::{
-    MemoryTransport, ProbeFn, RunOptions, Server, ServerConfig, ShardPlan,
-    TrainResult, Transport, Worker, WorkerConfig, WorkerStats,
+    Checkpoint, MemoryTransport, ProbeFn, RunOptions, Server,
+    ServerConfig, ShardPlan, TrainResult, Transport, Worker,
+    WorkerConfig, WorkerResume, WorkerStats,
 };
 
 use super::events::{EventSink, ProbeEvent};
@@ -73,6 +74,41 @@ pub fn plan_for(cfg: &ExperimentConfig) -> ShardPlan {
 fn init_l(cfg: &ExperimentConfig) -> Mat {
     DmlProblem::new(cfg.dataset.dim, cfg.model.k, cfg.optim.lambda)
         .init_l(cfg.model.init_scale, cfg.seed)
+}
+
+/// Load the newest consistent checkpoint when `opts.resume_from` names
+/// a run directory. `Ok(None)` covers both "no resume requested" and
+/// "nothing checkpointed yet" — the latter lets restart supervisors
+/// pass `--resume` unconditionally and still get a correct fresh start
+/// when a process died before the first generation landed.
+fn load_resume(
+    cfg: &ExperimentConfig,
+    plan: &ShardPlan,
+    opts: &RunOptions,
+) -> anyhow::Result<Option<Arc<Checkpoint>>> {
+    let Some(dir) = &opts.resume_from else {
+        return Ok(None);
+    };
+    match crate::ps::checkpoint::load_latest(dir)? {
+        None => Ok(None),
+        Some(c) => {
+            c.validate_for(plan, cfg.cluster.workers)?;
+            Ok(Some(Arc::new(c)))
+        }
+    }
+}
+
+/// The L a (possibly resumed) run starts from: the checkpointed
+/// parameters when resuming, the deterministic init otherwise.
+fn start_l(
+    cfg: &ExperimentConfig,
+    plan: &ShardPlan,
+    resume: &Option<Arc<Checkpoint>>,
+) -> Mat {
+    match resume {
+        Some(c) => c.l(plan),
+        None => init_l(cfg),
+    }
 }
 
 /// Pair sources for all P workers (and the shared class index in
@@ -116,6 +152,7 @@ fn server_cfg(
     cfg: &ExperimentConfig,
     opts: &RunOptions,
     events: Option<Arc<dyn EventSink>>,
+    resume: Option<Arc<Checkpoint>>,
 ) -> ServerConfig {
     let p = cfg.cluster.workers;
     ServerConfig {
@@ -128,6 +165,8 @@ fn server_cfg(
         seed: cfg.seed ^ 0x5E2,
         compression: cfg.cluster.compression,
         events,
+        checkpoint: opts.checkpoint.clone(),
+        resume,
     }
 }
 
@@ -136,6 +175,7 @@ fn worker_cfg(
     w: usize,
     opts: &RunOptions,
     events: Option<Arc<dyn EventSink>>,
+    resume: Option<WorkerResume>,
 ) -> WorkerConfig {
     WorkerConfig {
         id: w,
@@ -150,6 +190,7 @@ fn worker_cfg(
         threads: cfg.cluster.threads_per_worker,
         compression: cfg.cluster.compression,
         events,
+        resume,
     }
 }
 
@@ -195,10 +236,13 @@ pub(crate) fn run_distributed(
     events: Option<Arc<dyn EventSink>>,
 ) -> anyhow::Result<TrainResult> {
     validate(cfg, opts)?;
-    let l0 = init_l(cfg);
     let p = cfg.cluster.workers;
     let plan = plan_for(cfg);
     let server_shards = plan.shards();
+    // whole-cluster resume: every role re-enters from the same
+    // generation (in-process, "cluster" is these threads)
+    let resume = load_resume(cfg, &plan, opts)?;
+    let l0 = start_l(cfg, &plan, &resume);
 
     let (sources, stream_index) = build_sources(cfg, &dataset, pairs)?;
 
@@ -219,7 +263,7 @@ pub(crate) fn run_distributed(
     // ---- spawn server ----
     let watch = crate::metrics::Stopwatch::start();
     let server = Server::spawn(
-        server_cfg(cfg, opts, events.clone()),
+        server_cfg(cfg, opts, events.clone(), resume.clone()),
         plan.clone(),
         l0.clone(),
         to_server_rx,
@@ -232,7 +276,13 @@ pub(crate) fn run_distributed(
     for (w, source) in sources.into_iter().enumerate() {
         let (to_server_tx, from_server_rx) = transport.worker_endpoints(w)?;
         workers.push(Worker::spawn(
-            worker_cfg(cfg, w, opts, events.clone()),
+            worker_cfg(
+                cfg,
+                w,
+                opts,
+                events.clone(),
+                resume.as_ref().map(|c| c.worker_resume(w)),
+            ),
             plan.clone(),
             l0.clone(),
             dataset.clone(),
@@ -276,9 +326,10 @@ pub fn run_server_node(
     transport: &mut dyn Transport,
 ) -> anyhow::Result<TrainResult> {
     validate(cfg, opts)?;
-    let l0 = init_l(cfg);
     let plan = plan_for(cfg);
     let server_shards = plan.shards();
+    let resume = load_resume(cfg, &plan, opts)?;
+    let l0 = start_l(cfg, &plan, &resume);
     // only the probe's pair subsample is needed server-side
     let stream_index = match cfg.cluster.pairs.mode {
         PairMode::Materialized => None,
@@ -298,7 +349,7 @@ pub fn run_server_node(
     let (from_workers, to_workers) = transport.server_endpoints()?;
     let watch = crate::metrics::Stopwatch::start();
     let server = Server::spawn(
-        server_cfg(cfg, opts, events),
+        server_cfg(cfg, opts, events, resume),
         plan,
         l0,
         from_workers,
@@ -334,13 +385,20 @@ pub fn run_worker_node(
         "worker id {w} out of range ({} workers)",
         cfg.cluster.workers
     );
-    let l0 = init_l(cfg);
     let plan = plan_for(cfg);
+    let resume = load_resume(cfg, &plan, opts)?;
+    let l0 = start_l(cfg, &plan, &resume);
     let (mut sources, _) = build_sources(cfg, &dataset, pairs)?;
     let source = sources.swap_remove(w);
     let (to_server_tx, from_server_rx) = transport.worker_endpoints(w)?;
     let worker = Worker::spawn(
-        worker_cfg(cfg, w, opts, events),
+        worker_cfg(
+            cfg,
+            w,
+            opts,
+            events,
+            resume.as_ref().map(|c| c.worker_resume(w)),
+        ),
         plan,
         l0,
         dataset,

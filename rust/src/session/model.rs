@@ -179,17 +179,22 @@ impl MetricModel {
     }
 
     /// Write the versioned binary artifact (see module docs).
+    ///
+    /// Crash-atomic via [`crate::linalg::io::atomic_write`]: a process
+    /// killed mid-save leaves either the previous complete artifact or
+    /// the new one, never a torn file that [`MetricModel::load`] would
+    /// half-parse.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        let mut f =
-            std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&self.meta.version.to_le_bytes())?;
-        f.write_all(&self.meta.k.to_le_bytes())?;
-        f.write_all(&self.meta.d.to_le_bytes())?;
-        f.write_all(&self.meta.seed.to_le_bytes())?;
-        f.write_all(&self.meta.config_digest.to_le_bytes())?;
-        write_mat(&mut f, &self.l)?;
-        Ok(())
+        crate::linalg::io::atomic_write(path, |f| {
+            f.write_all(MAGIC)?;
+            f.write_all(&self.meta.version.to_le_bytes())?;
+            f.write_all(&self.meta.k.to_le_bytes())?;
+            f.write_all(&self.meta.d.to_le_bytes())?;
+            f.write_all(&self.meta.seed.to_le_bytes())?;
+            f.write_all(&self.meta.config_digest.to_le_bytes())?;
+            write_mat(f, &self.l)?;
+            Ok(())
+        })
     }
 
     /// Load a model artifact written by [`MetricModel::save`].

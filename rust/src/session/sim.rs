@@ -10,8 +10,8 @@ use crate::config::ExperimentConfig;
 use crate::data::{partition_pairs, ExperimentData};
 use crate::dml::{DmlProblem, LrSchedule};
 use crate::simcluster::{
-    calibrate_grad_seconds, DmlWorkload, NetworkModel, SimConfig,
-    SimResult, Simulator,
+    calibrate_grad_seconds, Disruption, DmlWorkload, NetworkModel,
+    SimConfig, SimResult, Simulator,
 };
 
 /// Cost knobs for a simulated run. [`Default`] derives everything from
@@ -27,6 +27,8 @@ pub struct SimKnobs {
     pub bytes_per_msg: Option<f64>,
     /// Applied updates to simulate.
     pub total_updates: u64,
+    /// Optional kill/restart scenario (see [`Disruption`]).
+    pub disruption: Option<Disruption>,
 }
 
 impl Default for SimKnobs {
@@ -35,6 +37,7 @@ impl Default for SimKnobs {
             grad_seconds: 0.0,
             bytes_per_msg: None,
             total_updates: 2_000,
+            disruption: None,
         }
     }
 }
@@ -89,6 +92,7 @@ pub(crate) fn run_simulated(
         broadcast_every: 1,
         lr: LrSchedule::new(cfg.optim.lr, cfg.optim.lr_decay),
         seed: cfg.seed,
+        disruption: knobs.disruption,
     };
     Ok(Simulator::new(sim_cfg, &mut workload).run())
 }

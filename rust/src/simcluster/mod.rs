@@ -19,7 +19,7 @@ mod sim;
 mod workload;
 
 pub use network::NetworkModel;
-pub use sim::{SimConfig, SimResult, Simulator};
+pub use sim::{Disruption, SimConfig, SimResult, Simulator};
 pub use workload::{DmlWorkload, NullWorkload, Workload};
 
 use crate::dml::DmlProblem;

@@ -45,6 +45,23 @@ pub struct SimConfig {
     pub broadcast_every: u64,
     pub lr: LrSchedule,
     pub seed: u64,
+    /// Optional kill/restart scenario (elasticity modeling).
+    pub disruption: Option<Disruption>,
+}
+
+/// A simulated process-death scenario: the whole cluster dies once at
+/// `kill_at_update` applied updates, every in-flight gradient and
+/// broadcast dies with it, and after `restart_delay_s` simulated seconds
+/// the cluster re-enters from the newest checkpoint — the server state
+/// taken every `ckpt_every_updates` applies. `ckpt_every_updates = 0`
+/// models running *without* checkpoints: the restart falls all the way
+/// back to the initial parameters, which is exactly the baseline the
+/// convergence-vs-disruption curves compare against.
+#[derive(Clone, Copy, Debug)]
+pub struct Disruption {
+    pub kill_at_update: u64,
+    pub restart_delay_s: f64,
+    pub ckpt_every_updates: u64,
 }
 
 impl SimConfig {
@@ -66,6 +83,10 @@ pub struct SimResult {
     /// Mean staleness (server version − version the gradient was computed
     /// at), over all applied updates — the async-SGD health metric.
     pub mean_staleness: f64,
+    /// Cluster deaths survived (0 or 1 — one [`Disruption`] per run).
+    pub restarts: u64,
+    /// Applied updates lost to the rollback and re-done after restart.
+    pub redone_updates: u64,
 }
 
 #[derive(Debug)]
@@ -153,6 +174,16 @@ impl<'w> Simulator<'w> {
         let mut applied = 0u64;
         let mut broadcasts = 0u64;
         let mut staleness_sum = 0.0f64;
+
+        // disruption state: the newest checkpoint of the server params,
+        // and the one pending kill (consumed when it fires)
+        let mut ckpt_applied = 0u64;
+        let mut ckpt_version = 0u64;
+        let mut ckpt_l =
+            self.cfg.disruption.as_ref().map(|_| l_global.clone());
+        let mut pending_kill = self.cfg.disruption;
+        let mut restarts = 0u64;
+        let mut redone_updates = 0u64;
         let mut curve = Curve::new(format!(
             "{} cores ({}x{})",
             self.cfg.total_cores(),
@@ -225,6 +256,52 @@ impl<'w> Simulator<'w> {
                         applied += 1;
                         staleness_sum += (version - g.at_version) as f64;
                         version += 1;
+                        // the checkpoint lands before the kill check: a
+                        // snapshot taken on the very apply the cluster
+                        // dies at was already durable
+                        if let Some(d) = &self.cfg.disruption {
+                            if d.ckpt_every_updates > 0
+                                && applied % d.ckpt_every_updates == 0
+                            {
+                                ckpt_applied = applied;
+                                ckpt_version = version;
+                                if let Some(cl) = &mut ckpt_l {
+                                    cl.data
+                                        .copy_from_slice(&l_global.data);
+                                }
+                            }
+                        }
+                        if pending_kill
+                            .is_some_and(|d| applied >= d.kill_at_update)
+                        {
+                            let d = pending_kill.take().expect("checked");
+                            restarts += 1;
+                            redone_updates += applied - ckpt_applied;
+                            // roll the server back to the newest
+                            // checkpoint; everything in flight dies with
+                            // the processes
+                            applied = ckpt_applied;
+                            version = ckpt_version;
+                            if let Some(cl) = &ckpt_l {
+                                l_global.data.copy_from_slice(&cl.data);
+                            }
+                            heap.clear();
+                            server_queue.clear();
+                            let restart = now + d.restart_delay_s.max(0.0);
+                            server_busy_until = restart;
+                            // curve shows the setback at re-entry
+                            let obj = self.workload.objective(&l_global);
+                            curve.push(restart, applied as usize, obj);
+                            for (m, local) in locals.iter_mut().enumerate()
+                            {
+                                local.data.copy_from_slice(&l_global.data);
+                                local_version[m] = version;
+                                let t = restart + self.interval(&mut rng);
+                                push(&mut heap, &mut events, t,
+                                     Event::GradReady { machine: m });
+                            }
+                            continue;
+                        }
                         if applied % self.cfg.probe_every.max(1) == 0 {
                             let obj = self.workload.objective(&l_global);
                             curve.push(now, applied as usize, obj);
@@ -305,6 +382,8 @@ impl<'w> Simulator<'w> {
             } else {
                 0.0
             },
+            restarts,
+            redone_updates,
         }
     }
 
@@ -336,6 +415,7 @@ mod tests {
             broadcast_every: 1,
             lr: LrSchedule::new(0.005, 0.001),
             seed: 7,
+            disruption: None,
         }
     }
 
@@ -412,6 +492,54 @@ mod tests {
         let r = Simulator::new(cfg, &mut w).run();
         assert_eq!(r.applied_updates, 100);
         assert!(r.sim_seconds > 0.0);
+    }
+
+    /// A mid-run cluster death rolls back to the newest checkpoint,
+    /// costs wall-clock (the restart delay plus the re-done updates),
+    /// and still converges to the same update count.
+    #[test]
+    fn disruption_rolls_back_and_still_converges() {
+        let mut w0 = dml_workload(2);
+        let undisturbed = Simulator::new(base_cfg(2, 2), &mut w0).run();
+        assert_eq!(undisturbed.restarts, 0);
+
+        let mut cfg = base_cfg(2, 2);
+        cfg.disruption = Some(Disruption {
+            kill_at_update: 100,
+            restart_delay_s: 1.0,
+            ckpt_every_updates: 40,
+        });
+        let mut w = dml_workload(2);
+        let r = Simulator::new(cfg, &mut w).run();
+        assert_eq!(r.restarts, 1);
+        // killed at 100 with checkpoints at 40/80 → 20 updates re-done
+        assert_eq!(r.redone_updates, 20);
+        assert_eq!(r.applied_updates, 200);
+        assert!(
+            r.sim_seconds > undisturbed.sim_seconds,
+            "disruption must cost simulated time: {} vs {}",
+            r.sim_seconds, undisturbed.sim_seconds
+        );
+        let first = r.curve.points.first().unwrap().objective;
+        let last = r.curve.points.last().unwrap().objective;
+        assert!(last < first * 0.9, "{first} -> {last}");
+    }
+
+    /// `ckpt_every_updates = 0` models a checkpoint-free cluster: the
+    /// kill throws away every applied update.
+    #[test]
+    fn disruption_without_checkpoints_redoes_everything() {
+        let mut cfg = base_cfg(2, 1);
+        cfg.disruption = Some(Disruption {
+            kill_at_update: 150,
+            restart_delay_s: 0.5,
+            ckpt_every_updates: 0,
+        });
+        let mut w = dml_workload(2);
+        let r = Simulator::new(cfg, &mut w).run();
+        assert_eq!(r.restarts, 1);
+        assert_eq!(r.redone_updates, 150);
+        assert_eq!(r.applied_updates, 200);
     }
 
     #[test]

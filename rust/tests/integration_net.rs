@@ -328,6 +328,8 @@ fn server_counts_and_skips_misrouted_gradients() {
         seed: 1,
         compression: CompressionConfig::default(),
         events: None,
+        checkpoint: None,
+        resume: None,
     };
     let server = Server::spawn(
         cfg,
@@ -430,4 +432,111 @@ fn manager_cluster_run_matches_memory() {
         "healthy run must not misroute"
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// elasticity: SIGKILL a role mid-run, restart from checkpoint
+// ---------------------------------------------------------------------
+
+/// Drive one `dmlps cluster` run (2 workers, 2 shards, BSP, 400 steps)
+/// in `dir` with extra manager flags, assert it succeeds, and return the
+/// combined report. The manager itself enforces the per-worker
+/// `start_step + grads_sent + grads_dropped == steps` identity, so a
+/// successful exit already proves the accounting survived any restarts.
+fn run_manager(dir: &std::path::Path, extra: &[&str]) -> Json {
+    std::fs::create_dir_all(dir).unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_dmlps"))
+        .args([
+            "cluster",
+            "--preset", "tiny",
+            "--workers", "2",
+            "--server-shards", "2",
+            "--steps", "400",
+            "--consistency", "bsp",
+            "--engine", "native",
+            "--timeout-s", "240",
+        ])
+        .arg("--run-dir")
+        .arg(dir)
+        .args(extra)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "cluster run failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    Json::parse_file(&dir.join("cluster.json")).unwrap()
+}
+
+/// SIGKILL a role once the first checkpoint generation is durable, let
+/// `--restart-policy cluster` respawn everything with `--resume`, and
+/// require (a) a restart actually happened, (b) every respawned worker
+/// re-entered past step 0, and (c) the final objective lands within a
+/// loose tolerance of an undisturbed run — re-folded replayed gradients
+/// perturb the trajectory but must not derail convergence.
+fn assert_survives_sigkill(tag: &str, chaos: &str) {
+    let base = std::env::temp_dir()
+        .join(format!("dmlps-elastic-{tag}-{}", std::process::id()));
+    let undisturbed = run_manager(&base.join("baseline"), &[]);
+    let disturbed = run_manager(&base.join("chaos"), &[
+        "--ckpt-every-steps", "5",
+        "--restart-policy", "cluster",
+        "--chaos-kill", chaos,
+    ]);
+
+    assert_eq!(
+        undisturbed.get("attempts").as_f64(),
+        Some(1.0),
+        "baseline must not restart"
+    );
+    let attempts = disturbed.get("attempts").as_f64().unwrap();
+    assert!(
+        attempts >= 2.0,
+        "chaos kill '{chaos}' never triggered a restart \
+         (attempts = {attempts}) — the run finished before the first \
+         checkpoint generation landed"
+    );
+    if let Json::Arr(workers) = disturbed.get("workers") {
+        assert_eq!(workers.len(), 2);
+        for w in workers {
+            let start = w.get("start_step").as_f64().unwrap();
+            assert!(
+                start > 0.0,
+                "worker {:?} restarted from step 0 — checkpoint state \
+                 was not restored",
+                w.get("worker"),
+            );
+        }
+    } else {
+        panic!("combined report has no workers array");
+    }
+
+    let base_obj =
+        undisturbed.get("server").get("final_objective").as_f64().unwrap();
+    let dist_obj =
+        disturbed.get("server").get("final_objective").as_f64().unwrap();
+    let rel = (dist_obj - base_obj).abs() / base_obj.abs().max(1e-6);
+    assert!(
+        rel < 0.25,
+        "disturbed objective {dist_obj} vs undisturbed {base_obj}: \
+         relative gap {rel:.3} exceeds the recovery tolerance"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Kill one worker process mid-run. The whole cluster respawns and
+/// resumes from the newest consistent generation.
+#[test]
+fn cluster_recovers_from_worker_sigkill() {
+    assert_survives_sigkill("worker", "worker1@ckpt");
+}
+
+/// Kill the server process (all shards) mid-run. Its state survives
+/// only through the checkpoint directory.
+#[test]
+fn cluster_recovers_from_server_sigkill() {
+    assert_survives_sigkill("server", "server@ckpt");
 }

@@ -22,6 +22,7 @@ fn more_cores_converge_faster_in_sim_time() {
         grad_seconds: 0.5, // compute-dominated regime (paper's)
         bytes_per_msg: None,
         total_updates: u,
+        ..SimKnobs::default()
     };
     let t1 = simulate_convergence(&cfg, &data, 1, 16, knobs(300)).unwrap();
     let t4 = simulate_convergence(&cfg, &data, 4, 16, knobs(300)).unwrap();
@@ -46,6 +47,7 @@ fn simulated_objective_tracks_serial_quality() {
         grad_seconds: 0.1,
         bytes_per_msg: None,
         total_updates: 400,
+        ..SimKnobs::default()
     }).unwrap();
     let first = r.curve.points.first().unwrap().objective;
     let last = r.curve.points.last().unwrap().objective;
