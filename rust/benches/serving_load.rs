@@ -1,0 +1,242 @@
+//! Serving load generator: drives the retrieval server over real TCP
+//! and reports QPS / p50 / p99 / recall@k into **`BENCH_serving.json`**
+//! (override the path with `DMLPS_BENCH_OUT`; `DMLPS_BENCH_QUICK`
+//! shrinks everything to a CI smoke run).
+//!
+//! Two load shapes, because they answer different questions:
+//!
+//! * **closed loop** — `threads × batch × exact/approx` sweep where
+//!   each client thread sends its next batch the moment the previous
+//!   answer lands. Measures capacity: QPS at saturation and the
+//!   in-service latency distribution.
+//! * **open loop** — queries arrive on a fixed schedule regardless of
+//!   completions, and latency is measured from the *scheduled* arrival,
+//!   so queueing delay is visible (the closed-loop blind spot).
+//!
+//! recall@k compares the approximate path at the benched
+//! [`default_nprobe`] against the exact scan on the same queries — the
+//! figure `prop_serve` holds to the ≥ 0.9 floor.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dmlps::config::Preset;
+use dmlps::data::SyntheticSpec;
+use dmlps::linalg::Mat;
+use dmlps::ps::net::{NetAddr, RetryPolicy};
+use dmlps::serve::{
+    default_nprobe, ScanMode, ServeClient, ServeConfig, ServeEngine,
+    ServeLimits, ServeServer,
+};
+use dmlps::session::MetricModel;
+use dmlps::util::json::Json;
+use dmlps::util::rng::Pcg32;
+use dmlps::util::stats::percentile;
+
+const K: usize = 10;
+const NCLUSTERS: usize = 32;
+
+fn main() {
+    let quick = std::env::var("DMLPS_BENCH_QUICK").is_ok();
+    let n_gallery = if quick { 2_000 } else { 20_000 };
+    let kproj = 16usize;
+
+    // gallery + queries from the same synthetic family, so the coarse
+    // clusters the quantizer finds are real structure, not noise
+    let mut spec = SyntheticSpec::tiny();
+    spec.dim = 32;
+    spec.n_classes = 16;
+    spec.separation = 4.0;
+    let mut rng = Pcg32::with_stream(7, 0x5EED);
+    let gallery = spec.generate_with(&mut rng, n_gallery);
+    let queries = spec.generate_with(&mut rng, 4096).x;
+
+    let mut l = Mat::zeros(kproj, spec.dim);
+    Pcg32::new(21).fill_gaussian(&mut l.data, 0.0, 0.3);
+    let model = MetricModel::new(l, &Preset::Tiny.config());
+
+    println!(
+        "serving_load: gallery {n_gallery}×{}, projection {kproj}, \
+         {NCLUSTERS} clusters, k={K}{}",
+        spec.dim,
+        if quick { " (quick)" } else { "" }
+    );
+    let t0 = Instant::now();
+    let engine = Arc::new(ServeEngine::new(
+        model,
+        &gallery,
+        ServeConfig { nclusters: NCLUSTERS, ..ServeConfig::default() },
+    ));
+    println!("  epoch built in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let nprobe = default_nprobe(NCLUSTERS);
+
+    // ---- recall@k: approximate path vs exact reference, in-process ----
+    let n_recall = if quick { 50 } else { 500 };
+    let mut hit = 0usize;
+    let mut denom = 0usize;
+    for r in 0..n_recall {
+        let q = queries.row(r % queries.rows);
+        let (_, exact) = engine.query_one(q, K, ScanMode::Exact);
+        let (_, approx) = engine.query_one(q, K, ScanMode::Probe(nprobe));
+        denom += exact.len();
+        for (i, _) in &approx {
+            if exact.iter().any(|(j, _)| j == i) {
+                hit += 1;
+            }
+        }
+    }
+    let recall = hit as f64 / denom.max(1) as f64;
+    println!("  recall@{K} at nprobe={nprobe}: {recall:.4}");
+
+    // ---- socket front end ----
+    let server = ServeServer::bind(
+        &NetAddr::parse("127.0.0.1:0").expect("parse addr"),
+        Arc::clone(&engine),
+        ServeLimits::default(),
+    )
+    .expect("bind serve socket");
+    let mut handle = server.spawn().expect("spawn server");
+    let addr = handle.addr().clone();
+
+    // ---- closed loop: threads × batch × mode ----
+    let thread_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let batch_sweep: &[usize] = &[1, 16];
+    let batches_total = if quick { 40 } else { 600 };
+    let mut closed = Vec::new();
+    println!("  closed loop ({batches_total} batches/config):");
+    for &threads in thread_sweep {
+        for &batch in batch_sweep {
+            for (mode_name, wire_nprobe) in
+                [("exact", 0usize), ("approx", nprobe)]
+            {
+                let per_thread = (batches_total / threads).max(1);
+                let started = Instant::now();
+                let mut lat_ms: Vec<f64> = Vec::new();
+                std::thread::scope(|s| {
+                    let mut joins = Vec::new();
+                    for t in 0..threads {
+                        let addr = &addr;
+                        let queries = &queries;
+                        joins.push(s.spawn(move || {
+                            let (mut client, _) = ServeClient::connect(
+                                addr,
+                                RetryPolicy::default(),
+                            )
+                            .expect("connect");
+                            let mut lats = Vec::with_capacity(per_thread);
+                            let mut x = Mat::zeros(batch, queries.cols);
+                            for b in 0..per_thread {
+                                for r in 0..batch {
+                                    let src = (t * per_thread * batch
+                                        + b * batch
+                                        + r)
+                                        % queries.rows;
+                                    x.row_mut(r)
+                                        .copy_from_slice(queries.row(src));
+                                }
+                                let sent = Instant::now();
+                                client
+                                    .query(&x, K, wire_nprobe, b as u64)
+                                    .expect("query");
+                                lats.push(
+                                    sent.elapsed().as_secs_f64() * 1e3,
+                                );
+                            }
+                            lats
+                        }));
+                    }
+                    for j in joins {
+                        lat_ms.extend(j.join().expect("client thread"));
+                    }
+                });
+                let wall = started.elapsed().as_secs_f64();
+                let rows = (per_thread * threads * batch) as f64;
+                let qps = rows / wall;
+                let (p50, p99) =
+                    (percentile(&lat_ms, 50.0), percentile(&lat_ms, 99.0));
+                println!(
+                    "    {threads}t × batch {batch:>2} {mode_name:>6}: \
+                     {qps:>9.0} rows/s  p50 {p50:.3} ms  p99 {p99:.3} ms"
+                );
+                closed.push(Json::obj(vec![
+                    ("threads", Json::Num(threads as f64)),
+                    ("batch", Json::Num(batch as f64)),
+                    ("mode", Json::Str(mode_name.into())),
+                    ("qps", Json::Num(qps)),
+                    ("p50_ms", Json::Num(p50)),
+                    ("p99_ms", Json::Num(p99)),
+                ]));
+            }
+        }
+    }
+
+    // ---- open loop: fixed arrival schedule, latency from scheduled
+    // arrival (queueing delay included) ----
+    let rate = if quick { 200.0 } else { 2000.0 };
+    let n_open = if quick { 100 } else { 4000 };
+    let (mut client, _) =
+        ServeClient::connect(&addr, RetryPolicy::default())
+            .expect("connect open-loop client");
+    let mut x = Mat::zeros(1, queries.cols);
+    let mut lat_ms = Vec::with_capacity(n_open);
+    let start = Instant::now();
+    for i in 0..n_open {
+        let offset = i as f64 / rate;
+        let target = Duration::from_secs_f64(offset);
+        let now = start.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        x.row_mut(0).copy_from_slice(queries.row(i % queries.rows));
+        client.query(&x, K, nprobe, i as u64).expect("open-loop query");
+        lat_ms.push((start.elapsed().as_secs_f64() - offset) * 1e3);
+    }
+    let achieved = n_open as f64 / start.elapsed().as_secs_f64();
+    let (op50, op99) =
+        (percentile(&lat_ms, 50.0), percentile(&lat_ms, 99.0));
+    println!(
+        "  open loop @ {rate:.0} qps: achieved {achieved:.0} qps  \
+         p50 {op50:.3} ms  p99 {op99:.3} ms"
+    );
+    handle.shutdown();
+
+    // ---- refuse to write garbage ----
+    let mut all = vec![recall, achieved, op50, op99];
+    for row in &closed {
+        for key in ["qps", "p50_ms", "p99_ms"] {
+            all.push(row.get(key).as_f64().unwrap_or(f64::NAN));
+        }
+    }
+    if all.iter().any(|v| !v.is_finite()) {
+        eprintln!(
+            "ERROR: non-finite serving metric — refusing to write \
+             BENCH_serving.json"
+        );
+        std::process::exit(1);
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("serving".into())),
+        ("quick", Json::Bool(quick)),
+        ("gallery", Json::Num(n_gallery as f64)),
+        ("dim", Json::Num(spec.dim as f64)),
+        ("kproj", Json::Num(kproj as f64)),
+        ("k", Json::Num(K as f64)),
+        ("nclusters", Json::Num(NCLUSTERS as f64)),
+        ("nprobe_default", Json::Num(nprobe as f64)),
+        ("recall_at_k", Json::Num(recall)),
+        ("closed_loop", Json::Arr(closed)),
+        ("open_loop", Json::obj(vec![
+            ("rate_qps", Json::Num(rate)),
+            ("achieved_qps", Json::Num(achieved)),
+            ("p50_ms", Json::Num(op50)),
+            ("p99_ms", Json::Num(op99)),
+        ])),
+    ]);
+    let path = std::env::var("DMLPS_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_serving.json".into());
+    std::fs::write(&path, out.to_string_pretty())
+        .expect("write bench json");
+    println!("\nwrote machine-readable baseline to {path}");
+}

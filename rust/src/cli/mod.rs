@@ -5,6 +5,7 @@
 //! dmlps cluster  --preset tiny --workers 2 [--addr 127.0.0.1:0]
 //! dmlps node     --role server|worker --config f.json --addr host:port
 //! dmlps simulate --preset mnist --cores 16,32,64,128,256
+//! dmlps serve    --preset tiny --model f.bin [--addr 127.0.0.1:0]
 //! dmlps eval     --preset mnist --model f.bin
 //! dmlps gen-data --preset mnist
 //! dmlps inspect-artifacts
@@ -17,6 +18,7 @@
 
 pub mod cluster;
 pub mod driver;
+pub mod serve;
 
 use std::sync::Arc;
 
@@ -42,6 +44,7 @@ pub fn main_entry() -> anyhow::Result<()> {
         "cluster" => cluster::cmd_cluster(&args),
         "node" => cluster::cmd_node(&args),
         "simulate" => cmd_simulate(&args),
+        "serve" => serve::cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "gen-data" => cmd_gen_data(&args),
         "inspect-artifacts" => cmd_inspect_artifacts(&args),
@@ -65,6 +68,7 @@ fn print_usage() {
          \x20 cluster            spawn a server + worker process cluster\n\
          \x20 node               run one server/worker role over sockets\n\
          \x20 simulate           discrete-event cluster scalability study\n\
+         \x20 serve              retrieval server over a saved metric\n\
          \x20 eval               evaluate a saved metric (PR curve, AP)\n\
          \x20 gen-data           print dataset statistics (Table 1)\n\
          \x20 inspect-artifacts  list AOT artifacts and shapes\n\n\
@@ -96,7 +100,9 @@ impl EventSink for ProgressSink {
 /// Build a config from --preset/--config plus common overrides. Enum
 /// knobs route through their `FromStr` impls (one parse path for the
 /// CLI, the JSON loader, and tests).
-fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
+pub(crate) fn load_config(
+    a: &crate::util::cli::Args,
+) -> anyhow::Result<ExperimentConfig> {
     let mut cfg = if a.get("config").is_empty() {
         Preset::parse(a.get("preset"))?.config()
     } else {
@@ -167,7 +173,7 @@ fn load_config(a: &crate::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn common_parser(cmd: &str, about: &str) -> ArgParser {
+pub(crate) fn common_parser(cmd: &str, about: &str) -> ArgParser {
     ArgParser::new(cmd, about)
         .opt("preset", "tiny", "tiny|mnist|imnet60k|imnet1m")
         .opt("config", "", "path to a JSON experiment config")
@@ -392,7 +398,7 @@ fn cmd_eval(args: &[String]) -> anyhow::Result<()> {
 /// wrapped with unknown provenance (returns `legacy = true`; version 0
 /// and zeroed seed/digest mean "no header", never a claim — real
 /// artifacts start at format version 1).
-fn load_model(
+pub(crate) fn load_model(
     path: &std::path::Path,
 ) -> anyhow::Result<(MetricModel, bool)> {
     match MetricModel::load(path) {

@@ -1,0 +1,139 @@
+//! `dmlps serve` — the retrieval server over a saved metric model.
+//!
+//! Loads a `DMLPSMM1` artifact, regenerates the preset's dataset
+//! deterministically (same `(config, seed)` → same gallery as any
+//! in-process test), projects the chosen split through the model, and
+//! answers top-k queries over the serving wire protocol
+//! ([`crate::serve`]). With `--reload-secs N` the model file is polled
+//! for a newer mtime and hot-swapped atomically mid-traffic.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, SystemTime};
+
+use crate::data::ExperimentData;
+use crate::linalg::io::atomic_write;
+use crate::ps::net::NetAddr;
+use crate::serve::{ServeConfig, ServeEngine, ServeLimits, ServeServer};
+
+use super::{common_parser, load_config, load_model};
+
+pub fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let p = common_parser(
+        "dmlps serve",
+        "serve batched top-k retrieval over a saved metric model",
+    )
+    .req("model",
+         "path to a saved metric model (DMLPSMM1, or legacy DMLPSMAT)")
+    .opt("addr", "127.0.0.1:0",
+         "listen address: host:port (0 = kernel-picked) or unix:/path")
+    .opt("addr-file", "",
+         "write the actually-bound address here once listening")
+    .opt("gallery", "train", "dataset split to serve: train|test")
+    .opt("nclusters", "0",
+         "coarse quantizer clusters (0 = auto, ~sqrt(gallery))")
+    .opt("kmeans-iters", "8", "quantizer Lloyd iterations")
+    .opt("max-batch", "4096", "largest query batch answered")
+    .opt("max-k", "1024", "largest per-row k answered")
+    .opt("reload-secs", "0",
+         "poll the model file every N seconds and hot-swap the engine \
+          when its mtime changes (0 = never reload)");
+    let a = p.parse(args)?;
+    let cfg = load_config(&a)?;
+
+    let model_path = a.get("model").to_string();
+    let (model, legacy) = load_model(Path::new(&model_path))?;
+    anyhow::ensure!(
+        model.dim() == cfg.dataset.dim,
+        "model dim {} != dataset dim {}", model.dim(), cfg.dataset.dim
+    );
+
+    // the gallery is regenerated, not shipped: `(dataset config, seed)`
+    // fully determines it, so server and clients agree on row indices
+    let data = Arc::new(ExperimentData::generate_for(
+        &cfg.dataset, cfg.cluster.pairs.mode, cfg.seed,
+    ));
+    let split = a.get("gallery").to_string();
+    anyhow::ensure!(
+        split == "train" || split == "test",
+        "--gallery must be train|test, got '{split}'"
+    );
+    fn pick<'a>(d: &'a ExperimentData, split: &str) -> &'a crate::data::Dataset {
+        if split == "test" { &d.test } else { &d.train }
+    }
+
+    let serve_cfg = ServeConfig {
+        nclusters: a.get_usize("nclusters")?,
+        kmeans_iters: a.get_usize("kmeans-iters")?,
+        ..ServeConfig::default()
+    };
+    let engine = Arc::new(ServeEngine::new(
+        model.clone(),
+        pick(&data, &split),
+        serve_cfg,
+    ));
+    let limits = ServeLimits {
+        max_rows: a.get_usize("max-batch")?,
+        max_k: a.get_usize("max-k")?,
+        ..ServeLimits::default()
+    };
+
+    let server = ServeServer::bind(
+        &NetAddr::parse(a.get("addr"))?,
+        Arc::clone(&engine),
+        limits,
+    )?;
+    let bound = server.local_addr()?;
+    {
+        let e = engine.snapshot();
+        println!(
+            "serve: listening on {bound} — gallery {} ({} rows, dim {}), \
+             model {}x{}{}, {} clusters, epoch v{}",
+            split, e.gallery_len(), model.dim(), model.k(), model.dim(),
+            if legacy { " (legacy matrix)" } else { "" },
+            e.quantizer().nclusters(), e.version(),
+        );
+    }
+    if !a.get("addr-file").is_empty() {
+        atomic_write(Path::new(a.get("addr-file")), |w| {
+            use std::io::Write;
+            w.write_all(bound.to_string().as_bytes())?;
+            Ok(())
+        })?;
+    }
+
+    let reload_secs = a.get_u64("reload-secs")?;
+    if reload_secs > 0 {
+        let engine = Arc::clone(&engine);
+        let data = Arc::clone(&data);
+        let split = split.clone();
+        let mut last = mtime_of(&model_path);
+        std::thread::Builder::new()
+            .name("serve-reload".into())
+            .spawn(move || loop {
+                std::thread::sleep(Duration::from_secs(reload_secs));
+                let now = mtime_of(&model_path);
+                if now == last {
+                    continue;
+                }
+                // a half-written file fails to load: keep the running
+                // epoch and retry on the next poll
+                match load_model(Path::new(&model_path)) {
+                    Ok((m, _)) => {
+                        let v = engine.swap(m, pick(&data, &split));
+                        println!("serve: hot-swapped model, epoch v{v}");
+                        last = now;
+                    }
+                    Err(e) => {
+                        eprintln!("serve: reload failed ({e}), will retry");
+                    }
+                }
+            })?;
+    }
+
+    server.run()
+}
+
+fn mtime_of(path: &str) -> Option<SystemTime> {
+    std::fs::metadata(path).and_then(|m| m.modified()).ok()
+}

@@ -185,9 +185,15 @@ impl TopK {
 /// The `k` rows of `gallery` nearest to `q` under squared Euclidean
 /// distance, as `(distance, row index)` ascending — ties broken toward
 /// the smaller index, so the result is fully deterministic. This is the
-/// one kNN scan kernel: [`knn_accuracy`] and
-/// [`MetricModel::knn`](crate::session::MetricModel::knn) both consume
-/// it, which is what makes the two provably equivalent.
+/// one kNN scan kernel: [`knn_accuracy`],
+/// [`MetricModel::knn`](crate::session::MetricModel::knn), and the
+/// serving layer ([`crate::serve`]) all consume it, which is what makes
+/// the three provably equivalent.
+///
+/// `k` is clamped to the gallery size here, in the kernel — callers
+/// must not pre-clamp (a `k > n` request simply returns all `n` rows
+/// sorted). Centralizing the clamp keeps every call site identical and
+/// stops a huge `k` from eagerly reserving a huge heap.
 ///
 /// The scan is cache-blocked: distances for `KNN_BLOCK` gallery rows
 /// are computed in one branch-free pass through the SIMD-dispatched
@@ -199,6 +205,7 @@ impl TopK {
 /// including tie order — by the `prop_simd` regression tests.
 pub fn nearest_k(gallery: &Mat, q: &[f32], k: usize) -> Vec<(f32, usize)> {
     assert_eq!(q.len(), gallery.cols, "query dim mismatch");
+    let k = k.min(gallery.rows);
     if k == 0 {
         return Vec::new();
     }
@@ -212,6 +219,48 @@ pub fn nearest_k(gallery: &Mat, q: &[f32], k: usize) -> Vec<(f32, usize)> {
         }
         for (t, &dv) in dists[..n].iter().enumerate() {
             top.offer(dv, j0 + t);
+        }
+        j0 += n;
+    }
+    top.into_sorted()
+}
+
+/// [`nearest_k`] restricted to a subset of gallery rows — the kernel
+/// behind the serving layer's cluster-pruned approximate scan. `rows`
+/// must be strictly increasing (the candidate set from a coarse
+/// quantizer, sorted); the returned indices are *global* gallery row
+/// indices.
+///
+/// Candidates are offered in increasing global index, through the same
+/// strict-`<` heap gate as [`nearest_k`], so when `rows` covers the
+/// whole gallery the output is bit-for-bit identical to [`nearest_k`] —
+/// the `nprobe = nclusters ≡ exact` contract `prop_serve` pins. `k` is
+/// clamped to `rows.len()` under the same centralized-clamp rule.
+pub fn nearest_k_among(
+    gallery: &Mat,
+    q: &[f32],
+    k: usize,
+    rows: &[usize],
+) -> Vec<(f32, usize)> {
+    assert_eq!(q.len(), gallery.cols, "query dim mismatch");
+    debug_assert!(
+        rows.windows(2).all(|w| w[0] < w[1]),
+        "candidate rows must be strictly increasing"
+    );
+    let k = k.min(rows.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut top = TopK::new(k);
+    let mut dists = [0.0f32; KNN_BLOCK];
+    let mut j0 = 0;
+    while j0 < rows.len() {
+        let n = (rows.len() - j0).min(KNN_BLOCK);
+        for (t, dv) in dists[..n].iter_mut().enumerate() {
+            *dv = crate::linalg::simd::sqdist(q, gallery.row(rows[j0 + t]));
+        }
+        for (t, &dv) in dists[..n].iter().enumerate() {
+            top.offer(dv, rows[j0 + t]);
         }
         j0 += n;
     }
@@ -345,5 +394,37 @@ mod tests {
         let acc = knn_accuracy(None, &ds, &ds, 1, 10);
         // 1-NN on itself = perfect
         assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn nearest_k_clamps_k_to_gallery() {
+        let mut g = Mat::zeros(5, 3);
+        Pcg32::new(7).fill_gaussian(&mut g.data, 0.0, 1.0);
+        let q = [0.1f32, -0.2, 0.3];
+        let all = nearest_k(&g, &q, 5);
+        // k far beyond n returns exactly the full sorted gallery
+        assert_eq!(nearest_k(&g, &q, usize::MAX), all);
+        assert_eq!(nearest_k(&g, &q, 0), Vec::new());
+        // empty gallery: any k yields an empty result, no panic
+        let empty = Mat::zeros(0, 3);
+        assert_eq!(nearest_k(&empty, &q, 10), Vec::new());
+    }
+
+    #[test]
+    fn nearest_k_among_full_range_matches_nearest_k_bitwise() {
+        let mut g = Mat::zeros(97, 6);
+        Pcg32::new(9).fill_gaussian(&mut g.data, 0.0, 1.0);
+        let q: Vec<f32> = (0..6).map(|i| i as f32 * 0.25 - 0.5).collect();
+        let rows: Vec<usize> = (0..g.rows).collect();
+        let full = nearest_k(&g, &q, 10);
+        let among = nearest_k_among(&g, &q, 10, &rows);
+        assert_eq!(full.len(), among.len());
+        for ((d1, i1), (d2, i2)) in full.iter().zip(&among) {
+            assert_eq!((d1.to_bits(), i1), (d2.to_bits(), i2));
+        }
+        // subset clamp: k beyond the candidate count returns them all
+        let few = [3usize, 40, 41, 90];
+        assert_eq!(nearest_k_among(&g, &q, 100, &few).len(), few.len());
+        assert_eq!(nearest_k_among(&g, &q, 3, &[]), Vec::new());
     }
 }

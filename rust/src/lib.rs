@@ -56,6 +56,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod ps;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod simcluster;
 pub mod util;

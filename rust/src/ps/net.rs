@@ -101,7 +101,9 @@ pub enum Stream {
 }
 
 impl Stream {
-    fn try_clone(&self) -> Result<Stream> {
+    /// Clone the underlying socket so one half can read while the
+    /// other writes (used by the PS loop and the serving front end).
+    pub fn try_clone(&self) -> Result<Stream> {
         Ok(match self {
             Stream::Tcp(s) => {
                 Stream::Tcp(s.try_clone().context("clone tcp stream")?)
@@ -113,7 +115,9 @@ impl Stream {
         })
     }
 
-    fn shutdown_write(&self) {
+    /// Half-close the write side, letting the peer's blocking read
+    /// observe EOF while our own reads keep draining.
+    pub fn shutdown_write(&self) {
         let _ = match self {
             Stream::Tcp(s) => s.shutdown(Shutdown::Write),
             #[cfg(unix)]
@@ -194,7 +198,9 @@ impl Listener {
         })
     }
 
-    fn accept(&self) -> Result<Stream> {
+    /// Block for the next inbound connection. The PS layer wraps this
+    /// in `accept_workers`; the serving front end drives it directly.
+    pub fn accept(&self) -> Result<Stream> {
         Ok(match self {
             Listener::Tcp(l) => {
                 let (s, _) = l.accept().context("accept")?;

@@ -1,0 +1,569 @@
+//! Binary framing for the serving wire protocol.
+//!
+//! Same shape as the PS protocol (`ps::frame`): every message is one
+//! length-prefixed frame,
+//!
+//! ```text
+//! u32le body_len | u8 kind | fixed-width LE header | payload
+//! ```
+//!
+//! and decoding keeps the PS layer's structural/semantic split — but
+//! the *recovery policy* differs, because a retrieval server faces
+//! arbitrary clients, not a fixed fleet of workers. On the PS wire a
+//! malformed body drops the connection; here the length prefix is the
+//! trust boundary instead: as long as the prefix itself is sane, the
+//! frame boundary is sound even when the body is garbage, so the
+//! server rejects the one message (with an [`ServeFrame::Error`]
+//! reply and a `rejected_frames` tick) and the connection survives.
+//! Only a length prefix beyond [`MAX_FRAME_BYTES`] — where the stream
+//! can no longer be trusted to be framed at all — drops the
+//! connection.
+//!
+//! Layouts (everything little-endian):
+//!
+//! ```text
+//! Hello     0x51 | u16 protocol
+//! HelloAck  0x52 | u16 protocol | u32 dim | u64 gallery | u64 version
+//! Query     0x31 | u64 id | u32 k | u32 nprobe | u32 nrows | u32 dim
+//!                | nrows·dim × f32         (nprobe 0 = exact scan)
+//! Stats     0x32
+//! Answer    0x41 | u64 id | u64 version | u32 nrows
+//!                | per row: u32 cnt | cnt × (u32 idx, f32 dist)
+//! StatsAck  0x42 | u64 version | u64 queries | u64 rows
+//!                | u64 rejected | u64 swaps
+//! Error     0x4F | u64 id | u32 len | len × u8 (utf-8 message)
+//! ```
+//!
+//! The exact bytes of a Query/Answer pair are pinned by the goldens in
+//! `tests/integration_serve.rs`, so the protocol cannot drift silently.
+
+use crate::linalg::Mat;
+
+/// Serving wire protocol version, checked in Hello/HelloAck.
+pub const SERVE_PROTOCOL_VERSION: u16 = 1;
+
+/// Hard structural cap on one frame body: a length prefix beyond this
+/// is a corrupt stream, not an allocation order. (Policy caps for
+/// honest-but-oversized queries are the server's
+/// [`ServeLimits`](super::net::ServeLimits), checked per message.)
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// Frame kind bytes (client→server: 0x3_, server→client: 0x4_,
+/// handshake: 0x5_).
+pub const KIND_QUERY: u8 = 0x31;
+pub const KIND_STATS: u8 = 0x32;
+pub const KIND_ANSWER: u8 = 0x41;
+pub const KIND_STATS_ACK: u8 = 0x42;
+pub const KIND_ERROR: u8 = 0x4F;
+pub const KIND_HELLO: u8 = 0x51;
+pub const KIND_HELLO_ACK: u8 = 0x52;
+
+/// A decoded serving frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeFrame {
+    /// Client → server greeting.
+    Hello { protocol: u16 },
+    /// Server → client: protocol plus the serving topology (feature
+    /// dim, resident gallery size, current epoch version).
+    HelloAck { protocol: u16, dim: u32, gallery: u64, version: u64 },
+    /// A batch of raw feature queries (`x` is nrows × dim).
+    /// `nprobe = 0` requests the exact scan; `nprobe >= nclusters`
+    /// degrades to exact bit-for-bit.
+    Query { id: u64, k: u32, nprobe: u32, x: Mat },
+    /// Counter snapshot request.
+    Stats,
+    /// Per-query-row top-k hits, all from epoch `version`.
+    Answer { id: u64, version: u64, results: Vec<Vec<(u32, f32)>> },
+    /// Counter snapshot reply.
+    StatsAck {
+        version: u64,
+        queries: u64,
+        rows: u64,
+        rejected: u64,
+        swaps: u64,
+    },
+    /// A rejected message (`id` echoes the offending query when known,
+    /// 0 otherwise). The connection is still alive.
+    Error { id: u64, message: String },
+}
+
+/// Why a serving frame was refused — same split as
+/// [`ps::frame::FrameError`](crate::ps::frame::FrameError), different
+/// recovery policy (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeFrameError {
+    /// The body bytes are not a well-formed frame. The frame boundary
+    /// is still sound (the length prefix was sane), so the server
+    /// rejects the message and keeps the connection.
+    Malformed(String),
+    /// Well-formed frame whose content violates the serving contract
+    /// (wrong feature dim, over-limit batch or k).
+    Invalid(String),
+}
+
+impl std::fmt::Display for ServeFrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeFrameError::Malformed(m) => {
+                write!(f, "malformed frame: {m}")
+            }
+            ServeFrameError::Invalid(m) => {
+                write!(f, "invalid message: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeFrameError {}
+
+fn malformed(msg: impl Into<String>) -> ServeFrameError {
+    ServeFrameError::Malformed(msg.into())
+}
+
+fn invalid(msg: impl Into<String>) -> ServeFrameError {
+    ServeFrameError::Invalid(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// little-endian primitives
+// ---------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ServeFrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(malformed(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ServeFrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ServeFrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ServeFrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ServeFrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, ServeFrameError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), ServeFrameError> {
+        if self.pos != self.buf.len() {
+            return Err(malformed(format!(
+                "{} trailing bytes after frame body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+
+    /// A count field used to size an allocation of `elem_size`-byte
+    /// elements, checked against the bytes actually remaining in the
+    /// frame — same allocation-bomb guard as the PS codec.
+    fn count(
+        &mut self,
+        what: &str,
+        elem_size: usize,
+    ) -> Result<usize, ServeFrameError> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME_BYTES {
+            return Err(malformed(format!("{what} count {n} exceeds cap")));
+        }
+        let need = n.saturating_mul(elem_size);
+        let remaining = self.buf.len() - self.pos;
+        if need > remaining {
+            return Err(malformed(format!(
+                "{what} count {n} needs {need} bytes, \
+                 {remaining} remain in frame"
+            )));
+        }
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------
+
+/// Reserve a `u32` length slot, fill the body, patch the length.
+fn with_length_prefix(out: &mut Vec<u8>, fill: impl FnOnce(&mut Vec<u8>)) {
+    let at = out.len();
+    put_u32(out, 0);
+    fill(out);
+    let body_len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
+/// Append one length-prefixed serving frame.
+pub fn encode_frame(f: &ServeFrame, out: &mut Vec<u8>) {
+    with_length_prefix(out, |body| match f {
+        ServeFrame::Hello { protocol } => {
+            body.push(KIND_HELLO);
+            put_u16(body, *protocol);
+        }
+        ServeFrame::HelloAck { protocol, dim, gallery, version } => {
+            body.push(KIND_HELLO_ACK);
+            put_u16(body, *protocol);
+            put_u32(body, *dim);
+            put_u64(body, *gallery);
+            put_u64(body, *version);
+        }
+        ServeFrame::Query { id, k, nprobe, x } => {
+            body.push(KIND_QUERY);
+            put_u64(body, *id);
+            put_u32(body, *k);
+            put_u32(body, *nprobe);
+            put_u32(body, x.rows as u32);
+            put_u32(body, x.cols as u32);
+            for &v in &x.data {
+                put_f32(body, v);
+            }
+        }
+        ServeFrame::Stats => {
+            body.push(KIND_STATS);
+        }
+        ServeFrame::Answer { id, version, results } => {
+            body.push(KIND_ANSWER);
+            put_u64(body, *id);
+            put_u64(body, *version);
+            put_u32(body, results.len() as u32);
+            for row in results {
+                put_u32(body, row.len() as u32);
+                for &(idx, dist) in row {
+                    put_u32(body, idx);
+                    put_f32(body, dist);
+                }
+            }
+        }
+        ServeFrame::StatsAck { version, queries, rows, rejected, swaps } => {
+            body.push(KIND_STATS_ACK);
+            put_u64(body, *version);
+            put_u64(body, *queries);
+            put_u64(body, *rows);
+            put_u64(body, *rejected);
+            put_u64(body, *swaps);
+        }
+        ServeFrame::Error { id, message } => {
+            body.push(KIND_ERROR);
+            put_u64(body, *id);
+            put_u32(body, message.len() as u32);
+            body.extend_from_slice(message.as_bytes());
+        }
+    });
+}
+
+/// Decode one frame *body* (the bytes after the `u32` length prefix).
+/// Structural errors only; run [`validate_query`] before executing.
+pub fn decode_frame(body: &[u8]) -> Result<ServeFrame, ServeFrameError> {
+    let mut r = Reader::new(body);
+    let frame = match r.u8()? {
+        KIND_HELLO => ServeFrame::Hello { protocol: r.u16()? },
+        KIND_HELLO_ACK => ServeFrame::HelloAck {
+            protocol: r.u16()?,
+            dim: r.u32()?,
+            gallery: r.u64()?,
+            version: r.u64()?,
+        },
+        KIND_QUERY => {
+            let id = r.u64()?;
+            let k = r.u32()?;
+            let nprobe = r.u32()?;
+            let nrows = r.count("query rows", 4)? as u64;
+            let dim = r.count("query dim", 4)? as u64;
+            let total = nrows.saturating_mul(dim) as usize;
+            // the per-field checks bound nrows and dim individually;
+            // the product is what actually sizes the allocation
+            let remaining = body.len() - r.pos;
+            if total.saturating_mul(4) > remaining {
+                return Err(malformed(format!(
+                    "query payload {nrows}x{dim} needs {} bytes, \
+                     frame has {remaining}",
+                    total * 4
+                )));
+            }
+            let mut data = Vec::with_capacity(total);
+            for _ in 0..total {
+                data.push(r.f32()?);
+            }
+            ServeFrame::Query {
+                id,
+                k,
+                nprobe,
+                x: Mat::from_vec(nrows as usize, dim as usize, data),
+            }
+        }
+        KIND_STATS => ServeFrame::Stats,
+        KIND_ANSWER => {
+            let id = r.u64()?;
+            let version = r.u64()?;
+            let nrows = r.count("answer rows", 4)?;
+            let mut results = Vec::with_capacity(nrows);
+            for _ in 0..nrows {
+                let cnt = r.count("answer hits", 8)?;
+                let mut row = Vec::with_capacity(cnt);
+                for _ in 0..cnt {
+                    let idx = r.u32()?;
+                    let dist = r.f32()?;
+                    row.push((idx, dist));
+                }
+                results.push(row);
+            }
+            ServeFrame::Answer { id, version, results }
+        }
+        KIND_STATS_ACK => ServeFrame::StatsAck {
+            version: r.u64()?,
+            queries: r.u64()?,
+            rows: r.u64()?,
+            rejected: r.u64()?,
+            swaps: r.u64()?,
+        },
+        KIND_ERROR => {
+            let id = r.u64()?;
+            let len = r.count("error message", 1)?;
+            let bytes = r.take(len)?;
+            let message = String::from_utf8_lossy(bytes).into_owned();
+            ServeFrame::Error { id, message }
+        }
+        kind => return Err(malformed(format!("unknown kind 0x{kind:02x}"))),
+    };
+    r.done()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------
+// semantic validation against the serving contract
+// ---------------------------------------------------------------------
+
+/// Validate a decoded query against the epoch's feature dim and the
+/// server's policy limits. An `Invalid` here rejects the one message;
+/// the connection stays up.
+pub fn validate_query(
+    frame: &ServeFrame,
+    dim: usize,
+    max_rows: usize,
+    max_k: usize,
+) -> Result<(), ServeFrameError> {
+    let ServeFrame::Query { k, x, .. } = frame else {
+        return Ok(());
+    };
+    if x.cols != dim {
+        return Err(invalid(format!(
+            "query dim {} != model dim {dim}",
+            x.cols
+        )));
+    }
+    if x.rows == 0 {
+        return Err(invalid("empty query batch"));
+    }
+    if x.rows > max_rows {
+        return Err(invalid(format!(
+            "query batch {} exceeds limit {max_rows}",
+            x.rows
+        )));
+    }
+    if *k as usize > max_k {
+        return Err(invalid(format!("k {k} exceeds limit {max_k}")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_prefix(buf: &[u8]) -> &[u8] {
+        let len =
+            u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4, "length prefix covers the body");
+        &buf[4..]
+    }
+
+    fn roundtrip(f: &ServeFrame) -> ServeFrame {
+        let mut buf = Vec::new();
+        encode_frame(f, &mut buf);
+        let decoded = decode_frame(strip_prefix(&buf)).unwrap();
+        // byte-stability: re-encoding must reproduce the wire exactly
+        let mut buf2 = Vec::new();
+        encode_frame(&decoded, &mut buf2);
+        assert_eq!(buf, buf2, "frame not byte-stable: {f:?}");
+        decoded
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips_bitwise() {
+        let frames = [
+            ServeFrame::Hello { protocol: SERVE_PROTOCOL_VERSION },
+            ServeFrame::HelloAck {
+                protocol: SERVE_PROTOCOL_VERSION,
+                dim: 16,
+                gallery: 400,
+                version: 3,
+            },
+            ServeFrame::Query {
+                id: 9,
+                k: 5,
+                nprobe: 0,
+                x: Mat::from_vec(
+                    2,
+                    3,
+                    vec![1.5, -0.0, f32::MIN_POSITIVE, 2.5, -3.0, 0.125],
+                ),
+            },
+            ServeFrame::Stats,
+            ServeFrame::Answer {
+                id: 9,
+                version: 3,
+                results: vec![
+                    vec![(4, 0.25), (0, 1.5)],
+                    vec![],
+                    vec![(7, f32::MAX)],
+                ],
+            },
+            ServeFrame::StatsAck {
+                version: 3,
+                queries: 10,
+                rows: 20,
+                rejected: 1,
+                swaps: 2,
+            },
+            ServeFrame::Error { id: 9, message: "bad dim".into() },
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f);
+        }
+    }
+
+    #[test]
+    fn query_floats_roundtrip_to_the_bit() {
+        let x = Mat::from_vec(1, 4, vec![-0.0, f32::MIN, 1e-38, 0.1]);
+        let q = ServeFrame::Query { id: 1, k: 2, nprobe: 3, x };
+        let ServeFrame::Query { x: back, .. } = roundtrip(&q) else {
+            panic!("wrong kind")
+        };
+        let ServeFrame::Query { x: orig, .. } = q else { unreachable!() };
+        for (a, b) in orig.data.iter().zip(&back.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_sweep_is_malformed_never_panics() {
+        let q = ServeFrame::Query {
+            id: 3,
+            k: 2,
+            nprobe: 1,
+            x: Mat::from_vec(1, 2, vec![1.0, 2.0]),
+        };
+        let mut buf = Vec::new();
+        encode_frame(&q, &mut buf);
+        let body = strip_prefix(&buf);
+        for cut in 1..body.len() {
+            assert!(
+                matches!(
+                    decode_frame(&body[..cut]),
+                    Err(ServeFrameError::Malformed(_))
+                ),
+                "cut at {cut} must be malformed"
+            );
+        }
+        assert!(matches!(
+            decode_frame(&[0x7E]),
+            Err(ServeFrameError::Malformed(_))
+        ));
+    }
+
+    /// Allocation bomb: a tiny frame whose row/dim counts multiply out
+    /// to gigabytes must be rejected by the remaining-bytes check
+    /// before any `Vec::with_capacity`.
+    #[test]
+    fn huge_query_counts_in_tiny_frame_are_malformed() {
+        let mut body = vec![KIND_QUERY];
+        put_u64(&mut body, 0); // id
+        put_u32(&mut body, 1); // k
+        put_u32(&mut body, 0); // nprobe
+        put_u32(&mut body, 1 << 20); // nrows: huge
+        put_u32(&mut body, 1 << 20); // dim: huge
+        assert!(matches!(
+            decode_frame(&body),
+            Err(ServeFrameError::Malformed(_))
+        ));
+        // per-field counts individually fit, but the product overflows
+        // the frame: 2×2 needs four floats and only two are present
+        let mut body = vec![KIND_QUERY];
+        put_u64(&mut body, 0);
+        put_u32(&mut body, 1);
+        put_u32(&mut body, 0);
+        put_u32(&mut body, 2);
+        put_u32(&mut body, 2);
+        put_f32(&mut body, 0.0);
+        put_f32(&mut body, 0.0);
+        assert!(matches!(
+            decode_frame(&body),
+            Err(ServeFrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn validate_query_enforces_dim_and_limits() {
+        let mk = |rows: usize, cols: usize, k: u32| ServeFrame::Query {
+            id: 0,
+            k,
+            nprobe: 0,
+            x: Mat::zeros(rows, cols),
+        };
+        assert!(validate_query(&mk(2, 16, 5), 16, 64, 32).is_ok());
+        for bad in [
+            mk(2, 15, 5),  // wrong dim
+            mk(0, 16, 5),  // empty batch
+            mk(65, 16, 5), // over batch limit
+            mk(2, 16, 33), // over k limit
+        ] {
+            assert!(matches!(
+                validate_query(&bad, 16, 64, 32),
+                Err(ServeFrameError::Invalid(_))
+            ));
+        }
+        // non-query frames pass through untouched
+        assert!(validate_query(&ServeFrame::Stats, 16, 64, 32).is_ok());
+    }
+}

@@ -1,0 +1,32 @@
+//! Retrieval serving layer: the deploy half of the learn-vs-deploy
+//! split.
+//!
+//! Training produces a durable [`MetricModel`](crate::session::MetricModel)
+//! artifact; this module serves it at query time:
+//!
+//! * [`engine`] — the in-process core. An immutable
+//!   [`Epoch`](engine::Epoch) bundles one model version with its
+//!   pre-projected gallery and a coarse k-means quantizer; readers take
+//!   one `Arc` snapshot per query and [`ServeEngine::swap`](
+//!   engine::ServeEngine::swap) atomically installs a newer model
+//!   mid-traffic, old epochs retiring when their last in-flight query
+//!   drops. Scans are exact ([`eval::nearest_k`](crate::eval::nearest_k))
+//!   or cluster-pruned ([`ScanMode::Probe`](engine::ScanMode)), with
+//!   `nprobe >= nclusters` degrading to exact *bit-for-bit*.
+//! * [`frame`] — the length-prefixed wire codec (`ps::frame` style)
+//!   with golden-pinned byte layouts.
+//! * [`net`] — the socket front end (`dmlps serve`) and blocking
+//!   client, with a reject-and-survive error policy per message.
+
+pub mod engine;
+pub mod frame;
+pub mod net;
+
+pub use engine::{
+    default_nprobe, BatchAnswer, Epoch, ScanMode, ServeConfig, ServeEngine,
+    ServeStats,
+};
+pub use frame::{ServeFrame, ServeFrameError, SERVE_PROTOCOL_VERSION};
+pub use net::{
+    ServeClient, ServeHandle, ServeInfo, ServeLimits, ServeServer, WireStats,
+};

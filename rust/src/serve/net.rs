@@ -1,0 +1,555 @@
+//! Socket front end for the retrieval engine.
+//!
+//! Reuses the PS transport's plumbing (`ps::net`: [`NetAddr`],
+//! [`Listener`], [`Stream`], [`connect_retry`]) with the serving frame
+//! codec ([`super::frame`]). One thread per connection; the engine
+//! itself is lock-free on the read path (a query holds one `Arc`
+//! snapshot of the current epoch), so connection threads scale without
+//! coordinating.
+//!
+//! ## Error policy — the connection survives bad messages
+//!
+//! The PS wire connects a fixed fleet where a malformed frame means a
+//! mis-deployed binary and the right move is to drop the link. A
+//! retrieval server faces arbitrary clients, so the policy here is
+//! graded by how much of the stream can still be trusted:
+//!
+//! * length prefix beyond [`MAX_FRAME_BYTES`], or a socket error —
+//!   stream framing itself is gone; count + drop the connection.
+//! * body larger than [`ServeLimits::max_body_bytes`] but under the
+//!   hard cap — the frame boundary is sound; skip the body in bounded
+//!   chunks (never buffering it), count, reply [`ServeFrame::Error`],
+//!   keep the connection.
+//! * body that fails structural decode, or a well-formed message that
+//!   violates the serving contract (wrong dim, over-limit batch/k) —
+//!   count, reply `Error` (echoing the query id when known), keep the
+//!   connection.
+//!
+//! Every rejection ticks a shared counter surfaced in
+//! [`ServeFrame::StatsAck`], so the integration tests can assert both
+//! halves: bad frames are *counted* and the next good query on the
+//! same connection is *answered*.
+
+use std::io::{BufWriter, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::ps::net::{connect_retry, Listener, NetAddr, RetryPolicy, Stream};
+
+use super::engine::{ScanMode, ServeEngine};
+use super::frame::{
+    decode_frame, encode_frame, validate_query, ServeFrame, ServeFrameError,
+    MAX_FRAME_BYTES, SERVE_PROTOCOL_VERSION,
+};
+
+/// Per-message policy limits, checked semantically after decode. These
+/// bound honest-but-oversized requests; the structural trust boundary
+/// is [`MAX_FRAME_BYTES`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeLimits {
+    /// Largest frame body the server will buffer (bytes). Bigger (but
+    /// under the hard cap) bodies are skipped and rejected without the
+    /// connection dropping.
+    pub max_body_bytes: usize,
+    /// Largest query batch (rows) answered in one frame.
+    pub max_rows: usize,
+    /// Largest per-row k answered.
+    pub max_k: usize,
+}
+
+impl Default for ServeLimits {
+    fn default() -> ServeLimits {
+        ServeLimits {
+            max_body_bytes: 1 << 22, // 4 MiB ≈ a 4096×256-f32 batch
+            max_rows: 4096,
+            max_k: 1024,
+        }
+    }
+}
+
+/// What the server tells a client at handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeInfo {
+    /// Raw feature dimension queries must match.
+    pub dim: usize,
+    /// Gallery rows resident at connect time.
+    pub gallery: u64,
+    /// Epoch version at connect time (later answers may be newer).
+    pub version: u64,
+}
+
+/// Counter snapshot returned by [`ServeClient::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub version: u64,
+    pub queries: u64,
+    pub rows: u64,
+    pub rejected: u64,
+    pub swaps: u64,
+}
+
+// ---------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------
+
+/// A bound-but-not-yet-serving retrieval server.
+pub struct ServeServer {
+    listener: Listener,
+    engine: Arc<ServeEngine>,
+    limits: ServeLimits,
+    rejected: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handle to a server running on a background thread; shuts the accept
+/// loop down on [`ServeHandle::shutdown`] or drop.
+pub struct ServeHandle {
+    addr: NetAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ServeServer {
+    /// Bind the listener without accepting yet, so the caller can
+    /// publish [`ServeServer::local_addr`] (e.g. port 0 → real port)
+    /// before traffic starts.
+    pub fn bind(
+        addr: &NetAddr,
+        engine: Arc<ServeEngine>,
+        limits: ServeLimits,
+    ) -> Result<ServeServer> {
+        Ok(ServeServer {
+            listener: Listener::bind(addr)?,
+            engine,
+            limits,
+            rejected: Arc::new(AtomicU64::new(0)),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<NetAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Total frames rejected across all connections so far.
+    pub fn rejected_frames(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Accept loop on the calling thread (the `dmlps serve` path);
+    /// runs until the process exits or [`ServeHandle::shutdown`] on a
+    /// clone of the stop flag flips it.
+    pub fn run(self) -> Result<()> {
+        loop {
+            let stream = self.listener.accept()?;
+            if self.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            let engine = Arc::clone(&self.engine);
+            let rejected = Arc::clone(&self.rejected);
+            let limits = self.limits;
+            std::thread::Builder::new()
+                .name("serve-conn".into())
+                .spawn(move || {
+                    // per-connection errors end that connection only
+                    let _ = serve_connection(stream, &engine, limits, &rejected);
+                })
+                .context("spawn connection thread")?;
+        }
+    }
+
+    /// Run the accept loop on a background thread and return a handle
+    /// (the in-process path tests and benches use).
+    pub fn spawn(self) -> Result<ServeHandle> {
+        let addr = self.local_addr()?;
+        let stop = Arc::clone(&self.stop);
+        let join = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || {
+                let _ = self.run();
+            })
+            .context("spawn accept thread")?;
+        Ok(ServeHandle { addr, stop, join: Some(join) })
+    }
+}
+
+impl ServeHandle {
+    /// Address the server is reachable at (real port even if bound 0).
+    pub fn addr(&self) -> &NetAddr {
+        &self.addr
+    }
+
+    /// Stop the accept loop: set the flag, poke the listener with a
+    /// throwaway connection so the blocking `accept` observes it, join.
+    /// Connections already accepted finish on their own threads.
+    pub fn shutdown(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = connect_retry(
+            &self.addr,
+            RetryPolicy {
+                attempts: 1,
+                ..RetryPolicy::default()
+            },
+        );
+        let _ = join.join();
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read one length prefix. `Ok(None)` = clean EOF before a frame.
+fn read_len(r: &mut impl Read) -> Result<Option<usize>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => Ok(Some(u32::from_le_bytes(len_buf) as usize)),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+        Err(e) => Err(e).context("read frame length"),
+    }
+}
+
+/// Discard exactly `len` body bytes in bounded chunks, keeping the
+/// stream positioned at the next frame without ever buffering the body.
+fn skip_body(r: &mut impl Read, len: usize) -> Result<()> {
+    let mut scratch = [0u8; 8192];
+    let mut left = len;
+    while left > 0 {
+        let n = left.min(scratch.len());
+        r.read_exact(&mut scratch[..n]).context("skip frame body")?;
+        left -= n;
+    }
+    Ok(())
+}
+
+fn send(w: &mut impl Write, f: &ServeFrame) -> Result<()> {
+    let mut buf = Vec::new();
+    encode_frame(f, &mut buf);
+    w.write_all(&buf).context("write frame")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+fn serve_connection(
+    stream: Stream,
+    engine: &ServeEngine,
+    limits: ServeLimits,
+    rejected: &AtomicU64,
+) -> Result<()> {
+    let mut reader = stream.try_clone()?;
+    let mut writer = BufWriter::new(stream);
+
+    // Handshake: first frame must be a protocol-matching Hello.
+    let Some(len) = read_len(&mut reader)? else { return Ok(()) };
+    if len > MAX_FRAME_BYTES {
+        rejected.fetch_add(1, Ordering::Relaxed);
+        bail!("handshake frame length {len} exceeds cap");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("read handshake")?;
+    match decode_frame(&body) {
+        Ok(ServeFrame::Hello { protocol })
+            if protocol == SERVE_PROTOCOL_VERSION =>
+        {
+            let epoch = engine.snapshot();
+            send(&mut writer, &ServeFrame::HelloAck {
+                protocol: SERVE_PROTOCOL_VERSION,
+                dim: epoch.model().dim() as u32,
+                gallery: epoch.gallery_len() as u64,
+                version: epoch.version(),
+            })?;
+        }
+        Ok(ServeFrame::Hello { protocol }) => {
+            rejected.fetch_add(1, Ordering::Relaxed);
+            send(&mut writer, &ServeFrame::Error {
+                id: 0,
+                message: format!(
+                    "protocol {protocol} != {SERVE_PROTOCOL_VERSION}"
+                ),
+            })?;
+            bail!("protocol mismatch");
+        }
+        _ => {
+            rejected.fetch_add(1, Ordering::Relaxed);
+            send(&mut writer, &ServeFrame::Error {
+                id: 0,
+                message: "expected Hello".into(),
+            })?;
+            bail!("handshake frame was not Hello");
+        }
+    }
+
+    let mut body = Vec::new();
+    loop {
+        let Some(len) = read_len(&mut reader)? else { return Ok(()) };
+        if len > MAX_FRAME_BYTES {
+            // stream can no longer be trusted to be framed
+            rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("frame length {len} exceeds cap {MAX_FRAME_BYTES}");
+        }
+        if len > limits.max_body_bytes {
+            // framing is sound: reject the message, keep the stream
+            skip_body(&mut reader, len)?;
+            rejected.fetch_add(1, Ordering::Relaxed);
+            send(&mut writer, &ServeFrame::Error {
+                id: 0,
+                message: format!(
+                    "frame body {len} exceeds limit {}",
+                    limits.max_body_bytes
+                ),
+            })?;
+            continue;
+        }
+        body.resize(len, 0);
+        reader.read_exact(&mut body).context("read frame body")?;
+
+        let frame = match decode_frame(&body) {
+            Ok(f) => f,
+            Err(e) => {
+                rejected.fetch_add(1, Ordering::Relaxed);
+                send(&mut writer, &ServeFrame::Error {
+                    id: 0,
+                    message: e.to_string(),
+                })?;
+                continue;
+            }
+        };
+        match frame {
+            query @ ServeFrame::Query { .. } => {
+                let dim = engine.snapshot().model().dim();
+                if let Err(e) =
+                    validate_query(&query, dim, limits.max_rows, limits.max_k)
+                {
+                    let ServeFrame::Query { id, .. } = query else {
+                        unreachable!()
+                    };
+                    rejected.fetch_add(1, Ordering::Relaxed);
+                    send(&mut writer, &ServeFrame::Error {
+                        id,
+                        message: e.to_string(),
+                    })?;
+                    continue;
+                }
+                let ServeFrame::Query { id, k, nprobe, x } = query else {
+                    unreachable!()
+                };
+                let mode = if nprobe == 0 {
+                    ScanMode::Exact
+                } else {
+                    ScanMode::Probe(nprobe as usize)
+                };
+                let ans = engine.query_batch(&x, k as usize, mode);
+                send(&mut writer, &ServeFrame::Answer {
+                    id,
+                    version: ans.version,
+                    results: ans.results,
+                })?;
+            }
+            ServeFrame::Stats => {
+                let s = engine.stats();
+                let epoch = engine.snapshot();
+                send(&mut writer, &ServeFrame::StatsAck {
+                    version: epoch.version(),
+                    queries: s.queries,
+                    rows: s.rows_answered,
+                    rejected: rejected.load(Ordering::Relaxed),
+                    swaps: s.swaps,
+                })?;
+            }
+            other => {
+                // well-formed frame a client has no business sending
+                rejected.fetch_add(1, Ordering::Relaxed);
+                let msg = ServeFrameError::Invalid(format!(
+                    "unexpected frame {other:?}"
+                ));
+                send(&mut writer, &ServeFrame::Error {
+                    id: 0,
+                    message: msg.to_string(),
+                })?;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------
+
+/// Blocking client for the serving protocol. Not `Sync`: one
+/// connection carries one request/response exchange at a time (open
+/// more clients for parallel load — the bench does).
+pub struct ServeClient {
+    stream: Stream,
+    body: Vec<u8>,
+}
+
+impl ServeClient {
+    /// Connect (with bounded retry), handshake, return the client plus
+    /// what the server advertised.
+    pub fn connect(
+        addr: &NetAddr,
+        policy: RetryPolicy,
+    ) -> Result<(ServeClient, ServeInfo)> {
+        let stream = connect_retry(addr, policy)?;
+        let mut c = ServeClient { stream, body: Vec::new() };
+        c.send(&ServeFrame::Hello { protocol: SERVE_PROTOCOL_VERSION })?;
+        match c.recv()? {
+            ServeFrame::HelloAck { protocol, dim, gallery, version } => {
+                if protocol != SERVE_PROTOCOL_VERSION {
+                    bail!(
+                        "server protocol {protocol} != \
+                         {SERVE_PROTOCOL_VERSION}"
+                    );
+                }
+                Ok((c, ServeInfo { dim: dim as usize, gallery, version }))
+            }
+            ServeFrame::Error { message, .. } => {
+                bail!("server refused handshake: {message}")
+            }
+            other => bail!("unexpected handshake reply: {other:?}"),
+        }
+    }
+
+    fn send(&mut self, f: &ServeFrame) -> Result<()> {
+        let mut buf = Vec::new();
+        encode_frame(f, &mut buf);
+        self.stream.write_all(&buf).context("write frame")?;
+        self.stream.flush().context("flush")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<ServeFrame> {
+        let Some(len) = read_len(&mut self.stream)? else {
+            bail!("server closed the connection")
+        };
+        if len > MAX_FRAME_BYTES {
+            bail!("reply frame length {len} exceeds cap");
+        }
+        self.body.resize(len, 0);
+        self.stream.read_exact(&mut self.body).context("read reply")?;
+        decode_frame(&self.body)
+            .map_err(|e| anyhow::anyhow!("bad reply frame: {e}"))
+    }
+
+    /// Send one batch query; `nprobe = 0` requests the exact scan.
+    /// Returns the answering epoch's version and per-row hits.
+    pub fn query(
+        &mut self,
+        x: &Mat,
+        k: usize,
+        nprobe: usize,
+        id: u64,
+    ) -> Result<(u64, Vec<Vec<(u32, f32)>>)> {
+        self.send(&ServeFrame::Query {
+            id,
+            k: k as u32,
+            nprobe: nprobe as u32,
+            x: x.clone(),
+        })?;
+        match self.recv()? {
+            ServeFrame::Answer { id: rid, version, results } => {
+                if rid != id {
+                    bail!("answer id {rid} != query id {id}");
+                }
+                Ok((version, results))
+            }
+            ServeFrame::Error { message, .. } => {
+                bail!("server rejected query: {message}")
+            }
+            other => bail!("unexpected reply: {other:?}"),
+        }
+    }
+
+    /// Fetch the server's counter snapshot.
+    pub fn stats(&mut self) -> Result<WireStats> {
+        self.send(&ServeFrame::Stats)?;
+        match self.recv()? {
+            ServeFrame::StatsAck { version, queries, rows, rejected, swaps } => {
+                Ok(WireStats { version, queries, rows, rejected, swaps })
+            }
+            other => bail!("unexpected stats reply: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+    use crate::data::SyntheticSpec;
+    use crate::serve::engine::ServeConfig;
+    use crate::session::MetricModel;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_server() -> (ServeHandle, Arc<ServeEngine>) {
+        let cfg = Preset::Tiny.config();
+        let data = SyntheticSpec::tiny().generate(7);
+        let mut l = Mat::zeros(8, data.dim());
+        Pcg32::new(99).fill_gaussian(&mut l.data, 0.0, 0.3);
+        let model = MetricModel::new(l, &cfg);
+        let engine = Arc::new(ServeEngine::new(
+            model,
+            &data,
+            ServeConfig { nclusters: 4, ..ServeConfig::default() },
+        ));
+        let server = ServeServer::bind(
+            &NetAddr::parse("127.0.0.1:0").unwrap(),
+            Arc::clone(&engine),
+            ServeLimits::default(),
+        )
+        .unwrap();
+        (server.spawn().unwrap(), engine)
+    }
+
+    #[test]
+    fn wire_query_matches_in_process_engine_bitwise() {
+        let (mut handle, engine) = tiny_server();
+        let (mut client, info) =
+            ServeClient::connect(handle.addr(), RetryPolicy::default())
+                .unwrap();
+        let epoch = engine.snapshot();
+        assert_eq!(info.dim, epoch.model().dim());
+        assert_eq!(info.gallery as usize, epoch.gallery_len());
+        assert_eq!(info.version, 1);
+
+        let mut x = Mat::zeros(3, info.dim);
+        Pcg32::new(5).fill_gaussian(&mut x.data, 0.0, 1.0);
+        let (version, got) = client.query(&x, 4, 0, 11).unwrap();
+        let want = engine.query_batch(&x, 4, ScanMode::Exact);
+        assert_eq!(version, want.version);
+        assert_eq!(got.len(), want.results.len());
+        for (g, w) in got.iter().zip(&want.results) {
+            assert_eq!(g.len(), w.len());
+            for (&(gi, gd), &(wi, wd)) in g.iter().zip(w) {
+                assert_eq!(gi, wi);
+                assert_eq!(gd.to_bits(), wd.to_bits());
+            }
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn bad_dim_query_is_rejected_but_connection_survives() {
+        let (mut handle, _engine) = tiny_server();
+        let (mut client, info) =
+            ServeClient::connect(handle.addr(), RetryPolicy::default())
+                .unwrap();
+        let bad = Mat::zeros(1, info.dim + 1);
+        assert!(client.query(&bad, 2, 0, 1).is_err());
+        // same connection still answers a good query and counted it
+        let good = Mat::zeros(1, info.dim);
+        let (_, results) = client.query(&good, 2, 0, 2).unwrap();
+        assert_eq!(results.len(), 1);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.queries, 1);
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,268 @@
+//! End-to-end serving tests: golden wire bytes, and a real `dmlps
+//! serve` subprocess queried over TCP.
+//!
+//! The golden arrays pin the serving protocol the same way
+//! `integration_net` pins the PS protocol: the exact bytes of a
+//! query/answer pair are hardcoded, so any codec change that shifts
+//! the wire layout fails here before it silently strands old clients.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dmlps::config::Preset;
+use dmlps::data::ExperimentData;
+use dmlps::linalg::Mat;
+use dmlps::ps::net::{NetAddr, RetryPolicy};
+use dmlps::serve::frame::{
+    decode_frame, encode_frame, SERVE_PROTOCOL_VERSION,
+};
+use dmlps::serve::{ServeClient, ServeFrame};
+use dmlps::session::Session;
+
+// ---------------------------------------------------------------------
+// golden wire bytes
+// ---------------------------------------------------------------------
+
+/// Query{id:7, k:3, nprobe:2, x: 1×2 [1.5, -2.0]} — every byte pinned.
+const GOLDEN_QUERY: [u8; 37] = [
+    0x21, 0x00, 0x00, 0x00, // body_len = 33
+    0x31, // KIND_QUERY
+    0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id = 7
+    0x03, 0x00, 0x00, 0x00, // k = 3
+    0x02, 0x00, 0x00, 0x00, // nprobe = 2
+    0x01, 0x00, 0x00, 0x00, // nrows = 1
+    0x02, 0x00, 0x00, 0x00, // dim = 2
+    0x00, 0x00, 0xC0, 0x3F, // 1.5f32
+    0x00, 0x00, 0x00, 0xC0, // -2.0f32
+];
+
+/// Answer{id:7, version:42, results:[[(5, 0.25), (9, 1.5)]]}.
+const GOLDEN_ANSWER: [u8; 45] = [
+    0x29, 0x00, 0x00, 0x00, // body_len = 41
+    0x41, // KIND_ANSWER
+    0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id = 7
+    0x2A, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // version = 42
+    0x01, 0x00, 0x00, 0x00, // nrows = 1
+    0x02, 0x00, 0x00, 0x00, // row 0: 2 hits
+    0x05, 0x00, 0x00, 0x00, // hit 0: idx 5
+    0x00, 0x00, 0x80, 0x3E, // hit 0: dist 0.25f32
+    0x09, 0x00, 0x00, 0x00, // hit 1: idx 9
+    0x00, 0x00, 0xC0, 0x3F, // hit 1: dist 1.5f32
+];
+
+fn golden_query_frame() -> ServeFrame {
+    ServeFrame::Query {
+        id: 7,
+        k: 3,
+        nprobe: 2,
+        x: Mat::from_vec(1, 2, vec![1.5, -2.0]),
+    }
+}
+
+fn golden_answer_frame() -> ServeFrame {
+    ServeFrame::Answer {
+        id: 7,
+        version: 42,
+        results: vec![vec![(5, 0.25), (9, 1.5)]],
+    }
+}
+
+#[test]
+fn serving_wire_format_is_golden_pinned() {
+    for (frame, golden) in [
+        (golden_query_frame(), &GOLDEN_QUERY[..]),
+        (golden_answer_frame(), &GOLDEN_ANSWER[..]),
+    ] {
+        let mut wire = Vec::new();
+        encode_frame(&frame, &mut wire);
+        assert_eq!(
+            wire, golden,
+            "encoder drifted from the pinned wire bytes for {frame:?}"
+        );
+        let decoded = decode_frame(&golden[4..]).unwrap();
+        assert_eq!(decoded, frame, "decoder drifted on the pinned bytes");
+    }
+    // the handshake greeting too: 3-byte body, version 1
+    let mut hello = Vec::new();
+    encode_frame(
+        &ServeFrame::Hello { protocol: SERVE_PROTOCOL_VERSION },
+        &mut hello,
+    );
+    assert_eq!(hello, [0x03, 0x00, 0x00, 0x00, 0x51, 0x01, 0x00]);
+}
+
+// ---------------------------------------------------------------------
+// e2e: train → save → `dmlps serve` subprocess → query over TCP
+// ---------------------------------------------------------------------
+
+struct KillOnDrop(std::process::Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_addr_file(path: &std::path::Path) -> String {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            if !s.trim().is_empty() {
+                return s.trim().to_string();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "server never published {} — did `dmlps serve` start?",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Read one frame off a raw socket (length prefix + body).
+fn raw_recv(s: &mut std::net::TcpStream) -> ServeFrame {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).expect("read length prefix");
+    let mut body = vec![0u8; u32::from_le_bytes(len) as usize];
+    s.read_exact(&mut body).expect("read body");
+    decode_frame(&body).expect("decode reply")
+}
+
+fn raw_send(s: &mut std::net::TcpStream, f: &ServeFrame) {
+    let mut buf = Vec::new();
+    encode_frame(f, &mut buf);
+    s.write_all(&buf).expect("write frame");
+}
+
+#[test]
+fn serve_subprocess_end_to_end() {
+    let dir = std::env::temp_dir()
+        .join(format!("dmlps-serve-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.bin");
+    let addr_file = dir.join("serve.addr");
+
+    // train tiny in-process and persist the artifact the server loads
+    let mut cfg = Preset::Tiny.config();
+    cfg.optim.steps = 40;
+    cfg.cluster.workers = 1;
+    let data = Arc::new(ExperimentData::generate_for(
+        &cfg.dataset,
+        cfg.cluster.pairs.mode,
+        cfg.seed,
+    ));
+    let run = Session::from_config(cfg)
+        .data(Arc::clone(&data))
+        .train_sequential()
+        .unwrap();
+    let model = run.require_model().unwrap();
+    model.save(&model_path).unwrap();
+
+    let child = std::process::Command::new(env!("CARGO_BIN_EXE_dmlps"))
+        .args(["serve", "--preset", "tiny", "--addr", "127.0.0.1:0"])
+        .arg("--model")
+        .arg(&model_path)
+        .arg("--addr-file")
+        .arg(&addr_file)
+        .spawn()
+        .unwrap();
+    let _guard = KillOnDrop(child);
+    let addr_str = wait_addr_file(&addr_file);
+    let addr = NetAddr::parse(&addr_str).unwrap();
+
+    // --- wire answers are bit-identical to in-process MetricModel::knn
+    let (mut client, info) =
+        ServeClient::connect(&addr, RetryPolicy::default()).unwrap();
+    assert_eq!(info.dim, model.dim());
+    assert_eq!(info.gallery as usize, data.train.n());
+    let k = 7;
+    let b = 5;
+    let mut x = Mat::zeros(b, data.test.dim());
+    for r in 0..b {
+        x.row_mut(r).copy_from_slice(data.test.feature(r * 17));
+    }
+    let (version, results) = client.query(&x, k, 0, 99).unwrap();
+    assert_eq!(version, 1);
+    assert_eq!(results.len(), b);
+    for (r, row) in results.iter().enumerate() {
+        let want = model.knn(&data.train, x.row(r), k);
+        assert_eq!(row.len(), want.len(), "row {r} hit count");
+        for (&(gi, gd), &(wi, wd)) in row.iter().zip(&want) {
+            assert_eq!(gi as usize, wi, "row {r} index");
+            assert_eq!(
+                gd.to_bits(),
+                wd.to_bits(),
+                "row {r} distance must be bit-identical over the wire"
+            );
+        }
+    }
+
+    // --- malformed + oversized frames: rejected, counted, survived
+    let mut raw = std::net::TcpStream::connect(&addr_str).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    raw_send(
+        &mut raw,
+        &ServeFrame::Hello { protocol: SERVE_PROTOCOL_VERSION },
+    );
+    assert!(matches!(raw_recv(&mut raw), ServeFrame::HelloAck { .. }));
+
+    // malformed: unknown kind byte in a sound frame
+    raw.write_all(&[3, 0, 0, 0, 0x7E, 0xAA, 0xBB]).unwrap();
+    match raw_recv(&mut raw) {
+        ServeFrame::Error { id, message } => {
+            assert_eq!(id, 0);
+            assert!(message.contains("unknown kind"), "got: {message}");
+        }
+        other => panic!("expected Error for unknown kind, got {other:?}"),
+    }
+
+    // oversized: over the server's body limit (but under the hard cap);
+    // the body is skipped, never buffered, and the connection lives on
+    let oversized = (1usize << 22) + 1;
+    raw.write_all(&(oversized as u32).to_le_bytes()).unwrap();
+    let junk = vec![0u8; 1 << 16];
+    let mut left = oversized;
+    while left > 0 {
+        let n = left.min(junk.len());
+        raw.write_all(&junk[..n]).unwrap();
+        left -= n;
+    }
+    match raw_recv(&mut raw) {
+        ServeFrame::Error { message, .. } => {
+            assert!(message.contains("exceeds limit"), "got: {message}");
+        }
+        other => panic!("expected Error for oversized, got {other:?}"),
+    }
+
+    // the same connection still answers a good query afterwards
+    raw_send(
+        &mut raw,
+        &ServeFrame::Query {
+            id: 5,
+            k: 3,
+            nprobe: 0,
+            x: Mat::from_vec(1, info.dim, vec![0.0; info.dim]),
+        },
+    );
+    match raw_recv(&mut raw) {
+        ServeFrame::Answer { id, results, .. } => {
+            assert_eq!(id, 5);
+            assert_eq!(results.len(), 1);
+            assert_eq!(results[0].len(), 3);
+        }
+        other => panic!("expected Answer after rejections, got {other:?}"),
+    }
+
+    // both rejections were counted
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.rejected, 2,
+        "exactly the malformed and oversized frames must be counted"
+    );
+    assert_eq!(stats.swaps, 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -344,6 +344,61 @@ fn nearest_k_under_simd_is_internally_consistent() {
     assert_eq!(got, all);
 }
 
+/// The "k > gallery" clamp now lives inside `nearest_k` itself (PR 9):
+/// callers pass any k and get `min(k, n)` hits. Pin the edge cases —
+/// k=0, k=n, k≫n, empty gallery — under BOTH forced backends, plus the
+/// same contract for the subset kernel `nearest_k_among`.
+#[test]
+fn nearest_k_clamp_edges_hold_under_both_backends() {
+    let _g = lock_dispatch();
+    let mut rng = Pcg32::new(49);
+    let (rows, d) = (67, 9);
+    let mut gallery = Mat::zeros(rows, d);
+    rng.fill_gaussian(&mut gallery.data, 0.0, 1.0);
+    let mut q = vec![0.0f32; d];
+    rng.fill_gaussian(&mut q, 0.0, 1.0);
+    let empty = Mat::zeros(0, d);
+    let all_rows: Vec<usize> = (0..rows).collect();
+
+    for backend in [KernelBackend::Scalar, KernelBackend::Simd] {
+        simd::force_backend(Some(backend));
+
+        // k = 0 and empty gallery: empty, no panic, no allocation bomb
+        assert!(dmlps::eval::nearest_k(&gallery, &q, 0).is_empty());
+        assert!(dmlps::eval::nearest_k(&empty, &q, 5).is_empty());
+        assert!(
+            dmlps::eval::nearest_k_among(&gallery, &q, 5, &[]).is_empty()
+        );
+
+        // k ≥ n clamps: usize::MAX and n+1 both mean "everything",
+        // identical to k = n down to the bits
+        let full = dmlps::eval::nearest_k(&gallery, &q, rows);
+        assert_eq!(full.len(), rows);
+        for over in [rows + 1, usize::MAX] {
+            let got = dmlps::eval::nearest_k(&gallery, &q, over);
+            assert_eq!(got.len(), rows, "clamp to gallery ({backend:?})");
+            for ((d1, i1), (d2, i2)) in got.iter().zip(&full) {
+                assert_eq!(i1, i2);
+                assert_eq!(d1.to_bits(), d2.to_bits());
+            }
+        }
+
+        // the subset kernel clamps to the candidate count, and over the
+        // full (ascending) range it is bit-identical to nearest_k
+        let among = dmlps::eval::nearest_k_among(
+            &gallery,
+            &q,
+            usize::MAX,
+            &all_rows,
+        );
+        assert_eq!(among.len(), rows);
+        for ((d1, i1), (d2, i2)) in among.iter().zip(&full) {
+            assert_eq!(i1, i2);
+            assert_eq!(d1.to_bits(), d2.to_bits(), "{backend:?}");
+        }
+    }
+}
+
 #[test]
 fn loss_grad_and_pair_dist_backend_agreement() {
     let _g = lock_dispatch();
