@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""CI gate for machine-readable BENCH_*.json baselines.
+
+Usage: validate_bench.py BENCH_a.json [BENCH_b.json ...]
+
+Every file must parse, every numeric leaf anywhere in the payload must
+be finite (the Rust writers refuse NaN/Inf too — this catches a
+regression in that guard as much as in the benches), and files whose
+top-level "bench" tag is recognised get shape checks on top:
+
+  serving  recall@k floor and a non-empty closed-loop sweep
+  lab      non-empty cells, each with params + resource stats, and the
+           aggregate/detail sections promised by result_type
+
+Exits nonzero with a per-file message on the first failure.
+"""
+
+import json
+import math
+import sys
+
+
+def non_finite_paths(node, path=""):
+    """Yield JSONPath-ish locations of every non-finite number."""
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        if not math.isfinite(node):
+            yield path or "$"
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from non_finite_paths(v, f"{path}[{i}]")
+    elif isinstance(node, dict):
+        for k, v in node.items():
+            yield from non_finite_paths(v, f"{path}.{k}" if path else k)
+
+
+def check_serving(doc):
+    recall = doc.get("recall_at_k")
+    if not isinstance(recall, (int, float)) or recall < 0.9:
+        return f"recall_at_k {recall!r} below the 0.9 floor"
+    if not doc.get("closed_loop"):
+        return "closed_loop sweep is empty"
+    return None
+
+
+def check_lab(doc):
+    cells = doc.get("cells")
+    if not cells:
+        return "lab report has no cells"
+    want = set(doc.get("result_type") or [])
+    for i, cell in enumerate(cells):
+        where = f"cells[{i}] ({cell.get('cell', '?')})"
+        if not isinstance(cell.get("params"), dict):
+            return f"{where}: missing params object"
+        if not isinstance(cell.get("resource"), dict):
+            return f"{where}: missing sidecar resource stats"
+        if "average" in want and not isinstance(
+            cell.get("average"), dict
+        ):
+            return f"{where}: result_type promises 'average'"
+        if "median" in want and not isinstance(cell.get("median"), dict):
+            return f"{where}: result_type promises 'median'"
+        if "details" in want and not cell.get("details"):
+            return f"{where}: result_type promises non-empty 'details'"
+    return None
+
+
+CHECKS = {"serving": check_serving, "lab": check_lab}
+
+
+def validate(path):
+    with open(path) as f:
+        doc = json.load(f)
+    # json.load accepts bare NaN/Infinity tokens, so scan explicitly
+    bad = list(non_finite_paths(doc))
+    if bad:
+        return f"non-finite values at: {', '.join(bad[:10])}"
+    check = CHECKS.get(doc.get("bench"))
+    return check(doc) if check else None
+
+
+def main(argv):
+    if not argv:
+        print("usage: validate_bench.py BENCH.json [...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        try:
+            err = validate(path)
+        except (OSError, ValueError) as e:
+            err = str(e)
+        if err:
+            print(f"FAIL {path}: {err}", file=sys.stderr)
+            return 1
+        print(f"ok {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

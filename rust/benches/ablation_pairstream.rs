@@ -235,9 +235,14 @@ fn main() {
         ])),
         ("train", Json::Arr(train_rows)),
     ]);
-    let path = std::env::var("DMLPS_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_pairs.json".into());
-    std::fs::write(&path, out.to_string_pretty())
-        .expect("write bench json");
-    println!("\nwrote machine-readable baseline to {path}");
+    match dmlps::metrics::write_bench_json("BENCH_pairs.json", &out) {
+        Ok(path) => println!(
+            "\nwrote machine-readable baseline to {}",
+            path.display()
+        ),
+        Err(e) => {
+            eprintln!("ERROR: {e}");
+            std::process::exit(1);
+        }
+    }
 }

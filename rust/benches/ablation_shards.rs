@@ -123,9 +123,14 @@ fn main() {
         ])),
         ("runs", Json::Arr(rows)),
     ]);
-    let path = std::env::var("DMLPS_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_ps.json".into());
-    std::fs::write(&path, out.to_string_pretty())
-        .expect("write bench json");
-    println!("\nwrote machine-readable baseline to {path}");
+    match dmlps::metrics::write_bench_json("BENCH_ps.json", &out) {
+        Ok(path) => println!(
+            "\nwrote machine-readable baseline to {}",
+            path.display()
+        ),
+        Err(e) => {
+            eprintln!("ERROR: {e}");
+            std::process::exit(1);
+        }
+    }
 }

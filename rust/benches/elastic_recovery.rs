@@ -112,10 +112,14 @@ fn main() {
             ("sim_seconds", Json::Num(r.sim_seconds)),
             ("restarts", Json::Num(r.restarts as f64)),
             ("redone_updates", Json::Num(r.redone_updates as f64)),
+            // null (not NaN) when no probe landed / the target was
+            // never reached — "missing" is valid, garbage is not, and
+            // the finite guard must only refuse the latter
             ("final_objective",
-             Json::Num(r.curve.final_objective().unwrap_or(f64::NAN))),
+             r.curve.final_objective().map(Json::Num)
+                 .unwrap_or(Json::Null)),
             ("time_to_target_s",
-             Json::Num(t.unwrap_or(f64::NAN))),
+             t.map(Json::Num).unwrap_or(Json::Null)),
             ("curve", curve_json(&r.curve)),
         ]));
     }
@@ -129,9 +133,14 @@ fn main() {
         ("target_objective", Json::Num(target)),
         ("scenarios", Json::Arr(rows)),
     ]);
-    let path = std::env::var("DMLPS_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_elastic.json".into());
-    std::fs::write(&path, out.to_string_pretty())
-        .expect("write bench json");
-    println!("\nwrote machine-readable baseline to {path}");
+    match dmlps::metrics::write_bench_json("BENCH_elastic.json", &out) {
+        Ok(path) => println!(
+            "\nwrote machine-readable baseline to {}",
+            path.display()
+        ),
+        Err(e) => {
+            eprintln!("ERROR: {e}");
+            std::process::exit(1);
+        }
+    }
 }

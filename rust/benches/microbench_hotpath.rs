@@ -340,9 +340,14 @@ fn main() {
          Json::Obj(knn_gbps_by_backend.into_iter().collect())),
         ("groups", Json::Arr(groups)),
     ]);
-    let path = std::env::var("DMLPS_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
-    std::fs::write(&path, out.to_string_pretty())
-        .expect("write bench json");
-    println!("\nwrote machine-readable baseline to {path}");
+    match dmlps::metrics::write_bench_json("BENCH_hotpath.json", &out) {
+        Ok(path) => println!(
+            "\nwrote machine-readable baseline to {}",
+            path.display()
+        ),
+        Err(e) => {
+            eprintln!("ERROR: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -201,21 +201,8 @@ fn main() {
     );
     handle.shutdown();
 
-    // ---- refuse to write garbage ----
-    let mut all = vec![recall, achieved, op50, op99];
-    for row in &closed {
-        for key in ["qps", "p50_ms", "p99_ms"] {
-            all.push(row.get(key).as_f64().unwrap_or(f64::NAN));
-        }
-    }
-    if all.iter().any(|v| !v.is_finite()) {
-        eprintln!(
-            "ERROR: non-finite serving metric — refusing to write \
-             BENCH_serving.json"
-        );
-        std::process::exit(1);
-    }
-
+    // the shared metrics::write_bench_json guard refuses non-finite
+    // payloads below, covering every number assembled here
     let out = Json::obj(vec![
         ("bench", Json::Str("serving".into())),
         ("quick", Json::Bool(quick)),
@@ -234,9 +221,14 @@ fn main() {
             ("p99_ms", Json::Num(op99)),
         ])),
     ]);
-    let path = std::env::var("DMLPS_BENCH_OUT")
-        .unwrap_or_else(|_| "BENCH_serving.json".into());
-    std::fs::write(&path, out.to_string_pretty())
-        .expect("write bench json");
-    println!("\nwrote machine-readable baseline to {path}");
+    match dmlps::metrics::write_bench_json("BENCH_serving.json", &out) {
+        Ok(path) => println!(
+            "\nwrote machine-readable baseline to {}",
+            path.display()
+        ),
+        Err(e) => {
+            eprintln!("ERROR: {e}");
+            std::process::exit(1);
+        }
+    }
 }

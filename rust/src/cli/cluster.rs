@@ -454,7 +454,6 @@ pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
         let resume = attempt > 1;
         let outcome = run_attempt(RunAttempt {
             exe: &exe,
-            cfg: &cfg,
             cfg_path: &cfg_path,
             a: &a,
             requested_addr: &net.addr,
@@ -534,7 +533,6 @@ pub fn cmd_cluster(args: &[String]) -> anyhow::Result<()> {
 /// Everything one spawn-and-supervise round needs.
 struct RunAttempt<'a> {
     exe: &'a Path,
-    cfg: &'a ExperimentConfig,
     cfg_path: &'a Path,
     a: &'a Args,
     requested_addr: &'a str,
@@ -558,7 +556,7 @@ fn run_attempt(r: RunAttempt<'_>) -> anyhow::Result<(Attempt, String)> {
 
     let mut children: Vec<(ChaosTarget, String, Child)> = Vec::new();
     let mut sc = node_command(
-        r.exe, "server", r.cfg, r.cfg_path, r.requested_addr, r.a,
+        r.exe, "server", r.cfg_path, r.requested_addr, r.a,
     );
     sc.arg("--report").arg(r.server_report)
         .arg("--addr-file").arg(r.addr_file);
@@ -591,7 +589,7 @@ fn run_attempt(r: RunAttempt<'_>) -> anyhow::Result<(Attempt, String)> {
 
     for (w, report) in r.worker_reports.iter().enumerate() {
         let mut wc = node_command(
-            r.exe, "worker", r.cfg, r.cfg_path, &addr, r.a,
+            r.exe, "worker", r.cfg_path, &addr, r.a,
         );
         wc.arg("--worker-id").arg(w.to_string())
             .arg("--engine").arg(r.a.get("engine"))
@@ -644,13 +642,12 @@ fn wait_addr_file(
     }
 }
 
-/// Base `dmlps node` invocation. `--seed` travels explicitly because
-/// `load_config` applies the CLI seed unconditionally (its default
-/// would otherwise clobber the config file's seed in the child).
+/// Base `dmlps node` invocation. The seed travels inside the saved
+/// config file — `load_config` leaves a config's seed alone unless
+/// `--seed` is explicitly given, so the children need no extra flag.
 fn node_command(
     exe: &Path,
     role: &str,
-    cfg: &ExperimentConfig,
     cfg_path: &Path,
     addr: &str,
     a: &Args,
@@ -659,7 +656,6 @@ fn node_command(
     c.arg("node")
         .arg("--role").arg(role)
         .arg("--config").arg(cfg_path)
-        .arg("--seed").arg(cfg.seed.to_string())
         .arg("--addr").arg(addr)
         .arg("--connect-attempts").arg(a.get("connect-attempts"))
         .arg("--backoff-ms").arg(a.get("backoff-ms"))

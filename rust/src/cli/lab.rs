@@ -1,0 +1,122 @@
+//! `dmlps lab` — the experiment-matrix harness front end.
+//!
+//! ```text
+//! dmlps lab run  <config.json> [--output dir] [--trials N]
+//! dmlps lab diff <old.json> <new.json> [--tolerance 0.25]
+//!                [--include-resource]
+//! ```
+//!
+//! `run` executes every experiment block of a lab config (see
+//! [`crate::lab`]) and writes one merged `BENCH_lab_<name>.json` per
+//! experiment. `diff` compares two merged reports cell-by-cell and
+//! exits nonzero if any metric drifts beyond the tolerance — the CI
+//! regression gate.
+
+use crate::lab::{self, LabConfig};
+use crate::util::cli::ArgParser;
+
+pub fn cmd_lab(args: &[String]) -> anyhow::Result<()> {
+    let usage = "usage: dmlps lab <run|diff> ... \
+                 (run `dmlps lab run --help` for options)";
+    let Some(verb) = args.first() else {
+        println!("{usage}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match verb.as_str() {
+        "run" => cmd_run(rest),
+        "diff" => cmd_diff(rest),
+        "--help" | "-h" | "help" => {
+            println!("{usage}");
+            Ok(())
+        }
+        other => {
+            println!("{usage}");
+            anyhow::bail!("unknown lab verb '{other}'")
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let p = ArgParser::new(
+        "dmlps lab run",
+        "run a lab config's experiment matrix",
+    )
+    .opt("output", "", "override the config's output directory")
+    .opt("trials", "0", "override trials per cell (0 = config value)");
+    let a = p.parse(args)?;
+    anyhow::ensure!(
+        a.positionals.len() == 1,
+        "lab run takes exactly one config path \
+         ({} given)",
+        a.positionals.len()
+    );
+    let mut cfg = LabConfig::load(std::path::Path::new(
+        &a.positionals[0],
+    ))?;
+    if !a.get("output").is_empty() {
+        cfg.global.output = std::path::PathBuf::from(a.get("output"));
+    }
+    let trials = a.get_usize("trials")?;
+    if trials > 0 {
+        for exp in &mut cfg.experiments {
+            exp.trials = trials;
+        }
+    }
+    let written = lab::run(&cfg)?;
+    println!(
+        "lab: {} experiment(s) complete:",
+        written.len()
+    );
+    for path in &written {
+        println!("  {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_diff(args: &[String]) -> anyhow::Result<()> {
+    let p = ArgParser::new(
+        "dmlps lab diff",
+        "compare two merged lab reports; nonzero exit on drift",
+    )
+    .opt(
+        "tolerance",
+        "0.25",
+        "max relative drift per metric before failing",
+    )
+    .flag(
+        "include-resource",
+        "also gate on per-cell resource stats (RSS, CPU)",
+    );
+    let a = p.parse(args)?;
+    anyhow::ensure!(
+        a.positionals.len() == 2,
+        "lab diff takes exactly two report paths (old new), \
+         {} given",
+        a.positionals.len()
+    );
+    let tolerance = a.get_f64("tolerance")?;
+    anyhow::ensure!(
+        tolerance.is_finite() && tolerance >= 0.0,
+        "--tolerance must be finite and >= 0"
+    );
+    let drifts = lab::diff_files(
+        std::path::Path::new(&a.positionals[0]),
+        std::path::Path::new(&a.positionals[1]),
+        tolerance,
+        a.has_flag("include-resource"),
+    )?;
+    if drifts.is_empty() {
+        println!(
+            "lab diff: OK — all metrics within tolerance {tolerance}"
+        );
+        return Ok(());
+    }
+    for d in &drifts {
+        eprintln!("DRIFT: {d}");
+    }
+    anyhow::bail!(
+        "{} metric(s) drifted beyond tolerance {tolerance}",
+        drifts.len()
+    )
+}

@@ -18,6 +18,7 @@
 
 pub mod cluster;
 pub mod driver;
+pub mod lab;
 pub mod serve;
 
 use std::sync::Arc;
@@ -43,6 +44,7 @@ pub fn main_entry() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "cluster" => cluster::cmd_cluster(&args),
         "node" => cluster::cmd_node(&args),
+        "lab" => lab::cmd_lab(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => serve::cmd_serve(&args),
         "eval" => cmd_eval(&args),
@@ -67,6 +69,7 @@ fn print_usage() {
          \x20 train              run the threaded async parameter server\n\
          \x20 cluster            spawn a server + worker process cluster\n\
          \x20 node               run one server/worker role over sockets\n\
+         \x20 lab                run/diff a config-driven experiment matrix\n\
          \x20 simulate           discrete-event cluster scalability study\n\
          \x20 serve              retrieval server over a saved metric\n\
          \x20 eval               evaluate a saved metric (PR curve, AP)\n\
@@ -122,8 +125,14 @@ pub(crate) fn load_config(
     if !cons.is_empty() {
         cfg.cluster.consistency = cons.parse::<Consistency>()?;
     }
-    if let Ok(seed) = a.get_u64("seed") {
-        cfg.seed = seed;
+    // tri-state: an empty --seed means "not given", so a config file's
+    // seed survives. (The old default of "42" clobbered it and forced
+    // `dmlps cluster` to re-pass --seed to every child.)
+    let seed = a.get("seed");
+    if !seed.is_empty() {
+        cfg.seed = seed
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("--seed: {e}"))?;
     }
     if let Ok(t) = a.get_usize("threads") {
         if t > 0 {
@@ -180,7 +189,7 @@ pub(crate) fn common_parser(cmd: &str, about: &str) -> ArgParser {
         .opt("workers", "0", "override worker count (0 = preset)")
         .opt("steps", "0", "override steps per worker (0 = preset)")
         .opt("consistency", "", "asp|bsp|ssp:N (default from preset)")
-        .opt("seed", "42", "PRNG seed")
+        .opt("seed", "", "PRNG seed (default: preset/config seed)")
         .opt("threads", "0",
              "compute threads per worker engine (0 = all cores)")
         .opt("server-shards", "0",
@@ -476,4 +485,58 @@ fn cmd_inspect_artifacts(_args: &[String]) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    /// `--seed` is tri-state: absent keeps the preset/config seed,
+    /// present overrides it. The old unconditional default silently
+    /// clobbered config-file seeds with 42.
+    #[test]
+    fn seed_resolves_only_when_explicitly_given() {
+        let p = common_parser("t", "t");
+
+        // preset default survives without --seed
+        let a = p.parse(&toks(&[])).unwrap();
+        assert_eq!(load_config(&a).unwrap().seed, 42);
+
+        // explicit --seed overrides
+        let a = p.parse(&toks(&["--seed", "7"])).unwrap();
+        assert_eq!(load_config(&a).unwrap().seed, 7);
+
+        // a config file's seed is preserved — the regression the
+        // unconditional CLI default used to cause
+        let path = std::env::temp_dir().join(format!(
+            "dmlps-cli-seed-{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, r#"{"seed": 1234}"#).unwrap();
+        let a = p
+            .parse(&toks(&["--config", path.to_str().unwrap()]))
+            .unwrap();
+        assert_eq!(load_config(&a).unwrap().seed, 1234);
+
+        // ...unless --seed is also given
+        let a = p
+            .parse(&toks(&[
+                "--config",
+                path.to_str().unwrap(),
+                "--seed",
+                "9",
+            ]))
+            .unwrap();
+        assert_eq!(load_config(&a).unwrap().seed, 9);
+        let _ = std::fs::remove_file(&path);
+
+        // a malformed seed is an error, never a silent fallback
+        let a = p.parse(&toks(&["--seed", "banana"])).unwrap();
+        let msg = load_config(&a).unwrap_err().to_string();
+        assert!(msg.contains("--seed"), "{msg}");
+    }
 }

@@ -681,18 +681,7 @@ impl ExperimentConfig {
             "artifact_variant",
         ];
         if let Some(map) = j.as_obj() {
-            for key in map.keys() {
-                if !KNOWN.contains(&key.as_str()) {
-                    let nearest = KNOWN
-                        .iter()
-                        .min_by_key(|k| edit_distance(k, key))
-                        .unwrap();
-                    anyhow::bail!(
-                        "unknown top-level config key '{key}' \
-                         (did you mean '{nearest}'?)"
-                    );
-                }
-            }
+            reject_unknown_keys(map, &KNOWN, "top-level config")?;
         }
         fn us(j: &Json, k: &str) -> anyhow::Result<usize> {
             j.get(k)
@@ -834,8 +823,32 @@ impl ExperimentConfig {
     }
 }
 
+/// Reject any key of `map` not in `known`, suggesting the nearest known
+/// key by edit distance. `ctx` names the object being validated in the
+/// error ("top-level config", "lab experiment", ...). Shared by
+/// [`ExperimentConfig::from_json`] and the lab-harness config loader so
+/// every JSON surface rejects typos the same way.
+pub fn reject_unknown_keys(
+    map: &std::collections::BTreeMap<String, Json>,
+    known: &[&str],
+    ctx: &str,
+) -> anyhow::Result<()> {
+    for key in map.keys() {
+        if !known.contains(&key.as_str()) {
+            let nearest = known
+                .iter()
+                .min_by_key(|k| edit_distance(k, key))
+                .expect("known key list must be non-empty");
+            anyhow::bail!(
+                "unknown {ctx} key '{key}' (did you mean '{nearest}'?)"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Levenshtein edit distance — powers the "did you mean" suggestion in
-/// [`ExperimentConfig::from_json`]'s unknown-key error.
+/// [`reject_unknown_keys`].
 fn edit_distance(a: &str, b: &str) -> usize {
     let (a, b): (Vec<char>, Vec<char>) =
         (a.chars().collect(), b.chars().collect());

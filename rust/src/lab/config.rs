@@ -1,0 +1,696 @@
+//! Lab config model: one global block + experiment blocks, with the
+//! same typo discipline as the experiment config — every unknown key is
+//! rejected through [`reject_unknown_keys`] with a "did you mean"
+//! suggestion, and every axis value is validated at load time so a bad
+//! matrix fails in milliseconds, not after an hour of cells.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::config::{
+    reject_unknown_keys, CompressionMode, Consistency, PairMode, Preset,
+};
+use crate::linalg::simd::KernelBackend;
+use crate::ps::FaultSpec;
+use crate::util::json::Json;
+
+/// Aggregation views the merged `BENCH_lab_*.json` carries per cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResultType {
+    Average,
+    Median,
+    /// Every trial's raw metrics (plus its resource window).
+    Details,
+}
+
+impl ResultType {
+    pub fn parse(s: &str) -> anyhow::Result<ResultType> {
+        match s {
+            "average" => Ok(ResultType::Average),
+            "median" => Ok(ResultType::Median),
+            "details" => Ok(ResultType::Details),
+            other => anyhow::bail!(
+                "unknown result_type '{other}' (average|median|details)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResultType::Average => "average",
+            ResultType::Median => "median",
+            ResultType::Details => "details",
+        }
+    }
+}
+
+/// What an experiment block measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabKind {
+    /// A PS training run (the `Session` path, or `dmlps cluster` under
+    /// [`ExecMode::Process`]).
+    Train,
+    /// The `loss_grad` kernel hot path (quick `microbench_hotpath`).
+    Hotpath,
+    /// In-process retrieval over a [`ServeEngine`]
+    /// (quick `serving_load`).
+    ///
+    /// [`ServeEngine`]: crate::serve::ServeEngine
+    Serving,
+}
+
+impl LabKind {
+    pub fn parse(s: &str) -> anyhow::Result<LabKind> {
+        match s {
+            "train" => Ok(LabKind::Train),
+            "hotpath" => Ok(LabKind::Hotpath),
+            "serving" => Ok(LabKind::Serving),
+            other => anyhow::bail!(
+                "unknown lab kind '{other}' (train|hotpath|serving)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LabKind::Train => "train",
+            LabKind::Hotpath => "hotpath",
+            LabKind::Serving => "serving",
+        }
+    }
+}
+
+/// Whether a train cell runs in-process or as a spawned
+/// `dmlps cluster` (real sockets, real process death).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Session,
+    Process,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> anyhow::Result<ExecMode> {
+        match s {
+            "session" => Ok(ExecMode::Session),
+            "process" => Ok(ExecMode::Process),
+            other => anyhow::bail!(
+                "unknown exec mode '{other}' (session|process)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Session => "session",
+            ExecMode::Process => "process",
+        }
+    }
+}
+
+/// The leading global block of a lab config.
+#[derive(Clone, Debug)]
+pub struct LabGlobal {
+    /// Directory for NDJSON streams and merged `BENCH_lab_*.json`.
+    pub output: PathBuf,
+    pub result_types: Vec<ResultType>,
+    /// Default trials per cell (experiment blocks may override).
+    pub trials: usize,
+    /// Sidecar sampling cadence in milliseconds.
+    pub sample_ms: u64,
+}
+
+impl Default for LabGlobal {
+    fn default() -> LabGlobal {
+        LabGlobal {
+            output: PathBuf::from("lab-out"),
+            result_types: vec![
+                ResultType::Average,
+                ResultType::Median,
+                ResultType::Details,
+            ],
+            trials: 1,
+            sample_ms: 50,
+        }
+    }
+}
+
+impl LabGlobal {
+    fn from_json(j: &Json) -> anyhow::Result<LabGlobal> {
+        let map = j.as_obj().ok_or_else(|| {
+            anyhow::anyhow!("the first lab block must be a global object")
+        })?;
+        const KNOWN: [&str; 4] =
+            ["output", "result_type", "sample_ms", "trials"];
+        reject_unknown_keys(map, &KNOWN, "lab global")?;
+        let mut g = LabGlobal::default();
+        if let Some(s) = j.get("output").as_str() {
+            anyhow::ensure!(!s.is_empty(), "lab 'output' must be non-empty");
+            g.output = PathBuf::from(s);
+        }
+        if let Some(arr) = j.get("result_type").as_arr() {
+            anyhow::ensure!(
+                !arr.is_empty(),
+                "lab 'result_type' must list at least one view"
+            );
+            g.result_types = arr
+                .iter()
+                .map(|v| {
+                    ResultType::parse(v.as_str().unwrap_or_default())
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if !j.get("trials").is_null() {
+            g.trials = j.get("trials").as_usize().ok_or_else(|| {
+                anyhow::anyhow!("lab 'trials' must be a positive integer")
+            })?;
+            anyhow::ensure!(g.trials > 0, "lab 'trials' must be >= 1");
+        }
+        if !j.get("sample_ms").is_null() {
+            g.sample_ms =
+                j.get("sample_ms").as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("lab 'sample_ms' must be an integer")
+                })? as u64;
+            anyhow::ensure!(
+                g.sample_ms > 0,
+                "lab 'sample_ms' must be >= 1"
+            );
+        }
+        Ok(g)
+    }
+}
+
+/// One experiment block: a parameter matrix over one measurement kind.
+#[derive(Clone, Debug)]
+pub struct LabExperiment {
+    pub name: String,
+    pub kind: LabKind,
+    /// Base preset for train cells (`tiny|mnist|imnet60k|imnet1m`).
+    pub preset: String,
+    pub exec: ExecMode,
+    /// Fixed scalar knobs applied before the axes.
+    pub overrides: BTreeMap<String, Json>,
+    /// Parameter lists, name-sorted; their cross-product is the matrix.
+    pub axes: Vec<(String, Vec<Json>)>,
+    pub trials: usize,
+}
+
+/// Axis names each kind sweeps (sorted; the error suggestions and the
+/// README table both read from here).
+pub fn axes_for(kind: LabKind) -> &'static [&'static str] {
+    match kind {
+        LabKind::Train => &[
+            "compression",
+            "consistency",
+            "fault_profile",
+            "keep",
+            "kernel_backend",
+            "pairs_mode",
+            "server_shards",
+            "threads",
+            "workers",
+        ],
+        LabKind::Hotpath => &["kernel_backend", "threads"],
+        LabKind::Serving => &["batch", "nclusters", "scan"],
+    }
+}
+
+/// Fixed-knob override names each kind accepts.
+fn overrides_for(kind: LabKind) -> &'static [&'static str] {
+    match kind {
+        LabKind::Train => &[
+            "keep",
+            "n_dissimilar",
+            "n_similar",
+            "n_test",
+            "n_test_pairs",
+            "n_train",
+            "seed",
+            "server_batch",
+            "server_shards",
+            "steps",
+            "threads",
+            "workers",
+        ],
+        LabKind::Hotpath => &["batch", "d", "k"],
+        LabKind::Serving => &["gallery", "k", "kproj", "queries"],
+    }
+}
+
+impl LabExperiment {
+    fn from_json(j: &Json, global: &LabGlobal) -> anyhow::Result<Self> {
+        let map = j.as_obj().ok_or_else(|| {
+            anyhow::anyhow!("every lab experiment must be a JSON object")
+        })?;
+        // {"predefined": "..."} pulls in a shipped block; only a trial
+        // override may ride along.
+        if map.contains_key("predefined") {
+            reject_unknown_keys(
+                map,
+                &["predefined", "trials"],
+                "lab predefined block",
+            )?;
+            let name =
+                j.get("predefined").as_str().ok_or_else(|| {
+                    anyhow::anyhow!("'predefined' must be a string")
+                })?;
+            let src = super::presets::predefined(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown predefined experiment '{name}' \
+                     (available: {})",
+                    super::presets::names().join(", ")
+                )
+            })?;
+            let block = Json::parse(src).map_err(|e| {
+                anyhow::anyhow!("predefined '{name}' is invalid: {e}")
+            })?;
+            let mut exp = LabExperiment::from_json(&block, global)?;
+            if !j.get("trials").is_null() {
+                exp.trials =
+                    j.get("trials").as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("'trials' must be an integer")
+                    })?;
+                anyhow::ensure!(exp.trials > 0, "'trials' must be >= 1");
+            }
+            return Ok(exp);
+        }
+
+        const KNOWN: [&str; 7] = [
+            "exec", "kind", "name", "overrides", "params", "preset",
+            "trials",
+        ];
+        reject_unknown_keys(map, &KNOWN, "lab experiment")?;
+        let name = j
+            .get("name")
+            .as_str()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "every lab experiment needs a non-empty 'name'"
+                )
+            })?
+            .to_string();
+        anyhow::ensure!(
+            name.chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "experiment name '{name}' must be [A-Za-z0-9_-] \
+             (it names files)"
+        );
+        let kind = LabKind::parse(j.get("kind").as_str().unwrap_or("train"))?;
+        let exec =
+            ExecMode::parse(j.get("exec").as_str().unwrap_or("session"))?;
+        anyhow::ensure!(
+            exec == ExecMode::Session || kind == LabKind::Train,
+            "experiment '{name}': exec=process supports only kind=train"
+        );
+        let preset = j.get("preset").as_str().unwrap_or("tiny").to_string();
+        if kind == LabKind::Train {
+            // fail on a typo'd preset at load time, not mid-matrix
+            Preset::parse(&preset)?;
+        }
+
+        let mut overrides = BTreeMap::new();
+        if !j.get("overrides").is_null() {
+            let ov = j.get("overrides").as_obj().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "experiment '{name}': 'overrides' must be an object"
+                )
+            })?;
+            reject_unknown_keys(
+                ov,
+                overrides_for(kind),
+                &format!("lab '{}' override", kind.name()),
+            )?;
+            overrides = ov.clone();
+        }
+
+        let mut axes: Vec<(String, Vec<Json>)> = Vec::new();
+        if !j.get("params").is_null() {
+            let params = j.get("params").as_obj().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "experiment '{name}': 'params' must be an object \
+                     of value lists"
+                )
+            })?;
+            reject_unknown_keys(
+                params,
+                axes_for(kind),
+                &format!("lab '{}' axis", kind.name()),
+            )?;
+            // BTreeMap iteration = name-sorted axes = deterministic
+            // expansion order
+            for (axis, vals) in params {
+                let vals = vals.as_arr().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "experiment '{name}': axis '{axis}' must be \
+                         a list"
+                    )
+                })?;
+                anyhow::ensure!(
+                    !vals.is_empty(),
+                    "experiment '{name}': axis '{axis}' is empty"
+                );
+                for v in vals {
+                    validate_axis_value(kind, axis, v).map_err(|e| {
+                        anyhow::anyhow!("experiment '{name}': {e}")
+                    })?;
+                }
+                axes.push((axis.clone(), vals.to_vec()));
+            }
+        }
+        if exec == ExecMode::Process {
+            for (axis, vals) in &axes {
+                if axis == "fault_profile" {
+                    anyhow::ensure!(
+                        vals.iter().all(|v| v.as_str() == Some("none")),
+                        "experiment '{name}': fault injection needs \
+                         exec=session (the socket transport has no \
+                         fault hooks)"
+                    );
+                }
+            }
+        }
+
+        let mut trials = global.trials;
+        if !j.get("trials").is_null() {
+            trials = j.get("trials").as_usize().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "experiment '{name}': 'trials' must be an integer"
+                )
+            })?;
+            anyhow::ensure!(
+                trials > 0,
+                "experiment '{name}': 'trials' must be >= 1"
+            );
+        }
+        Ok(LabExperiment {
+            name,
+            kind,
+            preset,
+            exec,
+            overrides,
+            axes,
+            trials,
+        })
+    }
+}
+
+/// Check one axis value parses into its typed knob.
+fn validate_axis_value(
+    kind: LabKind,
+    axis: &str,
+    v: &Json,
+) -> anyhow::Result<()> {
+    let num = || {
+        v.as_usize().ok_or_else(|| {
+            anyhow::anyhow!(
+                "axis '{axis}' value {} must be a non-negative integer",
+                v.to_string_compact()
+            )
+        })
+    };
+    let string = || {
+        v.as_str().ok_or_else(|| {
+            anyhow::anyhow!(
+                "axis '{axis}' value {} must be a string",
+                v.to_string_compact()
+            )
+        })
+    };
+    match (kind, axis) {
+        (_, "workers") | (_, "server_shards") | (_, "nclusters")
+        | (_, "batch") => {
+            anyhow::ensure!(num()? >= 1, "axis '{axis}' must be >= 1");
+        }
+        (_, "threads") => {
+            // 0 = machine default, same contract as the CLI knob
+            num()?;
+        }
+        (_, "consistency") => {
+            Consistency::parse(string()?)?;
+        }
+        (_, "compression") => {
+            string()?.parse::<CompressionMode>()?;
+        }
+        (_, "keep") => {
+            let x = v.as_f64().unwrap_or(f64::NAN);
+            anyhow::ensure!(
+                x > 0.0 && x <= 1.0,
+                "axis 'keep' must be in (0, 1]"
+            );
+        }
+        (_, "pairs_mode") => {
+            string()?.parse::<PairMode>()?;
+        }
+        (_, "fault_profile") => {
+            parse_fault_profile(string()?)?;
+        }
+        (_, "kernel_backend") => {
+            parse_backend(string()?)?;
+        }
+        (_, "scan") => {
+            let s = string()?;
+            anyhow::ensure!(
+                s == "exact" || s == "approx",
+                "axis 'scan' must be exact|approx, got '{s}'"
+            );
+        }
+        _ => {} // key membership already checked by reject_unknown_keys
+    }
+    Ok(())
+}
+
+/// Parse a `kernel_backend` value: `auto` (runtime dispatch) or a
+/// forced backend. Forcing `simd` on a build/CPU without it degrades
+/// to scalar, same as the env knob.
+pub(crate) fn parse_backend(
+    s: &str,
+) -> anyhow::Result<Option<KernelBackend>> {
+    match s {
+        "auto" => Ok(None),
+        "scalar" => Ok(Some(KernelBackend::Scalar)),
+        "simd" => Ok(Some(KernelBackend::Simd)),
+        other => anyhow::bail!(
+            "kernel_backend must be auto|scalar|simd, got '{other}'"
+        ),
+    }
+}
+
+/// Parse a `fault_profile` axis value into a [`FaultSpec`]: `none`, or
+/// `+`-joined terms `drop:<p>` (drop gradient *and* parameter messages
+/// with probability p) and `lat:<ms>` (delivery latency), e.g.
+/// `drop:0.1+lat:5`.
+pub fn parse_fault_profile(s: &str) -> anyhow::Result<FaultSpec> {
+    let mut spec = FaultSpec::perfect();
+    if s == "none" {
+        return Ok(spec);
+    }
+    anyhow::ensure!(!s.is_empty(), "empty fault_profile (use 'none')");
+    for term in s.split('+') {
+        if let Some(p) = term.strip_prefix("drop:") {
+            let p: f64 = p
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault term '{term}': {e}"))?;
+            anyhow::ensure!(
+                (0.0..1.0).contains(&p),
+                "drop probability must be in [0, 1), got {p}"
+            );
+            spec.drop_grad_prob = p;
+            spec.drop_param_prob = p;
+        } else if let Some(ms) = term.strip_prefix("lat:") {
+            let ms: f64 = ms
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault term '{term}': {e}"))?;
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "latency must be finite and >= 0, got {ms}"
+            );
+            spec.latency = Duration::from_secs_f64(ms / 1e3);
+        } else {
+            anyhow::bail!(
+                "unknown fault term '{term}' \
+                 (none | drop:<p> | lat:<ms>, '+'-joined)"
+            );
+        }
+    }
+    Ok(spec)
+}
+
+/// A parsed lab config: global block + at least one experiment.
+#[derive(Clone, Debug)]
+pub struct LabConfig {
+    pub global: LabGlobal,
+    pub experiments: Vec<LabExperiment>,
+}
+
+impl LabConfig {
+    pub fn parse(j: &Json) -> anyhow::Result<LabConfig> {
+        let blocks = j.as_arr().ok_or_else(|| {
+            anyhow::anyhow!(
+                "a lab config is a JSON array: one global block, then \
+                 experiment blocks"
+            )
+        })?;
+        anyhow::ensure!(
+            blocks.len() >= 2,
+            "a lab config needs a global block plus at least one \
+             experiment ({} block(s) found)",
+            blocks.len()
+        );
+        let global = LabGlobal::from_json(&blocks[0])?;
+        let mut experiments = Vec::new();
+        for b in &blocks[1..] {
+            let exp = LabExperiment::from_json(b, &global)?;
+            anyhow::ensure!(
+                experiments
+                    .iter()
+                    .all(|e: &LabExperiment| e.name != exp.name),
+                "duplicate experiment name '{}'",
+                exp.name
+            );
+            experiments.push(exp);
+        }
+        Ok(LabConfig { global, experiments })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<LabConfig> {
+        Self::parse(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(extra: &str) -> String {
+        format!(
+            r#"[{{"output": "o", "trials": 2}},
+                {{"name": "t", "kind": "train", {extra}
+                  "params": {{"workers": [1, 2]}}}}]"#
+        )
+    }
+
+    #[test]
+    fn parses_minimal_config() {
+        let cfg =
+            LabConfig::parse(&Json::parse(&minimal("")).unwrap()).unwrap();
+        assert_eq!(cfg.global.trials, 2);
+        assert_eq!(cfg.experiments.len(), 1);
+        let e = &cfg.experiments[0];
+        assert_eq!(e.kind, LabKind::Train);
+        assert_eq!(e.trials, 2);
+        assert_eq!(e.axes.len(), 1);
+    }
+
+    #[test]
+    fn unknown_global_key_suggests_nearest() {
+        let j = Json::parse(
+            r#"[{"trails": 3}, {"name": "x", "params": {}}]"#,
+        )
+        .unwrap();
+        let msg = LabConfig::parse(&j).unwrap_err().to_string();
+        assert!(msg.contains("unknown lab global key 'trails'"), "{msg}");
+        assert!(msg.contains("did you mean 'trials'"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_experiment_key_suggests_nearest() {
+        let j = Json::parse(
+            r#"[{}, {"name": "x", "parms": {"workers": [1]}}]"#,
+        )
+        .unwrap();
+        let msg = LabConfig::parse(&j).unwrap_err().to_string();
+        assert!(msg.contains("did you mean 'params'"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_axis_suggests_nearest() {
+        let j = Json::parse(
+            r#"[{}, {"name": "x", "params": {"worker": [1]}}]"#,
+        )
+        .unwrap();
+        let msg = LabConfig::parse(&j).unwrap_err().to_string();
+        assert!(msg.contains("unknown lab 'train' axis key"), "{msg}");
+        assert!(msg.contains("did you mean 'workers'"), "{msg}");
+    }
+
+    #[test]
+    fn bad_axis_values_fail_at_load() {
+        for (axis, val) in [
+            ("consistency", "\"sspx\""),
+            ("compression", "\"gzip\""),
+            ("kernel_backend", "\"avx\""),
+            ("keep", "1.5"),
+            ("fault_profile", "\"drop:2\""),
+            ("workers", "0"),
+        ] {
+            let j = Json::parse(&format!(
+                r#"[{{}}, {{"name": "x",
+                     "params": {{"{axis}": [{val}]}}}}]"#
+            ))
+            .unwrap();
+            assert!(
+                LabConfig::parse(&j).is_err(),
+                "{axis}={val} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_profiles_parse() {
+        assert!(parse_fault_profile("none").unwrap().is_perfect());
+        let f = parse_fault_profile("drop:0.25").unwrap();
+        assert_eq!(f.drop_grad_prob, 0.25);
+        assert_eq!(f.drop_param_prob, 0.25);
+        let f = parse_fault_profile("drop:0.1+lat:5").unwrap();
+        assert_eq!(f.drop_grad_prob, 0.1);
+        assert_eq!(f.latency, Duration::from_millis(5));
+        assert!(parse_fault_profile("jitter:1").is_err());
+        assert!(parse_fault_profile("").is_err());
+    }
+
+    #[test]
+    fn process_mode_rejects_fault_injection() {
+        let j = Json::parse(
+            r#"[{}, {"name": "x", "exec": "process",
+                 "params": {"fault_profile": ["drop:0.1"]}}]"#,
+        )
+        .unwrap();
+        let msg = LabConfig::parse(&j).unwrap_err().to_string();
+        assert!(msg.contains("exec=session"), "{msg}");
+    }
+
+    #[test]
+    fn predefined_blocks_resolve_and_take_trial_overrides() {
+        let j = Json::parse(
+            r#"[{"trials": 3},
+                {"predefined": "hotpath_quick", "trials": 1}]"#,
+        )
+        .unwrap();
+        let cfg = LabConfig::parse(&j).unwrap();
+        let e = &cfg.experiments[0];
+        assert_eq!(e.name, "hotpath_quick");
+        assert_eq!(e.kind, LabKind::Hotpath);
+        assert_eq!(e.trials, 1);
+        // every shipped block must parse on its own
+        for name in super::super::presets::names() {
+            let j = Json::parse(&format!(
+                r#"[{{}}, {{"predefined": "{name}"}}]"#
+            ))
+            .unwrap();
+            LabConfig::parse(&j)
+                .unwrap_or_else(|e| panic!("predefined {name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let j = Json::parse(
+            r#"[{}, {"name": "x", "params": {}},
+                    {"name": "x", "params": {}}]"#,
+        )
+        .unwrap();
+        let msg = LabConfig::parse(&j).unwrap_err().to_string();
+        assert!(msg.contains("duplicate experiment name"), "{msg}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Regression comparator for merged lab reports: `dmlps lab diff`
+//! matches cells between an old and a new `BENCH_lab_<name>.json` by
+//! their canonical parameter key and flags every metric whose relative
+//! drift exceeds the tolerance. The CLI exits nonzero on any drift
+//! line, which is what gates CI.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::report::key_of_params;
+use crate::util::json::Json;
+
+/// Relative drift between two measurements: 0 when bit-equal,
+/// `|a-b| / max(|a|,|b|)` otherwise (symmetric, scale-free), infinite
+/// when either side is non-finite.
+pub fn rel_drift(a: f64, b: f64) -> f64 {
+    if a == b {
+        return 0.0;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return f64::INFINITY;
+    }
+    (a - b).abs() / a.abs().max(b.abs())
+}
+
+/// The aggregate metrics a cell is compared on: `average` if present,
+/// else `median`, else the mean over `details` rows — so reports
+/// written with any `result_type` subset stay diffable.
+fn aggregate_metrics(cell: &Json) -> BTreeMap<String, f64> {
+    for view in ["average", "median"] {
+        if let Some(m) = cell.get(view).as_obj() {
+            return m
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                .collect();
+        }
+    }
+    let mut sums: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+    if let Some(rows) = cell.get("details").as_arr() {
+        for row in rows {
+            if let Some(m) = row.get("metrics").as_obj() {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        let e = sums.entry(k.clone()).or_insert((0.0, 0));
+                        e.0 += x;
+                        e.1 += 1;
+                    }
+                }
+            }
+        }
+    }
+    sums.into_iter()
+        .map(|(k, (s, n))| (k, s / n as f64))
+        .collect()
+}
+
+fn cells_by_key(report: &Json) -> BTreeMap<String, Json> {
+    let mut out = BTreeMap::new();
+    if let Some(cells) = report.get("cells").as_arr() {
+        for c in cells {
+            out.insert(key_of_params(c.get("params")), c.clone());
+        }
+    }
+    out
+}
+
+/// Compare two merged reports. Returns one human-readable line per
+/// divergence; empty means "within tolerance". Resource stats are
+/// advisory by default (they vary with machine load) — pass
+/// `include_resource` to gate on them too.
+pub fn diff_reports(
+    old: &Json,
+    new: &Json,
+    tolerance: f64,
+    include_resource: bool,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let (oe, ne) = (
+        old.get("experiment").as_str().unwrap_or("?").to_string(),
+        new.get("experiment").as_str().unwrap_or("?").to_string(),
+    );
+    if oe != ne {
+        out.push(format!(
+            "experiment name mismatch: old '{oe}' vs new '{ne}'"
+        ));
+    }
+    let old_cells = cells_by_key(old);
+    let new_cells = cells_by_key(new);
+    for key in old_cells.keys() {
+        if !new_cells.contains_key(key) {
+            out.push(format!("cell [{key}] missing from new report"));
+        }
+    }
+    for key in new_cells.keys() {
+        if !old_cells.contains_key(key) {
+            out.push(format!("cell [{key}] only in new report"));
+        }
+    }
+    for (key, oc) in &old_cells {
+        let Some(nc) = new_cells.get(key) else { continue };
+        let om = aggregate_metrics(oc);
+        let nm = aggregate_metrics(nc);
+        for (metric, &a) in &om {
+            let Some(&b) = nm.get(metric) else {
+                out.push(format!(
+                    "[{key}] metric '{metric}' missing from new report"
+                ));
+                continue;
+            };
+            let d = rel_drift(a, b);
+            if d > tolerance {
+                out.push(format!(
+                    "[{key}] {metric}: {a} -> {b} \
+                     (drift {d:.3} > tolerance {tolerance})"
+                ));
+            }
+        }
+        for metric in nm.keys() {
+            if !om.contains_key(metric) {
+                out.push(format!(
+                    "[{key}] metric '{metric}' only in new report"
+                ));
+            }
+        }
+        if include_resource {
+            let res = |c: &Json| -> BTreeMap<String, f64> {
+                c.get("resource")
+                    .as_obj()
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, v)| {
+                                v.as_f64().map(|x| (k.clone(), x))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let (or, nr) = (res(oc), res(nc));
+            for (metric, &a) in &or {
+                if let Some(&b) = nr.get(metric) {
+                    let d = rel_drift(a, b);
+                    if d > tolerance {
+                        out.push(format!(
+                            "[{key}] resource.{metric}: {a} -> {b} \
+                             (drift {d:.3} > tolerance {tolerance})"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`diff_reports`] over two files on disk.
+pub fn diff_files(
+    old: &Path,
+    new: &Path,
+    tolerance: f64,
+    include_resource: bool,
+) -> anyhow::Result<Vec<String>> {
+    let o = Json::parse_file(old)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", old.display()))?;
+    let n = Json::parse_file(new)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", new.display()))?;
+    Ok(diff_reports(&o, &n, tolerance, include_resource))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(qps: f64, with_extra_cell: bool) -> Json {
+        let mut cells = vec![Json::obj(vec![
+            (
+                "params",
+                Json::obj(vec![("workers", Json::Num(1.0))]),
+            ),
+            (
+                "average",
+                Json::obj(vec![("qps", Json::Num(qps))]),
+            ),
+            (
+                "resource",
+                Json::obj(vec![(
+                    "peak_rss_bytes",
+                    Json::Num(1e6),
+                )]),
+            ),
+        ])];
+        if with_extra_cell {
+            cells.push(Json::obj(vec![
+                (
+                    "params",
+                    Json::obj(vec![("workers", Json::Num(2.0))]),
+                ),
+                (
+                    "average",
+                    Json::obj(vec![("qps", Json::Num(qps))]),
+                ),
+            ]));
+        }
+        Json::obj(vec![
+            ("experiment", Json::Str("t".into())),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+
+    #[test]
+    fn identical_reports_diff_clean() {
+        let r = report(100.0, true);
+        assert!(diff_reports(&r, &r, 0.0, true).is_empty());
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_is_flagged() {
+        let old = report(100.0, false);
+        let new = report(140.0, false);
+        // drift = 40/140 ≈ 0.286
+        assert!(diff_reports(&old, &new, 0.3, false).is_empty());
+        let drifts = diff_reports(&old, &new, 0.25, false);
+        assert_eq!(drifts.len(), 1, "{drifts:?}");
+        assert!(drifts[0].contains("qps"), "{drifts:?}");
+    }
+
+    #[test]
+    fn missing_and_extra_cells_are_reported() {
+        let old = report(100.0, true);
+        let new = report(100.0, false);
+        let drifts = diff_reports(&old, &new, 0.5, false);
+        assert_eq!(drifts.len(), 1, "{drifts:?}");
+        assert!(drifts[0].contains("missing from new"), "{drifts:?}");
+        let drifts = diff_reports(&new, &old, 0.5, false);
+        assert!(drifts[0].contains("only in new"), "{drifts:?}");
+    }
+
+    #[test]
+    fn details_fallback_aggregates_when_no_average() {
+        let cell = |vals: &[f64]| {
+            Json::obj(vec![
+                ("params", Json::obj(vec![])),
+                (
+                    "details",
+                    Json::Arr(
+                        vals.iter()
+                            .map(|&v| {
+                                Json::obj(vec![(
+                                    "metrics",
+                                    Json::obj(vec![(
+                                        "x",
+                                        Json::Num(v),
+                                    )]),
+                                )])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        let rep = |vals: &[f64]| {
+            Json::obj(vec![
+                ("experiment", Json::Str("t".into())),
+                ("cells", Json::Arr(vec![cell(vals)])),
+            ])
+        };
+        // means are 2.0 vs 2.0 — clean even though trials differ
+        let old = rep(&[1.0, 3.0]);
+        let new = rep(&[2.0, 2.0]);
+        assert!(diff_reports(&old, &new, 1e-9, false).is_empty());
+        let drifted = rep(&[4.0, 4.0]);
+        assert!(!diff_reports(&old, &drifted, 0.25, false).is_empty());
+    }
+
+    #[test]
+    fn rel_drift_edge_cases() {
+        assert_eq!(rel_drift(0.0, 0.0), 0.0);
+        assert_eq!(rel_drift(f64::NAN, f64::NAN), f64::INFINITY);
+        assert_eq!(rel_drift(1.0, f64::INFINITY), f64::INFINITY);
+        assert!((rel_drift(100.0, 140.0) - 40.0 / 140.0).abs() < 1e-12);
+        assert_eq!(rel_drift(-1.0, 1.0), 2.0 / 1.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Cross-product expansion of an experiment's parameter axes.
+//!
+//! Axes arrive name-sorted (the config layer reads them out of a
+//! `BTreeMap`), and [`expand`] walks them odometer-style with the
+//! *last* axis spinning fastest, so cell order is a pure function of
+//! the config — two runs of the same matrix line up cell-for-cell,
+//! which is what lets `lab diff` match cells across reports.
+
+use crate::util::json::Json;
+
+/// One point of the matrix: its position in expansion order plus the
+/// `(axis, value)` assignments, in axis order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub index: usize,
+    pub params: Vec<(String, Json)>,
+}
+
+/// Expand axes to their full cross-product. An experiment with no axes
+/// is a single cell with no parameters (still measured, still
+/// aggregated). The number of cells is exactly the product of the
+/// axis lengths.
+pub fn expand(axes: &[(String, Vec<Json>)]) -> Vec<Cell> {
+    let total: usize =
+        axes.iter().map(|(_, vals)| vals.len()).product();
+    let mut cells = Vec::with_capacity(total);
+    for index in 0..total {
+        // decode `index` in mixed radix, last axis fastest
+        let mut rem = index;
+        let mut params = Vec::with_capacity(axes.len());
+        for (name, vals) in axes.iter().rev() {
+            params.push((name.clone(), vals[rem % vals.len()].clone()));
+            rem /= vals.len();
+        }
+        params.reverse();
+        cells.push(Cell { index, params });
+    }
+    cells
+}
+
+/// Canonical `key=value,key=value` label for a cell — the join key
+/// between trial records, sidecar windows, and old/new diff reports.
+pub fn cell_key(params: &[(String, Json)]) -> String {
+    params
+        .iter()
+        .map(|(k, v)| format!("{k}={}", v.to_string_compact()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn axis(name: &str, vals: &[i64]) -> (String, Vec<Json>) {
+        (
+            name.to_string(),
+            vals.iter().map(|&v| Json::Num(v as f64)).collect(),
+        )
+    }
+
+    #[test]
+    fn cell_count_is_product_of_axis_lengths() {
+        let axes = vec![
+            axis("a", &[1, 2]),
+            axis("b", &[10, 20, 30]),
+            axis("c", &[0, 1]),
+        ];
+        let cells = expand(&axes);
+        assert_eq!(cells.len(), 2 * 3 * 2);
+        // all keys distinct
+        let keys: std::collections::BTreeSet<String> =
+            cells.iter().map(|c| cell_key(&c.params)).collect();
+        assert_eq!(keys.len(), cells.len());
+    }
+
+    #[test]
+    fn last_axis_spins_fastest_and_order_is_deterministic() {
+        let axes = vec![axis("a", &[1, 2]), axis("b", &[10, 20])];
+        let keys: Vec<String> = expand(&axes)
+            .iter()
+            .map(|c| cell_key(&c.params))
+            .collect();
+        assert_eq!(
+            keys,
+            vec!["a=1,b=10", "a=1,b=20", "a=2,b=10", "a=2,b=20"]
+        );
+        assert_eq!(expand(&axes), expand(&axes));
+    }
+
+    #[test]
+    fn no_axes_is_one_empty_cell() {
+        let cells = expand(&[]);
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].params.is_empty());
+        assert_eq!(cell_key(&cells[0].params), "");
+    }
+
+    #[test]
+    fn string_values_render_with_quotes() {
+        let axes = vec![(
+            "consistency".to_string(),
+            vec![Json::Str("asp".into())],
+        )];
+        let cells = expand(&axes);
+        assert_eq!(cell_key(&cells[0].params), "consistency=\"asp\"");
+    }
+}

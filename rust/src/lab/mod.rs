@@ -1,0 +1,45 @@
+//! Experiment-matrix harness: a config-driven scenario runner with a
+//! resource-telemetry sidecar — the subsystem that turns the repo's
+//! hand-rolled benches into one regression-gated perf trajectory.
+//!
+//! A lab config is a JSON **array**: one global block (output dir,
+//! `result_type`, trial count, sidecar cadence) followed by experiment
+//! blocks whose `params` lists expand to their full cross-product
+//! ([`matrix::expand`]), secretsharing-testbed style. The runner
+//! ([`run`]) executes every cell × trial through the existing
+//! [`Session`](crate::session::Session) API (or a spawned
+//! `dmlps cluster` for process-mode cells), emitting one NDJSON record
+//! per trial while a sidecar thread ([`sidecar::Sidecar`]) samples
+//! `/proc` (RSS, CPU time, thread count, IO) into a parallel NDJSON
+//! stream. [`report::merge_streams`] then flattens both streams into a
+//! per-experiment `BENCH_lab_<name>.json` (average / median / details
+//! aggregation plus per-cell resource stats), and [`diff_files`] is the
+//! regression comparator `dmlps lab diff` exits nonzero on.
+//!
+//! ```text
+//! [ {"output": "lab-out", "result_type": ["average","median","details"],
+//!    "trials": 2},
+//!   {"name": "train_matrix", "kind": "train", "preset": "tiny",
+//!    "overrides": {"steps": 60},
+//!    "params": {"workers": [1,2], "consistency": ["asp","bsp"]}},
+//!   {"predefined": "hotpath_quick"} ]
+//! ```
+
+pub mod config;
+pub mod diff;
+pub mod matrix;
+pub mod ndjson;
+pub mod presets;
+pub mod report;
+pub mod runner;
+pub mod sidecar;
+
+pub use config::{
+    parse_fault_profile, ExecMode, LabConfig, LabExperiment, LabGlobal,
+    LabKind, ResultType,
+};
+pub use diff::{diff_files, diff_reports};
+pub use matrix::{cell_key, expand, Cell};
+pub use report::merge_streams;
+pub use runner::run;
+pub use sidecar::{ResourceSample, Sidecar};

@@ -1,0 +1,98 @@
+//! Append-only NDJSON streams: one compact JSON record per line.
+//!
+//! The runner and the sidecar both write through [`append`] — a plain
+//! `O_APPEND` write, no locking, because each stream has exactly one
+//! writer. Records survive a crashed run up to the last complete line;
+//! [`read_all`] treats a missing file as an empty stream so the merge
+//! step degrades gracefully.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Append one record to `path` as a single line.
+pub fn append(path: &Path, record: &Json) -> anyhow::Result<()> {
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut line = record.to_string_compact();
+    line.push('\n');
+    f.write_all(line.as_bytes())
+        .map_err(|e| anyhow::anyhow!("append {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Read every record of an NDJSON file. A missing file is an empty
+/// stream; a malformed line is an error naming the file and line.
+pub fn read_all(path: &Path) -> anyhow::Result<Vec<Json>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => {
+            anyhow::bail!("read {}: {e}", path.display())
+        }
+    };
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1)
+        })?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "dmlps-ndjson-{}-{name}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn append_then_read_roundtrips_in_order() {
+        let path = tmp("roundtrip.ndjson");
+        let _ = std::fs::remove_file(&path);
+        for i in 0..3 {
+            append(
+                &path,
+                &Json::obj(vec![("i", Json::Num(i as f64))]),
+            )
+            .unwrap();
+        }
+        let recs = read_all(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.get("i").as_usize(), Some(i));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_empty_stream() {
+        assert!(read_all(&tmp("never-created.ndjson"))
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn malformed_line_errors_with_location() {
+        let path = tmp("bad.ndjson");
+        std::fs::write(&path, "{\"ok\": 1}\nnot json\n").unwrap();
+        let msg = read_all(&path).unwrap_err().to_string();
+        assert!(msg.contains(":2:"), "{msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

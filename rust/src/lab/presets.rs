@@ -1,0 +1,58 @@
+//! Predefined experiment blocks — quick variants of the repo's
+//! standalone benches (`microbench_hotpath`, `ablation_wire`,
+//! `serving_load`) expressed as lab matrices, so a config can pull a
+//! known-good trajectory in with `{"predefined": "<name>"}`.
+//!
+//! Each block is a JSON string validated by the config layer's own
+//! test (`predefined_blocks_resolve_and_take_trial_overrides`), which
+//! parses every name through the full `LabExperiment` pipeline.
+
+/// Quick `loss_grad` kernel sweep: threads × backend, the same shape
+/// `microbench_hotpath --quick` times (d=780, k=600 is the paper's
+/// MNIST-scale model).
+const HOTPATH_QUICK: &str = r#"{
+  "name": "hotpath_quick",
+  "kind": "hotpath",
+  "overrides": {"d": 780, "k": 600, "batch": 500},
+  "params": {"threads": [1, 2], "kernel_backend": ["scalar", "auto"]}
+}"#;
+
+/// Quick wire-format ablation: one short MNIST-shaped distributed run
+/// per compression mode, mirroring `ablation_wire --quick`.
+const WIRE_QUICK: &str = r#"{
+  "name": "wire_quick",
+  "kind": "train",
+  "preset": "mnist",
+  "trials": 1,
+  "overrides": {
+    "n_train": 6000, "n_test": 500,
+    "n_similar": 20000, "n_dissimilar": 20000, "n_test_pairs": 1000,
+    "steps": 8, "workers": 2, "server_shards": 2, "keep": 0.25
+  },
+  "params": {"compression": ["none", "int8", "topk", "topk_int8"]}
+}"#;
+
+/// Quick retrieval load: exact vs cluster-pruned scans at two batch
+/// sizes over a small gallery, mirroring `serving_load --quick`.
+const SERVING_QUICK: &str = r#"{
+  "name": "serving_quick",
+  "kind": "serving",
+  "overrides": {"gallery": 2000, "queries": 400, "k": 10},
+  "params": {"nclusters": [32], "scan": ["exact", "approx"],
+             "batch": [1, 16]}
+}"#;
+
+/// Look up a predefined block's JSON source by name.
+pub fn predefined(name: &str) -> Option<&'static str> {
+    match name {
+        "hotpath_quick" => Some(HOTPATH_QUICK),
+        "wire_quick" => Some(WIRE_QUICK),
+        "serving_quick" => Some(SERVING_QUICK),
+        _ => None,
+    }
+}
+
+/// All predefined block names (for error messages and docs).
+pub fn names() -> Vec<&'static str> {
+    vec!["hotpath_quick", "serving_quick", "wire_quick"]
+}

@@ -1,0 +1,413 @@
+//! Merge the runner's trial stream and the sidecar's sample stream
+//! into one per-experiment `BENCH_lab_<name>.json`.
+//!
+//! The merge is *order-insensitive*: records are grouped by cell index
+//! and sorted by trial number, so a stream whose lines arrive shuffled
+//! (interleaved writers, resumed runs) flattens to the same report.
+//! Sidecar samples are attributed to a trial by windowing on the
+//! trial's `[start_s, end_s]` stamps — both streams share the run
+//! origin clock.
+
+use std::collections::BTreeMap;
+
+use super::config::{LabExperiment, ResultType};
+use super::matrix;
+use super::sidecar::ResourceSample;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Per-trial resource attribution: endpoint deltas for the cumulative
+/// counters (CPU, IO), windowed max for the instantaneous ones (RSS,
+/// threads).
+struct TrialResource {
+    peak_rss_bytes: Option<f64>,
+    cpu_s: Option<f64>,
+    max_threads: Option<f64>,
+    io_read_bytes: Option<f64>,
+    io_write_bytes: Option<f64>,
+    samples: usize,
+}
+
+fn attribute(
+    start: &ResourceSample,
+    end: &ResourceSample,
+    window: &[&ResourceSample],
+) -> TrialResource {
+    let mut peak_rss = match (start.rss_bytes, end.rss_bytes) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (a, b) => a.or(b),
+    };
+    let mut max_threads = match (start.threads, end.threads) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (a, b) => a.or(b),
+    };
+    for s in window {
+        if let Some(r) = s.rss_bytes {
+            peak_rss = Some(peak_rss.map_or(r, |p| p.max(r)));
+        }
+        if let Some(t) = s.threads {
+            max_threads = Some(max_threads.map_or(t, |p| p.max(t)));
+        }
+    }
+    let delta = |a: Option<f64>, b: Option<f64>| match (a, b) {
+        (Some(a), Some(b)) => Some((b - a).max(0.0)),
+        _ => None,
+    };
+    TrialResource {
+        peak_rss_bytes: peak_rss,
+        cpu_s: delta(start.cpu_s, end.cpu_s),
+        max_threads,
+        io_read_bytes: delta(start.io_read_bytes, end.io_read_bytes),
+        io_write_bytes: delta(start.io_write_bytes, end.io_write_bytes),
+        samples: window.len(),
+    }
+}
+
+fn opt(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}
+
+/// Aggregate one cell's trial resources: peaks stay maxima, the
+/// cumulative deltas report both per-trial mean and total.
+fn cell_resource(trials: &[TrialResource]) -> Json {
+    let maxes = |f: fn(&TrialResource) -> Option<f64>| {
+        trials
+            .iter()
+            .filter_map(f)
+            .fold(None::<f64>, |acc, v| Some(acc.map_or(v, |a| a.max(v))))
+    };
+    let collect = |f: fn(&TrialResource) -> Option<f64>| -> Vec<f64> {
+        trials.iter().filter_map(f).collect()
+    };
+    let cpu = collect(|t| t.cpu_s);
+    let sum_of = |f: fn(&TrialResource) -> Option<f64>| {
+        let v = collect(f);
+        if v.is_empty() {
+            None
+        } else {
+            Some(v.iter().sum::<f64>())
+        }
+    };
+    Json::obj(vec![
+        ("peak_rss_bytes", opt(maxes(|t| t.peak_rss_bytes))),
+        (
+            "cpu_s",
+            opt(if cpu.is_empty() {
+                None
+            } else {
+                Some(stats::mean(&cpu))
+            }),
+        ),
+        ("cpu_s_total", opt(sum_of(|t| t.cpu_s))),
+        ("max_threads", opt(maxes(|t| t.max_threads))),
+        ("io_read_bytes", opt(sum_of(|t| t.io_read_bytes))),
+        ("io_write_bytes", opt(sum_of(|t| t.io_write_bytes))),
+        (
+            "samples",
+            Json::Num(
+                trials.iter().map(|t| t.samples).sum::<usize>() as f64,
+            ),
+        ),
+    ])
+}
+
+fn trial_resource_json(r: &TrialResource) -> Json {
+    Json::obj(vec![
+        ("peak_rss_bytes", opt(r.peak_rss_bytes)),
+        ("cpu_s", opt(r.cpu_s)),
+        ("max_threads", opt(r.max_threads)),
+        ("io_read_bytes", opt(r.io_read_bytes)),
+        ("io_write_bytes", opt(r.io_write_bytes)),
+        ("samples", Json::Num(r.samples as f64)),
+    ])
+}
+
+/// Flatten one experiment's trial records and sidecar samples into the
+/// merged report payload. `trial_records` may arrive in any order.
+pub fn merge_streams(
+    exp: &LabExperiment,
+    result_types: &[ResultType],
+    trial_records: &[Json],
+    sysinfo: &[Json],
+) -> anyhow::Result<Json> {
+    let samples: Vec<ResourceSample> =
+        sysinfo.iter().map(ResourceSample::from_json).collect();
+
+    // group by cell index, then order trials within each group
+    let mut groups: BTreeMap<usize, Vec<&Json>> = BTreeMap::new();
+    for rec in trial_records {
+        let cell = rec.get("cell").as_usize().ok_or_else(|| {
+            anyhow::anyhow!(
+                "trial record without a 'cell' index: {}",
+                rec.to_string_compact()
+            )
+        })?;
+        groups.entry(cell).or_default().push(rec);
+    }
+    anyhow::ensure!(
+        !groups.is_empty(),
+        "experiment '{}' produced no trial records",
+        exp.name
+    );
+
+    let mut cells = Vec::new();
+    for (cell_idx, mut recs) in groups {
+        recs.sort_by_key(|r| r.get("trial").as_usize().unwrap_or(0));
+        let params = recs[0].get("params").clone();
+        let key = recs[0]
+            .get("cell_key")
+            .as_str()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("cell{cell_idx}"));
+
+        // union of metric keys across trials (a trial may legitimately
+        // miss a metric, e.g. a worker stat absent in process mode)
+        let mut metric_keys: Vec<String> = Vec::new();
+        for r in &recs {
+            if let Some(m) = r.get("metrics").as_obj() {
+                for k in m.keys() {
+                    if !metric_keys.contains(k) {
+                        metric_keys.push(k.clone());
+                    }
+                }
+            }
+        }
+        metric_keys.sort();
+
+        let mut resources = Vec::new();
+        let mut details = Vec::new();
+        for r in &recs {
+            let start_s = r.get("start_s").as_f64().unwrap_or(0.0);
+            let end_s = r.get("end_s").as_f64().unwrap_or(start_s);
+            let window: Vec<&ResourceSample> = samples
+                .iter()
+                .filter(|s| s.t_s >= start_s && s.t_s <= end_s)
+                .collect();
+            let res = attribute(
+                &ResourceSample::from_json(r.get("resource_start")),
+                &ResourceSample::from_json(r.get("resource_end")),
+                &window,
+            );
+            details.push(Json::obj(vec![
+                (
+                    "trial",
+                    Json::Num(
+                        r.get("trial").as_usize().unwrap_or(0) as f64,
+                    ),
+                ),
+                ("start_s", Json::Num(start_s)),
+                ("end_s", Json::Num(end_s)),
+                ("metrics", r.get("metrics").clone()),
+                ("resource", trial_resource_json(&res)),
+            ]));
+            resources.push(res);
+        }
+
+        let aggregate = |f: fn(&[f64]) -> f64| -> Json {
+            let mut m = std::collections::BTreeMap::new();
+            for k in &metric_keys {
+                let vals: Vec<f64> = recs
+                    .iter()
+                    .filter_map(|r| r.get("metrics").get(k).as_f64())
+                    .collect();
+                if !vals.is_empty() {
+                    m.insert(k.clone(), Json::Num(f(&vals)));
+                }
+            }
+            Json::Obj(m)
+        };
+
+        let mut cell = vec![
+            ("cell", Json::Str(key)),
+            ("params", params),
+        ];
+        for rt in result_types {
+            match rt {
+                ResultType::Average => {
+                    cell.push(("average", aggregate(stats::mean)))
+                }
+                ResultType::Median => {
+                    cell.push(("median", aggregate(stats::median)))
+                }
+                ResultType::Details => {
+                    cell.push(("details", Json::Arr(details.clone())))
+                }
+            }
+        }
+        cell.push(("resource", cell_resource(&resources)));
+        cells.push(Json::obj(cell));
+    }
+
+    let axes = Json::Obj(
+        exp.axes
+            .iter()
+            .map(|(name, vals)| {
+                (name.clone(), Json::Arr(vals.clone()))
+            })
+            .collect(),
+    );
+    Ok(Json::obj(vec![
+        ("bench", Json::Str("lab".into())),
+        ("experiment", Json::Str(exp.name.clone())),
+        ("kind", Json::Str(exp.kind.name().into())),
+        ("exec", Json::Str(exp.exec.name().into())),
+        ("trials", Json::Num(exp.trials as f64)),
+        (
+            "result_type",
+            Json::Arr(
+                result_types
+                    .iter()
+                    .map(|rt| Json::Str(rt.name().into()))
+                    .collect(),
+            ),
+        ),
+        ("axes", axes),
+        ("cells", Json::Arr(cells)),
+    ]))
+}
+
+/// Convenience used by tests: rebuild the canonical cell key from a
+/// record's params object (axis order == sorted key order, matching
+/// the config layer's `BTreeMap` axes).
+pub fn key_of_params(params: &Json) -> String {
+    let Some(map) = params.as_obj() else { return String::new() };
+    let kv: Vec<(String, Json)> =
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+    matrix::cell_key(&kv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::config::{ExecMode, LabKind};
+
+    fn exp() -> LabExperiment {
+        LabExperiment {
+            name: "t".into(),
+            kind: LabKind::Train,
+            preset: "tiny".into(),
+            exec: ExecMode::Session,
+            overrides: BTreeMap::new(),
+            axes: vec![(
+                "workers".into(),
+                vec![Json::Num(1.0), Json::Num(2.0)],
+            )],
+            trials: 2,
+        }
+    }
+
+    fn record(cell: usize, trial: usize, loss: f64) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::Str("t".into())),
+            ("cell", Json::Num(cell as f64)),
+            ("cell_key", Json::Str(format!("workers={}", cell + 1))),
+            ("trial", Json::Num(trial as f64)),
+            (
+                "params",
+                Json::obj(vec![(
+                    "workers",
+                    Json::Num((cell + 1) as f64),
+                )]),
+            ),
+            ("start_s", Json::Num(trial as f64)),
+            ("end_s", Json::Num(trial as f64 + 0.5)),
+            (
+                "metrics",
+                Json::obj(vec![
+                    ("last_loss", Json::Num(loss)),
+                    ("wall_s", Json::Num(0.5)),
+                ]),
+            ),
+            (
+                "resource_start",
+                Json::obj(vec![
+                    ("t_s", Json::Num(trial as f64)),
+                    ("cpu_s", Json::Num(1.0 + trial as f64)),
+                    ("rss_bytes", Json::Num(1000.0)),
+                ]),
+            ),
+            (
+                "resource_end",
+                Json::obj(vec![
+                    ("t_s", Json::Num(trial as f64 + 0.5)),
+                    ("cpu_s", Json::Num(1.4 + trial as f64)),
+                    ("rss_bytes", Json::Num(2000.0)),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let all = vec![ResultType::Average, ResultType::Details];
+        let recs = vec![
+            record(0, 0, 4.0),
+            record(0, 1, 2.0),
+            record(1, 0, 3.0),
+            record(1, 1, 1.0),
+        ];
+        let shuffled =
+            vec![recs[3].clone(), recs[1].clone(), recs[0].clone(),
+                 recs[2].clone()];
+        let a = merge_streams(&exp(), &all, &recs, &[]).unwrap();
+        let b = merge_streams(&exp(), &all, &shuffled, &[]).unwrap();
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+    }
+
+    #[test]
+    fn average_and_median_match_reference() {
+        let all = vec![ResultType::Average, ResultType::Median];
+        let recs = vec![record(0, 0, 4.0), record(0, 1, 2.0)];
+        let out = merge_streams(&exp(), &all, &recs, &[]).unwrap();
+        let cell = out.get("cells").idx(0);
+        assert_eq!(
+            cell.get("average").get("last_loss").as_f64(),
+            Some(3.0)
+        );
+        assert_eq!(
+            cell.get("median").get("last_loss").as_f64(),
+            Some(3.0)
+        );
+        // no details block was requested
+        assert!(cell.get("details").is_null());
+    }
+
+    #[test]
+    fn resource_windows_attribute_samples_and_deltas() {
+        let all = vec![ResultType::Details];
+        let recs = vec![record(0, 0, 1.0)];
+        // trial 0 window is [0.0, 0.5]; the 9000-byte spike at 0.25 is
+        // inside, the one at 0.9 is not
+        let sys = vec![
+            Json::obj(vec![
+                ("t_s", Json::Num(0.25)),
+                ("rss_bytes", Json::Num(9000.0)),
+                ("threads", Json::Num(7.0)),
+            ]),
+            Json::obj(vec![
+                ("t_s", Json::Num(0.9)),
+                ("rss_bytes", Json::Num(99000.0)),
+            ]),
+        ];
+        let out = merge_streams(&exp(), &all, &recs, &sys).unwrap();
+        let res = out.get("cells").idx(0).get("resource");
+        assert_eq!(res.get("peak_rss_bytes").as_f64(), Some(9000.0));
+        assert!(
+            (res.get("cpu_s").as_f64().unwrap() - 0.4).abs() < 1e-9
+        );
+        assert_eq!(res.get("max_threads").as_f64(), Some(7.0));
+        assert_eq!(res.get("samples").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn missing_cell_index_is_an_error() {
+        let bad = vec![Json::obj(vec![("trial", Json::Num(0.0))])];
+        assert!(merge_streams(
+            &exp(),
+            &[ResultType::Average],
+            &bad,
+            &[]
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,691 @@
+//! Execute a parsed [`LabConfig`]: every experiment's cells × trials,
+//! with the sidecar sampling alongside, NDJSON streams on disk, and a
+//! merged `BENCH_lab_<name>.json` per experiment at the end.
+//!
+//! Heavyweight fixtures — generated datasets, serve-engine epochs,
+//! hotpath input buffers — are cached across cells so a matrix sweep
+//! pays generation cost once per distinct shape, not once per cell.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::config::{
+    parse_backend, parse_fault_profile, ExecMode, LabConfig,
+    LabExperiment, LabKind,
+};
+use super::matrix::{self, Cell};
+use super::ndjson;
+use super::report;
+use super::sidecar::{ResourceSample, Sidecar};
+use crate::config::{ExperimentConfig, Preset};
+use crate::data::{ExperimentData, SyntheticSpec};
+use crate::dml::{DmlProblem, Engine, MinibatchRef, NativeEngine};
+use crate::linalg::simd::{self, KernelBackend};
+use crate::linalg::Mat;
+use crate::ps::{FaultSpec, RunOptions};
+use crate::serve::{default_nprobe, ScanMode, ServeConfig, ServeEngine};
+use crate::session::{MetricModel, Session};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+
+/// Cross-cell fixture caches, keyed by the knobs that change the
+/// fixture's contents.
+#[derive(Default)]
+struct Caches {
+    /// Generated train/test data per (dataset shape, pair mode, seed).
+    data: BTreeMap<String, Arc<ExperimentData>>,
+    /// Serve engine + query matrix per (gallery, queries, kproj,
+    /// nclusters).
+    serve: BTreeMap<String, Arc<(ServeEngine, Mat)>>,
+    /// Hotpath input buffers for the current (d, k, batch) shape.
+    hotpath: Option<HotpathInputs>,
+}
+
+struct HotpathInputs {
+    d: usize,
+    k: usize,
+    batch: usize,
+    l: Mat,
+    dsb: Vec<f32>,
+    ddb: Vec<f32>,
+}
+
+/// Run every experiment of `cfg`. Returns the merged report paths in
+/// experiment order.
+pub fn run(cfg: &LabConfig) -> anyhow::Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(&cfg.global.output).map_err(|e| {
+        anyhow::anyhow!(
+            "create {}: {e}",
+            cfg.global.output.display()
+        )
+    })?;
+    let origin = Instant::now();
+    let mut caches = Caches::default();
+    let mut written = Vec::new();
+    for exp in &cfg.experiments {
+        let cells = matrix::expand(&exp.axes);
+        println!(
+            "lab: experiment '{}' ({}, {}): {} cell(s) across {} \
+             axis/axes × {} trial(s)",
+            exp.name,
+            exp.kind.name(),
+            exp.exec.name(),
+            cells.len(),
+            exp.axes.len(),
+            exp.trials
+        );
+        let trials_path = cfg
+            .global
+            .output
+            .join(format!("{}.trials.ndjson", exp.name));
+        let sys_path = cfg
+            .global
+            .output
+            .join(format!("{}.sysinfo.ndjson", exp.name));
+        // a re-run must not merge a previous run's records
+        let _ = std::fs::remove_file(&trials_path);
+        let _ = std::fs::remove_file(&sys_path);
+
+        let sidecar = Sidecar::spawn(
+            sys_path.clone(),
+            Duration::from_millis(cfg.global.sample_ms),
+            origin,
+        );
+        // separate fn so the sidecar is stopped on *every* exit path
+        // before the error propagates
+        let outcome = run_trials(
+            exp,
+            &cells,
+            &trials_path,
+            &cfg.global.output,
+            origin,
+            &mut caches,
+        );
+        sidecar.stop();
+        outcome?;
+
+        let trial_records = ndjson::read_all(&trials_path)?;
+        let sys = ndjson::read_all(&sys_path)?;
+        let merged = report::merge_streams(
+            exp,
+            &cfg.global.result_types,
+            &trial_records,
+            &sys,
+        )?;
+        crate::metrics::finite_guard(&merged)?;
+        let path = cfg
+            .global
+            .output
+            .join(format!("BENCH_lab_{}.json", exp.name));
+        crate::linalg::io::atomic_write(&path, |w| {
+            use std::io::Write;
+            w.write_all(merged.to_string_pretty().as_bytes())?;
+            Ok(())
+        })?;
+        println!("lab: wrote {}", path.display());
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// One experiment's cell × trial loop, appending a trial record to the
+/// NDJSON stream after each cell run.
+fn run_trials(
+    exp: &LabExperiment,
+    cells: &[Cell],
+    trials_path: &std::path::Path,
+    output: &std::path::Path,
+    origin: Instant,
+    caches: &mut Caches,
+) -> anyhow::Result<()> {
+    for cell in cells {
+        let key = matrix::cell_key(&cell.params);
+        for trial in 0..exp.trials {
+            let start = ResourceSample::now(origin);
+            let metrics =
+                run_cell(exp, cell, trial, output, caches).map_err(
+                    |e| {
+                        anyhow::anyhow!(
+                            "experiment '{}' cell [{}] trial {}: {e}",
+                            exp.name,
+                            key,
+                            trial
+                        )
+                    },
+                )?;
+            let end = ResourceSample::now(origin);
+            let record = Json::obj(vec![
+                ("experiment", Json::Str(exp.name.clone())),
+                ("cell", Json::Num(cell.index as f64)),
+                ("cell_key", Json::Str(key.clone())),
+                ("trial", Json::Num(trial as f64)),
+                (
+                    "params",
+                    Json::Obj(cell.params.iter().cloned().collect()),
+                ),
+                ("start_s", Json::Num(start.t_s)),
+                ("end_s", Json::Num(end.t_s)),
+                ("metrics", metrics),
+                ("resource_start", start.to_json()),
+                ("resource_end", end.to_json()),
+            ]);
+            ndjson::append(trials_path, &record)?;
+        }
+    }
+    Ok(())
+}
+
+fn run_cell(
+    exp: &LabExperiment,
+    cell: &Cell,
+    trial: usize,
+    output: &std::path::Path,
+    caches: &mut Caches,
+) -> anyhow::Result<Json> {
+    match exp.kind {
+        LabKind::Train => match exp.exec {
+            ExecMode::Session => train_cell(exp, cell, trial, caches),
+            ExecMode::Process => {
+                process_cell(exp, cell, trial, output)
+            }
+        },
+        LabKind::Hotpath => hotpath_cell(exp, cell, caches),
+        LabKind::Serving => serving_cell(exp, cell, caches),
+    }
+}
+
+// ----------------------------------------------------------------------
+// train cells
+// ----------------------------------------------------------------------
+
+/// Resolve one train cell's config + fault spec + forced backend from
+/// the preset, the experiment overrides, and the cell's axis values.
+fn train_config(
+    exp: &LabExperiment,
+    cell: &Cell,
+    trial: usize,
+) -> anyhow::Result<(ExperimentConfig, FaultSpec, Option<KernelBackend>)>
+{
+    let mut cfg = Preset::parse(&exp.preset)?.config();
+    let mut faults = FaultSpec::perfect();
+    let mut backend = None;
+    for (key, v) in exp
+        .overrides
+        .iter()
+        .map(|(k, v)| (k.as_str(), v))
+        .chain(cell.params.iter().map(|(k, v)| (k.as_str(), v)))
+    {
+        apply_train_knob(&mut cfg, &mut faults, &mut backend, key, v)?;
+    }
+    // trials are independent repetitions: distinct seeds, same knobs
+    cfg.seed = cfg.seed.wrapping_add(trial as u64);
+    Ok((cfg, faults, backend))
+}
+
+fn apply_train_knob(
+    cfg: &mut ExperimentConfig,
+    faults: &mut FaultSpec,
+    backend: &mut Option<KernelBackend>,
+    key: &str,
+    v: &Json,
+) -> anyhow::Result<()> {
+    let num = || {
+        v.as_usize().ok_or_else(|| {
+            anyhow::anyhow!(
+                "'{key}' must be a non-negative integer, got {}",
+                v.to_string_compact()
+            )
+        })
+    };
+    let string = || {
+        v.as_str().ok_or_else(|| {
+            anyhow::anyhow!(
+                "'{key}' must be a string, got {}",
+                v.to_string_compact()
+            )
+        })
+    };
+    match key {
+        "workers" => cfg.cluster.workers = num()?.max(1),
+        "server_shards" => cfg.cluster.server_shards = num()?.max(1),
+        "server_batch" => cfg.cluster.server_batch = num()?.max(1),
+        "threads" => cfg.cluster.threads_per_worker = num()?,
+        "steps" => cfg.optim.steps = num()?.max(1),
+        "n_train" => cfg.dataset.n_train = num()?.max(1),
+        "n_test" => cfg.dataset.n_test = num()?.max(1),
+        "n_similar" => cfg.dataset.n_similar = num()?.max(1),
+        "n_dissimilar" => cfg.dataset.n_dissimilar = num()?.max(1),
+        "n_test_pairs" => cfg.dataset.n_test_pairs = num()?.max(1),
+        "seed" => cfg.seed = num()? as u64,
+        "consistency" => {
+            cfg.cluster.consistency = string()?.parse()?
+        }
+        "compression" => {
+            cfg.cluster.compression.mode = string()?.parse()?
+        }
+        "keep" => {
+            let x = v.as_f64().unwrap_or(f64::NAN);
+            anyhow::ensure!(
+                x > 0.0 && x <= 1.0,
+                "'keep' must be in (0, 1]"
+            );
+            cfg.cluster.compression.keep = x as f32;
+        }
+        "pairs_mode" => cfg.cluster.pairs.mode = string()?.parse()?,
+        "fault_profile" => *faults = parse_fault_profile(string()?)?,
+        "kernel_backend" => *backend = parse_backend(string()?)?,
+        other => anyhow::bail!("unhandled train knob '{other}'"),
+    }
+    Ok(())
+}
+
+fn train_cell(
+    exp: &LabExperiment,
+    cell: &Cell,
+    trial: usize,
+    caches: &mut Caches,
+) -> anyhow::Result<Json> {
+    let (cfg, faults, backend) = train_config(exp, cell, trial)?;
+    let data_key = format!(
+        "{:?}|{}|{}",
+        cfg.dataset, cfg.cluster.pairs.mode, cfg.seed
+    );
+    let data = caches
+        .data
+        .entry(data_key)
+        .or_insert_with(|| {
+            Arc::new(ExperimentData::generate_for(
+                &cfg.dataset,
+                cfg.cluster.pairs.mode,
+                cfg.seed,
+            ))
+        })
+        .clone();
+    let opts = RunOptions {
+        faults,
+        // endpoint-only probing: the server always records a final
+        // probe on the assembled L, so final_objective stays reliable
+        // while the probe thread costs nothing mid-run
+        probe_every: u64::MAX / 2,
+        probe_pairs: (50, 50),
+        ..RunOptions::default()
+    };
+    simd::force_backend(backend);
+    let run = Session::from_config(cfg)
+        .engine("native")
+        .data(data)
+        .run_options(opts)
+        .train_distributed();
+    simd::force_backend(None);
+    let run = run?;
+
+    let final_objective =
+        run.curve.final_objective().ok_or_else(|| {
+            anyhow::anyhow!("run recorded no objective probe")
+        })?;
+    let steps_sent: u64 = run
+        .worker_stats
+        .iter()
+        .map(|w| w.grads_sent)
+        .sum();
+    let grads_dropped: u64 = run
+        .worker_stats
+        .iter()
+        .map(|w| w.grads_dropped)
+        .sum();
+    let wait_s: f64 =
+        run.worker_stats.iter().map(|w| w.wait_s).sum();
+    let max_staleness = run
+        .worker_stats
+        .iter()
+        .map(|w| w.max_staleness)
+        .max()
+        .unwrap_or(0);
+    Ok(Json::obj(vec![
+        ("wall_s", Json::Num(run.wall_s)),
+        ("applied_updates", Json::Num(run.applied_updates as f64)),
+        (
+            "updates_per_sec",
+            Json::Num(
+                run.applied_updates as f64 / run.wall_s.max(1e-9),
+            ),
+        ),
+        ("slice_updates", Json::Num(run.slice_updates as f64)),
+        ("broadcasts", Json::Num(run.broadcasts as f64)),
+        ("param_msgs", Json::Num(run.param_msgs as f64)),
+        ("last_loss", Json::Num(run.last_loss as f64)),
+        ("final_objective", Json::Num(final_objective)),
+        (
+            "grad_bytes_received",
+            Json::Num(run.grad_bytes_received as f64),
+        ),
+        ("param_bytes_sent", Json::Num(run.param_bytes_sent as f64)),
+        (
+            "grad_bytes_per_step",
+            Json::Num(
+                run.grad_bytes_received as f64
+                    / steps_sent.max(1) as f64,
+            ),
+        ),
+        ("misroutes", Json::Num(run.misroutes as f64)),
+        ("grads_dropped", Json::Num(grads_dropped as f64)),
+        ("wait_s", Json::Num(wait_s)),
+        ("max_staleness", Json::Num(max_staleness as f64)),
+        (
+            "simd_active",
+            Json::Num(
+                (run.kernel.backend == KernelBackend::Simd) as u8
+                    as f64,
+            ),
+        ),
+    ]))
+}
+
+/// A process-mode train cell: spawn `dmlps cluster` on the resolved
+/// config (real sockets, real child processes) and lift the combined
+/// `cluster.json` server metrics into the trial record. The kernel
+/// backend travels as `DMLPS_KERNEL` since `force_backend` cannot
+/// reach another process.
+fn process_cell(
+    exp: &LabExperiment,
+    cell: &Cell,
+    trial: usize,
+    output: &std::path::Path,
+) -> anyhow::Result<Json> {
+    let (cfg, faults, backend) = train_config(exp, cell, trial)?;
+    anyhow::ensure!(
+        faults.is_perfect(),
+        "process-mode cells cannot inject transport faults"
+    );
+    let dir = output.join(format!(
+        "{}_c{}_t{}",
+        exp.name, cell.index, trial
+    ));
+    std::fs::create_dir_all(&dir)?;
+    let cfg_path = dir.join("config.json");
+    cfg.save(&cfg_path)?;
+
+    let exe = std::env::current_exe()?;
+    let started = Instant::now();
+    let status = std::process::Command::new(&exe)
+        .arg("cluster")
+        .arg("--config")
+        .arg(&cfg_path)
+        .arg("--run-dir")
+        .arg(&dir)
+        .arg("--engine")
+        .arg("native")
+        .arg("--timeout-s")
+        .arg("600")
+        .env(
+            "DMLPS_KERNEL",
+            backend.map(|b| b.name()).unwrap_or("auto"),
+        )
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::inherit())
+        .status()?;
+    let spawn_wall_s = started.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        status.success(),
+        "dmlps cluster exited with {status}"
+    );
+
+    let combined = Json::parse_file(&dir.join("cluster.json"))?;
+    let mut metrics = BTreeMap::new();
+    metrics.insert(
+        "spawn_wall_s".to_string(),
+        Json::Num(spawn_wall_s),
+    );
+    metrics.insert(
+        "attempts".to_string(),
+        Json::Num(combined.get("attempts").as_f64().unwrap_or(1.0)),
+    );
+    // lift every scalar server metric (applied_updates, wall_s,
+    // final_objective, wire byte counters, ...) without hardcoding the
+    // report's key list here
+    if let Some(map) = combined.get("server").as_obj() {
+        for (k, v) in map {
+            if let Json::Num(x) = v {
+                metrics.insert(k.clone(), Json::Num(*x));
+            }
+        }
+    }
+    Ok(Json::Obj(metrics))
+}
+
+// ----------------------------------------------------------------------
+// hotpath cells
+// ----------------------------------------------------------------------
+
+fn hotpath_cell(
+    exp: &LabExperiment,
+    cell: &Cell,
+    caches: &mut Caches,
+) -> anyhow::Result<Json> {
+    let get = |key: &str, default: usize| -> anyhow::Result<usize> {
+        match exp.overrides.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("override '{key}' must be an integer")
+            }),
+        }
+    };
+    let d = get("d", 780)?.max(1);
+    let k = get("k", 600)?.max(1).min(d);
+    let batch = get("batch", 500)?.max(1);
+
+    let mut threads = 0usize;
+    let mut backend = None;
+    for (key, v) in &cell.params {
+        match key.as_str() {
+            "threads" => {
+                threads = v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("'threads' must be an integer")
+                })?
+            }
+            "kernel_backend" => {
+                backend = parse_backend(v.as_str().unwrap_or(""))?
+            }
+            other => {
+                anyhow::bail!("unhandled hotpath axis '{other}'")
+            }
+        }
+    }
+
+    let regen = !matches!(
+        &caches.hotpath,
+        Some(h) if h.d == d && h.k == k && h.batch == batch
+    );
+    if regen {
+        let mut rng = Pcg32::new(3);
+        let mut l = Mat::zeros(k, d);
+        rng.fill_gaussian(&mut l.data, 0.0, 0.1);
+        let mut dsb = vec![0.0f32; batch * d];
+        let mut ddb = vec![0.0f32; batch * d];
+        rng.fill_gaussian(&mut dsb, 0.0, 1.0);
+        rng.fill_gaussian(&mut ddb, 0.0, 1.0);
+        caches.hotpath = Some(HotpathInputs { d, k, batch, l, dsb, ddb });
+    }
+    let inputs = caches.hotpath.as_ref().unwrap();
+
+    let mut eng = if threads == 0 {
+        NativeEngine::new()
+    } else {
+        NativeEngine::with_threads(threads)
+    };
+    let mb = MinibatchRef::new(&inputs.dsb, &inputs.ddb, batch, batch, d);
+    let mut g = Mat::zeros(k, d);
+
+    simd::force_backend(backend);
+    let outcome = timed_loss_grad(&mut eng, &inputs.l, &mb, &mut g);
+    simd::force_backend(None);
+    let (total_s, iters, simd_active) = outcome?;
+
+    let flops = DmlProblem::new(d, k, 1.0).step_flops(batch, batch);
+    let mean_s = total_s / iters as f64;
+    Ok(Json::obj(vec![
+        ("loss_grad_gflops", Json::Num(flops / mean_s / 1e9)),
+        ("loss_grad_mean_s", Json::Num(mean_s)),
+        ("iters", Json::Num(iters as f64)),
+        ("engine_threads", Json::Num(eng.threads() as f64)),
+        ("simd_active", Json::Num(simd_active as u8 as f64)),
+    ]))
+}
+
+/// The timed hotpath loop, separated so the caller restores the forced
+/// kernel backend on *every* exit path. Returns
+/// `(total_s, iters, simd_active)`.
+fn timed_loss_grad(
+    eng: &mut NativeEngine,
+    l: &Mat,
+    mb: &MinibatchRef<'_>,
+    g: &mut Mat,
+) -> anyhow::Result<(f64, usize, bool)> {
+    // warmup allocates engine scratch outside the timed loop
+    eng.loss_grad(l, mb, 1.0, g)?;
+    let target = Duration::from_millis(200);
+    let started = Instant::now();
+    let mut iters = 0usize;
+    while iters < 3 || started.elapsed() < target {
+        eng.loss_grad(l, mb, 1.0, g)?;
+        iters += 1;
+    }
+    let total_s = started.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        g.data.iter().all(|v| v.is_finite()),
+        "loss_grad produced a non-finite gradient"
+    );
+    let simd_active = simd::report().backend == KernelBackend::Simd;
+    Ok((total_s, iters, simd_active))
+}
+
+// ----------------------------------------------------------------------
+// serving cells
+// ----------------------------------------------------------------------
+
+fn serving_cell(
+    exp: &LabExperiment,
+    cell: &Cell,
+    caches: &mut Caches,
+) -> anyhow::Result<Json> {
+    let get = |key: &str, default: usize| -> anyhow::Result<usize> {
+        match exp.overrides.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("override '{key}' must be an integer")
+            }),
+        }
+    };
+    let n_gallery = get("gallery", 2_000)?.max(16);
+    let n_queries = get("queries", 400)?.max(1);
+    let k = get("k", 10)?.max(1);
+    let kproj = get("kproj", 16)?.max(1);
+
+    let mut nclusters = 32usize;
+    let mut scan = "exact".to_string();
+    let mut batch = 1usize;
+    for (key, v) in &cell.params {
+        match key.as_str() {
+            "nclusters" => {
+                nclusters = v.as_usize().unwrap_or(nclusters)
+            }
+            "scan" => {
+                scan = v.as_str().unwrap_or("exact").to_string()
+            }
+            "batch" => batch = v.as_usize().unwrap_or(1).max(1),
+            other => {
+                anyhow::bail!("unhandled serving axis '{other}'")
+            }
+        }
+    }
+
+    // one epoch build per distinct (gallery, queries, kproj,
+    // nclusters) — scan mode and batch reuse it
+    let cache_key =
+        format!("g{n_gallery}q{n_queries}p{kproj}c{nclusters}");
+    let entry = caches
+        .serve
+        .entry(cache_key)
+        .or_insert_with(|| {
+            // the serving_load recipe: gallery and queries from one
+            // synthetic family so coarse clusters are real structure
+            let mut spec = SyntheticSpec::tiny();
+            spec.dim = 32;
+            spec.n_classes = 16;
+            spec.separation = 4.0;
+            let mut rng = Pcg32::with_stream(7, 0x5EED);
+            let gallery = spec.generate_with(&mut rng, n_gallery);
+            let queries =
+                spec.generate_with(&mut rng, n_queries).x;
+            let mut l = Mat::zeros(kproj, spec.dim);
+            Pcg32::new(21).fill_gaussian(&mut l.data, 0.0, 0.3);
+            let model = MetricModel::new(l, &Preset::Tiny.config());
+            let engine = ServeEngine::new(
+                model,
+                &gallery,
+                ServeConfig {
+                    nclusters,
+                    ..ServeConfig::default()
+                },
+            );
+            Arc::new((engine, queries))
+        })
+        .clone();
+    let (engine, queries) = (&entry.0, &entry.1);
+
+    let mode = match scan.as_str() {
+        "exact" => ScanMode::Exact,
+        "approx" => ScanMode::Probe(default_nprobe(nclusters)),
+        other => anyhow::bail!("unknown scan mode '{other}'"),
+    };
+
+    // recall@k of `mode` against the exact reference
+    let n_recall = queries.rows.min(100);
+    let mut hit = 0usize;
+    let mut denom = 0usize;
+    for r in 0..n_recall {
+        let q = queries.row(r);
+        let (_, exact) = engine.query_one(q, k, ScanMode::Exact);
+        let (_, got) = engine.query_one(q, k, mode);
+        denom += exact.len();
+        for (i, _) in &got {
+            if exact.iter().any(|(j, _)| j == i) {
+                hit += 1;
+            }
+        }
+    }
+    let recall = hit as f64 / denom.max(1) as f64;
+
+    // closed-loop batches against the in-process engine
+    let n_batches = (256 / batch).max(20);
+    let mut x = Mat::zeros(batch, queries.cols);
+    let mut lat_ms = Vec::with_capacity(n_batches);
+    let started = Instant::now();
+    for b in 0..n_batches {
+        for r in 0..batch {
+            x.row_mut(r).copy_from_slice(
+                queries.row((b * batch + r) % queries.rows),
+            );
+        }
+        let sent = Instant::now();
+        let ans = engine.query_batch(&x, k, mode);
+        anyhow::ensure!(
+            ans.results.len() == batch,
+            "query_batch returned {} rows for a {batch}-row batch",
+            ans.results.len()
+        );
+        lat_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let rows = (n_batches * batch) as f64;
+    Ok(Json::obj(vec![
+        ("qps", Json::Num(rows / wall.max(1e-9))),
+        ("p50_ms", Json::Num(percentile(&lat_ms, 50.0))),
+        ("p99_ms", Json::Num(percentile(&lat_ms, 99.0))),
+        ("recall_at_k", Json::Num(recall)),
+        ("batches", Json::Num(n_batches as f64)),
+    ]))
+}

@@ -1,0 +1,247 @@
+//! Resource-telemetry sidecar: a thread that samples `/proc` on a
+//! fixed cadence while an experiment runs and appends each sample to an
+//! NDJSON stream. The merge step later windows these samples between
+//! each trial's start/end timestamps to attribute peak RSS, CPU
+//! seconds, thread count, and IO to individual cells.
+//!
+//! Every probe is best-effort `Option`: on non-Linux hosts (or a
+//! hardened `/proc`) samples simply carry nulls and the harness still
+//! runs — telemetry must never be the reason a benchmark fails.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::ndjson;
+use crate::util::json::Json;
+
+/// One `/proc` snapshot, stamped relative to the run origin so trial
+/// windows and samples share a clock.
+#[derive(Clone, Debug, Default)]
+pub struct ResourceSample {
+    /// Seconds since the run origin.
+    pub t_s: f64,
+    /// Current resident set size (`VmRSS`), bytes.
+    pub rss_bytes: Option<f64>,
+    /// Process-lifetime RSS high-water mark (`VmHWM`), bytes. Reported
+    /// for context only — per-cell peaks come from windowed `rss_bytes`
+    /// samples, since the lifetime peak would cross-contaminate cells.
+    pub hwm_bytes: Option<f64>,
+    /// Thread count.
+    pub threads: Option<f64>,
+    /// Cumulative user+system CPU seconds (utime+stime).
+    pub cpu_s: Option<f64>,
+    /// Cumulative bytes fetched from the storage layer.
+    pub io_read_bytes: Option<f64>,
+    /// Cumulative bytes sent to the storage layer.
+    pub io_write_bytes: Option<f64>,
+}
+
+impl ResourceSample {
+    /// Probe `/proc/self` now, stamping against `origin`.
+    pub fn now(origin: Instant) -> ResourceSample {
+        let status = proc_status();
+        let io = proc_io();
+        ResourceSample {
+            t_s: origin.elapsed().as_secs_f64(),
+            rss_bytes: status.0,
+            hwm_bytes: status.1,
+            threads: status.2,
+            cpu_s: proc_cpu_s(),
+            io_read_bytes: io.0,
+            io_write_bytes: io.1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("t_s", Json::Num(self.t_s)),
+            ("rss_bytes", opt(self.rss_bytes)),
+            ("hwm_bytes", opt(self.hwm_bytes)),
+            ("threads", opt(self.threads)),
+            ("cpu_s", opt(self.cpu_s)),
+            ("io_read_bytes", opt(self.io_read_bytes)),
+            ("io_write_bytes", opt(self.io_write_bytes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ResourceSample {
+        ResourceSample {
+            t_s: j.get("t_s").as_f64().unwrap_or(0.0),
+            rss_bytes: j.get("rss_bytes").as_f64(),
+            hwm_bytes: j.get("hwm_bytes").as_f64(),
+            threads: j.get("threads").as_f64(),
+            cpu_s: j.get("cpu_s").as_f64(),
+            io_read_bytes: j.get("io_read_bytes").as_f64(),
+            io_write_bytes: j.get("io_write_bytes").as_f64(),
+        }
+    }
+}
+
+/// `VmRSS` / `VmHWM` / `Threads` from `/proc/self/status`.
+/// Sizes arrive as "<n> kB".
+fn proc_status() -> (Option<f64>, Option<f64>, Option<f64>) {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return (None, None, None);
+    };
+    let mut rss = None;
+    let mut hwm = None;
+    let mut threads = None;
+    for line in text.lines() {
+        let Some((key, rest)) = line.split_once(':') else { continue };
+        let rest = rest.trim();
+        match key {
+            "VmRSS" | "VmHWM" => {
+                let kb = rest
+                    .strip_suffix("kB")
+                    .unwrap_or(rest)
+                    .trim()
+                    .parse::<f64>()
+                    .ok();
+                let bytes = kb.map(|k| k * 1024.0);
+                if key == "VmRSS" {
+                    rss = bytes;
+                } else {
+                    hwm = bytes;
+                }
+            }
+            "Threads" => threads = rest.parse::<f64>().ok(),
+            _ => {}
+        }
+    }
+    (rss, hwm, threads)
+}
+
+/// utime+stime from `/proc/self/stat` in seconds. The comm field can
+/// contain spaces and parens, so split after the *last* ')' — utime
+/// and stime are then whitespace fields 11 and 12 of the remainder
+/// (stat fields 14 and 15), in USER_HZ (100/s on every mainstream
+/// kernel config).
+fn proc_cpu_s() -> Option<f64> {
+    let text = std::fs::read_to_string("/proc/self/stat").ok()?;
+    let (_, rest) = text.rsplit_once(')')?;
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: f64 = fields.get(11)?.parse().ok()?;
+    let stime: f64 = fields.get(12)?.parse().ok()?;
+    Some((utime + stime) / 100.0)
+}
+
+/// `read_bytes` / `write_bytes` from `/proc/self/io` (may be absent or
+/// unreadable under some sandboxes).
+fn proc_io() -> (Option<f64>, Option<f64>) {
+    let Ok(text) = std::fs::read_to_string("/proc/self/io") else {
+        return (None, None);
+    };
+    let mut read = None;
+    let mut write = None;
+    for line in text.lines() {
+        let Some((key, val)) = line.split_once(':') else { continue };
+        match key {
+            "read_bytes" => read = val.trim().parse::<f64>().ok(),
+            "write_bytes" => write = val.trim().parse::<f64>().ok(),
+            _ => {}
+        }
+    }
+    (read, write)
+}
+
+/// The sampling thread. [`Sidecar::spawn`] starts it; [`Sidecar::stop`]
+/// takes one final sample, then joins. Append failures are swallowed —
+/// a full disk degrades telemetry, not the run.
+pub struct Sidecar {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl Sidecar {
+    pub fn spawn(
+        path: PathBuf,
+        every: Duration,
+        origin: Instant,
+    ) -> Sidecar {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("lab-sidecar".into())
+            .spawn(move || {
+                loop {
+                    let sample = ResourceSample::now(origin);
+                    let _ = ndjson::append(&path, &sample.to_json());
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::sleep(every);
+                }
+            })
+            .expect("spawn sidecar thread");
+        Sidecar { stop, handle }
+    }
+
+    /// Signal the thread, wait for its final sample, join.
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.handle.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_json_roundtrips_including_nulls() {
+        let s = ResourceSample {
+            t_s: 1.5,
+            rss_bytes: Some(4096.0),
+            hwm_bytes: None,
+            threads: Some(3.0),
+            cpu_s: Some(0.25),
+            io_read_bytes: None,
+            io_write_bytes: Some(0.0),
+        };
+        let back = ResourceSample::from_json(&s.to_json());
+        assert_eq!(back.t_s, 1.5);
+        assert_eq!(back.rss_bytes, Some(4096.0));
+        assert_eq!(back.hwm_bytes, None);
+        assert_eq!(back.threads, Some(3.0));
+        assert_eq!(back.cpu_s, Some(0.25));
+        assert_eq!(back.io_read_bytes, None);
+        assert_eq!(back.io_write_bytes, Some(0.0));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn linux_probe_reports_rss_and_cpu() {
+        let s = ResourceSample::now(Instant::now());
+        assert!(s.rss_bytes.unwrap_or(0.0) > 0.0, "{s:?}");
+        assert!(s.cpu_s.is_some(), "{s:?}");
+        assert!(s.threads.unwrap_or(0.0) >= 1.0, "{s:?}");
+    }
+
+    #[test]
+    fn sidecar_writes_samples_and_stops() {
+        let path = std::env::temp_dir().join(format!(
+            "dmlps-sidecar-{}.ndjson",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let sc = Sidecar::spawn(
+            path.clone(),
+            Duration::from_millis(5),
+            Instant::now(),
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        sc.stop();
+        let recs = ndjson::read_all(&path).unwrap();
+        assert!(!recs.is_empty());
+        // timestamps are monotone
+        let ts: Vec<f64> = recs
+            .iter()
+            .map(|r| r.get("t_s").as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

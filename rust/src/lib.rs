@@ -52,6 +52,7 @@ pub mod config;
 pub mod data;
 pub mod dml;
 pub mod eval;
+pub mod lab;
 pub mod linalg;
 pub mod metrics;
 pub mod ps;

@@ -118,6 +118,69 @@ pub fn speedup_table(mut meas: Vec<(usize, f64)>) -> Vec<SpeedupRow> {
         .collect()
 }
 
+/// JSON paths (`a.b[3].c`) of every non-finite numeric leaf in a bench
+/// payload, depth-first. Empty = the payload is clean.
+pub fn non_finite_paths(j: &Json) -> Vec<String> {
+    fn walk(j: &Json, path: &str, out: &mut Vec<String>) {
+        match j {
+            Json::Num(x) if !x.is_finite() => out.push(path.to_string()),
+            Json::Arr(v) => {
+                for (i, item) in v.iter().enumerate() {
+                    walk(item, &format!("{path}[{i}]"), out);
+                }
+            }
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let p = if path.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{path}.{k}")
+                    };
+                    walk(v, &p, out);
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut out = Vec::new();
+    walk(j, "", &mut out);
+    out
+}
+
+/// The refuse-to-write-garbage guard every `BENCH_*.json` producer
+/// shares: errors (naming the offending paths) if any numeric leaf of
+/// `payload` is NaN/Inf — non-finite numbers are not valid JSON, and a
+/// poisoned baseline is worse than none.
+pub fn finite_guard(payload: &Json) -> anyhow::Result<()> {
+    let bad = non_finite_paths(payload);
+    anyhow::ensure!(
+        bad.is_empty(),
+        "non-finite metric at {} — refusing to write the baseline",
+        bad.join(", ")
+    );
+    Ok(())
+}
+
+/// Write a machine-readable bench baseline: resolve the output path
+/// (`DMLPS_BENCH_OUT` overrides `default_path`), apply [`finite_guard`],
+/// then write pretty JSON crash-atomically. Returns the path written.
+pub fn write_bench_json(
+    default_path: &str,
+    payload: &Json,
+) -> anyhow::Result<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(
+        std::env::var("DMLPS_BENCH_OUT")
+            .unwrap_or_else(|_| default_path.to_string()),
+    );
+    finite_guard(payload)?;
+    crate::linalg::io::atomic_write(&path, |w| {
+        use std::io::Write;
+        w.write_all(payload.to_string_pretty().as_bytes())?;
+        Ok(())
+    })?;
+    Ok(path)
+}
+
 /// Markdown rendering of a set of curves, sampled at up to `max_rows`
 /// points (bench output stays readable).
 pub fn curves_to_markdown(curves: &[Curve], max_rows: usize) -> String {
@@ -174,6 +237,53 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.get("label").as_str(), Some("test"));
         assert_eq!(j.get("objective").idx(1).as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn finite_guard_names_nested_paths() {
+        let bad = Json::obj(vec![
+            ("ok", Json::Num(1.0)),
+            ("rows", Json::Arr(vec![
+                Json::obj(vec![("qps", Json::Num(f64::NAN))]),
+            ])),
+            ("inf", Json::Num(f64::INFINITY)),
+        ]);
+        let paths = non_finite_paths(&bad);
+        assert_eq!(paths, vec!["inf", "rows[0].qps"]);
+        let msg = finite_guard(&bad).unwrap_err().to_string();
+        assert!(msg.contains("rows[0].qps"), "{msg}");
+
+        let clean = Json::obj(vec![
+            ("x", Json::arr_f64(&[0.0, -1.5])),
+            ("s", Json::Str("NaN is fine as a string".into())),
+        ]);
+        assert!(non_finite_paths(&clean).is_empty());
+        assert!(finite_guard(&clean).is_ok());
+    }
+
+    #[test]
+    fn write_bench_json_refuses_non_finite() {
+        let dir = std::env::temp_dir()
+            .join(format!("dmlps-metrics-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("BENCH_guard_test.json");
+        // DMLPS_BENCH_OUT would redirect the write; the test must not
+        // mutate the process env (tests run in parallel), so skip under
+        // an externally set override.
+        if std::env::var("DMLPS_BENCH_OUT").is_ok() {
+            return;
+        }
+        let bad = Json::obj(vec![("x", Json::Num(f64::NAN))]);
+        assert!(
+            write_bench_json(target.to_str().unwrap(), &bad).is_err()
+        );
+        assert!(!target.exists(), "guard must block the write");
+        let ok = Json::obj(vec![("x", Json::Num(2.0))]);
+        let written =
+            write_bench_json(target.to_str().unwrap(), &ok).unwrap();
+        let back = Json::parse_file(&written).unwrap();
+        assert_eq!(back.get("x").as_f64(), Some(2.0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -144,6 +144,13 @@ impl Json {
         s
     }
 
+    /// Single-line serialization — one NDJSON record per call site.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -462,6 +469,17 @@ mod tests {
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let v = Json::obj(vec![
+            ("a", Json::arr_f64(&[1.0, 2.5])),
+            ("b", Json::obj(vec![("c", Json::Str("x\ny".into()))])),
+        ]);
+        let s = v.to_string_compact();
+        assert!(!s.contains('\n'), "{s}");
+        assert_eq!(Json::parse(&s).unwrap(), v);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Lab-harness integration suite: matrix expansion arithmetic,
+//! aggregation against hand-computed references, order-insensitive
+//! NDJSON merging, typo rejection across every lab config surface, the
+//! shipped `lab/quick.json`, and an end-to-end tiny run whose merged
+//! report must self-diff clean and flag a perturbed copy.
+
+use dmlps::lab::{
+    self, cell_key, diff_reports, expand, merge_streams, LabConfig,
+    ResultType,
+};
+use dmlps::util::json::Json;
+use dmlps::util::rng::Pcg32;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dmlps-lab-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn expansion_count_is_product_and_order_is_stable() {
+    let axes = vec![
+        ("a".to_string(), vec![Json::Num(1.0), Json::Num(2.0)]),
+        (
+            "b".to_string(),
+            vec![
+                Json::Str("x".into()),
+                Json::Str("y".into()),
+                Json::Str("z".into()),
+            ],
+        ),
+        ("c".to_string(), vec![Json::Bool(true), Json::Bool(false)]),
+    ];
+    let cells = expand(&axes);
+    assert_eq!(cells.len(), 2 * 3 * 2);
+    for (i, c) in cells.iter().enumerate() {
+        assert_eq!(c.index, i);
+    }
+    // first and last cells pin the odometer orientation: the last
+    // axis spins fastest
+    assert_eq!(cell_key(&cells[0].params), "a=1,b=\"x\",c=true");
+    assert_eq!(cell_key(&cells[11].params), "a=2,b=\"z\",c=false");
+    assert_eq!(expand(&axes), expand(&axes));
+}
+
+/// Average/median agree with a from-scratch reference over random
+/// trial populations.
+#[test]
+fn aggregation_matches_reference() {
+    let mut rng = Pcg32::new(77);
+    let trials = 7usize;
+    let mut vals = vec![0.0f32; trials];
+    rng.fill_gaussian(&mut vals, 10.0, 3.0);
+    let vals: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+
+    let cfg = LabConfig::parse(
+        &Json::parse(&format!(
+            r#"[{{"trials": {trials}}},
+                {{"name": "agg", "kind": "train",
+                  "params": {{"workers": [1]}}}}]"#
+        ))
+        .unwrap(),
+    )
+    .unwrap();
+    let exp = &cfg.experiments[0];
+
+    let recs: Vec<Json> = vals
+        .iter()
+        .enumerate()
+        .map(|(t, &v)| {
+            Json::obj(vec![
+                ("cell", Json::Num(0.0)),
+                ("cell_key", Json::Str("workers=1".into())),
+                ("trial", Json::Num(t as f64)),
+                (
+                    "params",
+                    Json::obj(vec![("workers", Json::Num(1.0))]),
+                ),
+                ("start_s", Json::Num(t as f64)),
+                ("end_s", Json::Num(t as f64 + 0.1)),
+                (
+                    "metrics",
+                    Json::obj(vec![("score", Json::Num(v))]),
+                ),
+                ("resource_start", Json::obj(vec![])),
+                ("resource_end", Json::obj(vec![])),
+            ])
+        })
+        .collect();
+    let out = merge_streams(
+        exp,
+        &[ResultType::Average, ResultType::Median],
+        &recs,
+        &[],
+    )
+    .unwrap();
+
+    let mean_ref = vals.iter().sum::<f64>() / trials as f64;
+    let mut sorted = vals.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ref = sorted[trials / 2];
+
+    let cell = out.get("cells").idx(0);
+    let mean = cell.get("average").get("score").as_f64().unwrap();
+    let median = cell.get("median").get("score").as_f64().unwrap();
+    assert!((mean - mean_ref).abs() < 1e-9, "{mean} vs {mean_ref}");
+    assert!(
+        (median - median_ref).abs() < 1e-9,
+        "{median} vs {median_ref}"
+    );
+}
+
+#[test]
+fn unknown_lab_keys_are_rejected_with_suggestions() {
+    // global typo
+    let j = Json::parse(
+        r#"[{"trails": 2}, {"name": "x", "params": {}}]"#,
+    )
+    .unwrap();
+    let msg = LabConfig::parse(&j).unwrap_err().to_string();
+    assert!(msg.contains("did you mean 'trials'"), "{msg}");
+
+    // experiment-block typo
+    let j = Json::parse(
+        r#"[{}, {"name": "x", "parms": {"workers": [1]}}]"#,
+    )
+    .unwrap();
+    let msg = LabConfig::parse(&j).unwrap_err().to_string();
+    assert!(msg.contains("did you mean 'params'"), "{msg}");
+
+    // axis typo, kind-specific suggestion
+    let j = Json::parse(
+        r#"[{}, {"name": "x", "kind": "serving",
+             "params": {"nclstrs": [8]}}]"#,
+    )
+    .unwrap();
+    let msg = LabConfig::parse(&j).unwrap_err().to_string();
+    assert!(msg.contains("did you mean 'nclusters'"), "{msg}");
+}
+
+/// The shipped CI config must satisfy the acceptance shape: the first
+/// experiment expands to >= 8 cells across >= 3 axes.
+#[test]
+fn shipped_quick_config_parses_with_required_shape() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("lab/quick.json");
+    let cfg = LabConfig::load(&path).unwrap();
+    assert!(cfg.experiments.len() >= 3, "{}", cfg.experiments.len());
+    let first = &cfg.experiments[0];
+    assert!(
+        first.axes.len() >= 3,
+        "first experiment sweeps {} axes",
+        first.axes.len()
+    );
+    let cells = expand(&first.axes);
+    assert!(cells.len() >= 8, "first experiment has {} cells",
+            cells.len());
+
+    let full = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("lab/full.json");
+    LabConfig::load(&full).unwrap();
+}
+
+/// End-to-end: run a two-cell tiny train matrix through the real
+/// runner, check the merged report (details + per-cell resource
+/// stats), then the diff gate both ways — clean against itself,
+/// nonzero drift count against a perturbed copy.
+#[test]
+fn end_to_end_run_merge_and_diff() {
+    let dir = tmp_dir("e2e");
+    let cfg = LabConfig::parse(
+        &Json::parse(&format!(
+            r#"[{{"output": "{}",
+                 "result_type": ["average", "details"],
+                 "trials": 1, "sample_ms": 10}},
+                {{"name": "e2e", "kind": "train", "preset": "tiny",
+                  "overrides": {{"steps": 5}},
+                  "params": {{"workers": [1, 2]}}}}]"#,
+            dir.display()
+        ))
+        .unwrap(),
+    )
+    .unwrap();
+
+    let written = lab::run(&cfg).unwrap();
+    assert_eq!(written.len(), 1);
+    let report = Json::parse_file(&written[0]).unwrap();
+    assert_eq!(report.get("bench").as_str(), Some("lab"));
+    let cells = report.get("cells").as_arr().unwrap();
+    assert_eq!(cells.len(), 2);
+    for cell in cells {
+        let avg = cell.get("average");
+        assert!(avg.get("applied_updates").as_f64().unwrap() > 0.0);
+        assert!(avg.get("final_objective").as_f64().unwrap().is_finite());
+        let details = cell.get("details").as_arr().unwrap();
+        assert_eq!(details.len(), 1);
+        let res = cell.get("resource");
+        assert!(!res.is_null());
+        // cumulative counters are windowed deltas, so >= 0 when present
+        if let Some(cpu) = res.get("cpu_s").as_f64() {
+            assert!(cpu >= 0.0, "{cpu}");
+        }
+        #[cfg(target_os = "linux")]
+        {
+            assert!(
+                res.get("peak_rss_bytes").as_f64().unwrap() > 0.0,
+                "peak RSS must be attributed on linux"
+            );
+            assert!(res.get("cpu_s").as_f64().is_some());
+        }
+    }
+    // the NDJSON streams stay on disk next to the merged report
+    assert!(dir.join("e2e.trials.ndjson").is_file());
+    assert!(dir.join("e2e.sysinfo.ndjson").is_file());
+
+    // self-diff: clean at zero tolerance
+    assert!(diff_reports(&report, &report, 0.0, true).is_empty());
+
+    // perturb one metric beyond tolerance: the gate must trip
+    let mut perturbed = report.clone();
+    if let Json::Obj(map) = &mut perturbed {
+        if let Some(Json::Arr(cells)) = map.get_mut("cells") {
+            if let Json::Obj(cell) = &mut cells[0] {
+                if let Some(Json::Obj(avg)) = cell.get_mut("average") {
+                    if let Some(Json::Num(v)) =
+                        avg.get_mut("applied_updates")
+                    {
+                        *v *= 10.0;
+                    }
+                }
+            }
+        }
+    }
+    let drifts = diff_reports(&report, &perturbed, 0.25, false);
+    assert!(!drifts.is_empty());
+    assert!(
+        drifts.iter().any(|d| d.contains("applied_updates")),
+        "{drifts:?}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Shuffling the trial stream does not change the merged report
+/// (order-insensitive merge over real runner records).
+#[test]
+fn merge_is_order_insensitive_over_real_records() {
+    let dir = tmp_dir("shuffle");
+    let cfg = LabConfig::parse(
+        &Json::parse(&format!(
+            r#"[{{"output": "{}",
+                 "result_type": ["average", "median", "details"],
+                 "trials": 2, "sample_ms": 10}},
+                {{"name": "shf", "kind": "hotpath",
+                  "overrides": {{"d": 32, "k": 8, "batch": 16}},
+                  "params": {{"threads": [1, 2]}}}}]"#,
+            dir.display()
+        ))
+        .unwrap(),
+    )
+    .unwrap();
+    lab::run(&cfg).unwrap();
+
+    let exp = &cfg.experiments[0];
+    let recs: Vec<Json> = std::fs::read_to_string(
+        dir.join("shf.trials.ndjson"),
+    )
+    .unwrap()
+    .lines()
+    .map(|l| Json::parse(l).unwrap())
+    .collect();
+    assert_eq!(recs.len(), 4); // 2 cells × 2 trials
+    let mut reversed = recs.clone();
+    reversed.reverse();
+    let rt = &cfg.global.result_types;
+    let a = merge_streams(exp, rt, &recs, &[]).unwrap();
+    let b = merge_streams(exp, rt, &reversed, &[]).unwrap();
+    assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
